@@ -1,0 +1,102 @@
+//! Phase-aware decode analysis (paper §5): where does a decode step's
+//! time go, per device / precision / batch / sequence length, and when
+//! does each §5.2 bottleneck (thin-GEMM feed, KV bandwidth, softmax)
+//! take over.
+//!
+//! Run: `cargo run --release --example decode_analysis [model]`
+
+use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
+use fp8_tco::analysis::roofline::saturation_ci;
+use fp8_tco::hwsim::spec::{DType, Device};
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args
+        .first()
+        .and_then(|a| llama::by_name(a))
+        .unwrap_or_else(|| llama::by_name("llama-8b").unwrap());
+
+    println!(
+        "model {} | A={} | params {:.1}B | CI to saturate Gaudi2 FP8: {:.0}\n",
+        model.name,
+        model.a_const(),
+        model.param_count() / 1e9,
+        saturation_ci(Device::Gaudi2.spec(), DType::Fp8),
+    );
+
+    // ---- time breakdown across sequence lengths ------------------
+    let mut t = Table::new(
+        "decode step breakdown, b=64 (ms)",
+        &["device", "prec", "s", "total", "linears", "kv", "softmax", "head",
+          "tok/s", "CI"],
+    );
+    for dev in [Device::Gaudi2, Device::H100] {
+        for prec in [PrecisionMode::Bf16, PrecisionMode::fp8_static()] {
+            for s in [256usize, 1024, 4096, 16384] {
+                let bd = decode_step(model, &StepConfig::new(dev, prec), 64, s);
+                let w_bytes = match prec {
+                    PrecisionMode::Bf16 => 2.0,
+                    _ => 1.0,
+                };
+                t.row(vec![
+                    dev.name().into(),
+                    prec.name().into(),
+                    s.to_string(),
+                    f(bd.seconds * 1e3, 2),
+                    f(bd.t_linears * 1e3, 2),
+                    f(bd.t_attention_kv * 1e3, 2),
+                    f(bd.t_softmax * 1e3, 3),
+                    f(bd.t_lm_head * 1e3, 2),
+                    f(64.0 / bd.seconds, 0),
+                    f(model.decode_ci(64, s, w_bytes, 2.0), 1),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // ---- batch scaling -------------------------------------------
+    let mut t2 = Table::new(
+        "FP8 decode throughput vs batch (s=1024, tok/s)",
+        &["batch", "Gaudi2", "H100", "Gaudi2/H100"],
+    );
+    for b in [1usize, 8, 16, 32, 64, 128, 256] {
+        let g = decode_step(model, &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), b, 1024);
+        let h = decode_step(model, &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), b, 1024);
+        t2.row(vec![
+            b.to_string(),
+            f(b as f64 / g.seconds, 0),
+            f(b as f64 / h.seconds, 0),
+            f(h.seconds / g.seconds, 2),
+        ]);
+    }
+    t2.print();
+
+    // ---- tensor parallelism: thinner GEMMs (§5.6) ----------------
+    let mut t3 = Table::new(
+        "FP8 decode with tensor parallelism (b=64, s=1024, per-shard tok/s)",
+        &["TP", "Gaudi2", "H100"],
+    );
+    for tp in [1usize, 2, 4, 8] {
+        let g = decode_step(
+            model,
+            &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()).with_tp(tp),
+            64, 1024);
+        let h = decode_step(
+            model,
+            &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()).with_tp(tp),
+            64, 1024);
+        t3.row(vec![
+            tp.to_string(),
+            f(64.0 / g.seconds, 0),
+            f(64.0 / h.seconds, 0),
+        ]);
+    }
+    t3.print();
+    println!(
+        "(TP shrinks per-device matrices — the §5.6 point that thin-GEMM \
+         efficiency, not peak TFLOPS, governs decode)"
+    );
+}

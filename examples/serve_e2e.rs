@@ -1,0 +1,110 @@
+//! End-to-end serving driver (DESIGN.md experiment E2E).
+//!
+//! Loads the AOT-compiled tiny Llama (FP8 dynamic row-wise linears via
+//! the L1 Pallas kernels), serves a batched request trace through the
+//! continuous-batching engine over PJRT, and reports latency and
+//! throughput. Then replays the *same trace shape* on the simulated
+//! Gaudi 2 / H100 backends so the two halves of the system (real
+//! compute vs. modelled testbed) are shown side by side.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+
+use fp8_tco::analysis::perfmodel::{PrecisionMode, StepConfig};
+use fp8_tco::coordinator::{
+    Engine, EngineConfig, ExecutionBackend, KvCacheConfig, PjrtBackend, SimBackend,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::runtime::ArtifactDir;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama;
+use fp8_tco::workload::trace::Request;
+
+fn trace(n: usize, max_prompt: usize, max_out: usize) -> Vec<Request> {
+    use fp8_tco::util::rng::Rng;
+    let mut rng = Rng::new(2024);
+    (0..n as u64)
+        .map(|id| Request {
+            id,
+            arrival: 0.0,
+            prompt_len: rng.usize(4, max_prompt),
+            output_len: rng.usize(4, max_out),
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactDir::discover();
+    anyhow::ensure!(dir.exists(), "run `make artifacts` first");
+
+    // ---------- real serving over PJRT ----------
+    let backend = PjrtBackend::load(&dir, "1b")?;
+    let meta = backend.meta().clone();
+    println!(
+        "loaded {} (h={} l={} vocab={} max_seq={}, {})",
+        backend.describe(), meta.hidden, meta.layers, meta.vocab,
+        meta.max_seq, meta.precision
+    );
+    let kv = KvCacheConfig { block_tokens: 16, total_blocks: 8192 };
+    let mut cfg = EngineConfig::new(kv);
+    // b<=2: larger AOT buckets trip an xla_extension 0.5.1 execution
+    // bug (sporadic NaN buffers; same HLO is clean under jax's runtime).
+    cfg.batcher.max_batch = 2;
+    let mut engine = Engine::new(cfg, backend);
+
+    let reqs = trace(24, 30, 48);
+    let total_out: usize = reqs.iter().map(|r| r.output_len).sum();
+    for r in &reqs {
+        engine.submit(r);
+    }
+    let t0 = std::time::Instant::now();
+    anyhow::ensure!(engine.run_to_completion(1_000_000), "engine must drain");
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== E2E (PJRT, real compute) ==");
+    println!("{}", engine.metrics.report());
+    println!(
+        "wall {:.1}s | {} requests | {} tokens | {:.1} tok/s wall | preemptions {}",
+        wall,
+        reqs.len(),
+        total_out,
+        engine.metrics.tokens_out as f64 / wall,
+        engine.preemptions()
+    );
+    assert_eq!(engine.metrics.tokens_out as usize, total_out);
+
+    // ---------- same engine code on the simulated testbed ----------
+    println!("\n== Same scheduler on the simulated testbed (llama-8b, b<=64) ==");
+    let mut t = Table::new(
+        "virtual-time serving, 200 chat requests",
+        &["device", "precision", "tok/s", "TTFT p50 (s)", "TPOT p50 (ms)", "J/token"],
+    );
+    for dev in [Device::Gaudi2, Device::H100] {
+        for prec in [PrecisionMode::Bf16, PrecisionMode::fp8_static(),
+                     PrecisionMode::fp8_dynamic()] {
+            let model = llama::by_name("llama-8b").unwrap();
+            let kv = KvCacheConfig::from_device(model, dev.spec().hbm_cap, 1.0, 2.0, 16, 0.05);
+            let backend = SimBackend::new(model, StepConfig::new(dev, prec));
+            let mut cfg = EngineConfig::new(kv);
+            cfg.batcher.max_batch = 64;
+            let mut e = Engine::new(cfg, backend);
+            use fp8_tco::workload::trace::{TraceConfig, TraceGenerator};
+            let mut gen = TraceGenerator::new(TraceConfig::chat(50.0), 99);
+            for r in gen.take(200) {
+                e.submit(&r);
+            }
+            assert!(e.run_to_completion(10_000_000));
+            t.row(vec![
+                dev.name().into(),
+                prec.name().into(),
+                f(e.metrics.tokens_per_sec(), 0),
+                f(e.metrics.ttft.pct(50.0), 3),
+                f(e.metrics.tpot.pct(50.0) * 1e3, 2),
+                f(e.metrics.joules_per_token(), 2),
+            ]);
+        }
+    }
+    t.print();
+    println!("(the FP8 rows are the paper's §6 TCO argument in action: \
+              Gaudi 2 gains ~1.5x from FP8, the H100 little)");
+    Ok(())
+}

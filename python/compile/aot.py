@@ -1,0 +1,189 @@
+"""AOT pipeline: lower L2 model functions to HLO text for the rust L3.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Outputs (under artifacts/):
+  model/<tier>/prefill_b{B}_s{S}.hlo.txt   — weights baked as constants
+  model/<tier>/decode_b{B}.hlo.txt
+  model/<tier>/meta.json                    — shapes the rust side needs
+  gemm/fp8_gemm_{m}x{k}x{n}.hlo.txt         — standalone L1 kernel artifact
+  golden/*.json                             — cross-language golden vectors
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import fp8, fp8_gemm, ref
+
+# Serving artifact shape grid: one executable per (phase, batch) —
+# the L3 batcher picks the smallest bucket that fits (vLLM-style
+# bucketed shapes; fixed shapes are a PJRT AOT requirement).
+PREFILL_SHAPES = [(1, 32), (2, 32), (4, 32), (8, 32)]   # (batch, seq)
+DECODE_BATCHES = [1, 2, 4, 8]
+SERVE_TIER = "1b"
+SERVE_MAX_SEQ = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+
+def export_serving_model(out_dir: str, tier: str, params) -> None:
+    """Lower prefill/decode with weights closed over (baked constants)."""
+    import dataclasses
+    cfg = dataclasses.replace(M.TIERS[tier], max_seq=SERVE_MAX_SEQ)
+    prec = M.FP8_DYNAMIC
+    mdir = os.path.join(out_dir, "model", tier)
+
+    for b, s in PREFILL_SHAPES:
+        fn = lambda tok, lens: M.prefill(params, cfg, prec, tok, lens)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((b, s), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+        _write(os.path.join(mdir, f"prefill_b{b}_s{s}.hlo.txt"),
+               to_hlo_text(lowered))
+
+    kv_shape = (cfg.layers, None, SERVE_MAX_SEQ, cfg.kv_heads, cfg.head_dim)
+    for b in DECODE_BATCHES:
+        fn = lambda tok, lens, kc, vc: M.decode_step(
+            params, cfg, prec, tok, lens, kc, vc)
+        shape = (cfg.layers, b, SERVE_MAX_SEQ, cfg.kv_heads, cfg.head_dim)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct(shape, jnp.float32),
+            jax.ShapeDtypeStruct(shape, jnp.float32),
+        )
+        _write(os.path.join(mdir, f"decode_b{b}.hlo.txt"),
+               to_hlo_text(lowered))
+
+    meta = {
+        "tier": tier,
+        "vocab": cfg.vocab,
+        "hidden": cfg.hidden,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "kv_heads": cfg.kv_heads,
+        "head_dim": cfg.head_dim,
+        "intermediate": cfg.intermediate,
+        "max_seq": SERVE_MAX_SEQ,
+        "prefill_shapes": PREFILL_SHAPES,
+        "decode_batches": DECODE_BATCHES,
+        "precision": "fp8_e4m3fn_dynamic_rowwise",
+        "param_count": cfg.param_count(),
+    }
+    _write(os.path.join(mdir, "meta.json"), json.dumps(meta, indent=1))
+
+
+def export_gemm_kernel(out_dir: str) -> None:
+    """Standalone L1 FP8-GEMM artifact + golden I/O for the rust tests."""
+    m, k, n = 128, 256, 128
+    cfg = fp8_gemm.Fp8GemmConfig()
+    fn = lambda x, w: (fp8_gemm.fp8_matmul(x, w, cfg),)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    _write(os.path.join(out_dir, "gemm", f"fp8_gemm_{m}x{k}x{n}.hlo.txt"),
+           to_hlo_text(lowered))
+
+    rng = np.random.default_rng(1234)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    y = np.asarray(fp8_gemm.fp8_matmul(jnp.asarray(x), jnp.asarray(w), cfg))
+    golden = {
+        "m": m, "k": k, "n": n,
+        "x": x.flatten().tolist(),
+        "w": w.flatten().tolist(),
+        "y": y.flatten().tolist(),
+    }
+    _write(os.path.join(out_dir, "golden", "fp8_gemm_io.json"),
+           json.dumps(golden))
+
+
+def export_quantize_golden(out_dir: str) -> None:
+    """Golden FP8 quantization vectors: python emulation -> rust fp8.
+
+    The rust `fp8` module must agree bit-exactly on every value.
+    """
+    rng = np.random.default_rng(99)
+    xs = np.concatenate([
+        rng.standard_normal(512) * rng.choice([0.01, 1.0, 64.0, 500.0], 512),
+        np.array([0.0, 448.0, -448.0, 240.0, 240.1, 457.0, -1e-9, 1e9,
+                  2.0**-9, 2.0**-10, 0.875 * 2.0**-6, 57344.0, -60000.0]),
+    ]).astype(np.float32)
+    out = {"x": xs.tolist()}
+    for fmt in (fp8.E4M3FN, fp8.E4M3_GAUDI, fp8.E5M2):
+        q = np.asarray(fp8.quantize(jnp.asarray(xs), fmt, fp8.RTN))
+        out[fmt.name] = q.tolist()
+    _write(os.path.join(out_dir, "golden", "fp8_quantize.json"),
+           json.dumps(out))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tier", default=SERVE_TIER)
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="use random weights (CI fast path)")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    ckpt = os.path.join(out, "ckpt", f"{args.tier}.npz")
+    if args.skip_train:
+        params = M.init_params(M.TIERS[args.tier], jax.random.PRNGKey(0))
+    elif os.path.exists(ckpt):
+        print(f"reusing checkpoint {ckpt}")
+        params = T.load_params(ckpt)
+    else:
+        print(f"training serve tier '{args.tier}' ({args.train_steps} steps)")
+        params, cfg, _ = T.train_tier(args.tier, args.train_steps)
+        os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+        T.save_params(params, ckpt)
+
+    print("exporting serving model artifacts")
+    export_serving_model(out, args.tier, params)
+    print("exporting standalone GEMM kernel artifact")
+    export_gemm_kernel(out)
+    print("exporting golden quantization vectors")
+    export_quantize_golden(out)
+    # Sentinel for `make` freshness checking.
+    with open(os.path.join(out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

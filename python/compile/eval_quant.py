@@ -1,0 +1,180 @@
+"""Tables 4-5 harness: FP8 quantization-config accuracy on the tiers.
+
+Substitutes for the paper's MMLU/GSM8K/Winogrande/TruthfulQA suite
+(DESIGN.md): five synthetic-language tasks whose mechanics mirror the
+paper's — multiple-choice by sequence log-likelihood, and next-token
+metrics.  What must transfer is the *ordering* across quantization
+configs (dynamic >= static, E4M3 > E5M2 shrinking with size, SR ~ RTN),
+which is driven by quantization-error statistics, not task content.
+
+Outputs artifacts/results/table4.json and table5.json.
+
+Usage: python -m compile.eval_quant --out ../artifacts [--tiers 1b,3b]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from . import train as T
+from .kernels import fp8, fp8_gemm
+
+SEQ = 64
+N_MCQ = 32          # multiple-choice items per task
+N_PPL = 24          # held-out sequences for token metrics
+N_CHOICES = 4
+PREFIX = 32
+
+
+def build_eval_sets(lang: T.SyntheticLanguage, seed: int = 7777):
+    """Deterministic eval data, disjoint from training by seed."""
+    rng = np.random.default_rng(seed)
+    ppl_set = lang.batch(rng, N_PPL, SEQ)
+
+    # MCQ-hard: true continuation vs 3 resampled continuations from the
+    # same language (plausible distractors — the MMLU analogue).
+    # MCQ-easy: distractors are uniform-random tokens.
+    mcq_hard, mcq_easy = [], []
+    for _ in range(N_MCQ):
+        seqs = lang.batch(rng, 1, SEQ)
+        true = seqs[0]
+        hard = [true]
+        for _ in range(N_CHOICES - 1):
+            alt = true.copy()
+            alt[PREFIX:] = lang.sample(rng, SEQ)[PREFIX:]
+            hard.append(alt)
+        easy = [true]
+        for _ in range(N_CHOICES - 1):
+            alt = true.copy()
+            alt[PREFIX:] = rng.integers(0, T.VOCAB, SEQ - PREFIX)
+            easy.append(alt)
+        mcq_hard.append(np.stack(hard))
+        mcq_easy.append(np.stack(easy))
+    return ppl_set, np.stack(mcq_hard), np.stack(mcq_easy)
+
+
+def eval_config(params, cfg, prec, ppl_set, mcq_hard, mcq_easy):
+    """Run the 5 tasks; returns a dict of metrics (percent)."""
+    seqlp = jax.jit(partial(M.sequence_logprob, params, cfg, prec,
+                            prefix_len=PREFIX))
+
+    def mcq_acc(items):
+        correct = 0
+        for item in items:                       # (C, S)
+            lps = np.asarray(seqlp(tokens=jnp.asarray(item)))
+            correct += int(np.argmax(lps) == 0)
+        return 100.0 * correct / len(items)
+
+    # Token-level metrics on held-out text.
+    b, s = ppl_set.shape
+    lengths = jnp.full((b,), s, jnp.int32)
+    logits, _, _ = jax.jit(partial(M.prefill, params, cfg, prec))(
+        tokens=jnp.asarray(ppl_set), lengths=lengths)
+    logp = jax.nn.log_softmax(np.asarray(logits[:, :-1], np.float32), axis=-1)
+    tgt = ppl_set[:, 1:]
+    tok_lp = np.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    top1 = (np.argmax(logp, -1) == tgt).mean() * 100.0
+    top5 = (np.argsort(logp, -1)[..., -5:] == tgt[..., None]).any(-1).mean() * 100.0
+    ppl = float(np.exp(-tok_lp.mean()))
+
+    return {
+        "mcq_hard": mcq_acc(mcq_hard),          # MMLU-analogue
+        "mcq_easy": mcq_acc(mcq_easy),          # Winogrande-analogue
+        "next_tok_top1": float(top1),           # GSM8K-analogue
+        "next_tok_top5": float(top5),           # TruthfulQA-mc1-analogue
+        "ppl": ppl,                             # TruthfulQA-mc2-analogue
+    }
+
+
+def precision_grid(params, cfg, calib_tokens):
+    """The configs of Tables 4 & 5."""
+    static_scales = M.calibrate_static_scales(
+        params, cfg, calib_tokens, fp8.E4M3FN)
+    return {
+        "bf16": M.BF16,
+        "fp8_dynamic": M.PrecisionConfig(
+            mode="fp8", fmt=fp8.E4M3FN, scaling=fp8_gemm.PER_ROW),
+        "fp8_static": M.PrecisionConfig(
+            mode="fp8", fmt=fp8.E4M3FN, scaling=fp8_gemm.STATIC,
+            static_scales=static_scales),
+        "e4m3_rtn": M.PrecisionConfig(
+            mode="fp8", fmt=fp8.E4M3_GAUDI, scaling=fp8_gemm.PER_ROW),
+        "e4m3_sr": M.PrecisionConfig(
+            mode="fp8", fmt=fp8.E4M3_GAUDI, rounding=fp8.SR,
+            scaling=fp8_gemm.PER_ROW),
+        "e5m2_rtn": M.PrecisionConfig(
+            mode="fp8", fmt=fp8.E5M2, scaling=fp8_gemm.PER_ROW),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tiers", default="1b,3b,8b,70b")
+    ap.add_argument("--train-steps", type=int, default=400)
+    args = ap.parse_args()
+    tiers = args.tiers.split(",")
+
+    lang = T.SyntheticLanguage(seed=0)
+    ppl_set, mcq_hard, mcq_easy = build_eval_sets(lang)
+    calib = jnp.asarray(lang.batch(np.random.default_rng(555), 8, SEQ))
+
+    os.makedirs(os.path.join(args.out, "results"), exist_ok=True)
+    table4, table5 = {}, {}
+    for tier in tiers:
+        ckpt = os.path.join(args.out, "ckpt", f"{tier}.npz")
+        cfg = M.TIERS[tier]
+        if os.path.exists(ckpt):
+            params = T.load_params(ckpt)
+            print(f"[{tier}] loaded {ckpt}")
+        else:
+            print(f"[{tier}] training ({args.train_steps} steps)")
+            params, cfg, _ = T.train_tier(tier, args.train_steps)
+            os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+            T.save_params(params, ckpt)
+
+        grid = precision_grid(params, cfg, calib)
+        results = {}
+        for name, prec in grid.items():
+            t0 = time.time()
+            results[name] = eval_config(params, cfg, prec,
+                                        ppl_set, mcq_hard, mcq_easy)
+            print(f"[{tier}] {name:12s} "
+                  f"mcq_hard={results[name]['mcq_hard']:5.1f} "
+                  f"top1={results[name]['next_tok_top1']:5.1f} "
+                  f"ppl={results[name]['ppl']:6.2f} "
+                  f"({time.time()-t0:.0f}s)")
+
+        # Table 4 (paper: 8B tier only): BF16 vs static vs dynamic.
+        if tier == "8b":
+            table4 = {k: results[k] for k in ("bf16", "fp8_static",
+                                              "fp8_dynamic")}
+        # Table 5: per-tier BF16 / E4M3-SR / E4M3-RTN / E5M2-RTN on the
+        # MMLU-analogue (mcq_hard).
+        table5[tier] = {
+            "params": cfg.param_count(),
+            "bf16": results["bf16"]["mcq_hard"],
+            "e4m3_sr": results["e4m3_sr"]["mcq_hard"],
+            "e4m3_rtn": results["e4m3_rtn"]["mcq_hard"],
+            "e5m2_rtn": results["e5m2_rtn"]["mcq_hard"],
+            "full": results,
+        }
+
+    with open(os.path.join(args.out, "results", "table4.json"), "w") as f:
+        json.dump(table4, f, indent=1)
+    with open(os.path.join(args.out, "results", "table5.json"), "w") as f:
+        json.dump(table5, f, indent=1)
+    print("wrote table4.json, table5.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: GQA decode attention (one query token per sequence).
+
+The decode-phase attention the paper analyzes in §5.2/§5.7: a GEMV (or
+thin GEMM with GQA) per sequence against its KV cache, plus a softmax
+whose exponential cost scales O(B*S) and — on Gaudi — lands on the TPC
+vector cores rather than an SFU.
+
+Grid is (B,): one program per sequence, blocks hold the sequence's full
+cache (fits VMEM for the tiny serve-able models; for large S a second
+grid axis with online-softmax would be the flash-decoding schedule).
+Attention stays BF16/f32 — the paper keeps attention out of FP8 (§5.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, groups: int):
+    # q: (1, H, d) ; k/v: (1, S, Hkv, d) ; len: (1, 1) ; o: (1, H, d)
+    q = q_ref[0].astype(jnp.float32)          # (H, d)
+    k = k_ref[0].astype(jnp.float32)          # (S, Hkv, d)
+    v = v_ref[0].astype(jnp.float32)
+    n = len_ref[0, 0]
+    h, d = q.shape
+    s, hkv, _ = k.shape
+    # Expand KV heads to query heads (GQA): head hi uses kv head hi//g.
+    qh = q.reshape(hkv, groups, d)
+    # scores[kv, g, s] = sum_d qh[kv, g, d] * k[s, kv, d]
+    scores = jnp.einsum("kgd,skd->kgs", qh, k) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.arange(s)[None, None, :] < n
+    # Large finite negative, NOT -inf: the AOT consumer (xla_extension
+    # 0.5.1) turns exp(-inf - max) into NaN under fast-math; -1e30
+    # underflows to 0 on every backend.
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("kgs,skd->kgd", p, v)
+    o_ref[0] = out.reshape(h, d)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     lengths: jnp.ndarray) -> jnp.ndarray:
+    """GQA decode attention over dense KV caches.
+
+    q: (B, H, d); k_cache/v_cache: (B, S, Hkv, d); lengths: (B,) int32.
+    Returns (B, H, d) f32.
+    """
+    b, h, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    assert h % hkv == 0, (h, hkv)
+    kern = functools.partial(_decode_attn_kernel, groups=h // hkv)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hkv, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, s, hkv, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), k_cache.astype(jnp.float32),
+      v_cache.astype(jnp.float32), lengths.reshape(b, 1).astype(jnp.int32))

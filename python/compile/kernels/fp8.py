@@ -1,0 +1,160 @@
+"""Bit-exact software emulation of FP8 formats (build-time only).
+
+The paper (§3.2) distinguishes three FP8 lattices relevant to the two
+devices under study:
+
+  * ``E4M3FN``     — NVIDIA's E4M3 variant: no infinities, a single NaN
+                     bit-pattern, max finite value 448 (exp field 15 is a
+                     normal binade except mantissa 111).
+  * ``E4M3_GAUDI`` — Gaudi 2's IEEE-style E4M3: exponent field 15 reserved
+                     for inf/NaN, so max finite value is 240 ("seven fewer
+                     magnitude representations", paper §3.2 E4M3-range).
+  * ``E5M2``       — IEEE-style E5M2, max finite 57344.
+
+All quantizers here SATURATE on overflow (matching the saturating casts
+used by both vendors' inference stacks) and support round-to-nearest-even
+(RTN) and stochastic rounding (SR, Eq. 2 of the paper).
+
+Values are *represented* as float32 restricted to the target lattice —
+the standard software-emulation trick — so they can flow through jnp /
+Pallas math unchanged while being numerically identical to hardware FP8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp8Format:
+    """Parameters of an FP8 value lattice.
+
+    ``emin`` is the exponent of the smallest *normal* binade;
+    subnormals extend down to ``2**(emin - man_bits)``.
+    """
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    max_finite: float
+    emin: int
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.emin - self.man_bits)
+
+
+# NVIDIA E4M3 (FN): bias 7, top binade keeps 7 of 8 mantissa codes.
+E4M3FN = Fp8Format("e4m3fn", 4, 3, 448.0, -6)
+# Gaudi-2 E4M3: IEEE reservation of exponent 15 -> max 1.875 * 2**7 = 240.
+E4M3_GAUDI = Fp8Format("e4m3_gaudi", 4, 3, 240.0, -6)
+# IEEE E5M2: bias 15, max 1.75 * 2**15.
+E5M2 = Fp8Format("e5m2", 5, 2, 57344.0, -14)
+
+FORMATS = {f.name: f for f in (E4M3FN, E4M3_GAUDI, E5M2)}
+
+RTN = "rtn"
+SR = "sr"
+
+
+def _quantum(fmt: Fp8Format, x: jnp.ndarray) -> jnp.ndarray:
+    """Spacing of the FP8 lattice at |x| (f32)."""
+    ax = jnp.abs(x)
+    # Exponent of the binade containing |x|; clamp into [emin, emax-ish].
+    # For subnormals the spacing is constant 2**(emin - man_bits).
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 1e-45)))
+    e = jnp.clip(e, fmt.emin, None)
+    # exp2 is a polynomial approximation (inexact!); ldexp is bit-exact.
+    return jnp.ldexp(jnp.float32(1.0), (e - fmt.man_bits).astype(jnp.int32))
+
+
+def quantize(
+    x: jnp.ndarray,
+    fmt: Fp8Format,
+    rounding: str = RTN,
+    key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Round f32 values onto the FP8 lattice of ``fmt`` (saturating).
+
+    RTN uses round-half-to-even (hardware default); SR implements the
+    paper's Eq. 2: round up with probability (x - x_down)/(x_up - x_down).
+    """
+    x = x.astype(jnp.float32)
+    q = _quantum(fmt, x)
+    scaled = x / q
+    if rounding == RTN:
+        r = jnp.round(scaled)  # jnp.round is half-to-even
+    elif rounding == SR:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        lo = jnp.floor(scaled)
+        p_up = scaled - lo
+        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+        r = lo + (u < p_up).astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown rounding mode {rounding!r}")
+    y = r * q
+    # Rounding up across a binade boundary lands exactly on the next
+    # binade's smallest value, which is representable; only clamp range.
+    y = jnp.clip(y, -fmt.max_finite, fmt.max_finite)
+    # Preserve signed zeros / flush values below half the smallest
+    # subnormal to zero (round() already does this for RTN).
+    return jnp.where(jnp.isfinite(x), y, jnp.sign(x) * fmt.max_finite)
+
+
+# ---------------------------------------------------------------------------
+# Scaling strategies (paper §4.1: dynamic vs static; §3.2 power-of-2)
+# ---------------------------------------------------------------------------
+
+#: Gaudi-2 hardware-accelerated per-tensor exponent-bias scales (§3.2).
+GAUDI2_HW_SCALES = (2.0**-8, 2.0**-4, 2.0**0, 2.0**4)
+
+
+def amax_scale(x: jnp.ndarray, fmt: Fp8Format, axis=None) -> jnp.ndarray:
+    """Dynamic amax scale: s such that x/s fills the format's range."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-12) / fmt.max_finite
+
+
+def row_scales(x: jnp.ndarray, fmt: Fp8Format) -> jnp.ndarray:
+    """Dynamic per-row (per-token) scales over the last axis."""
+    return amax_scale(x, fmt, axis=-1)
+
+
+def tensor_scale(x: jnp.ndarray, fmt: Fp8Format) -> jnp.ndarray:
+    """Dynamic per-tensor scale."""
+    return amax_scale(x, fmt, axis=None)
+
+
+def pow2_scale(scale: jnp.ndarray, hw_set: tuple[float, ...] | None = None) -> jnp.ndarray:
+    """Snap a scale up to a power of two (Gaudi exponent-bias trick).
+
+    With ``hw_set`` given (Gaudi 2), snap to the smallest member of the
+    fixed hardware set that is >= scale (falling back to the largest).
+    """
+    if hw_set is None:
+        return jnp.ldexp(jnp.float32(1.0),
+                         jnp.ceil(jnp.log2(scale)).astype(jnp.int32))
+    s = jnp.asarray(sorted(hw_set), dtype=jnp.float32)
+    idx = jnp.searchsorted(s, jnp.asarray(scale, jnp.float32))
+    idx = jnp.clip(idx, 0, len(hw_set) - 1)
+    return s[idx]
+
+
+def quantize_scaled(
+    x: jnp.ndarray,
+    fmt: Fp8Format,
+    scale: jnp.ndarray,
+    rounding: str = RTN,
+    key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Quantize x/scale onto the lattice; returns lattice values (f32).
+
+    The caller keeps ``scale`` to dequantize GEMM outputs.
+    ``scale`` broadcasts (per-tensor scalar or per-row column vector).
+    """
+    return quantize(x / scale, fmt, rounding, key)

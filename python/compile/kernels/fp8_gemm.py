@@ -1,0 +1,248 @@
+"""L1 Pallas kernels: FP8 quantization + scaled GEMM.
+
+TPU-shaped (paper's CUDA/Synapse kernels re-thought per the
+Hardware-Adaptation note in DESIGN.md):
+
+  * tiles are (bm, bk) x (bk, bn) with 128-multiples so the MXU systolic
+    array is fed full 128x128 panels;
+  * accumulation is a float32 VMEM scratch, written back once on the last
+    K-step (output-stationary — same dataflow as Gaudi's MME, and the
+    natural MXU schedule);
+  * dequantization (the row/tensor scale outer product) is fused into the
+    epilogue of the last K-step instead of a separate pass over HBM —
+    the TPU analogue of the fused scaling-factor application the paper
+    credits for Gaudi's hardware-accelerated scaling path.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp8
+
+# Scaling strategies (paper §4.1 / Table 2-3 column headers).
+PER_ROW = "per_row"      # dynamic, one scale per token/row
+PER_TENSOR = "per_tensor"  # dynamic, one scale per tensor
+STATIC = "static"        # calibrated scale supplied by caller
+POW2 = "pow2"            # per-tensor snapped to hw power-of-2 set
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp8GemmConfig:
+    """Configuration of one FP8 GEMM — format x rounding x scaling."""
+
+    fmt: fp8.Fp8Format = fp8.E4M3FN
+    rounding: str = fp8.RTN
+    scaling: str = PER_ROW
+    # Tile sizes; shapes smaller than a tile fall back to one block.
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+
+def _block(dim: int, b: int) -> int:
+    return min(dim, b)
+
+
+def _pad_to(x: jnp.ndarray, mult: tuple[int, ...]) -> jnp.ndarray:
+    """Zero-pad each dim of x up to a multiple of mult (interpret-mode
+    pallas fills out-of-bounds block slack with NaN, so we pad
+    explicitly and slice the result back)."""
+    pads = []
+    for d, m in zip(x.shape, mult):
+        pads.append((0, (-d) % m))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# Quantization kernel: per-row dynamic scaling fused with rounding.
+# ---------------------------------------------------------------------------
+
+
+def _quant_rowwise_kernel(x_ref, q_ref, s_ref, *, fmt: fp8.Fp8Format,
+                          rounding: str, seed: int):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / fmt.max_finite
+    scaled = x / scale
+    q = _round_on_lattice(scaled, fmt, rounding, seed, pl.program_id(0))
+    q_ref[...] = q
+    s_ref[...] = scale
+
+
+def _round_on_lattice(scaled, fmt, rounding, seed, block_id):
+    """Shared rounding body (RTN / SR) on pre-scaled values."""
+    quantum = _quantum(fmt, scaled)
+    t = scaled / quantum
+    if rounding == fp8.RTN:
+        r = jnp.round(t)
+    else:  # stochastic rounding, paper Eq. 2
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), block_id)
+        lo = jnp.floor(t)
+        u = jax.random.uniform(key, t.shape, dtype=jnp.float32)
+        r = lo + (u < (t - lo)).astype(jnp.float32)
+    y = r * quantum
+    return jnp.clip(y, -fmt.max_finite, fmt.max_finite)
+
+
+def _quantum(fmt, x):
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 1e-45)))
+    e = jnp.clip(e, fmt.emin, None)
+    # ldexp, not exp2: exp2 is a polynomial approximation (inexact).
+    return jnp.ldexp(jnp.float32(1.0), (e - fmt.man_bits).astype(jnp.int32))
+
+
+def quantize_rowwise(x: jnp.ndarray, cfg: Fp8GemmConfig, seed: int = 0):
+    """Pallas row-wise dynamic quantization.
+
+    Returns (q, scales) with q on the FP8 lattice (stored f32) and
+    scales of shape (M, 1).
+    """
+    m0 = x.shape[0]
+    bm = _block(m0, cfg.bm)
+    x = _pad_to(x.astype(jnp.float32), (bm, 1))
+    m, k = x.shape
+    grid = (pl.cdiv(m, bm),)
+    kern = functools.partial(_quant_rowwise_kernel, fmt=cfg.fmt,
+                             rounding=cfg.rounding, seed=seed)
+    q, s = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+    return q[:m0], s[:m0]
+
+
+# ---------------------------------------------------------------------------
+# Scaled GEMM kernel: f32 VMEM accumulator, fused dequant epilogue.
+# ---------------------------------------------------------------------------
+
+
+def _gemm_kernel(xq_ref, wq_ref, sx_ref, sw_ref, o_ref, *, nk: int):
+    # Output-stationary accumulation: the (bm, bn) output block stays
+    # resident (VMEM under real lowering) across all K-steps — the same
+    # dataflow as Gaudi's MME and the natural MXU schedule.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        xq_ref[...], wq_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        # Fused dequantization: out = acc * sx (per row) * sw (per col /
+        # tensor). sx is (bm, 1), sw is (1, bn); both broadcast.
+        o_ref[...] = o_ref[...] * sx_ref[...] * sw_ref[...]
+
+
+def scaled_gemm(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    sx: jnp.ndarray,
+    sw: jnp.ndarray,
+    cfg: Fp8GemmConfig | None = None,
+) -> jnp.ndarray:
+    """(M,K)x(K,N) GEMM over FP8-lattice inputs with fused dequant.
+
+    ``sx``: (M, 1) row scales of x; ``sw``: (1, N) column scales of w
+    (a per-tensor scale is passed broadcast to (1, N)).
+    """
+    cfg = cfg or Fp8GemmConfig()
+    m0, k0 = xq.shape
+    k2, n0 = wq.shape
+    assert k0 == k2, (k0, k2)
+    bm, bn, bk = _block(m0, cfg.bm), _block(n0, cfg.bn), _block(k0, cfg.bk)
+    xq = _pad_to(xq, (bm, bk))
+    wq = _pad_to(wq, (bk, bn))
+    sx = _pad_to(sx, (bm, 1))
+    sw = jnp.broadcast_to(sw, (1, n0))
+    sw = _pad_to(sw, (1, bn))
+    m, k = xq.shape
+    n = wq.shape[1]
+    nk = pl.cdiv(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), nk)
+    kern = functools.partial(_gemm_kernel, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(xq, wq, sx, sw)
+    return out[:m0, :n0]
+
+
+def fp8_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    cfg: Fp8GemmConfig | None = None,
+    w_scale: jnp.ndarray | None = None,
+    x_scale: jnp.ndarray | None = None,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """End-to-end FP8 matmul: quantize x and w per cfg, GEMM, dequant.
+
+    Weights use dynamic per-column (per-output-channel) scaling unless a
+    static ``w_scale`` is given; activations follow ``cfg.scaling``.
+    """
+    cfg = cfg or Fp8GemmConfig()
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+
+    # --- weights: per-column amax (transpose-row) or static scale.
+    if w_scale is None:
+        w_amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)  # (1, N)
+        sw = jnp.maximum(w_amax, 1e-12) / cfg.fmt.max_finite
+    else:
+        sw = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (1, w.shape[1]))
+    wq = fp8.quantize(w / sw, cfg.fmt, fp8.RTN)
+
+    # --- activations per scaling strategy.
+    if cfg.scaling == PER_ROW:
+        xq, sx = quantize_rowwise(x, cfg, seed)
+    else:
+        if cfg.scaling == PER_TENSOR:
+            s = fp8.tensor_scale(x, cfg.fmt)
+        elif cfg.scaling == POW2:
+            s = fp8.pow2_scale(fp8.tensor_scale(x, cfg.fmt), fp8.GAUDI2_HW_SCALES)
+        elif cfg.scaling == STATIC:
+            if x_scale is None:
+                raise ValueError("static scaling requires x_scale")
+            s = jnp.asarray(x_scale, jnp.float32)
+        else:
+            raise ValueError(f"unknown scaling {cfg.scaling!r}")
+        key = jax.random.PRNGKey(seed) if cfg.rounding == fp8.SR else None
+        xq = fp8.quantize(x / s, cfg.fmt, cfg.rounding, key)
+        sx = jnp.broadcast_to(jnp.asarray(s, jnp.float32), (x.shape[0], 1))
+
+    return scaled_gemm(xq, wq, sx, sw, cfg)

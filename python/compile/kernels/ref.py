@@ -1,0 +1,115 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+Deliberately *independent* implementations:
+
+  * FP8 rounding is checked against an explicitly enumerated value
+    lattice (every FP8 format has <= 256 values, so we can build the
+    exact set from bit semantics and round by nearest-with-ties-to-even
+    via searchsorted) — a totally different algorithm from the
+    exponent-arithmetic path used by the kernels.
+  * GEMM is plain numpy matmul in f64.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from . import fp8
+
+
+@functools.lru_cache(maxsize=None)
+def lattice(fmt_name: str) -> np.ndarray:
+    """All non-negative finite values of the format, ascending (f64)."""
+    fmt = fp8.FORMATS[fmt_name]
+    vals = {0.0}
+    # Subnormals: m * 2**(emin - man_bits), m in 1..2**man_bits - 1.
+    for m in range(1, 2**fmt.man_bits):
+        vals.add(m * 2.0 ** (fmt.emin - fmt.man_bits))
+    # Normals: (1 + m/2**man_bits) * 2**e while <= max_finite.
+    e = fmt.emin
+    while 2.0**e <= fmt.max_finite:
+        for m in range(2**fmt.man_bits):
+            v = (1.0 + m / 2**fmt.man_bits) * 2.0**e
+            if v <= fmt.max_finite:
+                vals.add(v)
+        e += 1
+    arr = np.array(sorted(vals), dtype=np.float64)
+    assert arr[-1] == fmt.max_finite, (fmt_name, arr[-1])
+    return arr
+
+
+def ref_quantize_rtn(x: np.ndarray, fmt: fp8.Fp8Format) -> np.ndarray:
+    """Nearest-lattice-value rounding with ties-to-even, saturating."""
+    lat = lattice(fmt.name)
+    ax = np.abs(np.asarray(x, dtype=np.float64))
+    idx = np.searchsorted(lat, ax)  # lat[idx-1] <= ax < lat[idx]
+    idx = np.clip(idx, 1, len(lat) - 1)
+    lo, hi = lat[idx - 1], lat[idx]
+    mid = (lo + hi) / 2.0
+    take_hi = ax > mid
+    # Ties-to-even: the candidate whose mantissa code is even. Lattice
+    # index parity tracks mantissa-code parity (index 0 is +0, code 0).
+    tie = ax == mid
+    hi_even = (idx % 2) == 0
+    take_hi = take_hi | (tie & hi_even)
+    y = np.where(take_hi, hi, lo)
+    y = np.where(ax >= lat[-1], lat[-1], y)  # saturate
+    return (np.sign(x) * y).astype(np.float32)
+
+
+def ref_scaled_gemm(xq, wq, sx, sw):
+    """f64 reference of the fused-dequant GEMM."""
+    acc = np.asarray(xq, np.float64) @ np.asarray(wq, np.float64)
+    return (acc * np.asarray(sx, np.float64) * np.asarray(sw, np.float64)).astype(
+        np.float32
+    )
+
+
+def ref_fp8_matmul(x, w, fmt: fp8.Fp8Format, scaling: str = "per_row"):
+    """End-to-end reference FP8 matmul (RTN only)."""
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    sw = np.maximum(np.max(np.abs(w), axis=0, keepdims=True), 1e-12) / fmt.max_finite
+    wq = ref_quantize_rtn(w / sw, fmt)
+    if scaling == "per_row":
+        sx = np.maximum(np.max(np.abs(x), axis=1, keepdims=True), 1e-12) / fmt.max_finite
+    elif scaling == "per_tensor":
+        sx = np.full((x.shape[0], 1), max(np.max(np.abs(x)), 1e-12) / fmt.max_finite,
+                     np.float32)
+    else:
+        raise ValueError(scaling)
+    xq = ref_quantize_rtn(x / sx, fmt)
+    return ref_scaled_gemm(xq, wq, sx, sw)
+
+
+def ref_decode_attention(q, k_cache, v_cache, lengths):
+    """Reference GQA decode attention.
+
+    q: (B, H, d); k_cache/v_cache: (B, S, Hkv, d); lengths: (B,) valid
+    prefix lengths. Returns (B, H, d).
+    """
+    q = np.asarray(q, np.float32)
+    k = np.asarray(k_cache, np.float32)
+    v = np.asarray(v_cache, np.float32)
+    b, h, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = h // hkv
+    out = np.zeros((b, h, d), np.float32)
+    for bi in range(b):
+        for hi in range(h):
+            kv = hi // g
+            scores = (k[bi, :, kv, :] @ q[bi, hi] / np.sqrt(d)).astype(np.float64)
+            scores[lengths[bi]:] = -np.inf
+            scores -= scores.max()
+            p = np.exp(scores)
+            p /= p.sum()
+            out[bi, hi] = (p[:, None] * v[bi, :, kv, :]).sum(axis=0)
+    return out
+
+
+def ref_rmsnorm(x, w, eps=1e-5):
+    x64 = np.asarray(x, np.float64)
+    return (x64 / np.sqrt((x64**2).mean(-1, keepdims=True) + eps)
+            * np.asarray(w, np.float64)).astype(np.float32)

@@ -1,0 +1,195 @@
+"""Build-time training of the tiny Llama tiers on a synthetic corpus.
+
+Substitute for the paper's Llama v3.x checkpoints (DESIGN.md): we cannot
+load 1B-70B weights, so we train four width-tiers of the same
+architecture on a synthetic language with learnable structure, then run
+the paper's PTQ experiments (Tables 4-5) against them.
+
+The synthetic language mixes:
+  * a fixed sparse second-order Markov chain (local structure; small
+    models can learn it), and
+  * long-range copy patterns (a token announces that the token k steps
+    back repeats; larger models learn it better),
+so accuracy improves monotonically with tier size — giving Table 5's
+model-size axis meaning.
+
+Usage:  python -m compile.train --tier 8b --steps 400 --out ../artifacts/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+VOCAB = 256
+COPY_TOKEN = 255          # "repeat the token from DELTA steps back"
+COPY_DELTA = 8
+COPY_PROB = 0.08
+BRANCH = 4                # plausible continuations per bigram state
+
+
+class SyntheticLanguage:
+    """Deterministic synthetic corpus generator (seeded)."""
+
+    def __init__(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        # Sparse second-order transitions: state (a, b) -> BRANCH tokens
+        # with Zipf-ish probabilities.
+        self.succ = rng.integers(0, VOCAB - 1, size=(VOCAB, VOCAB, BRANCH))
+        p = 1.0 / np.arange(1, BRANCH + 1)
+        self.probs = p / p.sum()
+
+    def sample(self, rng: np.random.Generator, length: int) -> np.ndarray:
+        out = np.empty(length, np.int64)
+        out[0] = rng.integers(0, VOCAB - 1)
+        out[1] = rng.integers(0, VOCAB - 1)
+        i = 2
+        while i < length:
+            if i >= COPY_DELTA and rng.random() < COPY_PROB and i + 1 < length:
+                out[i] = COPY_TOKEN
+                out[i + 1] = out[i + 1 - COPY_DELTA]
+                i += 2
+                continue
+            a, b = out[i - 2], out[i - 1]
+            choice = rng.choice(BRANCH, p=self.probs)
+            out[i] = self.succ[a, b, choice]
+            i += 1
+        return out
+
+    def batch(self, rng: np.random.Generator, b: int, s: int) -> np.ndarray:
+        return np.stack([self.sample(rng, s) for _ in range(b)])
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (optax is not available in this image)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new = jax.tree.map(
+        lambda p, mi, vi: p - lr * (mi * mhat_scale)
+        / (jnp.sqrt(vi * vhat_scale) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_tier(tier: str, steps: int, seed: int = 0, batch: int = 32,
+               seq: int = 64, lr: float = 1e-3, log_every: int = 50,
+               quiet: bool = False):
+    cfg = M.TIERS[tier]
+    lang = SyntheticLanguage(seed=0)  # language fixed across tiers
+    rng = np.random.default_rng(seed + 1)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    loss_fn = jax.jit(partial(M.lm_loss, cfg=cfg, prec=M.BF16))
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr_t):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(p, cfg, M.BF16, tokens))(params)
+        params, opt = adam_update(params, grads, opt, lr_t)
+        return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    for it in range(steps):
+        tokens = jnp.asarray(lang.batch(rng, batch, seq))
+        # cosine decay with short warmup
+        warm = min(1.0, (it + 1) / 20)
+        lr_t = lr * warm * 0.5 * (1 + np.cos(np.pi * it / max(steps, 1)))
+        params, opt, loss = step_fn(params, opt, tokens, lr_t)
+        if it % log_every == 0 or it == steps - 1:
+            history.append((it, float(loss)))
+            if not quiet:
+                print(f"[{tier}] step {it:4d} loss {float(loss):.4f} "
+                      f"({time.time()-t0:.1f}s)")
+    return params, cfg, history
+
+
+def save_params(params, path: str):
+    flat = {}
+
+    def flatten(prefix, tree):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                flatten(f"{prefix}/{k}" if prefix else k, v)
+        elif isinstance(tree, list):
+            for i, v in enumerate(tree):
+                flatten(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = np.asarray(tree)
+
+    flatten("", params)
+    np.savez(path, **flat)
+
+
+def load_params(path: str):
+    """Inverse of ``save_params``: rebuild the nested dict/list pytree."""
+    data = np.load(path)
+    root: dict = {}
+    for key in data.files:
+        parts = key.split("/")
+        node = root
+        for i, part in enumerate(parts[:-1]):
+            nxt_container = [] if parts[i + 1].isdigit() else {}
+            if isinstance(node, list):
+                idx = int(part)
+                while len(node) <= idx:
+                    node.append([] if parts[i + 1].isdigit() else {})
+                node = node[idx]
+            else:
+                if part not in node:
+                    node[part] = nxt_container
+                node = node[part]
+        last = parts[-1]
+        val = jnp.asarray(data[key])
+        if isinstance(node, list):
+            idx = int(last)
+            while len(node) <= idx:
+                node.append(None)
+            node[idx] = val
+        else:
+            node[last] = val
+    return root
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", default="1b", choices=list(M.TIERS))
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default="../artifacts/ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    params, cfg, history = train_tier(args.tier, args.steps, args.seed)
+    path = os.path.join(args.out, f"{args.tier}.npz")
+    save_params(params, path)
+    with open(os.path.join(args.out, f"{args.tier}.history.json"), "w") as f:
+        json.dump({"tier": args.tier, "loss": history,
+                   "params": cfg.param_count()}, f)
+    print(f"saved {path} ({cfg.param_count():,} params)")
+
+
+if __name__ == "__main__":
+    main()

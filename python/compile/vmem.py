@@ -1,0 +1,95 @@
+"""L1 §Perf analysis: VMEM footprint + MXU-utilization estimates per
+BlockSpec (interpret=True gives no TPU timing, so kernel quality is
+assessed structurally — DESIGN.md §6).
+
+For the fused-dequant FP8 GEMM kernel (fp8_gemm.scaled_gemm):
+  resident per grid step = x tile (bm x bk) + w tile (bk x bn)
+                         + output/accumulator tile (bm x bn, f32)
+                         + scale slivers (bm x 1, 1 x bn)
+MXU utilization estimate = fraction of 128x128-systolic issue slots
+doing useful MACs given tile alignment (the TPU analogue of the
+paper's Gaudi MME folding analysis, Fig. 8).
+
+Usage: python -m compile.vmem  -> prints the table for the shipped
+kernel configurations and asserts the VMEM budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .kernels.fp8_gemm import Fp8GemmConfig
+
+#: v4/v5-class core VMEM budget (bytes) — we keep a safety margin.
+VMEM_BUDGET = 16 * 1024 * 1024
+MXU = 128  # systolic array edge
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEstimate:
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int
+    mxu_utilization: float
+    k_steps_per_output: float
+
+    @property
+    def fits(self) -> bool:
+        return self.vmem_bytes <= VMEM_BUDGET
+
+
+def estimate(cfg: Fp8GemmConfig, m: int, k: int, n: int,
+             in_bytes: int = 4, acc_bytes: int = 4) -> KernelEstimate:
+    """Footprint/utilization estimate for scaled_gemm's BlockSpecs.
+
+    ``in_bytes`` is 4 under interpret emulation (lattice values in
+    f32); a real-TPU FP8 kernel would store 1-byte operands, so both
+    views are reported by callers where relevant.
+    """
+    bm, bn, bk = min(cfg.bm, m), min(cfg.bn, n), min(cfg.bk, k)
+    vmem = (
+        bm * bk * in_bytes        # x tile
+        + bk * bn * in_bytes      # w tile
+        + bm * bn * acc_bytes     # output/accumulator tile
+        + bm * 1 * 4 + 1 * bn * 4  # scale slivers
+    )
+    # Double-buffered input tiles (pallas pipelines the HBM->VMEM copy).
+    vmem += (bm * bk + bk * bn) * in_bytes
+
+    # MXU issue-slot utilization from tile alignment to the 128x128
+    # array: ceil waste in each dim.
+    def frac(d):
+        return d / (math.ceil(d / MXU) * MXU)
+
+    util = frac(bm) * frac(bn) * frac(bk)
+    return KernelEstimate(
+        bm=bm, bn=bn, bk=bk,
+        vmem_bytes=vmem,
+        mxu_utilization=util,
+        k_steps_per_output=math.ceil(k / bk),
+    )
+
+
+def report(shapes=((64, 4096, 4096), (128, 4096, 14336),
+                   (2048, 4096, 4096), (8, 1024, 1024))):
+    cfg = Fp8GemmConfig()
+    rows = []
+    for m, k, n in shapes:
+        e = estimate(cfg, m, k, n)
+        rows.append((m, k, n, e))
+    return rows
+
+
+def main():
+    print(f"{'shape':>20} {'tiles':>14} {'VMEM KiB':>9} {'MXU util':>9} fits")
+    for m, k, n, e in report():
+        print(f"{f'({m},{k},{n})':>20} {f'{e.bm}x{e.bn}x{e.bk}':>14} "
+              f"{e.vmem_bytes / 1024:>9.0f} {e.mxu_utilization:>9.2f} "
+              f"{e.fits}")
+        assert e.fits, "kernel tile set exceeds VMEM budget"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Pallas decode-attention kernel vs the numpy oracle."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+
+def mk(b, h, hkv, d, s, seed=0):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    k = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    lengths = rng.integers(1, s + 1, size=b).astype(np.int32)
+    return q, k, v, lengths
+
+
+@pytest.mark.parametrize("b,h,hkv,d,s", [
+    (1, 4, 4, 16, 8),     # MHA
+    (2, 8, 2, 32, 64),    # GQA g=4
+    (4, 8, 1, 16, 33),    # MQA, odd seq
+])
+def test_decode_attention_matches_oracle(b, h, hkv, d, s):
+    q, k, v, lengths = mk(b, h, hkv, d, s, seed=b * 100 + s)
+    got = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lengths)))
+    want = ref.ref_decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_masking_ignores_stale_cache():
+    # Entries beyond `lengths` must not affect the output.
+    q, k, v, _ = mk(2, 4, 2, 16, 32, seed=3)
+    lengths = np.asarray([5, 20], np.int32)
+    out1 = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lengths)))
+    k2, v2 = k.copy(), v.copy()
+    k2[0, 5:] = 1e6  # garbage past the valid prefix
+    v2[1, 20:] = -1e6
+    out2 = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), jnp.asarray(lengths)))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+def test_length_one_attends_single_position():
+    q, k, v, _ = mk(1, 2, 2, 8, 16, seed=4)
+    lengths = np.asarray([1], np.int32)
+    got = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lengths)))
+    # softmax over a single position == that position's V.
+    np.testing.assert_allclose(got[0, 0], v[0, 0, 0], rtol=1e-6)
+
+
+@given(b=st.integers(1, 4), g=st.integers(1, 4), hkv=st.integers(1, 4),
+       d=st.sampled_from([8, 16]), s=st.integers(2, 40))
+@settings(max_examples=20, deadline=None)
+def test_decode_attention_hypothesis(b, g, hkv, d, s):
+    h = g * hkv
+    q, k, v, lengths = mk(b, h, hkv, d, s, seed=b + g + s)
+    got = np.asarray(attention.decode_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lengths)))
+    want = ref.ref_decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,124 @@
+"""FP8 emulation vs the enumerated-lattice oracle (bit-exact)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8, ref
+
+FORMATS = [fp8.E4M3FN, fp8.E4M3_GAUDI, fp8.E5M2]
+IDS = [f.name for f in FORMATS]
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=IDS)
+def test_lattice_counts(fmt):
+    lat = ref.lattice(fmt.name)
+    # E4M3FN: 2 sign * (7 subnormal + 15 binades * 8 - 1 NaN-slot) ... we
+    # only check the salient facts asserted in the paper §3.2.
+    assert lat[-1] == fmt.max_finite
+    assert lat[1] == fmt.min_subnormal
+    if fmt is fp8.E4M3_GAUDI:
+        # "seven fewer magnitude representations" than NVIDIA E4M3FN.
+        assert len(ref.lattice("e4m3fn")) - len(lat) == 7
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=IDS)
+def test_quantize_matches_oracle_dense_sweep(fmt):
+    # Dense sweep over the format's dynamic range, both signs, plus
+    # exact lattice points and midpoints (the tie-break cases).
+    lat = ref.lattice(fmt.name)
+    mids = (lat[1:] + lat[:-1]) / 2.0
+    xs = np.concatenate([
+        np.linspace(-fmt.max_finite * 1.5, fmt.max_finite * 1.5, 20001),
+        lat, -lat, mids, -mids,
+        np.array([0.0, -0.0, fmt.min_subnormal / 2, -fmt.min_subnormal / 2]),
+    ]).astype(np.float32)
+    got = np.asarray(fp8.quantize(jnp.asarray(xs), fmt, fp8.RTN))
+    want = ref.ref_quantize_rtn(xs, fmt)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=IDS)
+def test_quantize_idempotent(fmt):
+    lat = ref.lattice(fmt.name)
+    xs = np.concatenate([lat, -lat]).astype(np.float32)
+    got = np.asarray(fp8.quantize(jnp.asarray(xs), fmt, fp8.RTN))
+    np.testing.assert_array_equal(got, xs)
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=IDS)
+def test_stochastic_rounding_is_unbiased_and_on_lattice(fmt):
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((20000,), 1.0 + 2.0 ** (-fmt.man_bits) * 0.3)  # 30% up
+    got = np.asarray(fp8.quantize(x, fmt, fp8.SR, key))
+    lat = ref.lattice(fmt.name)
+    assert np.isin(got, lat).all()
+    lo = 1.0
+    hi = 1.0 + 2.0 ** (-fmt.man_bits)
+    p_up = (got == hi).mean()
+    assert set(np.unique(got)) <= {lo, hi}
+    assert abs(p_up - 0.3) < 0.02  # Eq. 2: E[q] == x
+
+
+def test_e5m2_matches_float16_truncation():
+    # Independent cross-check: E5M2 has float16's exponent range, so
+    # RTN-to-E5M2 == RTN of f32 to f16 with mantissa re-rounded to 2 bits.
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(50000) * rng.choice([1e-4, 1e-2, 1.0, 100.0],
+                                                 50000)).astype(np.float32)
+    x = np.clip(x, -fp8.E5M2.max_finite, fp8.E5M2.max_finite)
+    got = np.asarray(fp8.quantize(jnp.asarray(x), fp8.E5M2, fp8.RTN))
+    want = ref.ref_quantize_rtn(x, fp8.E5M2)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(st.floats(-500.0, 500.0, allow_nan=False, width=32),
+                min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_quantize_hypothesis_e4m3fn(xs):
+    x = np.asarray(xs, np.float32)
+    got = np.asarray(fp8.quantize(jnp.asarray(x), fp8.E4M3FN, fp8.RTN))
+    want = ref.ref_quantize_rtn(x, fp8.E4M3FN)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.floats(1e-6, 6e4, allow_nan=False),
+       st.sampled_from(["e4m3fn", "e4m3_gaudi", "e5m2"]))
+@settings(max_examples=300, deadline=None)
+def test_quantize_error_bound(x, fmt_name):
+    # |q(x) - x| <= quantum/2 for in-range values (classic RTN bound).
+    fmt = fp8.FORMATS[fmt_name]
+    if x > fmt.max_finite:
+        return
+    q = float(fp8.quantize(jnp.asarray([x], jnp.float32), fmt, fp8.RTN)[0])
+    lat = ref.lattice(fmt_name)
+    i = np.searchsorted(lat, x)
+    spacing = lat[min(i, len(lat) - 1)] - lat[max(i - 1, 0)]
+    assert abs(q - x) <= spacing / 2 + 1e-30
+
+
+def test_scaling_helpers():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((16, 32)),
+                    jnp.float32)
+    rs = fp8.row_scales(x, fp8.E4M3FN)
+    assert rs.shape == (16, 1)
+    np.testing.assert_allclose(
+        np.asarray(rs[:, 0]),
+        np.abs(np.asarray(x)).max(1) / 448.0, rtol=1e-6)
+    ts = fp8.tensor_scale(x, fp8.E4M3FN)
+    assert float(ts) == pytest.approx(float(np.abs(np.asarray(x)).max()) / 448.0)
+
+
+def test_pow2_scale_snapping():
+    assert float(fp8.pow2_scale(jnp.float32(0.3))) == 0.5
+    assert float(fp8.pow2_scale(jnp.float32(0.5))) == 0.5
+    # Gaudi-2 fixed set snaps UP to the next member.
+    s = fp8.pow2_scale(jnp.float32(0.01), fp8.GAUDI2_HW_SCALES)
+    assert float(s) == 2.0**-4
+    s = fp8.pow2_scale(jnp.float32(3.0), fp8.GAUDI2_HW_SCALES)
+    assert float(s) == 2.0**4
+    # Above the largest member: clamp to largest.
+    s = fp8.pow2_scale(jnp.float32(100.0), fp8.GAUDI2_HW_SCALES)
+    assert float(s) == 2.0**4

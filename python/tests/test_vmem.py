@@ -1,0 +1,40 @@
+"""L1 kernel structural-quality gates (§Perf): VMEM budget + MXU
+alignment for the shipped BlockSpec configuration."""
+
+from compile.kernels.fp8_gemm import Fp8GemmConfig
+from compile import vmem
+
+
+def test_default_tiles_fit_vmem():
+    cfg = Fp8GemmConfig()
+    for m, k, n in [(64, 4096, 4096), (128, 4096, 14336),
+                    (2048, 4096, 4096), (4096, 8192, 8192)]:
+        e = vmem.estimate(cfg, m, k, n)
+        assert e.fits, (m, k, n, e.vmem_bytes)
+
+
+def test_default_tiles_are_mxu_aligned():
+    # 128-multiples everywhere -> full MXU utilization on big shapes.
+    cfg = Fp8GemmConfig()
+    e = vmem.estimate(cfg, 4096, 4096, 4096)
+    assert e.mxu_utilization == 1.0
+
+
+def test_small_m_wastes_mxu_rows():
+    # The §5.6 thin-GEMM effect, visible at the kernel level: M=8
+    # fills 8/128 of the array rows.
+    cfg = Fp8GemmConfig()
+    e = vmem.estimate(cfg, 8, 1024, 1024)
+    assert abs(e.mxu_utilization - 8 / 128) < 1e-9
+
+
+def test_oversized_tiles_rejected():
+    big = Fp8GemmConfig(bm=1024, bn=1024, bk=1024)
+    e = vmem.estimate(big, 4096, 4096, 4096)
+    assert not e.fits  # 1024^2 f32 accumulator alone is 4 MiB x buffers
+
+
+def test_k_steps_accounting():
+    cfg = Fp8GemmConfig()
+    e = vmem.estimate(cfg, 256, 4096, 256)
+    assert e.k_steps_per_output == 32

@@ -1,0 +1,75 @@
+//! Ablation (paper §5.5 extension): per-GPU vs per-rack power capping.
+//! Mixed prefill/decode fleet — per-rack capping lets prefill-heavy
+//! GPUs borrow headroom from decode-heavy ones.
+
+use fp8_tco::analysis::perfmodel::{decode_step, prefill, PrecisionMode, StepConfig};
+use fp8_tco::hwsim::power::{apply_cap, power_draw, rack_allocation};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama;
+
+fn main() {
+    let m = llama::by_name("llama-8b").unwrap();
+    let dev = Device::H100;
+    let cfg = StepConfig::new(dev, PrecisionMode::fp8_dynamic());
+
+    // An 8-GPU server: 2 GPUs on prefill (hot), 6 on decode (cool) —
+    // the Splitwise-style split of §2.2.
+    let pre = prefill(m, &cfg, 4, 4096);
+    let dec = decode_step(m, &cfg, 64, 1024);
+    let demands: Vec<f64> = (0..8)
+        .map(|i| {
+            if i < 2 {
+                power_draw(dev, pre.util)
+            } else {
+                power_draw(dev, dec.util)
+            }
+        })
+        .collect();
+    let budget = 8.0 * 400.0; // A100-era 400 W/GPU provisioning (§5.5)
+
+    // Per-GPU: everyone clamped to 400 W.
+    let per_gpu_pre = apply_cap(dev, 400.0, pre.seconds, pre.util, 0.95);
+    // Per-rack: water-filling allocation.
+    let alloc = rack_allocation(budget, &demands);
+    let per_rack_pre = apply_cap(dev, alloc[0], pre.seconds, pre.util, 0.95);
+
+    let mut t = Table::new(
+        "ablation — power capping policy (8x H100, 3.2 kW budget)",
+        &["policy", "prefill GPU W", "prefill slowdown", "decode GPU W",
+          "decode slowdown", "rack W used"],
+    );
+    let dec_capped = apply_cap(dev, 400.0, dec.seconds, dec.util, 0.05);
+    t.row(vec![
+        "per-GPU 400 W".into(),
+        f(per_gpu_pre.watts, 0),
+        f(per_gpu_pre.seconds / pre.seconds, 2),
+        f(dec_capped.watts, 0),
+        f(dec_capped.seconds / dec.seconds, 2),
+        f(per_gpu_pre.watts * 2.0 + dec_capped.watts * 6.0, 0),
+    ]);
+    let dec_rack = apply_cap(dev, alloc[7], dec.seconds, dec.util, 0.05);
+    t.row(vec![
+        "per-rack 3.2 kW".into(),
+        f(per_rack_pre.watts, 0),
+        f(per_rack_pre.seconds / pre.seconds, 2),
+        f(dec_rack.watts, 0),
+        f(dec_rack.seconds / dec.seconds, 2),
+        f(per_rack_pre.watts * 2.0 + dec_rack.watts * 6.0, 0),
+    ]);
+    t.print();
+
+    // The §5.5 claim: rack capping preserves the budget but speeds up
+    // the throttled (prefill) GPUs.
+    assert!(alloc[0] > 400.0, "prefill GPUs borrow headroom: {}", alloc[0]);
+    assert!(per_rack_pre.seconds < per_gpu_pre.seconds,
+            "per-rack prefill faster: {} vs {}",
+            per_rack_pre.seconds, per_gpu_pre.seconds);
+    assert!(alloc.iter().sum::<f64>() <= budget + 1e-6);
+    println!(
+        "ABLATION power_cap: per-rack capping recovers {:.0}% of prefill \
+         slowdown at equal budget (§5.5's proposal quantified)",
+        (per_gpu_pre.seconds - per_rack_pre.seconds)
+            / (per_gpu_pre.seconds - pre.seconds).max(1e-12) * 100.0
+    );
+}

@@ -1,0 +1,75 @@
+//! FIG5: decode throughput BF16 vs FP8 on Llama-8B at batch 64 across
+//! sequence lengths — Gaudi 2 (left panel: BF16 vs static FP8) and
+//! H100 (right panel: BF16 vs static vs dynamic FP8).
+//!
+//! Paper claims: Gaudi FP8 gain >= ~1.5x; H100 gain < 1.25x; on H100,
+//! dynamic scaling outperforms static (row-wise GEMMs are faster than
+//! per-tensor at decode's small shapes, Table 3).
+
+use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama;
+
+fn main() {
+    let m = llama::by_name("llama-8b").unwrap();
+    let seqs = [128usize, 256, 512, 1024, 2048, 4096];
+
+    let mut t = Table::new(
+        "Fig. 5 (left) — Gaudi 2 decode tok/s, b=64",
+        &["s", "bf16", "fp8 static", "gain"],
+    );
+    for &s in &seqs {
+        let b16 = decode_step(m, &StepConfig::new(Device::Gaudi2, PrecisionMode::Bf16), 64, s);
+        let f8 = decode_step(m, &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), 64, s);
+        let gain = b16.seconds / f8.seconds;
+        t.row(vec![
+            s.to_string(),
+            f(64.0 / b16.seconds, 0),
+            f(64.0 / f8.seconds, 0),
+            f(gain, 2),
+        ]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        "Fig. 5 (right) — H100 decode tok/s, b=64",
+        &["s", "bf16", "fp8 static", "fp8 dynamic", "best gain"],
+    );
+    for &s in &seqs {
+        let b16 = decode_step(m, &StepConfig::new(Device::H100, PrecisionMode::Bf16), 64, s);
+        let st = decode_step(m, &StepConfig::new(Device::H100, PrecisionMode::fp8_static()), 64, s);
+        let dy = decode_step(m, &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), 64, s);
+        let gain = b16.seconds / dy.seconds.min(st.seconds);
+        t2.row(vec![
+            s.to_string(),
+            f(64.0 / b16.seconds, 0),
+            f(64.0 / st.seconds, 0),
+            f(64.0 / dy.seconds, 0),
+            f(gain, 2),
+        ]);
+        // H100: dynamic >= static (paper: row-wise faster at small M).
+        assert!(dy.seconds <= st.seconds * 1.001, "s={s}: dynamic >= static");
+        assert!(gain < 1.25, "s={s}: H100 gain {gain} must stay under 25%");
+    }
+    t2.print();
+
+    // Gaudi gain at short-to-moderate sequences >= 1.4x (paper: >= 50%
+    // at its measured settings; KV reads dilute it as s grows).
+    let b16 = decode_step(m, &StepConfig::new(Device::Gaudi2, PrecisionMode::Bf16), 64, 256);
+    let f8 = decode_step(m, &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), 64, 256);
+    let gaudi_gain = b16.seconds / f8.seconds;
+    assert!(gaudi_gain >= 1.45, "gaudi gain {gaudi_gain}");
+    println!("Gaudi FP8 gain at s=256: {gaudi_gain:.2}x (paper: '50% or greater')");
+
+    // Cross-device: Gaudi2+FP8 comparable to H100 (§5.4).
+    let g = decode_step(m, &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), 64, 1024);
+    let h = decode_step(m, &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), 64, 1024);
+    println!(
+        "s=1024: Gaudi2 FP8 {:.0} tok/s vs H100 FP8 {:.0} tok/s",
+        64.0 / g.seconds,
+        64.0 / h.seconds
+    );
+    assert!(g.seconds < h.seconds * 1.3, "comparable decode throughput");
+    println!("FIG5: REPRODUCED (shape)");
+}

@@ -1,0 +1,61 @@
+//! FIG6: thin-GEMM MFU comparison — Gaudi 2 holds similar MFU for
+//! BF16 and FP8 at the same shape, while the H100's FP8 MFU drops
+//! (its FP8 units starve on the same element feed).
+
+use fp8_tco::hwsim::gemm::{gemm_time, GemmConfig};
+use fp8_tco::hwsim::spec::{Accum, Device, Scaling};
+use fp8_tco::util::table::{f, Table};
+
+fn main() {
+    let shapes: [(usize, usize); 6] = [
+        (8, 1024), (32, 1024), (64, 1024),
+        (8, 4096), (32, 4096), (64, 4096),
+    ];
+    let mut t = Table::new(
+        "Fig. 6 — thin GEMM MFU (%)",
+        &["(M,K=N)", "G2 bf16", "G2 fp8", "G2 drop", "H100 bf16", "H100 fp8",
+          "H100 drop"],
+    );
+    let mut g_drops = Vec::new();
+    let mut h_drops = Vec::new();
+    for &(m, kn) in &shapes {
+        let gb = gemm_time(Device::Gaudi2, m, kn, kn, GemmConfig::bf16()).mfu;
+        let gf = gemm_time(Device::Gaudi2, m, kn, kn,
+                           GemmConfig::fp8(Scaling::PerRow, Accum::Fp32)).mfu;
+        let hb = gemm_time(Device::H100, m, kn, kn, GemmConfig::bf16()).mfu;
+        let hf = gemm_time(Device::H100, m, kn, kn,
+                           GemmConfig::fp8(Scaling::PerRow, Accum::Fast)).mfu;
+        let g_drop = 1.0 - gf / gb;
+        let h_drop = 1.0 - hf / hb;
+        g_drops.push(g_drop);
+        h_drops.push(h_drop);
+        t.row(vec![
+            format!("({m},{kn})"),
+            f(gb * 100.0, 2),
+            f(gf * 100.0, 2),
+            f(g_drop * 100.0, 1),
+            f(hb * 100.0, 2),
+            f(hf * 100.0, 2),
+            f(h_drop * 100.0, 1),
+        ]);
+    }
+    t.print();
+    let g_avg = g_drops.iter().sum::<f64>() / g_drops.len() as f64;
+    let h_avg = h_drops.iter().sum::<f64>() / h_drops.len() as f64;
+    println!(
+        "avg FP8-vs-BF16 MFU drop: Gaudi2 {:.1}% vs H100 {:.1}% — \
+         'Gaudi 2 maintains a similar MFU ... noticeable drop for the H100'",
+        g_avg * 100.0,
+        h_avg * 100.0
+    );
+    assert!(h_avg > g_avg + 0.1, "H100 must drop much more than Gaudi");
+    // And the MFU gap translates into absolute thin-GEMM wins (Table 6).
+    for &(m, kn) in &shapes {
+        let g = gemm_time(Device::Gaudi2, m, kn, kn,
+                          GemmConfig::fp8(Scaling::PerRow, Accum::Fp32));
+        let h = gemm_time(Device::H100, m, kn, kn,
+                          GemmConfig::fp8(Scaling::PerRow, Accum::Fast));
+        assert!(g.tflops() > h.tflops());
+    }
+    println!("FIG6: REPRODUCED (shape)");
+}

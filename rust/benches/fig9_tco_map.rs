@@ -1,0 +1,72 @@
+//! FIG9: the TCO map with measured scenario trajectories (paper §6).
+//!
+//! Derives R_Th(Gaudi2/H100) from the hwsim decode model under FP8 and
+//! BF16 and at short vs long sequences, then shows where each scenario
+//! lands on the Fig. 1 grid — the "FP8 shifts the balance toward the
+//! green region; long sequences shift it back" narrative.
+
+use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::tco::{tco_ratio, Scenario, TcoInputs};
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama;
+
+fn r_th(prec_g: PrecisionMode, prec_h: PrecisionMode, s: usize) -> f64 {
+    let m = llama::by_name("llama-8b").unwrap();
+    let g = decode_step(m, &StepConfig::new(Device::Gaudi2, prec_g), 64, s);
+    let h = decode_step(m, &StepConfig::new(Device::H100, prec_h), 64, s);
+    h.seconds / g.seconds
+}
+
+fn main() {
+    // The background map (coarse, the Fig. 9 axes).
+    let mut map = Table::new(
+        "Fig. 9 — TCO_A/TCO_B map (A=Gaudi2, B=H100; C_S=C_I, R_IC=1)",
+        &["R_Th \\ R_SC", "1.0", "0.8", "0.6", "0.4", "0.2"],
+    );
+    for r_th_row in [1.6, 1.4, 1.2, 1.0, 0.8, 0.6] {
+        let mut row = vec![format!("{r_th_row:.1}")];
+        for r_sc in [1.0, 0.8, 0.6, 0.4, 0.2] {
+            row.push(f(tco_ratio(TcoInputs::fig1(r_sc, r_th_row)), 2));
+        }
+        map.row(row);
+    }
+    map.print();
+
+    // Scenario trajectory: BF16 -> FP8 (up), short -> long seq (down).
+    let scenarios = [
+        Scenario { name: "BF16 decode, s=1k".into(),
+                   r_th: r_th(PrecisionMode::Bf16, PrecisionMode::Bf16, 1024), r_sc: 0.6 },
+        Scenario { name: "FP8 decode, s=1k".into(),
+                   r_th: r_th(PrecisionMode::fp8_static(), PrecisionMode::fp8_dynamic(), 1024), r_sc: 0.6 },
+        Scenario { name: "FP8 decode, s=256".into(),
+                   r_th: r_th(PrecisionMode::fp8_static(), PrecisionMode::fp8_dynamic(), 256), r_sc: 0.6 },
+        Scenario { name: "FP8 decode, s=16k".into(),
+                   r_th: r_th(PrecisionMode::fp8_static(), PrecisionMode::fp8_dynamic(), 16384), r_sc: 0.6 },
+    ];
+    let mut t = Table::new(
+        "scenario trajectory at R_SC = 0.6",
+        &["scenario", "R_Th (G2/H100)", "TCO ratio", "region"],
+    );
+    for s in &scenarios {
+        let ratio = s.tco();
+        t.row(vec![
+            s.name.clone(),
+            f(s.r_th, 2),
+            f(ratio, 2),
+            if ratio < 1.0 { "green (Gaudi2 cheaper)".into() }
+            else { "red (H100 cheaper)".into() },
+        ]);
+    }
+    t.print();
+
+    // §6's two claims:
+    let bf16 = scenarios[0].r_th;
+    let fp8 = scenarios[1].r_th;
+    assert!(fp8 > bf16, "FP8 shifts R_Th toward Gaudi: {bf16} -> {fp8}");
+    let short = scenarios[2].r_th;
+    let long = scenarios[3].r_th;
+    assert!(long < short, "long sequences shift it back: {short} -> {long}");
+    println!("FIG9: REPRODUCED (FP8 raises R_Th {bf16:.2}->{fp8:.2}; \
+              16k seq lowers it {short:.2}->{long:.2})");
+}

@@ -1,0 +1,95 @@
+//! §Perf microbenchmarks: the L3 hot paths, timed (no criterion in the
+//! vendored set — fixed-iteration wall-clock with warmup).
+//!
+//! Targets (DESIGN.md §6): hwsim gemm_time < 1 us/call so parameter
+//! sweeps are instant; engine step overhead small vs modelled step
+//! latency; JSON+quantize utility throughput.
+
+use std::time::Instant;
+
+use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
+use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
+use fp8_tco::fp8::{quantize_rtn, Format};
+use fp8_tco::hwsim::gemm::{gemm_time, GemmConfig};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::util::json::Json;
+use fp8_tco::util::rng::Rng;
+use fp8_tco::workload::llama;
+use fp8_tco::workload::trace::Request;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.min(100) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.3} us/iter ({iters} iters)", per * 1e6);
+    per
+}
+
+fn main() {
+    println!("== perf_hotpath ==");
+
+    // hwsim GEMM evaluation (drives every sweep).
+    let mut acc = 0.0f64;
+    let per = bench("hwsim::gemm_time (thin fp8)", 200_000, || {
+        let bd = gemm_time(Device::Gaudi2, 64, 4096, 4096,
+                           GemmConfig::fp8(fp8_tco::hwsim::spec::Scaling::PerRow,
+                                           fp8_tco::hwsim::spec::Accum::Fp32));
+        acc += bd.seconds;
+    });
+    assert!(per < 1e-6, "gemm_time must stay under 1 us/call: {per}");
+
+    // Full decode-step model.
+    let m = llama::by_name("llama-8b").unwrap();
+    bench("perfmodel::decode_step", 50_000, || {
+        let bd = decode_step(m, &StepConfig::new(Device::Gaudi2,
+                             PrecisionMode::fp8_static()), 64, 1024);
+        acc += bd.seconds;
+    });
+
+    // Engine step loop: schedule+execute 64-seq decode steps on the
+    // sim backend (virtual time, so this is pure coordinator cost).
+    let kv = KvCacheConfig { block_tokens: 16, total_blocks: 1_000_000 };
+    let backend = SimBackend::new(m, StepConfig::new(Device::Gaudi2,
+                                  PrecisionMode::fp8_static()));
+    let mut engine = Engine::new(EngineConfig::new(kv), backend);
+    for i in 0..64u64 {
+        engine.submit(&Request { id: i, arrival: 0.0, prompt_len: 64,
+                                 output_len: 1_000_000 });
+    }
+    // warm in: prefill everything
+    for _ in 0..80 {
+        engine.step();
+    }
+    let per_step = bench("engine.step (64-seq decode, sim)", 20_000, || {
+        engine.step();
+    });
+    println!("  -> scheduler overhead per sequence-token: {:.1} ns",
+             per_step / 64.0 * 1e9);
+
+    // FP8 scalar quantization.
+    let mut rng = Rng::new(1);
+    let xs: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+    bench("fp8::quantize_rtn x4096", 20_000, || {
+        for &x in &xs {
+            acc += quantize_rtn(x, Format::E4M3FN) as f64;
+        }
+    });
+
+    // JSON parse (golden-vector loading path).
+    let doc = format!(
+        "{{\"x\":[{}]}}",
+        (0..2000).map(|i| format!("{}.5", i)).collect::<Vec<_>>().join(",")
+    );
+    bench("util::json parse 2k-float doc", 5_000, || {
+        let j = Json::parse(&doc).unwrap();
+        acc += j.get("x").unwrap().idx(0).unwrap().as_f64().unwrap();
+    });
+
+    println!("(sink {acc:.3e})");
+}

@@ -1,0 +1,63 @@
+//! T1: square FP8 GEMMs with row-wise scaling — throughput, power,
+//! TFLOPS/W on both devices, model vs paper.
+
+use fp8_tco::hwsim::gemm::{gemm_time, GemmConfig};
+use fp8_tco::hwsim::power::power_draw;
+use fp8_tco::hwsim::spec::{Accum, Device, Scaling};
+use fp8_tco::util::table::{f, pct, Table};
+
+// Paper Table 1: (size, tflops, watts) per device.
+const PAPER_GAUDI2: [(usize, f64, f64); 4] = [
+    (1024, 367.9, 375.0), (2048, 586.2, 460.0),
+    (4096, 817.1, 460.0), (8192, 741.8, 490.0),
+];
+const PAPER_H100: [(usize, f64, f64); 4] = [
+    (1024, 218.3, 350.0), (2048, 879.7, 690.0),
+    (4096, 1167.6, 690.0), (8192, 1084.7, 690.0),
+];
+
+fn main() {
+    let mut t = Table::new(
+        "Table 1 — square FP8 GEMM, row-wise scaling",
+        &["device", "size", "TFLOPS (model)", "TFLOPS (paper)", "W (model)",
+          "W (paper)", "TFLOPS/W model", "TFLOPS/W paper"],
+    );
+    let mut ok = true;
+    for (dev, paper, accum) in [
+        (Device::Gaudi2, &PAPER_GAUDI2, Accum::Fp32),
+        (Device::H100, &PAPER_H100, Accum::Fast),
+    ] {
+        for &(s, p_tf, p_w) in paper.iter() {
+            let bd = gemm_time(dev, s, s, s, GemmConfig::fp8(Scaling::PerRow, accum));
+            let w = power_draw(dev, bd.mfu);
+            t.row(vec![
+                dev.name().into(),
+                format!("{}K", s / 1024),
+                format!("{} {}", f(bd.tflops(), 1), pct(bd.mfu)),
+                f(p_tf, 1),
+                f(w, 0),
+                f(p_w, 0),
+                f(bd.tflops() / w, 2),
+                f(p_tf / p_w, 2),
+            ]);
+            // shape acceptance: within 2x and same efficiency ordering
+            let rel = bd.tflops() / p_tf;
+            if !(0.5..=2.0).contains(&rel) {
+                ok = false;
+                eprintln!("DEVIATION {} {s}: model {} paper {p_tf}", dev.name(), bd.tflops());
+            }
+        }
+    }
+    t.print();
+    // Qualitative claims of Table 1 / §3.3:
+    let g1 = gemm_time(Device::Gaudi2, 1024, 1024, 1024,
+                       GemmConfig::fp8(Scaling::PerRow, Accum::Fp32));
+    let h1 = gemm_time(Device::H100, 1024, 1024, 1024,
+                       GemmConfig::fp8(Scaling::PerRow, Accum::Fast));
+    assert!(g1.tflops() > h1.tflops(), "Gaudi 2 higher TFLOPS at 1K");
+    assert!(power_draw(Device::Gaudi2, 0.95) < 0.85 * 600.0,
+            "Gaudi 2 stays below TDP");
+    assert!(power_draw(Device::H100, 0.44) > 0.9 * 700.0,
+            "H100 pegs near TDP from moderate utilization");
+    println!("T1: {}", if ok { "REPRODUCED (shape)" } else { "DEVIATIONS — see above" });
+}

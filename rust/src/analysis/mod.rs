@@ -1,0 +1,9 @@
+//! Analysis layer: roofline/MFU math (§5.2) and the LLM phase
+//! performance model that composes `workload` FLOPs with `hwsim`
+//! device timing to produce the paper's Figures 2–6.
+
+pub mod perfmodel;
+pub mod roofline;
+
+pub use perfmodel::{decode_step, prefill, PrecisionMode, StepBreakdown, StepConfig};
+pub use roofline::{mfu, roofline_flops};

@@ -1,0 +1,376 @@
+//! LLM phase performance model: composes the Eq. 3–6 workload
+//! accounting with the hwsim GEMM/attention/softmax/power models to
+//! time one prefill or one batched decode step on a simulated device.
+//!
+//! Precision accounting follows §5.2 exactly: block linears run at the
+//! configured precision, the LM head and attention stay BF16, KV cache
+//! dtype is configurable (BF16 default).
+
+use crate::hwsim::calib;
+use crate::hwsim::gemm::{gemm_time, GemmConfig};
+use crate::hwsim::power::{self, PowerCap};
+use crate::hwsim::softmax;
+use crate::hwsim::spec::{Accum, Device, Scaling};
+use crate::workload::llama::LlamaConfig;
+
+/// Precision of the block linears.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrecisionMode {
+    Bf16,
+    Fp8 { scaling: Scaling, accum: Accum },
+}
+
+impl PrecisionMode {
+    pub fn fp8_dynamic() -> Self {
+        PrecisionMode::Fp8 { scaling: Scaling::PerRow, accum: Accum::Fast }
+    }
+
+    pub fn fp8_static() -> Self {
+        PrecisionMode::Fp8 { scaling: Scaling::Static, accum: Accum::Fast }
+    }
+
+    pub fn gemm_cfg(self) -> GemmConfig {
+        match self {
+            PrecisionMode::Bf16 => GemmConfig::bf16(),
+            PrecisionMode::Fp8 { scaling, accum } => GemmConfig::fp8(scaling, accum),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecisionMode::Bf16 => "bf16",
+            PrecisionMode::Fp8 { scaling: Scaling::PerRow, .. } => "fp8-dynamic",
+            PrecisionMode::Fp8 { scaling: Scaling::Static, .. } => "fp8-static",
+            PrecisionMode::Fp8 { scaling: Scaling::PerTensor, .. } => "fp8-tensor",
+            PrecisionMode::Fp8 { scaling: Scaling::HwPow2, .. } => "fp8-hw",
+        }
+    }
+}
+
+/// One simulated model execution setup.
+#[derive(Debug, Clone)]
+pub struct StepConfig {
+    pub device: Device,
+    pub precision: PrecisionMode,
+    /// Tensor-parallel degree (shards heads / intermediate / vocab).
+    pub tp: usize,
+    /// KV-cache element bytes (2.0 = BF16, 1.0 = FP8 KV).
+    pub kv_bytes: f64,
+    pub power_cap: PowerCap,
+}
+
+impl StepConfig {
+    pub fn new(device: Device, precision: PrecisionMode) -> Self {
+        StepConfig { device, precision, tp: 1, kv_bytes: 2.0, power_cap: PowerCap::None }
+    }
+
+    pub fn with_cap(mut self, watts: f64) -> Self {
+        self.power_cap = PowerCap::PerGpu(watts);
+        self
+    }
+
+    pub fn with_tp(mut self, tp: usize) -> Self {
+        self.tp = tp;
+        self
+    }
+}
+
+/// Timing decomposition of one phase step (per device, i.e. one TP
+/// shard; collectives are not modelled — the paper measures single
+/// chips).
+#[derive(Debug, Clone)]
+pub struct StepBreakdown {
+    /// Total step latency (s), post power-cap.
+    pub seconds: f64,
+    pub t_linears: f64,
+    pub t_attention_kv: f64,
+    pub t_softmax: f64,
+    pub t_lm_head: f64,
+    /// Model FLOPs executed (Eq. 3/6 accounting, whole model).
+    pub flops: f64,
+    /// Achieved model throughput (FLOP/s).
+    pub achieved_flops: f64,
+    /// Average matrix-engine utilization driving the power model.
+    pub util: f64,
+    /// Average power draw (W).
+    pub watts: f64,
+}
+
+impl StepBreakdown {
+    pub fn tflops(&self) -> f64 {
+        self.achieved_flops / 1e12
+    }
+}
+
+/// Time one batched decode step: `batch` sequences, each with context
+/// length `seq` (uniform, the paper's measurement setup).
+pub fn decode_step(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> StepBreakdown {
+    let tp = cfg.tp.max(1);
+    let h = m.hidden;
+    let kv_dim = m.kv_heads * m.head_dim() / tp;
+    let inter = m.intermediate / tp;
+    let gcfg = cfg.precision.gemm_cfg();
+
+    // --- block linears (per layer), M = batch (thin GEMM, §5.6).
+    let shapes = [
+        (batch, h, h / tp),      // wq
+        (batch, h, kv_dim),      // wk
+        (batch, h, kv_dim),      // wv
+        (batch, h / tp, h),      // wo
+        (batch, h, inter),       // w_gate
+        (batch, h, inter),       // w_up
+        (batch, inter, h),       // w_down
+    ];
+    let mut t_lin = 0.0;
+    let mut lin_compute_frac_acc = 0.0;
+    for (mm, kk, nn) in shapes {
+        let bd = gemm_time(cfg.device, mm, kk, nn, gcfg);
+        t_lin += bd.seconds;
+        lin_compute_frac_acc += bd.seconds
+            * if bd.bound_by() == "hbm" { 0.0 } else { 1.0 };
+    }
+    t_lin *= m.layers as f64;
+    lin_compute_frac_acc *= m.layers as f64;
+
+    // --- attention: stream each sequence's KV cache (memory-bound,
+    // CI bounded by g — §5.2), plus the thin score/PV GEMMs.
+    let spec = cfg.device.spec();
+    // kv_dim = kv_heads/tp * head_dim, so bytes = 2 * b * s * kv_dim * kv_bytes.
+    let kv_bytes_layer =
+        2.0 * batch as f64 * seq as f64 * kv_dim as f64 * cfg.kv_bytes;
+    let t_kv_layer = kv_bytes_layer / (spec.hbm_bw * calib::hbm_stream_eff(cfg.device));
+    let t_kv = t_kv_layer * m.layers as f64;
+
+    // --- softmax exponentials (§5.7): b*s*heads per layer; SFU
+    // devices overlap them with the layer's matrix work.
+    let heads = m.heads / tp;
+    let n_exp = softmax::decode_exp_count(batch, seq, heads) * m.layers as f64;
+    let overlap = t_lin + t_kv;
+    let t_exp = softmax::exp_time(cfg.device, n_exp, overlap);
+
+    // --- LM head (BF16 — §5.2).
+    let head = gemm_time(cfg.device, batch, h, m.vocab / tp, GemmConfig::bf16());
+    let t_head = head.seconds;
+
+    // --- totals + power.
+    let t_raw = t_lin + t_kv + t_exp + t_head;
+    let lens = vec![seq; batch];
+    let flops = m.decode_step_flops(&lens) / tp as f64;
+    let peak = match cfg.precision {
+        PrecisionMode::Bf16 => spec.peak_bf16,
+        PrecisionMode::Fp8 { .. } => spec.peak_fp8,
+    };
+    let util = (flops / t_raw / peak).min(1.0);
+    let compute_frac = (lin_compute_frac_acc + t_exp) / t_raw;
+    finish(cfg, t_raw, util, compute_frac, flops, t_lin, t_kv, t_exp, t_head)
+}
+
+/// Time one prefill of `batch` sequences of length `seq`.
+pub fn prefill(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> StepBreakdown {
+    let tp = cfg.tp.max(1);
+    let h = m.hidden;
+    let kv_dim = m.kv_heads * m.head_dim() / tp;
+    let inter = m.intermediate / tp;
+    let gcfg = cfg.precision.gemm_cfg();
+    let mm = batch * seq; // token-parallel GEMMs (compute-bound, §5.3)
+
+    let shapes = [
+        (mm, h, h / tp),
+        (mm, h, kv_dim),
+        (mm, h, kv_dim),
+        (mm, h / tp, h),
+        (mm, h, inter),
+        (mm, h, inter),
+        (mm, inter, h),
+    ];
+    let mut t_lin = 0.0;
+    for (a, b, c) in shapes {
+        t_lin += gemm_time(cfg.device, a, b, c, gcfg).seconds;
+    }
+    t_lin *= m.layers as f64;
+
+    // Attention GEMMs (QK^T and PV), causal-halved, BF16: batched as
+    // heads*batch GEMMs of (s, d, s); one fused kernel per layer.
+    let d = m.head_dim();
+    let heads = m.heads / tp;
+    let per_head = gemm_time(cfg.device, seq, d, seq, GemmConfig::bf16());
+    let body = per_head.seconds - per_head.t_launch;
+    let t_attn_layer =
+        body * (heads * batch) as f64 * 2.0 * 0.5 + per_head.t_launch;
+    let t_attn = t_attn_layer * m.layers as f64;
+
+    let n_exp = softmax::prefill_exp_count(batch, seq, heads) * m.layers as f64;
+    let overlap = t_lin + t_attn;
+    let t_exp = softmax::exp_time(cfg.device, n_exp, overlap);
+
+    let head = gemm_time(cfg.device, mm, h, m.vocab / tp, GemmConfig::bf16());
+    let t_head = head.seconds;
+
+    let t_raw = t_lin + t_attn + t_exp + t_head;
+    let flops = batch as f64 * m.prefill_flops(seq) / tp as f64;
+    let spec = cfg.device.spec();
+    let peak = match cfg.precision {
+        PrecisionMode::Bf16 => spec.peak_bf16,
+        PrecisionMode::Fp8 { .. } => spec.peak_fp8,
+    };
+    let util = (flops / t_raw / peak).min(1.0);
+    // Prefill is essentially all compute-bound.
+    finish(cfg, t_raw, util, 0.95, flops, t_lin, t_attn, t_exp, t_head)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    cfg: &StepConfig,
+    t_raw: f64,
+    util: f64,
+    compute_frac: f64,
+    flops: f64,
+    t_lin: f64,
+    t_kv: f64,
+    t_exp: f64,
+    t_head: f64,
+) -> StepBreakdown {
+    let (seconds, watts) = match cfg.power_cap {
+        PowerCap::None => (t_raw, power::power_draw(cfg.device, util)),
+        PowerCap::PerGpu(w) => {
+            let capped = power::apply_cap(cfg.device, w, t_raw, util, compute_frac);
+            (capped.seconds, capped.watts)
+        }
+        PowerCap::PerRack { watts, gpus } => {
+            // Even-share fallback for a uniform workload.
+            let per = watts / gpus as f64;
+            let capped = power::apply_cap(cfg.device, per, t_raw, util, compute_frac);
+            (capped.seconds, capped.watts)
+        }
+    };
+    StepBreakdown {
+        seconds,
+        t_linears: t_lin,
+        t_attention_kv: t_kv,
+        t_softmax: t_exp,
+        t_lm_head: t_head,
+        flops,
+        achieved_flops: flops / seconds,
+        util,
+        watts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::llama::by_name;
+
+    fn m8b() -> &'static LlamaConfig {
+        by_name("llama-8b").unwrap()
+    }
+
+    #[test]
+    fn prefill_h100_roughly_2x_gaudi() {
+        // Fig. 4: H100 reaches ~2x Gaudi 2 prefill TFLOPS on 8B.
+        let h = prefill(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_static()), 1, 4096);
+        let g = prefill(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), 1, 4096);
+        let ratio = h.tflops() / g.tflops();
+        assert!(ratio > 1.4 && ratio < 2.8, "ratio {ratio}");
+    }
+
+    #[test]
+    fn decode_fp8_gain_gaudi_over_1_5x_h100_under_1_25x() {
+        // Fig. 5's headline at batch 64.
+        let b = 64;
+        let s = 1024;
+        let gb = decode_step(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::Bf16), b, s);
+        let gf = decode_step(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), b, s);
+        let hb = decode_step(m8b(), &StepConfig::new(Device::H100, PrecisionMode::Bf16), b, s);
+        let hf = decode_step(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), b, s);
+        let g_gain = gb.seconds / gf.seconds;
+        let h_gain = hb.seconds / hf.seconds;
+        assert!(g_gain >= 1.3, "gaudi gain {g_gain}");
+        assert!(h_gain <= 1.25, "h100 gain {h_gain}");
+    }
+
+    #[test]
+    fn gaudi_fp8_decode_competitive_with_h100() {
+        // §5.4: "Gaudi 2 with FP8 achieves comparable decode throughput
+        // to the H100, despite significantly lower peak GEMM".
+        let b = 64;
+        let s = 1024;
+        let g = decode_step(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), b, s);
+        let h = decode_step(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), b, s);
+        let ratio = g.seconds / h.seconds;
+        assert!(ratio < 1.3, "gaudi/h100 step time {ratio}");
+    }
+
+    #[test]
+    fn gaudi_advantage_shrinks_with_sequence_length() {
+        // §5.7 / Fig. 3: Gaudi's decode edge diminishes at long s.
+        let b = 64;
+        let short_ratio = {
+            let g = decode_step(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), b, 256);
+            let h = decode_step(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), b, 256);
+            h.seconds / g.seconds
+        };
+        let long_ratio = {
+            let g = decode_step(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), b, 8192);
+            let h = decode_step(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), b, 8192);
+            h.seconds / g.seconds
+        };
+        assert!(long_ratio < short_ratio, "short {short_ratio} long {long_ratio}");
+    }
+
+    #[test]
+    fn decode_unaffected_by_400w_cap() {
+        // §5.5 / Fig. 3: decode shows no deterioration at 400 W.
+        let free = decode_step(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), 64, 2048);
+        let capped = decode_step(
+            m8b(),
+            &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()).with_cap(400.0),
+            64,
+            2048,
+        );
+        let slowdown = capped.seconds / free.seconds;
+        assert!(slowdown < 1.10, "slowdown {slowdown}");
+        assert!(capped.watts <= 400.0 + 1e-6);
+    }
+
+    #[test]
+    fn prefill_hurt_by_400w_cap_on_h100() {
+        let free = prefill(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_static()), 1, 4096);
+        let capped = prefill(
+            m8b(),
+            &StepConfig::new(Device::H100, PrecisionMode::fp8_static()).with_cap(400.0),
+            1,
+            4096,
+        );
+        assert!(capped.seconds > free.seconds * 1.1, "{} vs {}", capped.seconds, free.seconds);
+    }
+
+    #[test]
+    fn tp_shards_reduce_per_device_time() {
+        let t1 = decode_step(m8b(), &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()), 32, 1024);
+        let t4 = decode_step(
+            m8b(),
+            &StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()).with_tp(4),
+            32,
+            1024,
+        );
+        assert!(t4.seconds < t1.seconds);
+    }
+
+    #[test]
+    fn larger_models_prefill_higher_mfu() {
+        // Fig. 4: "clear trend of improved prefill throughput for
+        // larger models".
+        let cfg = StepConfig::new(Device::H100, PrecisionMode::fp8_static());
+        let t1 = prefill(by_name("llama-1b").unwrap(), &cfg, 1, 4096);
+        let t70 = prefill(by_name("llama-70b").unwrap(), &cfg, 1, 4096);
+        assert!(t70.tflops() > t1.tflops(), "{} vs {}", t70.tflops(), t1.tflops());
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let bd = decode_step(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), 16, 512);
+        let sum = bd.t_linears + bd.t_attention_kv + bd.t_softmax + bd.t_lm_head;
+        assert!((sum / bd.seconds - 1.0).abs() < 1e-9);
+    }
+}

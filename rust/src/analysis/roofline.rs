@@ -1,0 +1,49 @@
+//! Roofline and MFU helpers (paper §3.3, §5.2).
+
+use crate::hwsim::spec::{DType, DeviceSpec};
+
+/// Roofline throughput (FLOP/s) at a given computational intensity
+/// (FLOP/byte): min(peak, CI × BW).
+pub fn roofline_flops(spec: &DeviceSpec, dtype: DType, ci: f64) -> f64 {
+    (ci * spec.hbm_bw).min(spec.peak(dtype))
+}
+
+/// Model FLOP Utilization: achieved / peak (§3.3).
+pub fn mfu(achieved_flops_per_s: f64, spec: &DeviceSpec, dtype: DType) -> f64 {
+    achieved_flops_per_s / spec.peak(dtype)
+}
+
+/// CI required to saturate compute (the paper's "360 FLOP/byte on
+/// Gaudi 2 FP8").
+pub fn saturation_ci(spec: &DeviceSpec, dtype: DType) -> f64 {
+    spec.peak(dtype) / spec.hbm_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::spec::{DType, GAUDI2, H100};
+
+    #[test]
+    fn roofline_clamps_at_peak() {
+        let r = roofline_flops(&GAUDI2, DType::Fp8, 1e6);
+        assert_eq!(r, GAUDI2.peak_fp8);
+        let r = roofline_flops(&GAUDI2, DType::Fp8, 10.0);
+        assert_eq!(r, 10.0 * GAUDI2.hbm_bw);
+    }
+
+    #[test]
+    fn paper_saturation_ci() {
+        // §5.2: ~360 FLOP/byte on Gaudi 2 FP8.
+        let ci = saturation_ci(&GAUDI2, DType::Fp8);
+        assert!((ci - 360.4).abs() < 1.0);
+        // H100 needs even more (1989.9/3.35 ≈ 594).
+        let ci_h = saturation_ci(&H100, DType::Fp8);
+        assert!(ci_h > 550.0);
+    }
+
+    #[test]
+    fn mfu_of_peak_is_one() {
+        assert!((mfu(H100.peak_fp8, &H100, DType::Fp8) - 1.0).abs() < 1e-12);
+    }
+}

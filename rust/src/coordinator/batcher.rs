@@ -1,0 +1,255 @@
+//! Continuous batcher: admission control for the step loop.
+//!
+//! Implements the iteration-level batching of vLLM/Orca ([21], §5.1):
+//! each step, running decodes continue and queued prefills are
+//! admitted under (a) a token budget per step, (b) a max batch size,
+//! and (c) KV-block availability (checked against the *full* future
+//! context so admitted sequences never deadlock mid-decode).
+
+use std::collections::VecDeque;
+
+use super::kv_cache::BlockAllocator;
+use super::request::{RequestState, SeqId, Sequence};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max sequences decoding concurrently.
+    pub max_batch: usize,
+    /// Max new prompt tokens admitted per step (prefill chunk budget).
+    pub prefill_token_budget: usize,
+    /// Max prefills admitted per step.
+    pub max_prefills_per_step: usize,
+    /// Admit a prefill only if its whole (prompt + output) KV fits —
+    /// conservative, no preemption needed. If false, admit on prompt
+    /// fit and preempt on pressure.
+    pub reserve_full_context: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            prefill_token_budget: 8192,
+            max_prefills_per_step: 8,
+            reserve_full_context: false,
+        }
+    }
+}
+
+/// Outcome of one admission pass.
+#[derive(Debug, Default)]
+pub struct Admission {
+    /// Sequence ids to prefill this step.
+    pub prefills: Vec<SeqId>,
+    /// Sequence ids decoding this step.
+    pub decodes: Vec<SeqId>,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    queue: VecDeque<SeqId>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn enqueue(&mut self, id: SeqId) {
+        self.queue.push_back(id);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Plan one step. `lookup` resolves ids to sequences; the batcher
+    /// allocates KV blocks for admitted prefills and grows blocks for
+    /// decodes (evicting nothing — callers preempt on `grow` failure).
+    pub fn plan_step(
+        &mut self,
+        seqs: &mut std::collections::HashMap<SeqId, Sequence>,
+        alloc: &mut BlockAllocator,
+    ) -> Admission {
+        let mut adm = Admission::default();
+
+        // 1. Continue running decodes (iteration-level batching).
+        let mut decoding: Vec<SeqId> = seqs
+            .values()
+            .filter(|s| s.state == RequestState::Decoding)
+            .map(|s| s.id)
+            .collect();
+        decoding.sort_unstable();
+        adm.decodes = decoding;
+
+        // 2. Admit prefills under budgets.
+        let mut token_budget = self.cfg.prefill_token_budget;
+        while adm.prefills.len() < self.cfg.max_prefills_per_step
+            && adm.decodes.len() + adm.prefills.len() < self.cfg.max_batch
+        {
+            let Some(&cand) = self.queue.front() else { break };
+            let Some(seq) = seqs.get_mut(&cand) else {
+                self.queue.pop_front();
+                continue;
+            };
+            if seq.prompt_len > token_budget {
+                // Oversized prompt (bigger than the whole per-step
+                // budget): admit it alone so it cannot starve.
+                if seq.prompt_len > self.cfg.prefill_token_budget
+                    && adm.prefills.is_empty()
+                {
+                    token_budget = seq.prompt_len;
+                } else {
+                    break; // head-of-line: preserve FIFO fairness
+                }
+            }
+            let reserve_tokens = if self.cfg.reserve_full_context {
+                seq.max_context()
+            } else {
+                seq.prompt_len
+            };
+            let blocks_needed = alloc.config().blocks_for_tokens(reserve_tokens);
+            if !alloc.can_allocate(blocks_needed) {
+                break; // memory pressure: wait for releases
+            }
+            let blocks = alloc.allocate(blocks_needed).expect("checked");
+            seq.blocks = blocks;
+            token_budget -= seq.prompt_len;
+            adm.prefills.push(cand);
+            self.queue.pop_front();
+        }
+        adm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_cache::KvCacheConfig;
+    use crate::workload::trace::Request;
+    use std::collections::HashMap;
+
+    fn setup(total_blocks: usize) -> (HashMap<SeqId, Sequence>, BlockAllocator) {
+        let alloc = BlockAllocator::new(KvCacheConfig {
+            block_tokens: 16,
+            total_blocks,
+        });
+        (HashMap::new(), alloc)
+    }
+
+    fn add_seq(seqs: &mut HashMap<SeqId, Sequence>, b: &mut Batcher, id: u64,
+               prompt: usize, output: usize) {
+        let s = Sequence::from_request(&Request {
+            id, arrival: 0.0, prompt_len: prompt, output_len: output,
+        });
+        seqs.insert(id, s);
+        b.enqueue(id);
+    }
+
+    #[test]
+    fn admits_fifo_until_token_budget() {
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig {
+            prefill_token_budget: 250,
+            ..Default::default()
+        });
+        add_seq(&mut seqs, &mut b, 0, 100, 5);
+        add_seq(&mut seqs, &mut b, 1, 100, 5);
+        add_seq(&mut seqs, &mut b, 2, 100, 5); // exceeds 250 budget
+        let adm = b.plan_step(&mut seqs, &mut alloc);
+        assert_eq!(adm.prefills, vec![0, 1]);
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn respects_max_batch_with_running_decodes() {
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, ..Default::default() });
+        // two already decoding
+        for id in [10u64, 11] {
+            let mut s = Sequence::from_request(&Request {
+                id, arrival: 0.0, prompt_len: 10, output_len: 10,
+            });
+            s.state = RequestState::Decoding;
+            seqs.insert(id, s);
+        }
+        add_seq(&mut seqs, &mut b, 0, 16, 4);
+        add_seq(&mut seqs, &mut b, 1, 16, 4);
+        let adm = b.plan_step(&mut seqs, &mut alloc);
+        assert_eq!(adm.decodes, vec![10, 11]);
+        assert_eq!(adm.prefills.len(), 1, "only one slot left");
+    }
+
+    #[test]
+    fn blocks_gate_admission() {
+        let (mut seqs, mut alloc) = setup(2); // 32 tokens of KV
+        let mut b = Batcher::new(BatcherConfig::default());
+        add_seq(&mut seqs, &mut b, 0, 40, 4); // needs 3 blocks
+        let adm = b.plan_step(&mut seqs, &mut alloc);
+        assert!(adm.prefills.is_empty());
+        assert_eq!(b.queue_len(), 1, "stays queued");
+    }
+
+    #[test]
+    fn reserve_full_context_mode() {
+        let (mut seqs, mut alloc) = setup(4); // 64 tokens
+        let mut b = Batcher::new(BatcherConfig {
+            reserve_full_context: true,
+            ..Default::default()
+        });
+        // prompt 32 fits, but prompt+output = 80 does not.
+        add_seq(&mut seqs, &mut b, 0, 32, 48);
+        let adm = b.plan_step(&mut seqs, &mut alloc);
+        assert!(adm.prefills.is_empty());
+        // Non-reserving batcher admits it.
+        let mut b2 = Batcher::new(BatcherConfig::default());
+        b2.enqueue(0);
+        let adm2 = b2.plan_step(&mut seqs, &mut alloc);
+        assert_eq!(adm2.prefills, vec![0]);
+    }
+
+    #[test]
+    fn admitted_prefill_holds_blocks() {
+        let (mut seqs, mut alloc) = setup(100);
+        let mut b = Batcher::new(BatcherConfig::default());
+        add_seq(&mut seqs, &mut b, 0, 100, 4);
+        let _ = b.plan_step(&mut seqs, &mut alloc);
+        assert_eq!(seqs[&0].blocks.len(), 7); // ceil(100/16)
+        assert_eq!(alloc.allocated_blocks(), 7);
+    }
+
+    #[test]
+    fn oversized_prompt_admitted_alone_no_starvation() {
+        // A prompt larger than the whole per-step budget is admitted
+        // by itself (no bypass, no permanent starvation).
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig {
+            prefill_token_budget: 50,
+            ..Default::default()
+        });
+        add_seq(&mut seqs, &mut b, 0, 100, 4);
+        add_seq(&mut seqs, &mut b, 1, 10, 4);
+        let adm = b.plan_step(&mut seqs, &mut alloc);
+        assert_eq!(adm.prefills, vec![0], "oversized head admitted alone");
+        // Next step picks up the small one.
+        let adm2 = b.plan_step(&mut seqs, &mut alloc);
+        assert_eq!(adm2.prefills, vec![1]);
+    }
+
+    #[test]
+    fn partial_budget_preserves_fifo() {
+        // Head fits the full budget but not the remainder: FIFO holds
+        // (no smaller request bypasses it).
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig {
+            prefill_token_budget: 100,
+            ..Default::default()
+        });
+        add_seq(&mut seqs, &mut b, 0, 60, 4);
+        add_seq(&mut seqs, &mut b, 1, 60, 4); // budget left: 40
+        add_seq(&mut seqs, &mut b, 2, 10, 4);
+        let adm = b.plan_step(&mut seqs, &mut alloc);
+        assert_eq!(adm.prefills, vec![0], "no bypass of seq 1");
+    }
+}

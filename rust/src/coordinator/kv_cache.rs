@@ -1,0 +1,190 @@
+//! Paged KV-cache block allocator (PagedAttention-style [21]).
+//!
+//! The §5.1 constraint this enforces: "the batch size is limited by
+//! the memory capacity as each sequence in a batch requires its own KV
+//! cache". Blocks are fixed-size token runs; capacity derives from
+//! device HBM minus weights.
+
+use crate::workload::llama::LlamaConfig;
+
+#[derive(Debug, Clone)]
+pub struct KvCacheConfig {
+    /// Tokens per block (vLLM default 16).
+    pub block_tokens: usize,
+    /// Total blocks available.
+    pub total_blocks: usize,
+}
+
+impl KvCacheConfig {
+    /// Size the pool from device memory: (hbm - weights) / block bytes.
+    pub fn from_device(
+        model: &LlamaConfig,
+        hbm_bytes: f64,
+        weight_bytes_per_elem: f64,
+        kv_bytes_per_elem: f64,
+        block_tokens: usize,
+        reserve_frac: f64,
+    ) -> Self {
+        let weights = model.weight_bytes(weight_bytes_per_elem);
+        let usable = (hbm_bytes * (1.0 - reserve_frac) - weights).max(0.0);
+        let block_bytes = model.kv_bytes_per_token(kv_bytes_per_elem) * block_tokens as f64;
+        KvCacheConfig {
+            block_tokens,
+            total_blocks: (usable / block_bytes).floor() as usize,
+        }
+    }
+
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+}
+
+/// Free-list block allocator.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    cfg: KvCacheConfig,
+    free: Vec<usize>,
+    allocated: usize,
+}
+
+impl BlockAllocator {
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        let free = (0..cfg.total_blocks).rev().collect();
+        BlockAllocator { cfg, free, allocated: 0 }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn allocated_blocks(&self) -> usize {
+        self.allocated
+    }
+
+    pub fn can_allocate(&self, blocks: usize) -> bool {
+        self.free.len() >= blocks
+    }
+
+    /// Allocate `blocks` blocks, or None (never partial).
+    pub fn allocate(&mut self, blocks: usize) -> Option<Vec<usize>> {
+        if !self.can_allocate(blocks) {
+            return None;
+        }
+        self.allocated += blocks;
+        Some((0..blocks).map(|_| self.free.pop().unwrap()).collect())
+    }
+
+    /// Grow an existing allocation to cover `tokens` total tokens.
+    pub fn grow(&mut self, held: &mut Vec<usize>, tokens: usize) -> bool {
+        let need = self.cfg.blocks_for_tokens(tokens);
+        if need <= held.len() {
+            return true;
+        }
+        match self.allocate(need - held.len()) {
+            Some(mut more) => {
+                held.append(&mut more);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn release(&mut self, blocks: &mut Vec<usize>) {
+        self.allocated -= blocks.len();
+        self.free.append(blocks);
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.cfg.total_blocks == 0 {
+            return 1.0;
+        }
+        self.allocated as f64 / self.cfg.total_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::llama::by_name;
+
+    fn cfg(total: usize) -> KvCacheConfig {
+        KvCacheConfig { block_tokens: 16, total_blocks: total }
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(cfg(10));
+        let mut b1 = a.allocate(4).unwrap();
+        assert_eq!(a.free_blocks(), 6);
+        assert_eq!(a.allocated_blocks(), 4);
+        a.release(&mut b1);
+        assert_eq!(a.free_blocks(), 10);
+        assert_eq!(a.allocated_blocks(), 0);
+    }
+
+    #[test]
+    fn never_partial() {
+        let mut a = BlockAllocator::new(cfg(3));
+        assert!(a.allocate(4).is_none());
+        assert_eq!(a.free_blocks(), 3);
+        assert!(a.allocate(3).is_some());
+        assert!(a.allocate(1).is_none());
+    }
+
+    #[test]
+    fn block_ids_unique() {
+        let mut a = BlockAllocator::new(cfg(100));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10 {
+            for id in a.allocate(10).unwrap() {
+                assert!(seen.insert(id), "dup block {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn grow_allocates_marginal_blocks() {
+        let mut a = BlockAllocator::new(cfg(10));
+        let mut held = a.allocate(2).unwrap(); // covers 32 tokens
+        assert!(a.grow(&mut held, 33)); // needs 3 blocks
+        assert_eq!(held.len(), 3);
+        assert!(a.grow(&mut held, 40)); // still 3
+        assert_eq!(held.len(), 3);
+        assert!(!a.grow(&mut held, 16 * 11)); // exceeds pool
+        assert_eq!(held.len(), 3, "failed grow must not leak");
+    }
+
+    #[test]
+    fn capacity_from_device_memory() {
+        // 8B model BF16 weights on 80 GB H100: ~16 GB weights,
+        // BF16 KV: block bytes = 16 tokens * 2*32*8*128*2 B = 2 MiB.
+        let m = by_name("llama-8b").unwrap();
+        let c = KvCacheConfig::from_device(m, 80e9, 2.0, 2.0, 16, 0.05);
+        assert!(c.total_blocks > 20_000, "{}", c.total_blocks);
+        // FP8 weights free up room for more blocks.
+        let c8 = KvCacheConfig::from_device(m, 80e9, 1.0, 2.0, 16, 0.05);
+        assert!(c8.total_blocks > c.total_blocks);
+    }
+
+    #[test]
+    fn blocks_for_tokens_rounds_up() {
+        let c = cfg(0);
+        assert_eq!(c.blocks_for_tokens(1), 1);
+        assert_eq!(c.blocks_for_tokens(16), 1);
+        assert_eq!(c.blocks_for_tokens(17), 2);
+        assert_eq!(c.blocks_for_tokens(0), 0);
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut a = BlockAllocator::new(cfg(10));
+        assert_eq!(a.utilization(), 0.0);
+        let _b = a.allocate(5).unwrap();
+        assert_eq!(a.utilization(), 0.5);
+    }
+}

@@ -1,0 +1,141 @@
+//! Serving metrics: TTFT, TPOT, token/request throughput, energy.
+//!
+//! §5.2 notes TTFT/TPOT "do not facilitate comparisons across stages";
+//! the engine therefore records both the classic latency metrics and
+//! FLOPs-based throughput so benches can report either view.
+
+use crate::util::stats::{Percentiles, Summary};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub ttft: Percentiles,
+    pub tpot: Percentiles,
+    pub e2e_latency: Percentiles,
+    pub tokens_out: u64,
+    pub tokens_in: u64,
+    pub requests_done: u64,
+    pub steps: u64,
+    pub step_time: Summary,
+    /// Integrated device energy (J).
+    pub energy_j: f64,
+    /// Model FLOPs executed.
+    pub flops: f64,
+    /// Clock span covered (s).
+    pub span: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_first_token(&mut self, arrival: f64, now: f64) {
+        self.ttft.add(now - arrival);
+    }
+
+    pub fn record_finish(&mut self, arrival: f64, first_token: f64, now: f64, out_tokens: usize) {
+        self.e2e_latency.add(now - arrival);
+        if out_tokens > 1 {
+            self.tpot.add((now - first_token) / (out_tokens - 1) as f64);
+        }
+        self.requests_done += 1;
+    }
+
+    pub fn record_step(&mut self, dt: f64, watts: f64, flops: f64, new_tokens: usize) {
+        self.steps += 1;
+        self.step_time.add(dt);
+        self.energy_j += watts * dt;
+        self.flops += flops;
+        self.tokens_out += new_tokens as u64;
+        self.span += dt;
+    }
+
+    /// Output tokens per second over the covered span.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.span == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.span
+        }
+    }
+
+    /// Achieved model FLOP/s.
+    pub fn model_flops_per_sec(&self) -> f64 {
+        if self.span == 0.0 {
+            0.0
+        } else {
+            self.flops / self.span
+        }
+    }
+
+    /// Joules per output token — the §2.1 power-vs-TCO bridge.
+    pub fn joules_per_token(&self) -> f64 {
+        if self.tokens_out == 0 {
+            0.0
+        } else {
+            self.energy_j / self.tokens_out as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens_out={} span={:.2}s tok/s={:.1} \
+             TTFT p50/p95={:.3}/{:.3}s TPOT p50/p95={:.4}/{:.4}s \
+             J/token={:.2} model TFLOP/s={:.2}",
+            self.requests_done,
+            self.tokens_out,
+            self.span,
+            self.tokens_per_sec(),
+            self.ttft.pct(50.0),
+            self.ttft.pct(95.0),
+            self.tpot.pct(50.0),
+            self.tpot.pct(95.0),
+            self.joules_per_token(),
+            self.model_flops_per_sec() / 1e12,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_energy() {
+        let mut m = Metrics::new();
+        m.record_step(0.5, 400.0, 1e12, 10);
+        m.record_step(0.5, 600.0, 1e12, 30);
+        assert_eq!(m.tokens_out, 40);
+        assert!((m.tokens_per_sec() - 40.0).abs() < 1e-9);
+        assert!((m.energy_j - 500.0).abs() < 1e-9);
+        assert!((m.joules_per_token() - 12.5).abs() < 1e-9);
+        assert!((m.model_flops_per_sec() - 2e12).abs() < 1e-3);
+    }
+
+    #[test]
+    fn latency_accounting() {
+        let mut m = Metrics::new();
+        m.record_first_token(0.0, 0.25);
+        m.record_finish(0.0, 0.25, 2.25, 11);
+        assert!((m.ttft.pct(50.0) - 0.25).abs() < 1e-9);
+        assert!((m.tpot.pct(50.0) - 0.2).abs() < 1e-9);
+        assert!((m.e2e_latency.pct(50.0) - 2.25).abs() < 1e-9);
+        assert_eq!(m.requests_done, 1);
+    }
+
+    #[test]
+    fn single_token_output_has_no_tpot() {
+        let mut m = Metrics::new();
+        m.record_finish(0.0, 0.1, 0.1, 1);
+        assert_eq!(m.tpot.count(), 0);
+    }
+
+    #[test]
+    fn report_is_formatted() {
+        let mut m = Metrics::new();
+        m.record_step(1.0, 100.0, 1e12, 5);
+        let r = m.report();
+        assert!(r.contains("tokens_out=5"));
+        assert!(r.contains("tok/s=5.0"));
+    }
+}

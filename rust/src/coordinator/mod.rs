@@ -1,0 +1,32 @@
+//! L3 coordinator: a vLLM-style serving engine.
+//!
+//! * [`request`] — request lifecycle types and sequence state.
+//! * [`kv_cache`] — paged KV-cache block allocator (capacity admission).
+//! * [`batcher`] — continuous batcher with token-budget admission.
+//! * [`scheduler`] — prefill/decode scheduling policies (fused or
+//!   disaggregated, §2.2 / Splitwise-style).
+//! * [`backend`] — `ExecutionBackend` abstraction: `SimBackend` (hwsim
+//!   timing, virtual clock — drives every paper figure) and
+//!   `PjrtBackend` (real compute via the AOT artifacts, wall clock).
+//! * [`engine`] — the step loop tying it all together.
+//! * [`metrics`] — TTFT / TPOT / throughput accounting (§5.2 notes the
+//!   paper's preference for FLOPs-based metrics; we record both).
+
+pub mod backend;
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod pjrt_backend;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use backend::{ExecutionBackend, SimBackend};
+pub use pjrt_backend::PjrtBackend;
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{Engine, EngineConfig};
+pub use kv_cache::{BlockAllocator, KvCacheConfig};
+pub use metrics::Metrics;
+pub use request::{RequestState, SeqId, Sequence};
+pub use scheduler::{SchedulerPolicy, StepPlan};

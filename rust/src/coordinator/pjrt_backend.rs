@@ -1,0 +1,320 @@
+//! `PjrtBackend`: the real-compute execution backend.
+//!
+//! Drives the AOT-compiled HLO artifacts (tiny Llama tier, FP8 dynamic
+//! row-wise linears via the L1 Pallas kernels) through PJRT on CPU.
+//! Same `ExecutionBackend` interface as the simulator, so the engine's
+//! scheduling code is identical — this is the end-to-end proof that
+//! all three layers compose (DESIGN.md E2E).
+//!
+//! Sequence content: prompts are synthesized deterministically from
+//! the sequence id (the engine schedules ids + lengths; content is the
+//! backend's business). Per-sequence KV caches are host-resident
+//! between steps and gathered/scattered around each batched decode —
+//! the dense-cache analogue of paged KV at toy scale.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+/// One PJRT CPU client per thread, reused by every backend created on
+/// that thread and never destroyed. xla_extension 0.5.1 misbehaves
+/// with multiple CPU clients in one process (the second client's
+/// executions return corrupted buffers — observed as NaN logits), and
+/// `PjRtClient` is not `Send`, so the sharing granularity is the
+/// thread. Consequently all PJRT work must stay on a single thread
+/// (the e2e tests and examples comply; see rust/tests/pjrt_e2e.rs).
+fn global_executor() -> Result<Arc<Executor>> {
+    use std::cell::RefCell;
+    thread_local! {
+        static EXEC: RefCell<Option<Arc<Executor>>> = const { RefCell::new(None) };
+    }
+    EXEC.with(|cell| {
+        if let Some(x) = &*cell.borrow() {
+            return Ok(x.clone());
+        }
+        let x = Arc::new(Executor::cpu()?);
+        *cell.borrow_mut() = Some(x.clone());
+        // Never destroy the client: its destructor tears down global
+        // runtime state that later clients depend on.
+        std::mem::forget(x.clone());
+        Ok(x)
+    })
+}
+
+use crate::runtime::artifacts::ArtifactDir;
+use crate::runtime::executor::{Executor, KvState, LoadedModel};
+use crate::util::rng::Rng;
+
+use super::backend::{ExecutionBackend, StepResult};
+use super::request::SeqId;
+
+struct SeqState {
+    /// Full token history (prompt + generated).
+    tokens: Vec<i32>,
+    /// Valid KV length.
+    kv_len: usize,
+    /// Host copies of this sequence's KV: (layers, 1, max_seq, kv, d).
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+pub struct PjrtBackend {
+    model: LoadedModel,
+    seqs: HashMap<SeqId, SeqState>,
+    /// Per-layer slice length (max_seq * kv_heads * head_dim).
+    layer_stride: usize,
+    layers: usize,
+    vocab: usize,
+    max_seq: usize,
+    /// Tokens emitted per sequence (observable output for validation).
+    pub emitted: HashMap<SeqId, Vec<i32>>,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: &ArtifactDir, tier: &str) -> Result<Self> {
+        let _guard = crate::runtime::executor::pjrt_guard();
+        let exec = global_executor()?;
+        let model = LoadedModel::load(exec, dir, tier)?;
+        let m = &model.meta;
+        let layer_stride = m.max_seq * m.kv_heads * m.head_dim;
+        Ok(PjrtBackend {
+            layers: m.layers,
+            vocab: m.vocab,
+            max_seq: m.max_seq,
+            layer_stride,
+            model,
+            seqs: HashMap::new(),
+            emitted: HashMap::new(),
+        })
+    }
+
+    pub fn meta(&self) -> &crate::runtime::artifacts::ModelMeta {
+        &self.model.meta
+    }
+
+    /// Clear the emitted-token log (the backend is long-lived — one
+    /// per process — so drivers reset between runs).
+    pub fn reset_emitted(&mut self) {
+        self.emitted.clear();
+    }
+
+    /// Deterministic synthetic prompt for a sequence id.
+    fn synth_prompt(&self, id: SeqId, len: usize) -> Vec<i32> {
+        let mut rng = Rng::new(0x9e37_79b9_7f4a_7c15 ^ id);
+        (0..len).map(|_| rng.usize(0, self.vocab - 1) as i32).collect()
+    }
+
+    /// Model FLOPs of one decode step (Eq. 6 with the tiny config).
+    fn decode_flops(&self, contexts: &[usize]) -> f64 {
+        let m = &self.model.meta;
+        let h = m.hidden as f64;
+        let l = m.layers as f64;
+        let v = m.vocab as f64;
+        // a and g from meta-derived dims.
+        let a = 172.0 / 64.0; // tiny-tier MLP ratio (meta lacks it; 1b tier)
+        let g = (m.heads / m.kv_heads) as f64;
+        let b = contexts.len() as f64;
+        let sum_s: f64 = contexts.iter().map(|&s| s as f64).sum();
+        let a_const = 3.0 * a + 2.0 + 2.0 / g;
+        2.0 * b * (a_const * h * h * l + v * h) + 4.0 * h * l * sum_s
+    }
+
+    /// Gather per-seq caches into a batch literal layout
+    /// (L, B, S, Hkv, d), padding empty slots with zeros.
+    fn gather_kv(&self, ids: &[SeqId], bucket: usize) -> (Vec<f32>, Vec<f32>) {
+        let total = self.layers * bucket * self.layer_stride;
+        let mut k = vec![0.0f32; total];
+        let mut v = vec![0.0f32; total];
+        for l in 0..self.layers {
+            for (b, id) in ids.iter().enumerate() {
+                let s = &self.seqs[id];
+                let src = l * self.layer_stride..(l + 1) * self.layer_stride;
+                let dst = (l * bucket + b) * self.layer_stride;
+                k[dst..dst + self.layer_stride].copy_from_slice(&s.k[src.clone()]);
+                v[dst..dst + self.layer_stride].copy_from_slice(&s.v[src]);
+            }
+        }
+        (k, v)
+    }
+
+    /// Scatter a batch KV literal back into per-seq host caches.
+    fn scatter_kv(&mut self, ids: &[SeqId], bucket: usize, k: &[f32], v: &[f32]) {
+        for l in 0..self.layers {
+            for (b, id) in ids.iter().enumerate() {
+                let src = (l * bucket + b) * self.layer_stride;
+                let dst = l * self.layer_stride;
+                let st = self.seqs.get_mut(id).unwrap();
+                st.k[dst..dst + self.layer_stride]
+                    .copy_from_slice(&k[src..src + self.layer_stride]);
+                st.v[dst..dst + self.layer_stride]
+                    .copy_from_slice(&v[src..src + self.layer_stride]);
+            }
+        }
+    }
+
+    fn do_prefill(&mut self, specs: &[(SeqId, usize)]) -> Result<()> {
+        let max_prompt = self
+            .model
+            .meta
+            .prefill_shapes
+            .iter()
+            .map(|&(_, s)| s)
+            .max()
+            .ok_or_else(|| anyhow!("no prefill buckets"))?;
+        // One bucketed prefill per chunk of sequences.
+        for chunk in specs.chunks(
+            self.model.meta.prefill_shapes.iter().map(|&(b, _)| b).max().unwrap(),
+        ) {
+            let want = chunk.len();
+            let lens: Vec<usize> =
+                chunk.iter().map(|&(_, l)| l.min(max_prompt)).collect();
+            let max_len = *lens.iter().max().unwrap();
+            let (bb, bs) = self
+                .model
+                .meta
+                .prefill_bucket(want, max_len)
+                .ok_or_else(|| anyhow!("no bucket for b={want} s={max_len}"))?;
+            let mut tokens = vec![0i32; bb * bs];
+            let mut lengths = vec![1i32; bb];
+            for (i, (&(id, _), &l)) in chunk.iter().zip(&lens).enumerate() {
+                let prompt = self.synth_prompt(id, l);
+                tokens[i * bs..i * bs + l].copy_from_slice(&prompt);
+                lengths[i] = l as i32;
+                self.seqs.insert(
+                    id,
+                    SeqState {
+                        tokens: prompt,
+                        kv_len: l,
+                        k: vec![0.0; self.layers * self.layer_stride],
+                        v: vec![0.0; self.layers * self.layer_stride],
+                    },
+                );
+            }
+            let (logits, kv) = self.model.prefill((bb, bs), &tokens, &lengths)?;
+            if logits.iter().any(|x| x.is_nan()) {
+                anyhow::bail!(
+                    "NaN logits in prefill: bucket=({bb},{bs}) lengths={lengths:?}"
+                );
+            }
+            // First token: argmax at each sequence's last valid position.
+            let KvState { k, v, .. } = kv;
+            let kvec = k.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            let vvec = v.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            // Prefill cache layout is (L, B, S, kv, d) with S = max_seq
+            // already (aot pads) — stride matches layer_stride.
+            let ids: Vec<SeqId> = chunk.iter().map(|&(id, _)| id).collect();
+            self.scatter_kv(&ids, bb, &kvec, &vvec);
+            for (i, &(id, _)) in chunk.iter().enumerate() {
+                let pos = (lengths[i] as usize).saturating_sub(1);
+                let row = &logits[(i * bs + pos) * self.vocab..(i * bs + pos + 1) * self.vocab];
+                let tok = argmax(row);
+                let st = self.seqs.get_mut(&id).unwrap();
+                st.tokens.push(tok);
+                self.emitted.entry(id).or_default().push(tok);
+            }
+        }
+        Ok(())
+    }
+
+    fn do_decode(&mut self, specs: &[(SeqId, usize)]) -> Result<()> {
+        for chunk in specs.chunks(
+            self.model.meta.decode_batches.iter().copied().max().unwrap(),
+        ) {
+            let ids: Vec<SeqId> = chunk.iter().map(|&(id, _)| id).collect();
+            let bucket = self
+                .model
+                .meta
+                .decode_bucket(ids.len())
+                .ok_or_else(|| anyhow!("no decode bucket for {}", ids.len()))?;
+            let (kflat, vflat) = self.gather_kv(&ids, bucket);
+            let m = &self.model.meta;
+            let dims = [
+                m.layers as i64,
+                bucket as i64,
+                m.max_seq as i64,
+                m.kv_heads as i64,
+                m.head_dim as i64,
+            ];
+            let k = xla::Literal::vec1(&kflat).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+            let v = xla::Literal::vec1(&vflat).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+            let mut tokens = vec![0i32; bucket];
+            let mut lengths = vec![0i32; bucket];
+            for (i, id) in ids.iter().enumerate() {
+                let st = &self.seqs[id];
+                tokens[i] = *st.tokens.last().unwrap();
+                // Cap at max_seq - 1: the new KV lands at `lengths`.
+                lengths[i] = (st.kv_len.min(self.max_seq - 1)) as i32;
+            }
+            let kv = KvState { k, v, batch: bucket };
+            let (logits, kv2) = self.model.decode_step(kv, &tokens, &lengths)?;
+            if logits.iter().any(|x| x.is_nan()) {
+                let kv_nan = kflat.iter().any(|x| x.is_nan())
+                    || vflat.iter().any(|x| x.is_nan());
+                anyhow::bail!(
+                    "NaN logits in decode: bucket={bucket} ids={ids:?} \
+                     tokens={tokens:?} lengths={lengths:?} input_kv_nan={kv_nan}"
+                );
+            }
+            let kvec = kv2.k.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            let vvec = kv2.v.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            self.scatter_kv(&ids, bucket, &kvec, &vvec);
+            for (i, id) in ids.iter().enumerate() {
+                let row = &logits[i * self.vocab..(i + 1) * self.vocab];
+                let tok = argmax(row);
+                let st = self.seqs.get_mut(id).unwrap();
+                st.tokens.push(tok);
+                st.kv_len = (st.kv_len + 1).min(self.max_seq - 1);
+                self.emitted.entry(*id).or_default().push(tok);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn prefill(&mut self, seqs: &[(SeqId, usize)]) -> StepResult {
+        if seqs.is_empty() {
+            return StepResult::default();
+        }
+        let t0 = Instant::now();
+        let _guard = crate::runtime::executor::pjrt_guard();
+        self.do_prefill(seqs).expect("pjrt prefill failed");
+        let dt = t0.elapsed().as_secs_f64();
+        // Eq. 3 linear term evaluated token-by-token: a prefill of s
+        // tokens costs s times the per-token linear work plus the
+        // (small at these lengths) attention term.
+        let per_token = self.decode_flops(&[0]);
+        let flops: f64 = seqs.iter().map(|&(_, l)| per_token * l as f64).sum();
+        StepResult { seconds: dt, watts: 0.0, flops }
+    }
+
+    fn decode(&mut self, seqs: &[(SeqId, usize)]) -> StepResult {
+        if seqs.is_empty() {
+            return StepResult::default();
+        }
+        let t0 = Instant::now();
+        let _guard = crate::runtime::executor::pjrt_guard();
+        self.do_decode(seqs).expect("pjrt decode failed");
+        let dt = t0.elapsed().as_secs_f64();
+        let contexts: Vec<usize> = seqs.iter().map(|&(_, c)| c).collect();
+        StepResult { seconds: dt, watts: 0.0, flops: self.decode_flops(&contexts) }
+    }
+
+    fn release(&mut self, id: SeqId) {
+        self.seqs.remove(&id);
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt:{}:{}", self.model.meta.tier, self.model.meta.precision)
+    }
+}

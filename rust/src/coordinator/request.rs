@@ -1,0 +1,95 @@
+//! Request lifecycle types.
+
+use crate::workload::trace::Request;
+
+pub type SeqId = u64;
+
+/// Lifecycle of a sequence in the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Admitted, waiting for prefill.
+    Queued,
+    /// Prefill executed, first token emitted.
+    Decoding,
+    /// All output tokens generated.
+    Finished,
+    /// Evicted under memory pressure, awaiting re-prefill.
+    Preempted,
+}
+
+/// A sequence tracked by the engine.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub id: SeqId,
+    pub state: RequestState,
+    pub prompt_len: usize,
+    /// Target number of output tokens.
+    pub output_len: usize,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Arrival time (engine clock, s).
+    pub arrival: f64,
+    /// Time of first token (TTFT reference), if prefilled.
+    pub first_token_at: Option<f64>,
+    /// Completion time.
+    pub finished_at: Option<f64>,
+    /// KV blocks held (block ids in the allocator).
+    pub blocks: Vec<usize>,
+}
+
+impl Sequence {
+    pub fn from_request(r: &Request) -> Self {
+        Sequence {
+            id: r.id,
+            state: RequestState::Queued,
+            prompt_len: r.prompt_len,
+            output_len: r.output_len,
+            generated: 0,
+            arrival: r.arrival,
+            first_token_at: None,
+            finished_at: None,
+            blocks: Vec::new(),
+        }
+    }
+
+    /// Current context length (prompt + generated so far).
+    pub fn context_len(&self) -> usize {
+        self.prompt_len + self.generated
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated >= self.output_len
+    }
+
+    /// Tokens of KV the sequence will hold at completion.
+    pub fn max_context(&self) -> usize {
+        self.prompt_len + self.output_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request { id: 7, arrival: 1.5, prompt_len: 100, output_len: 10 }
+    }
+
+    #[test]
+    fn lifecycle_fields() {
+        let s = Sequence::from_request(&req());
+        assert_eq!(s.id, 7);
+        assert_eq!(s.state, RequestState::Queued);
+        assert_eq!(s.context_len(), 100);
+        assert_eq!(s.max_context(), 110);
+        assert!(!s.is_done());
+    }
+
+    #[test]
+    fn done_after_output_len() {
+        let mut s = Sequence::from_request(&req());
+        s.generated = 10;
+        assert!(s.is_done());
+        assert_eq!(s.context_len(), 110);
+    }
+}

@@ -1,0 +1,232 @@
+//! Request router: front door over a pool of engines.
+//!
+//! The §2.2 observation (different chips/configs for prefill vs decode
+//! — Splitwise [32]) becomes concrete here: a pool can mix engines
+//! with different simulated devices/precisions, and the router's
+//! policy decides placement. Policies:
+//!
+//! * `RoundRobin` — baseline.
+//! * `LeastLoaded` — fewest in-flight sequences.
+//! * `PhaseAffinity` — prefill-heavy requests (long prompt, short
+//!   output) to prefill-rated engines, decode-heavy to decode-rated
+//!   ones, using the per-engine throughput ratings the TCO analysis
+//!   produces.
+
+use super::backend::ExecutionBackend;
+use super::engine::Engine;
+use crate::workload::trace::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    PhaseAffinity,
+}
+
+/// Per-engine rating used by `PhaseAffinity` (derived from hwsim or
+/// measured; higher = better at that phase).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineRating {
+    pub prefill_score: f64,
+    pub decode_score: f64,
+}
+
+pub struct Router<B: ExecutionBackend> {
+    pub engines: Vec<Engine<B>>,
+    ratings: Vec<EngineRating>,
+    policy: RoutePolicy,
+    rr_next: usize,
+    routed: Vec<u64>,
+}
+
+impl<B: ExecutionBackend> Router<B> {
+    pub fn new(engines: Vec<Engine<B>>, ratings: Vec<EngineRating>,
+               policy: RoutePolicy) -> Self {
+        assert_eq!(engines.len(), ratings.len());
+        assert!(!engines.is_empty());
+        let n = engines.len();
+        Router { engines, ratings, policy, rr_next: 0, routed: vec![0; n] }
+    }
+
+    /// Pick a target engine for a request (does not submit).
+    pub fn select(&mut self, r: &Request) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.engines.len();
+                i
+            }
+            RoutePolicy::LeastLoaded => self
+                .engines
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.pending())
+                .map(|(i, _)| i)
+                .unwrap(),
+            RoutePolicy::PhaseAffinity => {
+                // Decode-heaviness of the request in [0, 1].
+                let total = (r.prompt_len + r.output_len) as f64;
+                let decode_w = r.output_len as f64 / total.max(1.0);
+                self.ratings
+                    .iter()
+                    .enumerate()
+                    .map(|(i, rt)| {
+                        let fit = decode_w * rt.decode_score
+                            + (1.0 - decode_w) * rt.prefill_score;
+                        // Load-balance tiebreaker.
+                        let load = self.engines[i].pending() as f64;
+                        (i, fit / (1.0 + 0.1 * load))
+                    })
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            }
+        }
+    }
+
+    /// Route and submit.
+    pub fn submit(&mut self, r: &Request) -> usize {
+        let i = self.select(r);
+        self.engines[i].submit(r);
+        self.routed[i] += 1;
+        i
+    }
+
+    pub fn routed_counts(&self) -> &[u64] {
+        &self.routed
+    }
+
+    /// Drive every engine until drained.
+    pub fn run_to_completion(&mut self, max_steps: usize) -> bool {
+        self.engines
+            .iter_mut()
+            .all(|e| e.run_to_completion(max_steps))
+    }
+
+    /// Slowest engine's virtual completion time (makespan).
+    pub fn makespan(&self) -> f64 {
+        self.engines.iter().map(|e| e.clock()).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::perfmodel::{PrecisionMode, StepConfig};
+    use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::coordinator::kv_cache::KvCacheConfig;
+    use crate::hwsim::spec::Device;
+    use crate::workload::llama::by_name;
+
+    fn engine(dev: Device) -> Engine<SimBackend> {
+        let kv = KvCacheConfig { block_tokens: 16, total_blocks: 200_000 };
+        let backend = SimBackend::new(
+            by_name("llama-8b").unwrap(),
+            StepConfig::new(dev, PrecisionMode::fp8_static()),
+        );
+        Engine::new(EngineConfig::new(kv), backend)
+    }
+
+    fn req(id: u64, p: usize, o: usize) -> Request {
+        Request { id, arrival: 0.0, prompt_len: p, output_len: o }
+    }
+
+    fn ratings_h100_gaudi() -> Vec<EngineRating> {
+        // From the paper's result: H100 better at prefill, Gaudi2+FP8
+        // at decode.
+        vec![
+            EngineRating { prefill_score: 2.0, decode_score: 1.0 }, // H100
+            EngineRating { prefill_score: 1.0, decode_score: 1.4 }, // Gaudi2
+        ]
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let mut r = Router::new(
+            vec![engine(Device::H100), engine(Device::Gaudi2)],
+            ratings_h100_gaudi(),
+            RoutePolicy::RoundRobin,
+        );
+        for i in 0..6 {
+            r.submit(&req(i, 64, 16));
+        }
+        assert_eq!(r.routed_counts(), &[3, 3]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(
+            vec![engine(Device::H100), engine(Device::Gaudi2)],
+            ratings_h100_gaudi(),
+            RoutePolicy::LeastLoaded,
+        );
+        for i in 0..10 {
+            r.submit(&req(i, 64, 16));
+        }
+        let c = r.routed_counts();
+        assert_eq!(c[0] + c[1], 10);
+        assert!((c[0] as i64 - c[1] as i64).abs() <= 1, "{c:?}");
+    }
+
+    #[test]
+    fn phase_affinity_separates_workloads() {
+        let mut r = Router::new(
+            vec![engine(Device::H100), engine(Device::Gaudi2)],
+            ratings_h100_gaudi(),
+            RoutePolicy::PhaseAffinity,
+        );
+        // Prefill-heavy: long prompt, one token out -> engine 0 (H100).
+        let i = r.select(&req(0, 4000, 4));
+        assert_eq!(i, 0);
+        // Decode-heavy: short prompt, long reasoning output -> Gaudi2.
+        let j = r.select(&req(1, 32, 4000));
+        assert_eq!(j, 1);
+    }
+
+    #[test]
+    fn pool_drains_and_counts_match() {
+        let mut r = Router::new(
+            vec![engine(Device::H100), engine(Device::Gaudi2)],
+            ratings_h100_gaudi(),
+            RoutePolicy::PhaseAffinity,
+        );
+        for i in 0..40 {
+            let (p, o) = if i % 2 == 0 { (2000, 8) } else { (32, 512) };
+            r.submit(&req(i, p, o));
+        }
+        assert!(r.run_to_completion(1_000_000));
+        let done: u64 = r.engines.iter().map(|e| e.metrics.requests_done).sum();
+        assert_eq!(done, 40);
+        assert!(r.makespan() > 0.0);
+    }
+
+    #[test]
+    fn phase_affinity_beats_anti_affinity_on_mixed_traffic() {
+        // The §2.2 claim quantified: placing each phase on the device
+        // that is better at it lowers makespan vs the inverted
+        // placement. (Round-robin sits between the two, depending on
+        // the workload mix.)
+        let run = |ratings: Vec<EngineRating>| {
+            let mut r = Router::new(
+                vec![engine(Device::H100), engine(Device::Gaudi2)],
+                ratings,
+                RoutePolicy::PhaseAffinity,
+            );
+            for i in 0..60 {
+                let (p, o) = if i % 2 == 0 { (3000, 4) } else { (32, 768) };
+                r.submit(&req(i, p, o));
+            }
+            assert!(r.run_to_completion(2_000_000));
+            r.makespan()
+        };
+        let good = run(ratings_h100_gaudi());
+        // Anti-affinity: swap the scores so prefill lands on Gaudi
+        // and decode on the H100.
+        let anti = run(vec![
+            EngineRating { prefill_score: 1.0, decode_score: 1.4 },
+            EngineRating { prefill_score: 2.0, decode_score: 1.0 },
+        ]);
+        assert!(good < anti, "affinity {good} vs anti {anti}");
+    }
+}

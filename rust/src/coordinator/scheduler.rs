@@ -1,0 +1,89 @@
+//! Prefill/decode scheduling policies.
+//!
+//! The paper (§2.2, citing Splitwise [32]) observes that prefill and
+//! decode have markedly different throughput profiles and that phase-
+//! aware placement changes the TCO balance. Two policies:
+//!
+//! * [`SchedulerPolicy::Fused`] — classic vLLM: the same engine
+//!   interleaves prefill and decode steps (prefill-priority).
+//! * [`SchedulerPolicy::Disaggregated`] — Splitwise-style: prefill
+//!   and decode run on separate (possibly different) simulated
+//!   devices; this is what makes the Fig. 9 phase-split TCO scenarios
+//!   expressible.
+
+use super::batcher::Admission;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerPolicy {
+    /// Interleave prefill and decode on one engine (prefill priority).
+    Fused,
+    /// Run prefill and decode as separate pools.
+    Disaggregated,
+}
+
+/// What the engine executes this step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepPlan {
+    /// No work.
+    Idle,
+    /// Run these prefills (sequence ids).
+    Prefill(Vec<u64>),
+    /// Run one batched decode step over these ids.
+    Decode(Vec<u64>),
+    /// Disaggregated: both phases concurrently (separate pools).
+    Both { prefills: Vec<u64>, decodes: Vec<u64> },
+}
+
+/// Turn an admission into a step plan under the policy.
+///
+/// Fused engines prefer prefill (vLLM default: new requests reach
+/// first token fast, decodes stall one step); disaggregated engines
+/// run both pools concurrently.
+pub fn plan(policy: SchedulerPolicy, adm: Admission) -> StepPlan {
+    match policy {
+        SchedulerPolicy::Fused => {
+            if !adm.prefills.is_empty() {
+                StepPlan::Prefill(adm.prefills)
+            } else if !adm.decodes.is_empty() {
+                StepPlan::Decode(adm.decodes)
+            } else {
+                StepPlan::Idle
+            }
+        }
+        SchedulerPolicy::Disaggregated => {
+            if adm.prefills.is_empty() && adm.decodes.is_empty() {
+                StepPlan::Idle
+            } else {
+                StepPlan::Both { prefills: adm.prefills, decodes: adm.decodes }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adm(p: Vec<u64>, d: Vec<u64>) -> Admission {
+        Admission { prefills: p, decodes: d }
+    }
+
+    #[test]
+    fn fused_prefill_priority() {
+        let plan1 = plan(SchedulerPolicy::Fused, adm(vec![1], vec![2, 3]));
+        assert_eq!(plan1, StepPlan::Prefill(vec![1]));
+        let plan2 = plan(SchedulerPolicy::Fused, adm(vec![], vec![2, 3]));
+        assert_eq!(plan2, StepPlan::Decode(vec![2, 3]));
+    }
+
+    #[test]
+    fn fused_idle_when_empty() {
+        assert_eq!(plan(SchedulerPolicy::Fused, adm(vec![], vec![])), StepPlan::Idle);
+    }
+
+    #[test]
+    fn disaggregated_runs_both() {
+        let p = plan(SchedulerPolicy::Disaggregated, adm(vec![1], vec![2]));
+        assert_eq!(p, StepPlan::Both { prefills: vec![1], decodes: vec![2] });
+    }
+}

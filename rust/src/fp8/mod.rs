@@ -1,0 +1,157 @@
+//! Bit-exact FP8 formats in rust — mirrors `python/compile/kernels/fp8.py`.
+//!
+//! The L3 coordinator needs FP8 semantics natively (KV-cache quantization
+//! in the simulator, request-path sanity checks, golden-vector
+//! cross-validation against the L1 Pallas emulation). Three lattices
+//! (paper §3.2):
+//!
+//! * [`Format::E4M3FN`]    — NVIDIA variant, max finite 448, no inf,
+//!   one NaN code per sign.
+//! * [`Format::E4M3Gaudi`] — Gaudi 2 IEEE-style E4M3, exponent 15
+//!   reserved, max finite 240 ("seven fewer magnitude representations").
+//! * [`Format::E5M2`]      — IEEE-style, max finite 57344.
+//!
+//! Quantization saturates on overflow and supports round-to-nearest-even
+//! and stochastic rounding (paper Eq. 2). Cross-language agreement is
+//! enforced by `tests/golden_fp8.rs` against vectors emitted at
+//! artifact-build time.
+
+pub mod quantize;
+pub mod scaling;
+
+pub use quantize::{quantize_rtn, quantize_sr, Rounding};
+pub use scaling::{amax_scale_rows, amax_scale_tensor, pow2_snap, GAUDI2_HW_SCALES};
+
+/// An FP8 value lattice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    E4M3FN,
+    E4M3Gaudi,
+    E5M2,
+}
+
+impl Format {
+    pub const ALL: [Format; 3] = [Format::E4M3FN, Format::E4M3Gaudi, Format::E5M2];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::E4M3FN => "e4m3fn",
+            Format::E4M3Gaudi => "e4m3_gaudi",
+            Format::E5M2 => "e5m2",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Format> {
+        Format::ALL.iter().copied().find(|f| f.name() == name)
+    }
+
+    /// Mantissa bits (excluding the implicit leading one).
+    pub fn man_bits(self) -> u32 {
+        match self {
+            Format::E4M3FN | Format::E4M3Gaudi => 3,
+            Format::E5M2 => 2,
+        }
+    }
+
+    /// Exponent of the smallest *normal* binade.
+    pub fn emin(self) -> i32 {
+        match self {
+            Format::E4M3FN | Format::E4M3Gaudi => -6,
+            Format::E5M2 => -14,
+        }
+    }
+
+    /// Largest finite value.
+    pub fn max_finite(self) -> f32 {
+        match self {
+            Format::E4M3FN => 448.0,
+            Format::E4M3Gaudi => 240.0,
+            Format::E5M2 => 57344.0,
+        }
+    }
+
+    /// Smallest positive subnormal.
+    pub fn min_subnormal(self) -> f32 {
+        exp2i(self.emin() - self.man_bits() as i32)
+    }
+
+    /// Bytes per element when stored (always 1 for FP8).
+    pub fn bytes(self) -> usize {
+        1
+    }
+
+    /// Enumerate every non-negative finite lattice value, ascending.
+    /// (<= 128 values; used by tests and the error-analysis tooling.)
+    pub fn lattice(self) -> Vec<f32> {
+        let mut vals = vec![0.0f32];
+        let mb = self.man_bits();
+        for m in 1..(1u32 << mb) {
+            vals.push(m as f32 * self.min_subnormal());
+        }
+        let mut e = self.emin();
+        loop {
+            let base = exp2i(e);
+            if base > self.max_finite() {
+                break;
+            }
+            for m in 0..(1u32 << mb) {
+                let v = (1.0 + m as f32 / (1u32 << mb) as f32) * base;
+                if v <= self.max_finite() {
+                    vals.push(v);
+                }
+            }
+            e += 1;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        vals
+    }
+}
+
+/// Exact 2^e as f32 (e within normal f32 range).
+pub fn exp2i(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e));
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2i_exact() {
+        assert_eq!(exp2i(0), 1.0);
+        assert_eq!(exp2i(-9), 2.0_f32.powi(-9));
+        assert_eq!(exp2i(15), 32768.0);
+    }
+
+    #[test]
+    fn lattice_extremes() {
+        for fmt in Format::ALL {
+            let lat = fmt.lattice();
+            assert_eq!(lat[0], 0.0);
+            assert_eq!(lat[1], fmt.min_subnormal());
+            assert_eq!(*lat.last().unwrap(), fmt.max_finite());
+            // strictly ascending
+            for w in lat.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn gaudi_has_seven_fewer_magnitudes() {
+        // Paper §3.2 (E4M3 range).
+        let nv = Format::E4M3FN.lattice().len();
+        let gd = Format::E4M3Gaudi.lattice().len();
+        assert_eq!(nv - gd, 7);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for fmt in Format::ALL {
+            assert_eq!(Format::from_name(fmt.name()), Some(fmt));
+        }
+        assert_eq!(Format::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,216 @@
+//! FP8 rounding: round-to-nearest-even and stochastic rounding.
+//!
+//! Same algorithm as the L1 kernel emulation (exponent arithmetic on
+//! the f32 bit pattern; exact, no transcendental functions), verified
+//! bit-exactly against it via golden vectors.
+
+use super::{exp2i, Format};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round-to-nearest, ties to even (hardware default).
+    Rtn,
+    /// Stochastic rounding, paper Eq. 2 (Gaudi hardware feature).
+    Sr,
+}
+
+/// Lattice spacing ("quantum") at |x|.
+fn quantum(fmt: Format, x: f32) -> f32 {
+    let ax = x.abs();
+    // floor(log2(ax)) from the exponent field; subnormal f32 inputs all
+    // fall below every FP8 binade, so clamping handles them.
+    let e = if ax == 0.0 {
+        fmt.emin()
+    } else {
+        let bits = ax.to_bits();
+        let biased = (bits >> 23) as i32;
+        if biased == 0 {
+            -127 // f32 subnormal: far below any FP8 emin
+        } else {
+            biased - 127
+        }
+    };
+    let e = e.max(fmt.emin());
+    exp2i(e - fmt.man_bits() as i32)
+}
+
+/// Round one f32 onto the FP8 lattice with RTN (saturating).
+pub fn quantize_rtn(x: f32, fmt: Format) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x.is_infinite() {
+        return x.signum() * fmt.max_finite();
+    }
+    let q = quantum(fmt, x);
+    let scaled = x / q;
+    let r = round_half_even(scaled);
+    let y = r * q;
+    y.clamp(-fmt.max_finite(), fmt.max_finite())
+}
+
+/// Round one f32 onto the FP8 lattice with stochastic rounding.
+///
+/// P(round up) = (x - x_down) / (x_up - x_down)  — paper Eq. 2.
+pub fn quantize_sr(x: f32, fmt: Format, rng: &mut Rng) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x.is_infinite() {
+        return x.signum() * fmt.max_finite();
+    }
+    let q = quantum(fmt, x);
+    let scaled = x / q;
+    let lo = scaled.floor();
+    let p_up = scaled - lo;
+    let r = if (rng.f64() as f32) < p_up { lo + 1.0 } else { lo };
+    (r * q).clamp(-fmt.max_finite(), fmt.max_finite())
+}
+
+/// Round half to even, matching `jnp.round` / IEEE roundTiesToEven.
+fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // exact tie: pick the even neighbour
+        let down = x.trunc();
+        let up = down + x.signum();
+        if (down as i64) % 2 == 0 {
+            down
+        } else {
+            up
+        }
+    } else {
+        r
+    }
+}
+
+/// Quantize a slice (RTN).
+pub fn quantize_slice_rtn(xs: &[f32], fmt: Format) -> Vec<f32> {
+    xs.iter().map(|&x| quantize_rtn(x, fmt)).collect()
+}
+
+/// Quantize a slice with the given rounding mode.
+pub fn quantize_slice(xs: &[f32], fmt: Format, mode: Rounding, rng: &mut Rng) -> Vec<f32> {
+    match mode {
+        Rounding::Rtn => quantize_slice_rtn(xs, fmt),
+        Rounding::Sr => xs.iter().map(|&x| quantize_sr(x, fmt, rng)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lattice_values_are_fixed_points() {
+        for fmt in Format::ALL {
+            for &v in &fmt.lattice() {
+                assert_eq!(quantize_rtn(v, fmt), v, "{} {v}", fmt.name());
+                assert_eq!(quantize_rtn(-v, fmt), -v);
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_at_max() {
+        assert_eq!(quantize_rtn(1e9, Format::E4M3FN), 448.0);
+        assert_eq!(quantize_rtn(-1e9, Format::E4M3FN), -448.0);
+        assert_eq!(quantize_rtn(250.0, Format::E4M3Gaudi), 240.0);
+        assert_eq!(quantize_rtn(f32::INFINITY, Format::E5M2), 57344.0);
+    }
+
+    #[test]
+    fn nearest_with_ties_to_even() {
+        // E4M3FN around 1.0: spacing 1/8. 1.0625 is the midpoint of
+        // [1.0, 1.125]; even mantissa is 1.0 (code 000).
+        assert_eq!(quantize_rtn(1.0625, Format::E4M3FN), 1.0);
+        // midpoint of [1.125, 1.25] -> 1.25 (code 010 even).
+        assert_eq!(quantize_rtn(1.1875, Format::E4M3FN), 1.25);
+        // strictly above the midpoint rounds up
+        assert_eq!(quantize_rtn(1.07, Format::E4M3FN), 1.125);
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        for fmt in Format::ALL {
+            let tiny = fmt.min_subnormal() / 2.0;
+            assert_eq!(quantize_rtn(tiny * 0.99, fmt), 0.0);
+            // exact half ties to even -> 0
+            assert_eq!(quantize_rtn(tiny, fmt), 0.0);
+            assert_eq!(quantize_rtn(tiny * 1.01, fmt), fmt.min_subnormal());
+        }
+    }
+
+    #[test]
+    fn rtn_error_bounded_by_half_quantum() {
+        let mut rng = Rng::new(5);
+        for fmt in Format::ALL {
+            for _ in 0..10_000 {
+                let x = (rng.f64() as f32 - 0.5) * 2.0 * fmt.max_finite();
+                let q = quantize_rtn(x, fmt);
+                let spacing = quantum(fmt, x);
+                assert!(
+                    (q - x).abs() <= spacing / 2.0 + 1e-12,
+                    "{} x={x} q={q} sp={spacing}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sr_is_unbiased() {
+        let mut rng = Rng::new(1);
+        let fmt = Format::E4M3FN;
+        // x 30% of the way between 1.0 and 1.125.
+        let x = 1.0 + 0.3 * 0.125;
+        let n = 40_000;
+        let mut ups = 0;
+        for _ in 0..n {
+            let q = quantize_sr(x, fmt, &mut rng);
+            assert!(q == 1.0 || q == 1.125);
+            if q == 1.125 {
+                ups += 1;
+            }
+        }
+        let p = ups as f64 / n as f64;
+        assert!((p - 0.3).abs() < 0.01, "p_up {p}");
+    }
+
+    #[test]
+    fn sr_on_lattice_is_exact() {
+        let mut rng = Rng::new(2);
+        for fmt in Format::ALL {
+            for &v in fmt.lattice().iter().take(40) {
+                assert_eq!(quantize_sr(v, fmt, &mut rng), v);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_enumerated_nearest_search() {
+        // Independent oracle: explicit nearest-lattice search.
+        let mut rng = Rng::new(33);
+        for fmt in Format::ALL {
+            let lat = fmt.lattice();
+            for _ in 0..2_000 {
+                let x = (rng.f64() as f32 - 0.5) * 2.2 * fmt.max_finite();
+                let got = quantize_rtn(x, fmt);
+                // brute force nearest (ties resolved by even index)
+                let ax = x.abs();
+                let mut best = lat[0];
+                let mut best_d = f32::INFINITY;
+                for (i, &v) in lat.iter().enumerate() {
+                    let d = (v - ax).abs();
+                    if d < best_d || (d == best_d && i % 2 == 0) {
+                        best_d = d;
+                        best = v;
+                    }
+                }
+                let want = x.signum() * best;
+                assert_eq!(got, want, "{} x={x}", fmt.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Scaling strategies for FP8 quantization (paper §3.2, §4.1).
+
+use super::Format;
+
+/// Gaudi-2 hardware-accelerated per-tensor exponent-bias scales
+/// (fixed set 2^-8, 2^-4, 2^0, 2^4 — paper §3.2 "Power-of-2 scaling").
+pub const GAUDI2_HW_SCALES: [f32; 4] = [
+    0.00390625, // 2^-8
+    0.0625,     // 2^-4
+    1.0,        // 2^0
+    16.0,       // 2^4
+];
+
+/// Dynamic per-tensor amax scale: s such that x/s fills the range.
+pub fn amax_scale_tensor(xs: &[f32], fmt: Format) -> f32 {
+    let amax = xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    amax.max(1e-12) / fmt.max_finite()
+}
+
+/// Dynamic per-row amax scales for an (rows x cols) row-major matrix.
+pub fn amax_scale_rows(xs: &[f32], rows: usize, cols: usize, fmt: Format) -> Vec<f32> {
+    assert_eq!(xs.len(), rows * cols);
+    (0..rows)
+        .map(|r| amax_scale_tensor(&xs[r * cols..(r + 1) * cols], fmt))
+        .collect()
+}
+
+/// Snap a scale to the Gaudi hardware set: smallest member >= scale,
+/// clamped to the largest member.
+pub fn pow2_snap(scale: f32, hw_set: &[f32]) -> f32 {
+    let mut sorted: Vec<f32> = hw_set.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for &s in &sorted {
+        if s >= scale {
+            return s;
+        }
+    }
+    *sorted.last().expect("empty hw scale set")
+}
+
+/// Quantization SNR (dB) of a tensor under a given format+scale — the
+/// error-analysis primitive behind the Table 4/5 orderings.
+pub fn quant_snr_db(xs: &[f32], fmt: Format, scale: f32) -> f64 {
+    let mut sig = 0.0f64;
+    let mut err = 0.0f64;
+    for &x in xs {
+        let q = super::quantize_rtn(x / scale, fmt) * scale;
+        sig += (x as f64) * (x as f64);
+        let e = (q - x) as f64;
+        err += e * e;
+    }
+    if err == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / err).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tensor_scale_fills_range() {
+        let xs = [1.0, -3.0, 2.0];
+        let s = amax_scale_tensor(&xs, Format::E4M3FN);
+        assert!((s - 3.0 / 448.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_scales_per_row() {
+        let xs = [1.0, 2.0, /* row 1 */ 10.0, -20.0];
+        let s = amax_scale_rows(&xs, 2, 2, Format::E4M3FN);
+        assert!((s[0] - 2.0 / 448.0).abs() < 1e-9);
+        assert!((s[1] - 20.0 / 448.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pow2_snap_behaviour() {
+        assert_eq!(pow2_snap(0.01, &GAUDI2_HW_SCALES), 0.0625);
+        assert_eq!(pow2_snap(1.0, &GAUDI2_HW_SCALES), 1.0);
+        assert_eq!(pow2_snap(3.0, &GAUDI2_HW_SCALES), 16.0);
+        assert_eq!(pow2_snap(1e6, &GAUDI2_HW_SCALES), 16.0);
+    }
+
+    #[test]
+    fn e4m3_has_better_snr_than_e5m2_on_normals() {
+        // The Table 5 mechanism: for activation-like (unit-scale
+        // gaussian) data, E4M3's extra mantissa bit beats E5M2's range.
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+        let s4 = amax_scale_tensor(&xs, Format::E4M3FN);
+        let s5 = amax_scale_tensor(&xs, Format::E5M2);
+        let snr4 = quant_snr_db(&xs, Format::E4M3FN, s4);
+        let snr5 = quant_snr_db(&xs, Format::E5M2, s5);
+        assert!(snr4 > snr5 + 3.0, "snr4={snr4} snr5={snr5}");
+    }
+
+    #[test]
+    fn dynamic_rowwise_beats_static_with_outliers() {
+        // The Table 4 mechanism: a static per-tensor scale calibrated
+        // without outliers clips them; dynamic row scales do not.
+        let mut rng = Rng::new(6);
+        let mut xs: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        xs[17] = 80.0; // outlier
+        let static_scale = 3.0 / Format::E4M3FN.max_finite(); // calibrated on N(0,1)
+        let snr_static = quant_snr_db(&xs, Format::E4M3FN, static_scale);
+        let dyn_scale = amax_scale_tensor(&xs, Format::E4M3FN);
+        let snr_dyn = quant_snr_db(&xs, Format::E4M3FN, dyn_scale);
+        // static clips the outlier -> large error energy
+        assert!(snr_dyn > snr_static, "dyn={snr_dyn} static={snr_static}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Calibrated model constants, each tied to the paper table whose
+//! shape it reproduces. Everything NOT in this file is first-principles
+//! (datasheet specs + architectural mechanism).
+//!
+//! Calibration discipline (DESIGN.md §5): a constant may encode an
+//! architecture-level *descriptor* (e.g. "H100's row-wise FP32-accum
+//! FP8 path tops out near 20% MFU because every WGMMA result is
+//! promoted through CUDA cores", Table 3), never a per-cell fudge.
+
+use super::spec::{Accum, Device, DType, Scaling};
+
+/// Kernel launch + runtime dispatch overhead (seconds).
+/// Calibrated: Table 6 small shapes (both devices show a size-
+/// independent time floor) and Table 2/3 1K rows.
+pub fn launch_overhead(dev: Device) -> f64 {
+    match dev {
+        Device::H100 => 7.5e-6,
+        Device::A100 => 9.0e-6,
+        Device::Gaudi2 => 2.2e-6,
+        Device::Gaudi3 => 2.2e-6,
+    }
+}
+
+/// Architecture cap on achievable MFU for FP8 GEMMs, by scaling
+/// strategy and accumulation path. Calibrated: Table 3 (H100) and
+/// Table 2 (Gaudi 2) 8K rows — the asymptotic plateau of each kernel
+/// family.
+pub fn mfu_cap_fp8(dev: Device, scaling: Scaling, accum: Accum) -> f64 {
+    match dev {
+        Device::H100 | Device::A100 => match (scaling, accum) {
+            // Row-wise + FP32 accumulation: every tensor-core tile
+            // result is promoted to CUDA cores for the scale multiply
+            // -> the epilogue serializes the pipeline (Table 3: 20%).
+            (Scaling::PerRow, Accum::Fp32) => 0.21,
+            // Row-wise + fast (14-bit) accumulation (Table 3: ~57%).
+            (Scaling::PerRow, Accum::Fast) => 0.58,
+            // Per-tensor scales fold into the WGMMA epilogue.
+            (Scaling::PerTensor | Scaling::Static | Scaling::HwPow2, Accum::Fp32) => 0.67,
+            (Scaling::PerTensor | Scaling::Static | Scaling::HwPow2, Accum::Fast) => 0.71,
+        },
+        Device::Gaudi2 | Device::Gaudi3 => match scaling {
+            // Row-wise scale application shares the TPC pipeline
+            // (Table 2: 85.7% vs 95.0% at 8K).
+            Scaling::PerRow => 0.90,
+            Scaling::PerTensor | Scaling::Static => 0.985,
+            // Exponent-bias trick: scale application is free in the
+            // MME datapath (Table 2 HW-accel column: 98.4%).
+            Scaling::HwPow2 => 1.0,
+        },
+    }
+}
+
+/// Architecture cap on achievable MFU for BF16 GEMMs.
+/// Calibrated: Table 6 large shapes + public MLPerf-class numbers.
+pub fn mfu_cap_bf16(dev: Device) -> f64 {
+    match dev {
+        Device::H100 | Device::A100 => 0.72,
+        Device::Gaudi2 | Device::Gaudi3 => 0.95,
+    }
+}
+
+/// H100 utilization ramp midpoint (matrix "effective size" where the
+/// kernel reaches ~50% of its cap). Row-wise kernels use smaller tiles
+/// and ramp earlier; per-tensor WGMMA pipelines need larger tiles
+/// (Table 3: per-row wins below ~2K, per-tensor above).
+pub fn h100_ramp_midpoint(scaling: Scaling, dtype: DType) -> f64 {
+    if dtype == DType::Bf16 {
+        return 1100.0;
+    }
+    match scaling {
+        Scaling::PerRow => 1150.0,
+        Scaling::PerTensor | Scaling::Static | Scaling::HwPow2 => 1750.0,
+    }
+}
+
+/// H100 ramp steepness exponent (fit to Table 3 1K..8K columns).
+pub const H100_RAMP_POWER: f64 = 3.0;
+
+/// Gaudi row-wise dynamic-quantization TPC pass: effective element
+/// rate (elements/s) for the amax+scale pass that cannot overlap the
+/// MME (Table 2 per-row vs per-tensor deltas).
+pub const GAUDI_TPC_QUANT_RATE: f64 = 5.5e12;
+
+/// Fraction of HBM bandwidth sustained when streaming GEMM operands
+/// (neither device reaches datasheet bandwidth on real kernels;
+/// Table 6 4K rows).
+pub fn hbm_stream_eff(dev: Device) -> f64 {
+    match dev {
+        Device::H100 | Device::A100 => 0.83,
+        Device::Gaudi2 | Device::Gaudi3 => 0.78,
+    }
+}
+
+/// Power-curve parameters: frac_of_range = min(max_frac, a * util^b),
+/// P = idle + (TDP - idle) * frac. Calibrated: Table 1 power columns
+/// (H100 pegs near TDP from ~40% utilization; Gaudi 2 stays well
+/// under its 600 W TDP even at 94% utilization).
+pub struct PowerCurve {
+    pub a: f64,
+    pub b: f64,
+    pub max_frac: f64,
+}
+
+pub fn power_curve(dev: Device) -> PowerCurve {
+    match dev {
+        Device::H100 => PowerCurve { a: 1.63, b: 0.62, max_frac: 1.0 },
+        Device::A100 => PowerCurve { a: 1.5, b: 0.62, max_frac: 1.0 },
+        Device::Gaudi2 => PowerCurve { a: 0.78, b: 0.41, max_frac: 0.80 },
+        Device::Gaudi3 => PowerCurve { a: 0.80, b: 0.45, max_frac: 0.85 },
+    }
+}
+
+/// DVFS exponent: P_dynamic ∝ f^DVFS_POWER (V scales with f).
+pub const DVFS_POWER: f64 = 2.2;
+
+/// Cost of one exponential on the vector path, in FLOP-equivalents
+/// (polynomial expansion + range reduction on TPC/CUDA cores).
+pub const EXP_FLOP_EQUIV: f64 = 4.0;
+
+/// SFU exponential throughput (exp/s) where present. H100: 16 SFU/SM
+/// x 132 SM x ~1.6 GHz.
+pub fn sfu_exp_rate(dev: Device) -> f64 {
+    match dev {
+        Device::H100 => 3.4e12,
+        Device::A100 => 2.4e12,
+        _ => 0.0,
+    }
+}

@@ -1,0 +1,170 @@
+//! Calibration suite: asserts that the simulators reproduce the
+//! *shape* of every hwsim-backed paper table (DESIGN.md acceptance:
+//! same winner, crossovers within one grid step, ratios within ~±30%).
+//!
+//! Cells are checked as ratios/orderings, not absolute TFLOPS — the
+//! substrate is a model, not the authors' testbed.
+
+use super::gemm::{gemm_time, GemmConfig};
+use super::power::power_draw;
+use super::spec::{Accum, Device, Scaling};
+
+fn tf(dev: Device, m: usize, k: usize, n: usize, cfg: GemmConfig) -> f64 {
+    gemm_time(dev, m, k, n, cfg).tflops()
+}
+
+fn fp8_row(dev: Device) -> GemmConfig {
+    let accum = match dev {
+        Device::H100 | Device::A100 => Accum::Fast,
+        _ => Accum::Fp32,
+    };
+    GemmConfig::fp8(Scaling::PerRow, accum)
+}
+
+/// Table 1: square FP8 GEMM, row-wise scaling. Paper (TFLOPS):
+/// Gaudi2: 1K 367.9, 2K 586.2, 4K 817.1, 8K 741.8 (ratios 42-95%)
+/// H100:   1K 218.3, 2K 879.7, 4K 1167.6, 8K 1084.7 (11-59%)
+#[test]
+fn table1_shape() {
+    // Utilization rises steeply with size on both devices.
+    for dev in [Device::Gaudi2, Device::H100] {
+        let t1 = tf(dev, 1024, 1024, 1024, fp8_row(dev));
+        let t4 = tf(dev, 4096, 4096, 4096, fp8_row(dev));
+        assert!(t4 > 1.8 * t1, "{}: 1K {t1} 4K {t4}", dev.name());
+    }
+    // Gaudi wins at 1K, H100 wins at 4K+ (absolute TFLOPS).
+    let g1 = tf(Device::Gaudi2, 1024, 1024, 1024, fp8_row(Device::Gaudi2));
+    let h1 = tf(Device::H100, 1024, 1024, 1024, fp8_row(Device::H100));
+    assert!(g1 > h1, "1K: gaudi {g1} h100 {h1}");
+    let g4 = tf(Device::Gaudi2, 4096, 4096, 4096, fp8_row(Device::Gaudi2));
+    let h4 = tf(Device::H100, 4096, 4096, 4096, fp8_row(Device::H100));
+    assert!(h4 > g4, "4K: gaudi {g4} h100 {h4}");
+    // Gaudi achieves much higher MFU at every size.
+    for s in [1024usize, 2048, 4096, 8192] {
+        let gm = gemm_time(Device::Gaudi2, s, s, s, fp8_row(Device::Gaudi2)).mfu;
+        let hm = gemm_time(Device::H100, s, s, s, fp8_row(Device::H100)).mfu;
+        assert!(gm > hm, "{s}: gaudi mfu {gm} h100 {hm}");
+    }
+}
+
+/// Table 1 power columns: Gaudi stays below TDP; H100 pegs.
+#[test]
+fn table1_power_shape() {
+    // At the utilizations the model achieves for 4K squares:
+    let g = gemm_time(Device::Gaudi2, 4096, 4096, 4096, fp8_row(Device::Gaudi2));
+    let h = gemm_time(Device::H100, 4096, 4096, 4096, fp8_row(Device::H100));
+    let pg = power_draw(Device::Gaudi2, g.mfu);
+    let ph = power_draw(Device::H100, h.mfu);
+    assert!(pg < 0.85 * 600.0, "gaudi {pg} W");
+    assert!(ph > 0.90 * 700.0, "h100 {ph} W");
+    // TFLOPS/W comparable at 4K (paper: 1.8 vs 1.7).
+    let eff_g = g.tflops() / pg;
+    let eff_h = h.tflops() / ph;
+    assert!((eff_g / eff_h) > 0.7 && (eff_g / eff_h) < 2.0, "{eff_g} {eff_h}");
+}
+
+/// Table 2: Gaudi 2 scaling strategies. Orderings:
+/// per-row <= per-tensor <= hw-accel, gap shrinking toward 1K.
+#[test]
+fn table2_shape() {
+    for s in [2048usize, 4096, 8192] {
+        let row = tf(Device::Gaudi2, s, s, s,
+                     GemmConfig::fp8(Scaling::PerRow, Accum::Fp32));
+        let tensor = tf(Device::Gaudi2, s, s, s,
+                        GemmConfig::fp8(Scaling::PerTensor, Accum::Fp32));
+        let hw = tf(Device::Gaudi2, s, s, s,
+                    GemmConfig::fp8(Scaling::HwPow2, Accum::Fp32));
+        assert!(row < tensor && tensor <= hw, "{s}: {row} {tensor} {hw}");
+        // paper 8K: row/tensor = 742/822 = 0.90
+        if s == 8192 {
+            let r = row / tensor;
+            assert!(r > 0.78 && r < 0.97, "8K row/tensor {r}");
+        }
+    }
+    // 8K per-tensor reaches >= 90% MFU (paper 95%).
+    let bd = gemm_time(Device::Gaudi2, 8192, 8192, 8192,
+                       GemmConfig::fp8(Scaling::PerTensor, Accum::Fp32));
+    assert!(bd.mfu > 0.85, "mfu {}", bd.mfu);
+}
+
+/// Table 3: H100 accumulation paths.
+/// FP32-accum per-row plateaus ~20%; fast accum per-row ~57%;
+/// per-tensor ~66-70%; per-row beats per-tensor at 1K, loses at 8K.
+#[test]
+fn table3_shape() {
+    let mfu = |scaling, accum, s: usize| {
+        gemm_time(Device::H100, s, s, s, GemmConfig::fp8(scaling, accum)).mfu
+    };
+    // plateaus at 8K
+    let row32 = mfu(Scaling::PerRow, Accum::Fp32, 8192);
+    assert!(row32 > 0.13 && row32 < 0.27, "{row32}");
+    let rowfast = mfu(Scaling::PerRow, Accum::Fast, 8192);
+    assert!(rowfast > 0.45 && rowfast < 0.62, "{rowfast}");
+    let tensorfast = mfu(Scaling::PerTensor, Accum::Fast, 8192);
+    assert!(tensorfast > 0.60 && tensorfast < 0.75, "{tensorfast}");
+    assert!(row32 < rowfast && rowfast < tensorfast);
+    // crossover: per-row wins at 1K, per-tensor at 8K (fast accum).
+    assert!(mfu(Scaling::PerRow, Accum::Fast, 1024)
+            > mfu(Scaling::PerTensor, Accum::Fast, 1024));
+    assert!(mfu(Scaling::PerRow, Accum::Fast, 8192)
+            < mfu(Scaling::PerTensor, Accum::Fast, 8192));
+}
+
+/// Table 6: thin GEMMs. Checked in detail in gemm::tests; here the
+/// cross-device absolute ordering on every paper shape.
+#[test]
+fn table6_shape() {
+    for (m, kn) in [(8usize, 1024usize), (16, 1024), (32, 1024), (64, 1024),
+                    (8, 2048), (16, 2048), (32, 2048), (64, 2048),
+                    (8, 4096), (16, 4096), (32, 4096), (64, 4096)] {
+        let gb = tf(Device::Gaudi2, m, kn, kn, GemmConfig::bf16());
+        let hb = tf(Device::H100, m, kn, kn, GemmConfig::bf16());
+        assert!(gb > hb, "bf16 ({m},{kn}): gaudi {gb} h100 {hb}");
+        let gf = tf(Device::Gaudi2, m, kn, kn, fp8_row(Device::Gaudi2));
+        let hf = tf(Device::H100, m, kn, kn, fp8_row(Device::H100));
+        assert!(gf > hf, "fp8 ({m},{kn}): gaudi {gf} h100 {hf}");
+    }
+    // FP8:BF16 ~2x on Gaudi at 4K thin; ~1x on H100 (Fig. 6 / §5.6).
+    let g_gain = tf(Device::Gaudi2, 64, 4096, 4096, fp8_row(Device::Gaudi2))
+        / tf(Device::Gaudi2, 64, 4096, 4096, GemmConfig::bf16());
+    assert!(g_gain > 1.4 && g_gain < 2.2, "gaudi thin gain {g_gain}");
+    let h_gain = tf(Device::H100, 64, 4096, 4096, fp8_row(Device::H100))
+        / tf(Device::H100, 64, 4096, 4096, GemmConfig::bf16());
+    assert!(h_gain < 1.25, "h100 thin gain {h_gain}");
+}
+
+/// Within ±35% of the paper's absolute numbers on the anchor cells
+/// used for calibration (sanity that the model is in the right world,
+/// not just ordered correctly).
+#[test]
+fn absolute_anchors_within_tolerance() {
+    let cases: &[(Device, usize, usize, usize, GemmConfig, f64)] = &[
+        // Table 2 per-tensor E4M3 (Gaudi): 8K -> 822 TFLOPS.
+        (Device::Gaudi2, 8192, 8192, 8192,
+         GemmConfig::fp8(Scaling::PerTensor, Accum::Fp32), 822.0),
+        // Table 2 per-tensor 4K -> 796.
+        (Device::Gaudi2, 4096, 4096, 4096,
+         GemmConfig::fp8(Scaling::PerTensor, Accum::Fp32), 796.0),
+        // Table 3 fast per-tensor 8K -> 1388.
+        (Device::H100, 8192, 8192, 8192,
+         GemmConfig::fp8(Scaling::PerTensor, Accum::Fast), 1388.0),
+        // Table 3 fast per-row 8K -> 1123.
+        (Device::H100, 8192, 8192, 8192,
+         GemmConfig::fp8(Scaling::PerRow, Accum::Fast), 1123.0),
+        // Table 6 thin (64, 4096, 4096) BF16: Gaudi 144.5, H100 133.3.
+        (Device::Gaudi2, 64, 4096, 4096, GemmConfig::bf16(), 144.5),
+        (Device::H100, 64, 4096, 4096, GemmConfig::bf16(), 133.3),
+        // Table 6 thin FP8: Gaudi 253.4.
+        (Device::Gaudi2, 64, 4096, 4096,
+         GemmConfig::fp8(Scaling::PerRow, Accum::Fp32), 253.4),
+    ];
+    for &(dev, m, k, n, cfg, paper) in cases {
+        let got = tf(dev, m, k, n, cfg);
+        let rel = got / paper;
+        assert!(
+            (0.65..=1.35).contains(&rel),
+            "{} {m}x{k}x{n}: model {got:.0} vs paper {paper} (x{rel:.2})",
+            dev.name()
+        );
+    }
+}

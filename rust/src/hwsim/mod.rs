@@ -1,0 +1,34 @@
+//! Hardware performance simulators for the paper's testbed.
+//!
+//! The paper measures NVIDIA H100 and Intel Gaudi 2 silicon; neither is
+//! available here (repro band 0), so this module implements
+//! first-principles timing/power models of both accelerators built from
+//! exactly the architectural mechanisms the paper uses to *explain* its
+//! measurements (§3.2, §5.6, §5.7, Figs. 6–8):
+//!
+//! * **Gaudi 2** — two large 256×256 output-stationary systolic MMEs
+//!   with reconfigurable geometry (Fig. 8), fill/drain pipeline
+//!   overhead, FP32 accumulation, HBM *byte-rate* bound for streaming
+//!   workloads, TPC vector cores (11 TFLOPS BF16) with **no SFU** —
+//!   exponentials run on the TPCs (§5.7).
+//! * **H100** — 132 SMs × 4 tensor cores (many small units): thin GEMMs
+//!   are bound by the per-unit input *element-rate* (so FP8 ≈ BF16 on
+//!   thin GEMMs, §5.6), accumulation-path caps for FP8 (14-bit fast
+//!   accum vs FP32 promotion, §3.2), SFUs that hide softmax (§5.7).
+//!
+//! Every calibrated constant lives in [`calib`] with a pointer to the
+//! paper table it reproduces; everything else is first-principles.
+
+pub mod calib;
+pub mod gemm;
+pub mod mme;
+pub mod power;
+pub mod softmax;
+pub mod spec;
+
+pub use gemm::{gemm_time, GemmBreakdown, GemmConfig};
+pub use power::{power_draw, PowerCap};
+pub use spec::{Accum, Device, DeviceSpec, DType, Scaling};
+
+#[cfg(test)]
+mod calibration_tests;

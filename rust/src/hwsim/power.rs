@@ -1,0 +1,182 @@
+//! Power model + capping governor (paper §5.5, Table 1 power columns).
+//!
+//! Draw is a calibrated function of matrix-engine utilization with a
+//! per-device curve shape: the H100 pegs near its 700 W TDP from
+//! moderate utilization, while the Gaudi 2 stays well below its 600 W
+//! TDP even at high utilization (Table 1). Capping scales the clock
+//! (DVFS): compute-bound time stretches by 1/f, memory-bound time is
+//! unchanged — which is why the paper finds decode unaffected by a
+//! 400 W cap (§5.5) while prefill throughput drops.
+
+use super::calib::{self, DVFS_POWER};
+use super::spec::Device;
+
+/// Power cap configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PowerCap {
+    None,
+    /// Per-GPU cap in watts (what both vendors support today).
+    PerGpu(f64),
+    /// Per-rack cap: total budget shared by `gpus` (the paper's §5.5
+    /// proposal, implemented as an extension).
+    PerRack { watts: f64, gpus: usize },
+}
+
+/// Uncapped draw (W) at a given matrix utilization in [0, 1].
+pub fn power_draw(dev: Device, util: f64) -> f64 {
+    let spec = dev.spec();
+    let c = calib::power_curve(dev);
+    let frac = (c.a * util.max(0.0).powf(c.b)).min(c.max_frac);
+    spec.idle_w + (spec.tdp - spec.idle_w) * frac
+}
+
+/// Result of applying a cap to an operation.
+#[derive(Debug, Clone, Copy)]
+pub struct CappedOp {
+    /// Achieved clock fraction f in (0, 1].
+    pub clock_frac: f64,
+    /// Stretched execution time (s).
+    pub seconds: f64,
+    /// Power drawn under the cap (W).
+    pub watts: f64,
+}
+
+/// Apply a per-GPU cap to an op with the given compute-bound time
+/// fraction. `t`: uncapped op time; `util`: uncapped engine
+/// utilization; `compute_frac`: fraction of `t` that scales with
+/// clock (compute/feed-bound), the rest is HBM-bound.
+pub fn apply_cap(dev: Device, cap_w: f64, t: f64, util: f64, compute_frac: f64) -> CappedOp {
+    let spec = dev.spec();
+    let p0 = power_draw(dev, util);
+    if p0 <= cap_w {
+        return CappedOp { clock_frac: 1.0, seconds: t, watts: p0 };
+    }
+    // DVFS: dynamic power ~ f^DVFS_POWER. Solve for f hitting the cap.
+    let dyn0 = p0 - spec.idle_w;
+    let target_dyn = (cap_w - spec.idle_w).max(dyn0 * 0.05);
+    let f = (target_dyn / dyn0).powf(1.0 / DVFS_POWER).clamp(0.2, 1.0);
+    // Compute-bound portion stretches by 1/f; memory-bound does not.
+    let seconds = t * (compute_frac / f + (1.0 - compute_frac));
+    // Average power over the stretched op.
+    let watts = spec.idle_w + dyn0 * f.powf(DVFS_POWER);
+    CappedOp { clock_frac: f, seconds, watts }
+}
+
+/// Per-rack capping: GPUs share a budget; a GPU may exceed the even
+/// split if others draw less (§5.5). `demands`: uncapped per-GPU draw.
+/// Returns the per-GPU allowed power.
+pub fn rack_allocation(total_w: f64, demands: &[f64]) -> Vec<f64> {
+    let n = demands.len();
+    if n == 0 {
+        return vec![];
+    }
+    let sum: f64 = demands.iter().sum();
+    if sum <= total_w {
+        return demands.to_vec(); // headroom for everyone
+    }
+    // Water-filling: satisfy small demands fully, split the remainder
+    // evenly among the still-hungry.
+    let mut alloc = vec![0.0; n];
+    let mut remaining = total_w;
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+    let mut left = n;
+    for &i in &idx {
+        let fair = remaining / left as f64;
+        let give = demands[i].min(fair);
+        alloc[i] = give;
+        remaining -= give;
+        left -= 1;
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_pegs_near_tdp_at_moderate_util() {
+        // Table 1: H100 draws ~690 W (99%) from ~44% utilization.
+        let p = power_draw(Device::H100, 0.44);
+        assert!(p > 650.0, "{p}");
+        // ...but much less at 11% utilization (350 W measured).
+        let p_small = power_draw(Device::H100, 0.11);
+        assert!(p_small < 500.0 && p_small > 250.0, "{p_small}");
+    }
+
+    #[test]
+    fn gaudi_stays_below_tdp() {
+        // Table 1: Gaudi 2 draws <= 490 W at up to 94.5% utilization.
+        for util in [0.4, 0.7, 0.95, 1.0] {
+            let p = power_draw(Device::Gaudi2, util);
+            assert!(p < 520.0, "util {util} -> {p} W");
+        }
+    }
+
+    #[test]
+    fn power_monotone_in_util() {
+        for dev in Device::ALL {
+            let mut last = 0.0;
+            for i in 0..=20 {
+                let p = power_draw(dev, i as f64 / 20.0);
+                assert!(p >= last);
+                last = p;
+            }
+            assert!(power_draw(dev, 0.0) >= dev.spec().idle_w - 1e-9);
+            assert!(power_draw(dev, 1.0) <= dev.spec().tdp + 1e-9);
+        }
+    }
+
+    #[test]
+    fn cap_leaves_memory_bound_ops_unharmed() {
+        // §5.5 / Fig. 3: decode (memory-bound) unaffected by 400 W cap.
+        let capped = apply_cap(Device::H100, 400.0, 1e-3, 0.9, 0.05);
+        assert!(capped.seconds < 1.05e-3, "{}", capped.seconds);
+        assert!(capped.watts <= 400.0 + 1e-6);
+    }
+
+    #[test]
+    fn cap_slows_compute_bound_ops() {
+        let capped = apply_cap(Device::H100, 400.0, 1e-3, 0.9, 1.0);
+        assert!(capped.seconds > 1.15e-3, "{}", capped.seconds);
+        assert!(capped.clock_frac < 1.0);
+    }
+
+    #[test]
+    fn no_cap_effect_when_under_budget() {
+        let c = apply_cap(Device::Gaudi2, 600.0, 1e-3, 0.5, 1.0);
+        assert_eq!(c.clock_frac, 1.0);
+        assert_eq!(c.seconds, 1e-3);
+    }
+
+    #[test]
+    fn rack_allocation_waterfills() {
+        // 4 GPUs, 1200 W budget, uneven demand.
+        let alloc = rack_allocation(1200.0, &[200.0, 200.0, 600.0, 600.0]);
+        assert!((alloc[0] - 200.0).abs() < 1e-9);
+        assert!((alloc[1] - 200.0).abs() < 1e-9);
+        // the two hungry GPUs split the remaining 800 W
+        assert!((alloc[2] - 400.0).abs() < 1e-9);
+        assert!((alloc[3] - 400.0).abs() < 1e-9);
+        let total: f64 = alloc.iter().sum();
+        assert!(total <= 1200.0 + 1e-9);
+    }
+
+    #[test]
+    fn rack_allocation_headroom_passthrough() {
+        let alloc = rack_allocation(4000.0, &[300.0, 400.0]);
+        assert_eq!(alloc, vec![300.0, 400.0]);
+    }
+
+    #[test]
+    fn per_rack_beats_per_gpu_for_skewed_load() {
+        // §5.5's argument: under per-GPU caps a hot GPU throttles even
+        // when rack headroom exists; per-rack capping lets it borrow.
+        let demands = [650.0, 250.0, 250.0, 250.0];
+        let rack_budget = 1600.0; // = 4 x 400 W per-GPU equivalent
+        let rack = rack_allocation(rack_budget, &demands);
+        assert!(rack[0] > 400.0, "hot GPU should borrow: {}", rack[0]);
+        // per-GPU capping would have clamped it to 400.
+    }
+}

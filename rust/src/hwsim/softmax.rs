@@ -1,0 +1,80 @@
+//! Special-function (exponential) cost model — paper §5.7.
+//!
+//! Softmax needs `exp()` per attention score. GPUs with SFUs evaluate
+//! exponentials on dedicated units *in parallel with* tensor-core
+//! GEMMs; Gaudi has no SFU and must run them on its TPC vector cores
+//! (11 TFLOPS BF16 on Gaudi 2), serializing with the MME. During
+//! decode the exponential count scales O(B·S) — the paper identifies
+//! this as Gaudi's long-sequence bottleneck.
+
+use super::calib::{sfu_exp_rate, EXP_FLOP_EQUIV};
+use super::spec::Device;
+
+/// Time to evaluate `n_exp` exponentials, given `overlap_budget`
+/// seconds of concurrent matrix-engine work they can hide behind.
+pub fn exp_time(dev: Device, n_exp: f64, overlap_budget: f64) -> f64 {
+    let spec = dev.spec();
+    if spec.has_sfu {
+        // SFU path: runs concurrently with tensor cores; only the
+        // excess over the overlap budget is exposed.
+        let t = n_exp / sfu_exp_rate(dev);
+        (t - overlap_budget).max(0.0)
+    } else {
+        // TPC path: serialized with the MME.
+        n_exp * EXP_FLOP_EQUIV / spec.vector_flops
+    }
+}
+
+/// Exponentials per decode step: one per (sequence, head, cached key).
+pub fn decode_exp_count(batch: usize, seq: usize, heads: usize) -> f64 {
+    batch as f64 * seq as f64 * heads as f64
+}
+
+/// Exponentials for a full prefill: causal S^2/2 per head per sequence.
+pub fn prefill_exp_count(batch: usize, seq: usize, heads: usize) -> f64 {
+    batch as f64 * (seq as f64 * seq as f64 / 2.0) * heads as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sfu_hides_exponentials_under_overlap() {
+        // H100 with generous overlap: exposed time ~ 0 (§5.7).
+        let t = exp_time(Device::H100, 1e6, 1e-3);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn gaudi_pays_serially() {
+        let n = 1e6;
+        let t = exp_time(Device::Gaudi2, n, 1e-3);
+        assert!(t > 0.0);
+        // 1e6 * 4 flops / 11 TFLOPS ~ 0.36 us
+        assert!((t - n * 4.0 / 11.0e12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaudi3_faster_tpc_but_still_serial() {
+        let t2 = exp_time(Device::Gaudi2, 1e8, 1.0);
+        let t3 = exp_time(Device::Gaudi3, 1e8, 1.0);
+        assert!(t3 < t2);
+        assert!(t3 > 0.0);
+    }
+
+    #[test]
+    fn decode_exp_scales_with_batch_and_seq() {
+        // §5.7: softmax cost scales O(B*S) during decoding.
+        let base = decode_exp_count(1, 1024, 32);
+        assert_eq!(decode_exp_count(2, 1024, 32), base * 2.0);
+        assert_eq!(decode_exp_count(1, 2048, 32), base * 2.0);
+    }
+
+    #[test]
+    fn prefill_exp_quadratic_in_seq() {
+        let s1 = prefill_exp_count(1, 1024, 32);
+        let s2 = prefill_exp_count(1, 2048, 32);
+        assert!((s2 / s1 - 4.0).abs() < 1e-9);
+    }
+}

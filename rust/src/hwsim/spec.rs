@@ -1,0 +1,246 @@
+//! Device specifications (public datasheet values only — everything
+//! calibrated against paper measurements lives in `calib.rs`).
+
+/// Matrix datatypes the simulators understand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    Bf16,
+    Fp8,
+    Fp32,
+}
+
+impl DType {
+    pub fn bytes(self) -> f64 {
+        match self {
+            DType::Fp8 => 1.0,
+            DType::Bf16 => 2.0,
+            DType::Fp32 => 4.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Bf16 => "bf16",
+            DType::Fp8 => "fp8",
+            DType::Fp32 => "fp32",
+        }
+    }
+}
+
+/// Activation-scaling strategy of an FP8 GEMM (paper Tables 2–3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scaling {
+    /// Dynamic per-row (per-token) scales.
+    PerRow,
+    /// Dynamic per-tensor scale.
+    PerTensor,
+    /// Static (calibrated) per-tensor scale.
+    Static,
+    /// Gaudi hardware-accelerated power-of-2 per-tensor scale.
+    HwPow2,
+}
+
+/// FP8 accumulation path (paper §3.2 "Accumulation precision").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Accum {
+    /// Full FP32 accumulation (Gaudi native; H100 via CUDA-core
+    /// promotion, expensive).
+    Fp32,
+    /// H100 tensor-core fast path (14-bit accumulator).
+    Fast,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Device {
+    H100,
+    Gaudi2,
+    Gaudi3,
+    A100,
+}
+
+impl Device {
+    pub const ALL: [Device; 4] = [Device::H100, Device::Gaudi2, Device::Gaudi3, Device::A100];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Device::H100 => "H100",
+            Device::Gaudi2 => "Gaudi2",
+            Device::Gaudi3 => "Gaudi3",
+            Device::A100 => "A100",
+        }
+    }
+
+    pub fn spec(self) -> &'static DeviceSpec {
+        match self {
+            Device::H100 => &H100,
+            Device::Gaudi2 => &GAUDI2,
+            Device::Gaudi3 => &GAUDI3,
+            Device::A100 => &A100,
+        }
+    }
+}
+
+/// Datasheet-level description of an accelerator.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub device: Device,
+    /// Dense peak matrix throughput (FLOP/s).
+    pub peak_fp8: f64,
+    pub peak_bf16: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bw: f64,
+    /// HBM capacity (bytes).
+    pub hbm_cap: f64,
+    /// Vector-core throughput (FLOP/s, BF16-class) — TPC on Gaudi,
+    /// CUDA cores on NVIDIA. Paper §5.7 quotes these.
+    pub vector_flops: f64,
+    /// Whether dedicated special-function units exist (exp/softmax can
+    /// overlap with matrix work). Paper §5.7: H100 yes, Gaudi no.
+    pub has_sfu: bool,
+    /// Board TDP (W).
+    pub tdp: f64,
+    /// Idle draw (W).
+    pub idle_w: f64,
+    /// Matrix-engine organization (drives the thin-GEMM behaviour).
+    pub engine: MatrixEngine,
+    /// Core clock (Hz) used by the systolic pipeline model.
+    pub clock_hz: f64,
+}
+
+/// Matrix-engine organization (paper Fig. 7).
+#[derive(Debug, Clone)]
+pub enum MatrixEngine {
+    /// Few large reconfigurable systolic arrays (Gaudi MME, Fig. 8).
+    LargeSystolic {
+        /// Number of MMEs.
+        units: usize,
+        /// Total PE count per MME (e.g. 256*256); geometry may fold.
+        pes_per_unit: usize,
+        /// Allowed (rows, cols) foldings, smallest width 128 (Fig. 8).
+        geometries: &'static [(usize, usize)],
+    },
+    /// Many small MMA units (NVIDIA tensor cores): thin GEMMs are
+    /// bound by a device-wide input element-rate (elements/s).
+    ManySmall {
+        units: usize,
+        /// Sustained operand feed, elements/s (calibrated, Table 6).
+        feed_rate: f64,
+        /// Native tile granularity for utilization ramps.
+        tile: usize,
+    },
+}
+
+pub static H100: DeviceSpec = DeviceSpec {
+    device: Device::H100,
+    peak_fp8: 1989.9e12,
+    peak_bf16: 989.4e12,
+    hbm_bw: 3.35e12,
+    hbm_cap: 80.0e9,
+    vector_flops: 133.8e12, // paper §5.7: BF16 CUDA-core throughput
+    has_sfu: true,
+    tdp: 700.0,
+    idle_w: 90.0,
+    engine: MatrixEngine::ManySmall {
+        units: 528, // 132 SMs x 4 tensor cores
+        feed_rate: 1.05e12,
+        tile: 128,
+    },
+    clock_hz: 1.59e9,
+};
+
+pub static GAUDI2: DeviceSpec = DeviceSpec {
+    device: Device::Gaudi2,
+    peak_fp8: 865.0e12,
+    peak_bf16: 432.0e12,
+    hbm_bw: 2.4e12,
+    hbm_cap: 96.0e9,
+    vector_flops: 11.0e12, // paper §5.7: peak TPC BF16
+    has_sfu: false,
+    tdp: 600.0,
+    idle_w: 100.0,
+    engine: MatrixEngine::LargeSystolic {
+        units: 2,
+        pes_per_unit: 256 * 256,
+        geometries: &[(256, 256), (128, 512), (512, 128)],
+    },
+    clock_hz: 1.65e9,
+};
+
+pub static GAUDI3: DeviceSpec = DeviceSpec {
+    device: Device::Gaudi3,
+    peak_fp8: 1835.0e12,
+    peak_bf16: 1835.0e12, // Gaudi 3 white paper: BF16 == FP8 peak
+    hbm_bw: 3.7e12,
+    hbm_cap: 128.0e9,
+    vector_flops: 28.7e12, // paper §5.7
+    has_sfu: false,
+    tdp: 900.0,
+    idle_w: 120.0,
+    engine: MatrixEngine::LargeSystolic {
+        units: 8,
+        pes_per_unit: 256 * 256,
+        geometries: &[(256, 256), (128, 512), (512, 128)],
+    },
+    clock_hz: 1.6e9,
+};
+
+pub static A100: DeviceSpec = DeviceSpec {
+    device: Device::A100,
+    peak_fp8: 624.0e12, // no FP8 tensor cores; INT8 rate as stand-in
+    peak_bf16: 312.0e12,
+    hbm_bw: 2.04e12,
+    hbm_cap: 80.0e9,
+    vector_flops: 78.0e12,
+    has_sfu: true,
+    tdp: 400.0,
+    idle_w: 60.0,
+    engine: MatrixEngine::ManySmall {
+        units: 432,
+        feed_rate: 0.7e12,
+        tile: 128,
+    },
+    clock_hz: 1.41e9,
+};
+
+impl DeviceSpec {
+    pub fn peak(&self, dtype: DType) -> f64 {
+        match dtype {
+            DType::Fp8 => self.peak_fp8,
+            DType::Bf16 => self.peak_bf16,
+            DType::Fp32 => self.peak_bf16 / 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_quoted_specs() {
+        // Numbers quoted verbatim in the paper (§3.3 Table 1 caption,
+        // §5.2, §5.7).
+        assert_eq!(H100.peak_fp8, 1989.9e12);
+        assert_eq!(H100.tdp, 700.0);
+        assert_eq!(GAUDI2.peak_fp8, 865.0e12);
+        assert_eq!(GAUDI2.tdp, 600.0);
+        assert_eq!(GAUDI2.hbm_bw, 2.4e12);
+        assert_eq!(GAUDI2.vector_flops, 11.0e12);
+        assert_eq!(GAUDI3.vector_flops, 28.7e12);
+        assert_eq!(H100.vector_flops, 133.8e12);
+        assert!(!GAUDI2.has_sfu && H100.has_sfu);
+    }
+
+    #[test]
+    fn ci_to_saturate_gaudi2_is_360() {
+        // §5.2: "a FLOP/byte ratio of at least 360 is required".
+        let ci = GAUDI2.peak_fp8 / GAUDI2.hbm_bw;
+        assert!((ci - 360.4).abs() < 1.0, "{ci}");
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::Fp8.bytes(), 1.0);
+        assert_eq!(DType::Bf16.bytes(), 2.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! `fp8-tco` — reproduction of *"An Inquiry into Datacenter TCO for LLM
+//! Inference with FP8"* (CS.LG 2025).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — serving coordinator (router / continuous
+//!   batcher / KV-cache manager / prefill-decode scheduler), the
+//!   H100 & Gaudi 2 hardware simulators standing in for the paper's
+//!   testbed, the Llama FLOPs workload model (paper Eqs. 3–6), and the
+//!   TCO model (paper Eq. 1, Figs. 1 & 9).
+//! * **L2** — JAX Llama forward passes, AOT-lowered to `artifacts/`.
+//! * **L1** — Pallas FP8 kernels called by L2.
+//!
+//! Python never runs on the request path: the rust binary loads the
+//! AOT HLO artifacts through PJRT (`runtime`) and is self-contained.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod fp8;
+pub mod hwsim;
+pub mod runtime;
+pub mod tco;
+pub mod util;
+pub mod workload;

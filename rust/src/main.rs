@@ -1,0 +1,175 @@
+//! `fp8-tco` CLI — entrypoints for the paper's experiments.
+//!
+//! Subcommands (no clap in the vendored set; hand-rolled parsing):
+//!   tco-grid            reproduce Fig. 1
+//!   gemm  M K N         time a GEMM on both simulated devices
+//!   decode MODEL B S    decode-step analysis on both devices
+//!   serve               smoke-run the sim serving engine
+//!   info                artifact + device summary
+
+use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
+use fp8_tco::hwsim::gemm::{gemm_time, GemmConfig};
+use fp8_tco::hwsim::spec::{Accum, Device, Scaling};
+use fp8_tco::runtime::ArtifactDir;
+use fp8_tco::tco;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "tco-grid" => tco_grid(),
+        "gemm" => gemm_cmd(&args[1..]),
+        "decode" => decode_cmd(&args[1..]),
+        "serve" => serve_cmd(),
+        "info" => info_cmd(),
+        _ => help(),
+    }
+}
+
+fn help() {
+    println!(
+        "fp8-tco — datacenter TCO for LLM inference with FP8 (paper reproduction)\n\
+         usage:\n\
+         \x20 fp8-tco tco-grid              # Fig. 1 TCO comparison table\n\
+         \x20 fp8-tco gemm M K N            # GEMM timing on simulated H100/Gaudi2\n\
+         \x20 fp8-tco decode MODEL B S      # decode-step breakdown (e.g. llama-8b 64 1024)\n\
+         \x20 fp8-tco serve                 # smoke-run the sim serving engine\n\
+         \x20 fp8-tco info                  # devices + artifacts summary"
+    );
+}
+
+fn tco_grid() {
+    let mut t = Table::new(
+        "Fig. 1 — TCO ratio (A/B), C_S = C_I, R_IC = 1",
+        &["R_Th \\ R_SC", "1.00", "0.90", "0.80", "0.70", "0.60", "0.50",
+          "0.40", "0.30", "0.20", "0.10"],
+    );
+    let grid = tco::fig1_grid();
+    for chunk in grid.chunks(10) {
+        let mut row = vec![format!("{:.2}", chunk[0].0)];
+        row.extend(chunk.iter().map(|&(_, _, r)| f(r, 2)));
+        t.row(row);
+    }
+    t.print();
+}
+
+fn gemm_cmd(args: &[String]) {
+    let dims: Vec<usize> = args.iter().filter_map(|a| a.parse().ok()).collect();
+    let (m, k, n) = match dims.as_slice() {
+        [m, k, n] => (*m, *k, *n),
+        _ => (64, 4096, 4096),
+    };
+    let mut t = Table::new(
+        &format!("GEMM ({m},{k},{n}) on the simulated testbed"),
+        &["device", "config", "TFLOPS", "MFU", "bound", "time (us)"],
+    );
+    for dev in [Device::Gaudi2, Device::H100] {
+        for (name, cfg) in [
+            ("bf16", GemmConfig::bf16()),
+            ("fp8 row", GemmConfig::fp8(Scaling::PerRow,
+                if dev == Device::H100 { Accum::Fast } else { Accum::Fp32 })),
+            ("fp8 tensor", GemmConfig::fp8(Scaling::PerTensor,
+                if dev == Device::H100 { Accum::Fast } else { Accum::Fp32 })),
+        ] {
+            let bd = gemm_time(dev, m, k, n, cfg);
+            t.row(vec![
+                dev.name().into(),
+                name.into(),
+                f(bd.tflops(), 1),
+                f(bd.mfu * 100.0, 1),
+                bd.bound_by().into(),
+                f(bd.seconds * 1e6, 2),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn decode_cmd(args: &[String]) {
+    let model = args
+        .first()
+        .and_then(|a| llama::by_name(a))
+        .unwrap_or_else(|| llama::by_name("llama-8b").unwrap());
+    let b: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(64);
+    let s: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(1024);
+    let mut t = Table::new(
+        &format!("decode step: {} b={b} s={s}", model.name),
+        &["device", "precision", "step ms", "tok/s", "TFLOPS", "W",
+          "linears ms", "kv ms", "softmax ms", "head ms"],
+    );
+    for dev in [Device::Gaudi2, Device::H100] {
+        for prec in [PrecisionMode::Bf16, PrecisionMode::fp8_static(),
+                     PrecisionMode::fp8_dynamic()] {
+            let bd = decode_step(model, &StepConfig::new(dev, prec), b, s);
+            t.row(vec![
+                dev.name().into(),
+                prec.name().into(),
+                f(bd.seconds * 1e3, 3),
+                f(b as f64 / bd.seconds, 0),
+                f(bd.tflops(), 1),
+                f(bd.watts, 0),
+                f(bd.t_linears * 1e3, 3),
+                f(bd.t_attention_kv * 1e3, 3),
+                f(bd.t_softmax * 1e3, 3),
+                f(bd.t_lm_head * 1e3, 3),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn serve_cmd() {
+    use fp8_tco::coordinator::{Engine, EngineConfig, ExecutionBackend, KvCacheConfig, SimBackend};
+    use fp8_tco::workload::trace::{TraceConfig, TraceGenerator};
+
+    let model = llama::by_name("llama-8b").unwrap();
+    let kv = KvCacheConfig::from_device(model, 96e9, 1.0, 2.0, 16, 0.05);
+    let backend = SimBackend::new(
+        model,
+        StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()),
+    );
+    let mut engine = Engine::new(EngineConfig::new(kv), backend);
+    let mut gen = TraceGenerator::new(TraceConfig::chat(4.0), 7);
+    for r in gen.take(200) {
+        engine.submit(&r);
+    }
+    let drained = engine.run_to_completion(1_000_000);
+    println!("backend: {}", engine.backend.describe());
+    println!("drained: {drained}, preemptions: {}", engine.preemptions());
+    println!("{}", engine.metrics.report());
+}
+
+fn info_cmd() {
+    let mut t = Table::new(
+        "simulated devices",
+        &["device", "peak FP8 T", "peak BF16 T", "HBM TB/s", "TDP W", "SFU"],
+    );
+    for dev in Device::ALL {
+        let s = dev.spec();
+        t.row(vec![
+            dev.name().into(),
+            f(s.peak_fp8 / 1e12, 0),
+            f(s.peak_bf16 / 1e12, 0),
+            f(s.hbm_bw / 1e12, 2),
+            f(s.tdp, 0),
+            if s.has_sfu { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.print();
+
+    let dir = ArtifactDir::discover();
+    if dir.exists() {
+        match dir.meta("1b") {
+            Ok(meta) => println!(
+                "artifacts: {} (tier {} h={} l={} vocab={} max_seq={})",
+                dir.root.display(), meta.tier, meta.hidden, meta.layers,
+                meta.vocab, meta.max_seq
+            ),
+            Err(e) => println!("artifacts present but unreadable: {e}"),
+        }
+    } else {
+        println!("artifacts: not built (run `make artifacts`)");
+    }
+}

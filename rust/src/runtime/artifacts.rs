@@ -1,0 +1,191 @@
+//! Artifact discovery + metadata (artifacts/ directory layout is
+//! defined by python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `model/<tier>/meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub tier: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    /// (batch, seq) pairs with a prefill executable.
+    pub prefill_shapes: Vec<(usize, usize)>,
+    /// batch sizes with a decode executable.
+    pub decode_batches: Vec<usize>,
+    pub precision: String,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = Json::parse(text).context("meta.json parse")?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta.json missing {k}"))
+        };
+        let prefill_shapes = j
+            .get("prefill_shapes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing prefill_shapes"))?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.idx(0).and_then(Json::as_usize).ok_or_else(|| anyhow!("bad shape"))?,
+                    p.idx(1).and_then(Json::as_usize).ok_or_else(|| anyhow!("bad shape"))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let decode_batches = j
+            .get("decode_batches")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing decode_batches"))?
+            .iter()
+            .map(|p| p.as_usize().ok_or_else(|| anyhow!("bad batch")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            tier: j
+                .get("tier")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab: get("vocab")?,
+            hidden: get("hidden")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            kv_heads: get("kv_heads")?,
+            head_dim: get("head_dim")?,
+            max_seq: get("max_seq")?,
+            prefill_shapes,
+            decode_batches,
+            precision: j
+                .get("precision")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+        })
+    }
+
+    /// Smallest exported prefill batch that fits `n` sequences of
+    /// length <= seq.
+    pub fn prefill_bucket(&self, n: usize, seq: usize) -> Option<(usize, usize)> {
+        self.prefill_shapes
+            .iter()
+            .copied()
+            .filter(|&(b, s)| b >= n && s >= seq)
+            .min_by_key(|&(b, s)| (b, s))
+    }
+
+    /// Smallest exported decode batch >= n.
+    pub fn decode_bucket(&self, n: usize) -> Option<usize> {
+        self.decode_batches.iter().copied().filter(|&b| b >= n).min()
+    }
+}
+
+/// Locator for the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+}
+
+impl ArtifactDir {
+    pub fn new(root: impl AsRef<Path>) -> Self {
+        ArtifactDir { root: root.as_ref().to_path_buf() }
+    }
+
+    /// Default location: $FP8_TCO_ARTIFACTS or ./artifacts.
+    pub fn discover() -> Self {
+        let root = std::env::var("FP8_TCO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        ArtifactDir { root }
+    }
+
+    pub fn exists(&self) -> bool {
+        self.root.join(".stamp").exists()
+    }
+
+    pub fn model_dir(&self, tier: &str) -> PathBuf {
+        self.root.join("model").join(tier)
+    }
+
+    pub fn meta(&self, tier: &str) -> Result<ModelMeta> {
+        let path = self.model_dir(tier).join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ModelMeta::parse(&text)
+    }
+
+    pub fn prefill_hlo(&self, tier: &str, batch: usize, seq: usize) -> PathBuf {
+        self.model_dir(tier).join(format!("prefill_b{batch}_s{seq}.hlo.txt"))
+    }
+
+    pub fn decode_hlo(&self, tier: &str, batch: usize) -> PathBuf {
+        self.model_dir(tier).join(format!("decode_b{batch}.hlo.txt"))
+    }
+
+    pub fn golden(&self, name: &str) -> Result<Json> {
+        let path = self.root.join("golden").join(name);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+        "tier": "1b", "vocab": 256, "hidden": 64, "layers": 2,
+        "heads": 4, "kv_heads": 2, "head_dim": 16, "intermediate": 172,
+        "max_seq": 128, "prefill_shapes": [[1, 32], [2, 32], [4, 32], [8, 32]],
+        "decode_batches": [1, 2, 4, 8],
+        "precision": "fp8_e4m3fn_dynamic_rowwise", "param_count": 12345
+    }"#;
+
+    #[test]
+    fn parses_meta() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.tier, "1b");
+        assert_eq!(m.hidden, 64);
+        assert_eq!(m.prefill_shapes.len(), 4);
+        assert_eq!(m.decode_batches, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = ModelMeta::parse(META).unwrap();
+        assert_eq!(m.prefill_bucket(3, 20), Some((4, 32)));
+        assert_eq!(m.prefill_bucket(1, 32), Some((1, 32)));
+        assert_eq!(m.prefill_bucket(9, 32), None);
+        assert_eq!(m.decode_bucket(3), Some(4));
+        assert_eq!(m.decode_bucket(8), Some(8));
+        assert_eq!(m.decode_bucket(9), None);
+    }
+
+    #[test]
+    fn rejects_malformed_meta() {
+        assert!(ModelMeta::parse("{}").is_err());
+        assert!(ModelMeta::parse("not json").is_err());
+    }
+
+    #[test]
+    fn paths_layout() {
+        let d = ArtifactDir::new("/tmp/a");
+        assert_eq!(
+            d.prefill_hlo("1b", 4, 32),
+            PathBuf::from("/tmp/a/model/1b/prefill_b4_s32.hlo.txt")
+        );
+        assert_eq!(d.decode_hlo("1b", 2), PathBuf::from("/tmp/a/model/1b/decode_b2.hlo.txt"));
+    }
+}

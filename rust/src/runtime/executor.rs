@@ -1,0 +1,216 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects in proto form).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactDir, ModelMeta};
+
+/// Process-wide PJRT serialization: xla_extension 0.5.1's CPU path is
+/// not safe under concurrent use from multiple clients/threads in one
+/// process (observed: corrupted result buffers / NaN logits). Hold
+/// this guard around any sequence of xla calls (literal creation,
+/// compile, execute, transfer). `Executor` methods do NOT lock
+/// internally (a non-reentrant Mutex would deadlock callers that need
+/// to span several calls) — callers serialize at their level.
+pub fn pjrt_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::OnceLock<Mutex<()>> = std::sync::OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap()
+}
+
+/// Thread-safe PJRT CPU client + executable cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Executor {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Executor { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an HLO-text file.
+    pub fn load(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse hlo {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// A serving model: compiled prefill/decode executables per bucket.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    exec: Arc<Executor>,
+    dir: ArtifactDir,
+    tier: String,
+}
+
+/// Dense KV caches for a batch bucket, threaded through decode steps.
+pub struct KvState {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+    pub batch: usize,
+}
+
+impl LoadedModel {
+    pub fn load(exec: Arc<Executor>, dir: &ArtifactDir, tier: &str) -> Result<Self> {
+        let meta = dir.meta(tier)?;
+        // Eagerly compile every bucket so the request path never JITs.
+        for &(b, s) in &meta.prefill_shapes {
+            exec.load(&dir.prefill_hlo(tier, b, s))
+                .with_context(|| format!("prefill bucket b{b} s{s}"))?;
+        }
+        for &b in &meta.decode_batches {
+            exec.load(&dir.decode_hlo(tier, b))
+                .with_context(|| format!("decode bucket b{b}"))?;
+        }
+        Ok(LoadedModel { meta, exec, dir: dir.clone(), tier: tier.to_string() })
+    }
+
+    /// Run a prefill over `tokens` (row-major batch x seq, padded) and
+    /// per-sequence lengths. Returns (logits (b,s,v) flattened, KV).
+    pub fn prefill(
+        &self,
+        bucket: (usize, usize),
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<(Vec<f32>, KvState)> {
+        let (b, s) = bucket;
+        anyhow::ensure!(tokens.len() == b * s, "tokens len");
+        anyhow::ensure!(lengths.len() == b, "lengths len");
+        let exe = self.exec.load(&self.dir.prefill_hlo(&self.tier, b, s))?;
+        let t = xla::Literal::vec1(tokens).reshape(&[b as i64, s as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let l = xla::Literal::vec1(lengths);
+        let mut out = self.exec.run(&exe, &[t, l])?;
+        anyhow::ensure!(out.len() == 3, "prefill returns (logits, k, v)");
+        let v_cache = out.pop().unwrap();
+        let k_cache = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((logits, KvState { k: k_cache, v: v_cache, batch: b }))
+    }
+
+    /// Run one decode step. `tokens`/`lengths` are per-slot; the KV
+    /// state is consumed and the updated one returned (buffer
+    /// threading, vLLM-style step loop).
+    pub fn decode_step(
+        &self,
+        kv: KvState,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<(Vec<f32>, KvState)> {
+        let b = kv.batch;
+        anyhow::ensure!(tokens.len() == b && lengths.len() == b, "batch mismatch");
+        let exe = self.exec.load(&self.dir.decode_hlo(&self.tier, b))?;
+        let t = xla::Literal::vec1(tokens);
+        let l = xla::Literal::vec1(lengths);
+        let mut out = self.exec.run(&exe, &[t, l, kv.k, kv.v])?;
+        anyhow::ensure!(out.len() == 3, "decode returns (logits, k, v)");
+        let v_cache = out.pop().unwrap();
+        let k_cache = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((logits, KvState { k: k_cache, v: v_cache, batch: b }))
+    }
+
+    /// Greedy argmax over a (n, vocab)-flattened logits buffer.
+    pub fn argmax_rows(&self, logits: &[f32], rows: usize) -> Vec<i32> {
+        let v = self.meta.vocab;
+        (0..rows)
+            .map(|r| {
+                let row = &logits[r * v..(r + 1) * v];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-backed integration tests live in rust/tests/pjrt_smoke.rs
+    // (they need artifacts). Here: pure helpers.
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let meta = ModelMeta::parse(
+            r#"{"tier":"t","vocab":4,"hidden":8,"layers":1,"heads":1,
+                "kv_heads":1,"head_dim":8,"max_seq":8,
+                "prefill_shapes":[[1,8]],"decode_batches":[1],
+                "precision":"x"}"#,
+        )
+        .unwrap();
+        // Fake a LoadedModel-less call: argmax_rows only uses vocab.
+        let logits = vec![0.0, 1.0, 0.5, -1.0, /* row 2 */ 9.0, 1.0, 2.0, 3.0];
+        let lm = LoadedModelForTest { vocab: meta.vocab };
+        assert_eq!(lm.argmax(&logits, 2), vec![1, 0]);
+    }
+
+    struct LoadedModelForTest {
+        vocab: usize,
+    }
+
+    impl LoadedModelForTest {
+        fn argmax(&self, logits: &[f32], rows: usize) -> Vec<i32> {
+            let v = self.vocab;
+            (0..rows)
+                .map(|r| {
+                    let row = &logits[r * v..(r + 1) * v];
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as i32)
+                        .unwrap()
+                })
+                .collect()
+        }
+    }
+}

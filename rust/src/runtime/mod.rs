@@ -1,0 +1,9 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client (`xla` crate). Python never runs here — artifacts
+//! are produced once by `make artifacts`.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactDir, ModelMeta};
+pub use executor::{Executor, LoadedModel};

@@ -1,0 +1,174 @@
+//! The paper's TCO model (§2, Eq. 1; Figs. 1 & 9) generalized.
+//!
+//! Core identity (iso-traffic): with `N` servers of system B handling
+//! the traffic, system A needs `N / R_Th` servers, so
+//!
+//! ```text
+//! TCO_A / TCO_B = (C_S·R_SC·N/R_Th + C_I·R_IC·N/R_Th) / (C_S·N + C_I·N)
+//! ```
+//!
+//! The paper's Fig. 1 grid assumes `C_S = C_I` and `R_IC = 1`; this
+//! module keeps all four knobs free and layers a physical rack/infra
+//! model on top (power-limited rack packing — §2.1's observation that
+//! per-chip infra cost is inversely proportional to servers per rack).
+
+pub mod rack;
+
+pub use rack::{InfraModel, RackConfig};
+
+/// Relative-cost inputs of the paper's Eq. 1.
+#[derive(Debug, Clone, Copy)]
+pub struct TcoInputs {
+    /// R_SC: ServerCost_A / ServerCost_B.
+    pub server_cost_ratio: f64,
+    /// R_IC: InfraCost_A / InfraCost_B (paper Fig. 1 assumes 1.0).
+    pub infra_cost_ratio: f64,
+    /// R_Th: Throughput_A / Throughput_B on the *target task*.
+    pub throughput_ratio: f64,
+    /// C_S weight: share of baseline TCO attributable to the server
+    /// (paper Fig. 1 assumes C_S = C_I, i.e. 0.5).
+    pub server_cost_share: f64,
+}
+
+impl TcoInputs {
+    /// The paper's Fig. 1 setting: C_S = C_I, R_IC = 1.
+    pub fn fig1(r_sc: f64, r_th: f64) -> Self {
+        TcoInputs {
+            server_cost_ratio: r_sc,
+            infra_cost_ratio: 1.0,
+            throughput_ratio: r_th,
+            server_cost_share: 0.5,
+        }
+    }
+}
+
+/// Eq. 1: TCO_A / TCO_B. Values < 1 mean system A is cheaper for the
+/// same traffic.
+pub fn tco_ratio(inp: TcoInputs) -> f64 {
+    assert!(inp.throughput_ratio > 0.0, "R_Th must be positive");
+    assert!((0.0..=1.0).contains(&inp.server_cost_share));
+    let cs = inp.server_cost_share;
+    let ci = 1.0 - cs;
+    (cs * inp.server_cost_ratio + ci * inp.infra_cost_ratio) / inp.throughput_ratio
+}
+
+/// The exact grid of paper Fig. 1: rows R_Th in {1.0 .. 0.3}, columns
+/// R_SC in {1.0 .. 0.1}. Returns (r_th, r_sc, ratio) triples in the
+/// paper's row-major order.
+pub fn fig1_grid() -> Vec<(f64, f64, f64)> {
+    let r_ths = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3];
+    let r_scs = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.2, 0.1];
+    let mut out = Vec::new();
+    for &r_th in &r_ths {
+        for &r_sc in &r_scs {
+            out.push((r_th, r_sc, tco_ratio(TcoInputs::fig1(r_sc, r_th))));
+        }
+    }
+    out
+}
+
+/// Break-even R_SC: the server-cost ratio at which A and B tie, given
+/// R_Th (and the C_S share). Above this price ratio, A loses.
+pub fn breakeven_server_cost_ratio(r_th: f64, server_cost_share: f64, r_ic: f64) -> f64 {
+    // Solve (cs·x + ci·r_ic) / r_th = 1.
+    let cs = server_cost_share;
+    let ci = 1.0 - cs;
+    (r_th - ci * r_ic) / cs
+}
+
+/// A named deployment scenario for Fig. 9-style analysis: a measured
+/// throughput ratio annotated with the workload that produced it.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub r_th: f64,
+    pub r_sc: f64,
+}
+
+impl Scenario {
+    pub fn tco(&self) -> f64 {
+        tco_ratio(TcoInputs::fig1(self.r_sc, self.r_th))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Fig. 1, transcribed. Rows: R_Th 1.0→0.3; cols R_SC 1.0→0.1.
+    const FIG1_PAPER: [[f64; 10]; 8] = [
+        [1.00, 0.95, 0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60, 0.55],
+        [1.11, 1.06, 1.00, 0.94, 0.89, 0.83, 0.78, 0.72, 0.67, 0.61],
+        [1.25, 1.19, 1.13, 1.06, 1.00, 0.94, 0.88, 0.81, 0.75, 0.69],
+        [1.43, 1.36, 1.29, 1.21, 1.14, 1.07, 1.00, 0.93, 0.86, 0.79],
+        [1.67, 1.58, 1.50, 1.42, 1.33, 1.25, 1.17, 1.08, 1.00, 0.92],
+        [2.00, 1.90, 1.80, 1.70, 1.60, 1.50, 1.40, 1.30, 1.20, 1.10],
+        [2.50, 2.38, 2.25, 2.13, 2.00, 1.88, 1.75, 1.63, 1.50, 1.38],
+        [3.33, 3.17, 3.00, 2.83, 2.67, 2.50, 2.33, 2.17, 2.00, 1.83],
+    ];
+
+    #[test]
+    fn reproduces_fig1_exactly() {
+        let grid = fig1_grid();
+        for (idx, &(r_th, r_sc, ratio)) in grid.iter().enumerate() {
+            let row = idx / 10;
+            let col = idx % 10;
+            let paper = FIG1_PAPER[row][col];
+            assert!(
+                (ratio - paper).abs() < 0.005 + 1e-9,
+                "R_Th={r_th} R_SC={r_sc}: got {ratio:.4}, paper {paper}"
+            );
+        }
+    }
+
+    #[test]
+    fn equal_systems_tie() {
+        assert!((tco_ratio(TcoInputs::fig1(1.0, 1.0)) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_and_cheaper_always_wins() {
+        let r = tco_ratio(TcoInputs::fig1(0.5, 1.2));
+        assert!(r < 1.0);
+    }
+
+    #[test]
+    fn monotonicity() {
+        // TCO ratio decreases in R_Th and increases in R_SC.
+        let base = tco_ratio(TcoInputs::fig1(0.5, 0.8));
+        assert!(tco_ratio(TcoInputs::fig1(0.5, 0.9)) < base);
+        assert!(tco_ratio(TcoInputs::fig1(0.6, 0.8)) > base);
+    }
+
+    #[test]
+    fn infra_ratio_knob_matters() {
+        // If A needs 2x the infra per server, it must be much faster.
+        let mut inp = TcoInputs::fig1(1.0, 1.0);
+        inp.infra_cost_ratio = 2.0;
+        assert!(tco_ratio(inp) > 1.0);
+    }
+
+    #[test]
+    fn breakeven_matches_grid() {
+        // Row R_Th=0.7 crosses 1.00 at R_SC=0.4 in Fig. 1.
+        let be = breakeven_server_cost_ratio(0.7, 0.5, 1.0);
+        assert!((be - 0.4).abs() < 1e-9, "{be}");
+        // Sanity: at the breakeven the ratio is exactly 1.
+        let r = tco_ratio(TcoInputs::fig1(be, 0.7));
+        assert!((r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn server_share_zero_reduces_to_infra_only() {
+        // With all cost in infra and R_IC=1, ratio = 1/R_Th.
+        let mut inp = TcoInputs::fig1(0.123, 0.8);
+        inp.server_cost_share = 0.0;
+        assert!((tco_ratio(inp) - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "R_Th must be positive")]
+    fn zero_throughput_rejected() {
+        tco_ratio(TcoInputs::fig1(1.0, 0.0));
+    }
+}

@@ -1,0 +1,46 @@
+//! Self-contained utility substrate.
+//!
+//! The offline vendored crate set has no `serde`/`serde_json`, no
+//! `rand`, and no `criterion`, so this module provides the small,
+//! fully-tested replacements the rest of the crate builds on:
+//! a JSON parser/writer, a seeded PRNG, streaming statistics, and an
+//! ASCII table printer used by every table/figure regeneration bench.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a quantity with an SI suffix (`1.23 k`, `4.56 G`, ...).
+pub fn si(value: f64) -> String {
+    let (v, suffix) = si_parts(value);
+    format!("{v:.2} {suffix}")
+}
+
+fn si_parts(value: f64) -> (f64, &'static str) {
+    let a = value.abs();
+    if a >= 1e12 {
+        (value / 1e12, "T")
+    } else if a >= 1e9 {
+        (value / 1e9, "G")
+    } else if a >= 1e6 {
+        (value / 1e6, "M")
+    } else if a >= 1e3 {
+        (value / 1e3, "k")
+    } else {
+        (value, "")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_formats() {
+        assert_eq!(si(1989.9e12), "1989.90 T");
+        assert_eq!(si(2_400.0), "2.40 k");
+        assert_eq!(si(0.5), "0.50 ");
+        assert_eq!(si(-3.0e9), "-3.00 G");
+    }
+}

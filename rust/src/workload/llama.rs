@@ -1,0 +1,247 @@
+//! Llama FLOPs/bytes model — paper §5.2, Eqs. 3–6, verbatim.
+//!
+//! `f_llama(s) = 2 s h² l (3a + 2 + 2/g) + 2 s² h l + 2 v s h`   (Eq. 3)
+//!
+//! with the model-specific constant `A = 3a + 2 + 2/g` (Eq. 4), the
+//! decode-step approximation (Eq. 5) and the batched decode form
+//! (Eq. 6). Each term is tagged with the precision it runs at
+//! (§5.2: linears FP8; LM head + attention BF16).
+
+/// Inference phase (paper Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// A Llama-family architecture.
+#[derive(Debug, Clone)]
+pub struct LlamaConfig {
+    pub name: &'static str,
+    /// Hidden size h.
+    pub hidden: usize,
+    /// Transformer blocks l.
+    pub layers: usize,
+    /// Query heads H.
+    pub heads: usize,
+    /// KV heads (GQA): g = heads / kv_heads.
+    pub kv_heads: usize,
+    /// Intermediate size (a·h).
+    pub intermediate: usize,
+    /// Vocabulary v.
+    pub vocab: usize,
+    /// Embedding/LM-head weight tying (Llama 3.2 1B/3B tie them).
+    pub tied_embeddings: bool,
+}
+
+/// Real Llama v3.x configurations (the paper's case studies, §4-5).
+pub static MODEL_ZOO: &[LlamaConfig] = &[
+    LlamaConfig { name: "llama-1b", hidden: 2048, layers: 16, heads: 32,
+                  kv_heads: 8, intermediate: 8192, vocab: 128256,
+                  tied_embeddings: true },
+    LlamaConfig { name: "llama-3b", hidden: 3072, layers: 28, heads: 24,
+                  kv_heads: 8, intermediate: 8192, vocab: 128256,
+                  tied_embeddings: true },
+    LlamaConfig { name: "llama-8b", hidden: 4096, layers: 32, heads: 32,
+                  kv_heads: 8, intermediate: 14336, vocab: 128256,
+                  tied_embeddings: false },
+    LlamaConfig { name: "llama-70b", hidden: 8192, layers: 80, heads: 64,
+                  kv_heads: 8, intermediate: 28672, vocab: 128256,
+                  tied_embeddings: false },
+];
+
+pub fn by_name(name: &str) -> Option<&'static LlamaConfig> {
+    MODEL_ZOO.iter().find(|m| m.name == name)
+}
+
+impl LlamaConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// GQA group size g.
+    pub fn gqa_groups(&self) -> f64 {
+        self.heads as f64 / self.kv_heads as f64
+    }
+
+    /// MLP expansion a = intermediate / hidden.
+    pub fn mlp_ratio(&self) -> f64 {
+        self.intermediate as f64 / self.hidden as f64
+    }
+
+    /// The model-specific constant A = 3a + 2 + 2/g (Eq. 4).
+    pub fn a_const(&self) -> f64 {
+        3.0 * self.mlp_ratio() + 2.0 + 2.0 / self.gqa_groups()
+    }
+
+    /// Parameter count (weights only, tied accounting like the paper).
+    pub fn param_count(&self) -> f64 {
+        let h = self.hidden as f64;
+        let kv = (self.kv_heads * self.head_dim()) as f64;
+        let per_layer = h * h            // wq
+            + 2.0 * h * kv               // wk, wv
+            + h * h                      // wo
+            + 3.0 * h * self.intermediate as f64; // gate/up/down
+        let embed = if self.tied_embeddings { 1.0 } else { 2.0 };
+        self.layers as f64 * per_layer + embed * self.vocab as f64 * h
+    }
+
+    /// Eq. 3: FLOPs of one full forward pass over sequence length s
+    /// (batch 1).
+    pub fn prefill_flops(&self, s: usize) -> f64 {
+        let (h, l, v) = (self.hidden as f64, self.layers as f64, self.vocab as f64);
+        let s = s as f64;
+        2.0 * s * h * h * l * self.a_const() + 2.0 * s * s * h * l + 2.0 * v * s * h
+    }
+
+    /// Eq. 6: FLOPs of one batched decode step with per-sequence
+    /// context lengths.
+    pub fn decode_step_flops(&self, context_lens: &[usize]) -> f64 {
+        let (h, l, v) = (self.hidden as f64, self.layers as f64, self.vocab as f64);
+        let b = context_lens.len() as f64;
+        let sum_s: f64 = context_lens.iter().map(|&s| s as f64).sum();
+        2.0 * b * (self.a_const() * h * h * l + v * h) + 4.0 * h * l * sum_s
+    }
+
+    /// Eq. 6 split by precision (§5.2): (fp8_linear, bf16_head, bf16_attn).
+    pub fn decode_step_flops_split(&self, context_lens: &[usize]) -> (f64, f64, f64) {
+        let (h, l, v) = (self.hidden as f64, self.layers as f64, self.vocab as f64);
+        let b = context_lens.len() as f64;
+        let sum_s: f64 = context_lens.iter().map(|&s| s as f64).sum();
+        let linear_fp8 = 2.0 * b * self.a_const() * h * h * l;
+        let head_bf16 = 2.0 * b * v * h;
+        let attn_bf16 = 4.0 * h * l * sum_s;
+        (linear_fp8, head_bf16, attn_bf16)
+    }
+
+    /// KV-cache bytes for one token (both K and V, all layers).
+    pub fn kv_bytes_per_token(&self, dtype_bytes: f64) -> f64 {
+        2.0 * (self.layers * self.kv_heads * self.head_dim()) as f64 * dtype_bytes
+    }
+
+    /// Weight bytes at the given per-element size.
+    pub fn weight_bytes(&self, dtype_bytes: f64) -> f64 {
+        self.param_count() * dtype_bytes
+    }
+
+    /// Computational intensity (FLOP/byte) of one decode step at batch
+    /// b, average context s — the §5.2 analysis. Weights stream once
+    /// for the whole batch; each sequence reads its own KV cache.
+    pub fn decode_ci(&self, b: usize, s: usize, w_bytes: f64, kv_bytes: f64) -> f64 {
+        let lens = vec![s; b];
+        let flops = self.decode_step_flops(&lens);
+        let bytes = self.weight_bytes(w_bytes)
+            + b as f64 * s as f64 * self.kv_bytes_per_token(kv_bytes);
+        flops / bytes
+    }
+
+    /// Eq. 5: incremental FLOPs of generating t tokens at context s.
+    pub fn incremental_flops(&self, s: usize, t: usize) -> f64 {
+        let (h, l, v) = (self.hidden as f64, self.layers as f64, self.vocab as f64);
+        let (s, t) = (s as f64, t as f64);
+        2.0 * t * (self.a_const() * h * h * l + v * h) + 4.0 * s * t * h * l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama8b() -> &'static LlamaConfig {
+        by_name("llama-8b").unwrap()
+    }
+
+    #[test]
+    fn zoo_param_counts_sane() {
+        // ~1.2B / 3.2B / 8B / 70B within tolerance.
+        let counts: Vec<f64> = MODEL_ZOO.iter().map(|m| m.param_count()).collect();
+        assert!((counts[0] / 1.2e9 - 1.0).abs() < 0.2, "{}", counts[0]);
+        assert!((counts[1] / 3.2e9 - 1.0).abs() < 0.2, "{}", counts[1]);
+        assert!((counts[2] / 8.0e9 - 1.0).abs() < 0.15, "{}", counts[2]);
+        assert!((counts[3] / 70.0e9 - 1.0).abs() < 0.15, "{}", counts[3]);
+    }
+
+    #[test]
+    fn a_const_llama8b() {
+        // a = 14336/4096 = 3.5, g = 4 -> A = 10.5 + 2 + 0.5 = 13.
+        assert!((llama8b().a_const() - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq3_matches_eq4_simplification() {
+        let m = llama8b();
+        let (h, l, v) = (m.hidden as f64, m.layers as f64, m.vocab as f64);
+        for s in [1usize, 128, 4096] {
+            let sf = s as f64;
+            let simplified = 2.0 * sf * (m.a_const() * h * h * l + v * h)
+                + 2.0 * sf * sf * h * l;
+            assert!((m.prefill_flops(s) / simplified - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eq5_is_finite_difference_of_eq3() {
+        // f(s+t) - f(s) ≈ Eq. 5 for t << s.
+        let m = llama8b();
+        let (s, t) = (4096usize, 1usize);
+        let exact = m.prefill_flops(s + t) - m.prefill_flops(s);
+        let approx = m.incremental_flops(s, t);
+        // Eq. 5 drops the 2t²hl + 2sthl-vs-4sthl curvature terms; at
+        // t=1, s=4096 the relative error is tiny.
+        assert!((exact / approx - 1.0).abs() < 1e-3,
+                "exact {exact} approx {approx}");
+    }
+
+    #[test]
+    fn eq6_equals_sum_of_eq5_at_t1() {
+        let m = llama8b();
+        let lens = [100usize, 2000, 4096];
+        let batched = m.decode_step_flops(&lens);
+        let individual: f64 = lens.iter().map(|&s| m.incremental_flops(s, 1)).sum();
+        assert!((batched / individual - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_sums_to_total() {
+        let m = llama8b();
+        let lens = vec![1024usize; 64];
+        let (a, b, c) = m.decode_step_flops_split(&lens);
+        let total = m.decode_step_flops(&lens);
+        assert!(((a + b + c) / total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_cache_ci_bounded_by_gqa_groups() {
+        // §5.2: "with GQA using g groups, the CI is bounded by g".
+        let m = llama8b();
+        // Attention flops per step per seq: 4*h*l*s; KV bytes read:
+        // s * kv_bytes_per_token(2.0).
+        let s = 4096.0;
+        let attn_flops = 4.0 * m.hidden as f64 * m.layers as f64 * s;
+        let kv_bytes = s * m.kv_bytes_per_token(2.0);
+        let ci = attn_flops / kv_bytes;
+        assert!((ci - m.gqa_groups()).abs() < 1e-9, "ci {ci}");
+    }
+
+    #[test]
+    fn gaudi_kv_roofline_is_19_tflops() {
+        // §5.2: "g=8"-style bound — for Llama v3 (g=4 in our zoo's
+        // 8B... the paper quotes g=8 meaning kv group of 8 queries);
+        // the quoted number: 2.4 TB/s x 8 = 19.2 TFLOPS.
+        let bw: f64 = 2.4e12;
+        let max_tflops = bw * 8.0 / 1e12;
+        assert!((max_tflops - 19.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_ci_grows_with_batch_saturating() {
+        let m = llama8b();
+        let ci1 = m.decode_ci(1, 1024, 1.0, 2.0);
+        let ci64 = m.decode_ci(64, 1024, 1.0, 2.0);
+        assert!(ci64 > ci1 * 10.0, "{ci1} {ci64}");
+        // but far below the 360 needed to saturate Gaudi 2 FP8 at
+        // longer contexts (the §5.2 point) — KV reads cap it.
+        let ci_long = m.decode_ci(64, 8192, 1.0, 2.0);
+        assert!(ci_long < 360.0, "{ci_long}");
+    }
+}

@@ -1,0 +1,13 @@
+//! LLM inference workload models.
+//!
+//! * [`llama`] — the paper's FLOPs accounting (Eqs. 3–6), byte-traffic
+//!   model, and a zoo of real Llama v3.x configurations.
+//! * [`trace`] — synthetic request-trace generation (Poisson arrivals,
+//!   prompt/output length mixes including "reasoning"-style long
+//!   decodes) for the serving engine and TCO experiments.
+
+pub mod llama;
+pub mod trace;
+
+pub use llama::{LlamaConfig, Phase, MODEL_ZOO};
+pub use trace::{Request, TraceConfig, TraceGenerator};

@@ -1,0 +1,170 @@
+//! Synthetic request-trace generation (substitute for production
+//! traffic, DESIGN.md substitution table).
+//!
+//! Poisson arrivals; prompt and output lengths drawn from log-normal
+//! mixes. The `reasoning` mix models the paper's §1/§5.4 motivation:
+//! test-time-scaling models generating thousands of output tokens.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (s).
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Mean arrival rate (requests/s).
+    pub rate: f64,
+    /// Log-normal (mu, sigma) of prompt lengths.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    /// Log-normal (mu, sigma) of output lengths.
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    /// Hard clamps.
+    pub max_prompt: usize,
+    pub max_output: usize,
+}
+
+impl TraceConfig {
+    /// Chat-style traffic: short prompts, modest outputs.
+    pub fn chat(rate: f64) -> Self {
+        TraceConfig {
+            rate,
+            prompt_mu: 5.5,    // median ~245 tokens
+            prompt_sigma: 0.8,
+            output_mu: 5.0,    // median ~148 tokens
+            output_sigma: 0.7,
+            max_prompt: 4096,
+            max_output: 2048,
+        }
+    }
+
+    /// Reasoning-style traffic (§1): long autoregressive outputs.
+    pub fn reasoning(rate: f64) -> Self {
+        TraceConfig {
+            rate,
+            prompt_mu: 5.5,
+            prompt_sigma: 0.8,
+            output_mu: 7.6,    // median ~2000 tokens
+            output_sigma: 0.6,
+            max_prompt: 4096,
+            max_output: 16384,
+        }
+    }
+
+    /// Summarization-style: long prompts, short outputs (prefill-heavy).
+    pub fn summarize(rate: f64) -> Self {
+        TraceConfig {
+            rate,
+            prompt_mu: 7.8,    // median ~2440
+            prompt_sigma: 0.5,
+            output_mu: 4.2,
+            output_sigma: 0.5,
+            max_prompt: 16384,
+            max_output: 1024,
+        }
+    }
+}
+
+pub struct TraceGenerator {
+    cfg: TraceConfig,
+    rng: Rng,
+    clock: f64,
+    next_id: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: TraceConfig, seed: u64) -> Self {
+        TraceGenerator { cfg, rng: Rng::new(seed), clock: 0.0, next_id: 0 }
+    }
+
+    pub fn next_request(&mut self) -> Request {
+        self.clock += self.rng.exp(self.cfg.rate);
+        let prompt_len = (self.rng.lognormal(self.cfg.prompt_mu, self.cfg.prompt_sigma)
+            as usize)
+            .clamp(1, self.cfg.max_prompt);
+        let output_len = (self.rng.lognormal(self.cfg.output_mu, self.cfg.output_sigma)
+            as usize)
+            .clamp(1, self.cfg.max_output);
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, arrival: self.clock, prompt_len, output_len }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_poisson_rate() {
+        let mut g = TraceGenerator::new(TraceConfig::chat(10.0), 1);
+        let reqs = g.take(5000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn ids_unique_and_dense() {
+        let mut g = TraceGenerator::new(TraceConfig::chat(1.0), 2);
+        let reqs = g.take(100);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn lengths_respect_clamps() {
+        let mut g = TraceGenerator::new(TraceConfig::reasoning(1.0), 3);
+        for r in g.take(2000) {
+            assert!(r.prompt_len >= 1 && r.prompt_len <= 4096);
+            assert!(r.output_len >= 1 && r.output_len <= 16384);
+        }
+    }
+
+    #[test]
+    fn reasoning_mix_decodes_longer_than_chat() {
+        let mean = |cfg: TraceConfig| {
+            let mut g = TraceGenerator::new(cfg, 4);
+            g.take(3000).iter().map(|r| r.output_len as f64).sum::<f64>() / 3000.0
+        };
+        let chat = mean(TraceConfig::chat(1.0));
+        let reasoning = mean(TraceConfig::reasoning(1.0));
+        assert!(reasoning > chat * 5.0, "chat {chat} reasoning {reasoning}");
+    }
+
+    #[test]
+    fn summarize_is_prefill_heavy() {
+        let mut g = TraceGenerator::new(TraceConfig::summarize(1.0), 5);
+        let reqs = g.take(2000);
+        let p: f64 = reqs.iter().map(|r| r.prompt_len as f64).sum();
+        let o: f64 = reqs.iter().map(|r| r.output_len as f64).sum();
+        assert!(p > o * 5.0, "prompt {p} output {o}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = TraceGenerator::new(TraceConfig::chat(5.0), 42);
+        let mut b = TraceGenerator::new(TraceConfig::chat(5.0), 42);
+        for _ in 0..100 {
+            let (ra, rb) = (a.next_request(), b.next_request());
+            assert_eq!(ra.prompt_len, rb.prompt_len);
+            assert_eq!(ra.output_len, rb.output_len);
+            assert_eq!(ra.arrival, rb.arrival);
+        }
+    }
+}

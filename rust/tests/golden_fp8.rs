@@ -1,0 +1,128 @@
+//! Cross-language golden tests: the rust `fp8` module and the L1
+//! Pallas emulation must agree bit-exactly, and the standalone FP8
+//! GEMM artifact must reproduce python's output through PJRT.
+//!
+//! Requires `make artifacts`; tests skip (with a loud note) otherwise.
+
+use fp8_tco::fp8::{quantize_rtn, Format};
+use fp8_tco::runtime::{ArtifactDir, Executor};
+
+fn artifacts() -> Option<ArtifactDir> {
+    let dir = ArtifactDir::discover();
+    if dir.exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn rust_quantizer_matches_python_bit_exactly() {
+    let Some(dir) = artifacts() else { return };
+    let golden = dir.golden("fp8_quantize.json").expect("golden vectors");
+    let xs = golden.get("x").unwrap().as_f32_vec().unwrap();
+    assert!(xs.len() > 500);
+    for fmt in Format::ALL {
+        let want = golden.get(fmt.name()).unwrap().as_f32_vec().unwrap();
+        assert_eq!(xs.len(), want.len());
+        let mut mismatches = 0;
+        for (i, (&x, &w)) in xs.iter().zip(&want).enumerate() {
+            let got = quantize_rtn(x, fmt);
+            if got != w {
+                mismatches += 1;
+                if mismatches < 5 {
+                    eprintln!("{}: x={x} rust={got} python={w} (idx {i})", fmt.name());
+                }
+            }
+        }
+        assert_eq!(mismatches, 0, "{}: {mismatches} mismatches", fmt.name());
+    }
+}
+
+#[test]
+fn gemm_artifact_reproduces_python_output_via_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let golden = dir.golden("fp8_gemm_io.json").expect("gemm golden");
+    let m = golden.get("m").unwrap().as_usize().unwrap();
+    let k = golden.get("k").unwrap().as_usize().unwrap();
+    let n = golden.get("n").unwrap().as_usize().unwrap();
+    let x = golden.get("x").unwrap().as_f32_vec().unwrap();
+    let w = golden.get("w").unwrap().as_f32_vec().unwrap();
+    let want = golden.get("y").unwrap().as_f32_vec().unwrap();
+
+    let exec = Executor::cpu().expect("pjrt cpu client");
+    let exe = exec
+        .load(&dir.root.join("gemm").join(format!("fp8_gemm_{m}x{k}x{n}.hlo.txt")))
+        .expect("compile gemm artifact");
+    let xl = xla::Literal::vec1(&x).reshape(&[m as i64, k as i64]).unwrap();
+    let wl = xla::Literal::vec1(&w).reshape(&[k as i64, n as i64]).unwrap();
+    let out = exec.run(&exe, &[xl, wl]).expect("execute");
+    assert_eq!(out.len(), 1);
+    let got = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(got.len(), want.len());
+    let mut max_rel = 0.0f32;
+    for (&g, &w_) in got.iter().zip(&want) {
+        let rel = (g - w_).abs() / w_.abs().max(1e-3);
+        max_rel = max_rel.max(rel);
+    }
+    // Same HLO, same inputs: should be numerically identical up to
+    // run-to-run nondeterminism in reductions (none on CPU).
+    assert!(max_rel < 1e-5, "max rel err {max_rel}");
+}
+
+#[test]
+fn rust_fp8_gemm_semantics_match_golden_inputs() {
+    // Software check (no PJRT): quantize golden x/w with the rust fp8
+    // module using the same per-row/per-column dynamic scheme, GEMM in
+    // f64, and compare against python's kernel output with kernel-level
+    // tolerance. Validates the shared FP8 semantics end to end.
+    let Some(dir) = artifacts() else { return };
+    let golden = dir.golden("fp8_gemm_io.json").expect("gemm golden");
+    let m = golden.get("m").unwrap().as_usize().unwrap();
+    let k = golden.get("k").unwrap().as_usize().unwrap();
+    let n = golden.get("n").unwrap().as_usize().unwrap();
+    let x = golden.get("x").unwrap().as_f32_vec().unwrap();
+    let w = golden.get("w").unwrap().as_f32_vec().unwrap();
+    let want = golden.get("y").unwrap().as_f32_vec().unwrap();
+    let fmt = Format::E4M3FN;
+
+    // column scales of w
+    let mut sw = vec![0.0f32; n];
+    for j in 0..n {
+        let mut amax = 0.0f32;
+        for i in 0..k {
+            amax = amax.max(w[i * n + j].abs());
+        }
+        sw[j] = amax.max(1e-12) / fmt.max_finite();
+    }
+    // row scales of x
+    let mut sx = vec![0.0f32; m];
+    for i in 0..m {
+        let mut amax = 0.0f32;
+        for j in 0..k {
+            amax = amax.max(x[i * k + j].abs());
+        }
+        sx[i] = amax.max(1e-12) / fmt.max_finite();
+    }
+    let xq: Vec<f32> = (0..m * k)
+        .map(|idx| quantize_rtn(x[idx] / sx[idx / k], fmt))
+        .collect();
+    let wq: Vec<f32> = (0..k * n)
+        .map(|idx| quantize_rtn(w[idx] / sw[idx % n], fmt))
+        .collect();
+    let mut max_rel = 0.0f64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += xq[i * k + kk] as f64 * wq[kk * n + j] as f64;
+            }
+            let y = acc * sx[i] as f64 * sw[j] as f64;
+            let w_ = want[i * n + j] as f64;
+            let rel = (y - w_).abs() / w_.abs().max(1e-3);
+            max_rel = max_rel.max(rel);
+        }
+    }
+    assert!(max_rel < 1e-4, "max rel err {max_rel}");
+}

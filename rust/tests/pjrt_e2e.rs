@@ -1,0 +1,99 @@
+//! End-to-end integration: the serving engine over the real PJRT
+//! backend (AOT artifacts → PJRT CPU → continuous batching).
+//!
+//! Requires `make artifacts`; skips otherwise.
+//!
+//! Supported PJRT pattern (see runtime::executor::pjrt_guard and
+//! coordinator::pjrt_backend::global_executor): **one backend per
+//! process, all PJRT work on one thread**. xla_extension 0.5.1
+//! corrupts buffers when a process uses several CPU clients or several
+//! model instances, so this suite is a single #[test] that threads one
+//! backend through every scenario.
+
+use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, PjrtBackend};
+use fp8_tco::runtime::ArtifactDir;
+use fp8_tco::workload::trace::Request;
+
+fn req(id: u64, p: usize, o: usize) -> Request {
+    Request { id, arrival: 0.0, prompt_len: p, output_len: o }
+}
+
+fn engine_for(backend: PjrtBackend) -> Engine<PjrtBackend> {
+    let kv = KvCacheConfig { block_tokens: 16, total_blocks: 4096 };
+    let mut cfg = EngineConfig::new(kv);
+    // Bucket cap 2: xla_extension 0.5.1 (the AOT consumer) executes the
+    // b>=4 executables unreliably (sporadic NaN buffers; the identical
+    // HLO runs clean under jax's own CPU runtime — upstream miscompile,
+    // see EXPERIMENTS.md caveats). b<=2 is stable across repeated runs.
+    cfg.batcher.max_batch = 2;
+    Engine::new(cfg, backend)
+}
+
+#[test]
+fn pjrt_e2e_suite() {
+    let dir = ArtifactDir::discover();
+    if !dir.exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let backend = PjrtBackend::load(&dir, "1b").expect("load pjrt backend");
+    let backend = serves_batched_requests(backend);
+    let backend = deterministic_rerun(backend);
+    single_long_decode(backend);
+}
+
+fn serves_batched_requests(backend: PjrtBackend) -> PjrtBackend {
+    let max_seq = backend.meta().max_seq;
+    let mut engine = engine_for(backend);
+    let n_req = 6;
+    for i in 0..n_req {
+        // prompts <= prefill bucket seq; total context < max_seq.
+        engine.submit(&req(i, 8 + (i as usize % 3) * 7, 12));
+    }
+    assert!(engine.run_to_completion(10_000), "engine drained");
+    assert_eq!(engine.metrics.requests_done, n_req);
+    assert_eq!(engine.metrics.tokens_out, n_req * 12);
+
+    let vocab = engine.backend.meta().vocab as i32;
+    for i in 0..n_req {
+        let toks = &engine.backend.emitted[&i];
+        assert_eq!(toks.len(), 12, "seq {i}");
+        assert!(toks.iter().all(|&t| (0..vocab).contains(&t)));
+        assert!(engine.sequence(i).unwrap().context_len() <= max_seq);
+    }
+    println!("e2e: {}", engine.metrics.report());
+    engine.backend
+}
+
+fn deterministic_rerun(mut backend: PjrtBackend) -> PjrtBackend {
+    // Same ids + lengths rerun from scratch => identical tokens
+    // (greedy decoding, deterministic artifacts).
+    backend.reset_emitted();
+    let mut e1 = engine_for(backend);
+    e1.submit(&req(100, 10, 8));
+    e1.submit(&req(101, 16, 8));
+    assert!(e1.run_to_completion(10_000));
+    let first = e1.backend.emitted.clone();
+
+    let mut backend = e1.backend;
+    backend.reset_emitted();
+    let mut e2 = engine_for(backend);
+    e2.submit(&req(100, 10, 8));
+    e2.submit(&req(101, 16, 8));
+    assert!(e2.run_to_completion(10_000));
+    assert_eq!(first, e2.backend.emitted);
+    println!("determinism: ok ({:?})", first[&100]);
+    e2.backend
+}
+
+fn single_long_decode(mut backend: PjrtBackend) {
+    backend.reset_emitted();
+    let max_seq = backend.meta().max_seq;
+    let out = max_seq - 40;
+    let mut engine = engine_for(backend);
+    engine.submit(&req(200, 24, out));
+    assert!(engine.run_to_completion(100_000));
+    assert_eq!(engine.backend.emitted[&200].len(), out);
+    assert!(engine.sequence(200).unwrap().context_len() <= max_seq);
+    println!("long decode: {}", engine.metrics.report());
+}
