@@ -60,17 +60,39 @@ impl Batcher {
         self.queue.push_back(id);
     }
 
+    /// Requeue a preempted sequence at the *front* (vLLM recompute
+    /// semantics): it was admitted before anything still waiting, so
+    /// its re-prefill must not be gated behind later — possibly
+    /// not-yet-arrived — requests.
+    pub fn requeue_front(&mut self, id: SeqId) {
+        self.queue.push_front(id);
+    }
+
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
 
-    /// Plan one step. `lookup` resolves ids to sequences; the batcher
-    /// allocates KV blocks for admitted prefills and grows blocks for
-    /// decodes (evicting nothing — callers preempt on `grow` failure).
+    /// Arrival time of the first queued sequence — under FIFO it is
+    /// the only admission candidate, so this is the engine's
+    /// idle-advance target when nothing is runnable at `now`.
+    pub fn head_arrival(
+        &self,
+        seqs: &std::collections::HashMap<SeqId, Sequence>,
+    ) -> Option<f64> {
+        self.queue.iter().find_map(|id| seqs.get(id)).map(|s| s.arrival)
+    }
+
+    /// Plan one step at virtual time `now`. `seqs` resolves ids to
+    /// sequences; the batcher allocates KV blocks for admitted
+    /// prefills and grows blocks for decodes (evicting nothing —
+    /// callers preempt on `grow` failure). A queued request is
+    /// admissible only once the clock has reached its arrival: the
+    /// open-loop trace is honored rather than collapsed to batch-at-t0.
     pub fn plan_step(
         &mut self,
         seqs: &mut std::collections::HashMap<SeqId, Sequence>,
         alloc: &mut BlockAllocator,
+        now: f64,
     ) -> Admission {
         let mut adm = Admission::default();
 
@@ -93,6 +115,9 @@ impl Batcher {
                 self.queue.pop_front();
                 continue;
             };
+            if seq.arrival > now {
+                break; // head-of-line has not arrived yet (FIFO holds)
+            }
             if seq.prompt_len > token_budget {
                 // Oversized prompt (bigger than the whole per-step
                 // budget): admit it alone so it cannot starve.
@@ -157,7 +182,7 @@ mod tests {
         add_seq(&mut seqs, &mut b, 0, 100, 5);
         add_seq(&mut seqs, &mut b, 1, 100, 5);
         add_seq(&mut seqs, &mut b, 2, 100, 5); // exceeds 250 budget
-        let adm = b.plan_step(&mut seqs, &mut alloc);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm.prefills, vec![0, 1]);
         assert_eq!(b.queue_len(), 1);
     }
@@ -176,7 +201,7 @@ mod tests {
         }
         add_seq(&mut seqs, &mut b, 0, 16, 4);
         add_seq(&mut seqs, &mut b, 1, 16, 4);
-        let adm = b.plan_step(&mut seqs, &mut alloc);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm.decodes, vec![10, 11]);
         assert_eq!(adm.prefills.len(), 1, "only one slot left");
     }
@@ -186,7 +211,7 @@ mod tests {
         let (mut seqs, mut alloc) = setup(2); // 32 tokens of KV
         let mut b = Batcher::new(BatcherConfig::default());
         add_seq(&mut seqs, &mut b, 0, 40, 4); // needs 3 blocks
-        let adm = b.plan_step(&mut seqs, &mut alloc);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert!(adm.prefills.is_empty());
         assert_eq!(b.queue_len(), 1, "stays queued");
     }
@@ -200,12 +225,12 @@ mod tests {
         });
         // prompt 32 fits, but prompt+output = 80 does not.
         add_seq(&mut seqs, &mut b, 0, 32, 48);
-        let adm = b.plan_step(&mut seqs, &mut alloc);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert!(adm.prefills.is_empty());
         // Non-reserving batcher admits it.
         let mut b2 = Batcher::new(BatcherConfig::default());
         b2.enqueue(0);
-        let adm2 = b2.plan_step(&mut seqs, &mut alloc);
+        let adm2 = b2.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm2.prefills, vec![0]);
     }
 
@@ -214,7 +239,7 @@ mod tests {
         let (mut seqs, mut alloc) = setup(100);
         let mut b = Batcher::new(BatcherConfig::default());
         add_seq(&mut seqs, &mut b, 0, 100, 4);
-        let _ = b.plan_step(&mut seqs, &mut alloc);
+        let _ = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(seqs[&0].blocks.len(), 7); // ceil(100/16)
         assert_eq!(alloc.allocated_blocks(), 7);
     }
@@ -230,11 +255,32 @@ mod tests {
         });
         add_seq(&mut seqs, &mut b, 0, 100, 4);
         add_seq(&mut seqs, &mut b, 1, 10, 4);
-        let adm = b.plan_step(&mut seqs, &mut alloc);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm.prefills, vec![0], "oversized head admitted alone");
         // Next step picks up the small one.
-        let adm2 = b.plan_step(&mut seqs, &mut alloc);
+        let adm2 = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm2.prefills, vec![1]);
+    }
+
+    #[test]
+    fn future_arrivals_gated_until_their_time() {
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig::default());
+        let s = Sequence::from_request(&Request {
+            id: 0, arrival: 5.0, prompt_len: 32, output_len: 4,
+        });
+        seqs.insert(0, s);
+        b.enqueue(0);
+        // Before the arrival: nothing admissible, head exposed for
+        // idle-advance.
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
+        assert!(adm.prefills.is_empty());
+        assert_eq!(b.head_arrival(&seqs), Some(5.0));
+        assert_eq!(alloc.allocated_blocks(), 0, "gating must not allocate");
+        // At (or past) the arrival: admitted.
+        let adm2 = b.plan_step(&mut seqs, &mut alloc, 5.0);
+        assert_eq!(adm2.prefills, vec![0]);
+        assert_eq!(b.head_arrival(&seqs), None);
     }
 
     #[test]
@@ -249,7 +295,7 @@ mod tests {
         add_seq(&mut seqs, &mut b, 0, 60, 4);
         add_seq(&mut seqs, &mut b, 1, 60, 4); // budget left: 40
         add_seq(&mut seqs, &mut b, 2, 10, 4);
-        let adm = b.plan_step(&mut seqs, &mut alloc);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm.prefills, vec![0], "no bypass of seq 1");
     }
 }

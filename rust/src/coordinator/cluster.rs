@@ -1,0 +1,419 @@
+//! Cluster simulator: a virtual-time event loop over the router's
+//! engine pool, plus the open-loop SLO load sweep built on it.
+//!
+//! `Router::run_to_completion` drains each engine independently — fine
+//! for closed batches, wrong for open-loop traffic, where arrivals and
+//! step completions interleave on one timeline. [`Cluster::run`]
+//! merges a streaming arrival source (any `Iterator<Item = Request>`,
+//! e.g. [`TraceGenerator`](crate::workload::trace::TraceGenerator))
+//! with per-engine step completions:
+//!
+//! 1. while the next arrival lies in the future, every engine steps
+//!    forward ([`Engine::step_until`]) — a step that begins before the
+//!    arrival may finish past it, exactly as on real hardware;
+//! 2. at the arrival instant the request is routed
+//!    ([`Router::submit_at`]); an idle target engine's clock is lifted
+//!    to the arrival, a busy one simply queues it;
+//! 3. once the source is exhausted, engines drain.
+//!
+//! Engines interact only through routing decisions, which happen at
+//! arrival instants — so between two arrivals each engine can advance
+//! independently without violating the shared timeline. This is what
+//! makes TTFT honest under Poisson traffic: every request is admitted
+//! at its true arrival, and its TTFT is measured from that arrival.
+//!
+//! On top of the loop, [`max_sustainable_qps`] binary-searches the
+//! highest arrival rate whose steady-state (windowed) TTFT/TPOT p95
+//! still meets an [`SloSpec`] — the goodput that
+//! [`InfraModel::cost_per_mtok`](crate::tco::InfraModel::cost_per_mtok)
+//! turns into $/Mtok-at-SLO.
+
+use super::backend::{ExecutionBackend, SimBackend};
+use super::engine::{Engine, EngineConfig};
+use super::kv_cache::KvCacheConfig;
+use super::metrics::Metrics;
+use super::router::{EngineRating, RoutePolicy, Router};
+use crate::analysis::perfmodel::{PrecisionMode, StepConfig};
+use crate::hwsim::spec::Device;
+use crate::workload::llama;
+use crate::workload::trace::{Request, TraceConfig, TraceGenerator};
+
+pub struct Cluster<B: ExecutionBackend> {
+    pub router: Router<B>,
+    /// Safety cap on total executed steps across the run (guards
+    /// against infeasible workloads spinning the virtual clock).
+    pub step_cap: usize,
+}
+
+impl<B: ExecutionBackend> Cluster<B> {
+    pub fn new(router: Router<B>) -> Self {
+        Cluster { router, step_cap: 50_000_000 }
+    }
+
+    /// Run the event loop over an arrival stream. Returns true when
+    /// every submitted request finished (drained) within the step cap.
+    pub fn run(&mut self, arrivals: impl IntoIterator<Item = Request>) -> bool {
+        let mut left = self.step_cap;
+        for r in arrivals {
+            // Advance every engine to the arrival instant on the
+            // shared timeline (busy engines may overshoot by the step
+            // in flight; idle ones stop short and are lifted below).
+            for e in self.router.engines.iter_mut() {
+                let taken = e.step_until(r.arrival, left);
+                left = left.saturating_sub(taken);
+            }
+            if left == 0 {
+                return false;
+            }
+            self.router.submit_at(&r);
+        }
+        // Arrival source exhausted: drain.
+        for e in self.router.engines.iter_mut() {
+            let s0 = e.metrics.steps;
+            let ok = e.run_to_completion(left);
+            left = left.saturating_sub((e.metrics.steps - s0) as usize);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Slowest engine's virtual completion time.
+    pub fn makespan(&self) -> f64 {
+        self.router.makespan()
+    }
+
+    /// Cluster-level rollup of every engine's metrics. Latency samples
+    /// keep their shared-timeline timestamps, so windowed percentiles
+    /// remain meaningful; `span` becomes summed busy time (divide
+    /// token counts by [`Cluster::makespan`] for cluster rates).
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for e in &self.router.engines {
+            m.absorb(&e.metrics);
+        }
+        m
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.router.engines.iter().map(|e| e.preemptions()).sum()
+    }
+}
+
+/// Homogeneous simulated cluster for sweeps, examples and benches:
+/// `n_engines` engines of the same device×precision serving llama-8b,
+/// KV pool sized from device HBM (FP8 weights halve the weight
+/// footprint), least-loaded routing, batch cap 64.
+pub fn sim_cluster(dev: Device, prec: PrecisionMode, n_engines: usize) -> Cluster<SimBackend> {
+    let model = llama::by_name("llama-8b").unwrap();
+    let w_bytes = if prec == PrecisionMode::Bf16 { 2.0 } else { 1.0 };
+    let engines: Vec<Engine<SimBackend>> = (0..n_engines)
+        .map(|_| {
+            let kv =
+                KvCacheConfig::from_device(model, dev.spec().hbm_cap, w_bytes, 2.0, 16, 0.05);
+            let backend = SimBackend::new(model, StepConfig::new(dev, prec));
+            let mut cfg = EngineConfig::new(kv);
+            cfg.batcher.max_batch = 64;
+            Engine::new(cfg, backend)
+        })
+        .collect();
+    let ratings =
+        vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n_engines];
+    Cluster::new(Router::new(engines, ratings, RoutePolicy::LeastLoaded))
+}
+
+/// Latency service-level objective for the load sweep, evaluated on
+/// steady-state percentiles (a window of the run's makespan that
+/// excludes warmup and cooldown transients).
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    pub ttft_p95_s: f64,
+    pub tpot_p95_s: f64,
+    /// Fraction of the makespan discarded at the start of the window.
+    pub warmup_frac: f64,
+    /// Fraction discarded at the end (queue-drain tail).
+    pub cooldown_frac: f64,
+}
+
+impl SloSpec {
+    /// Interactive serving: TTFT p95 <= 2 s, TPOT p95 <= 50 ms.
+    pub fn interactive() -> Self {
+        SloSpec {
+            ttft_p95_s: 2.0,
+            tpot_p95_s: 0.050,
+            warmup_frac: 0.1,
+            cooldown_frac: 0.1,
+        }
+    }
+
+    /// Steady-state window [t0, t1] for a run spanning `makespan`.
+    pub fn window(&self, makespan: f64) -> (f64, f64) {
+        (
+            makespan * self.warmup_frac,
+            makespan * (1.0 - self.cooldown_frac),
+        )
+    }
+}
+
+/// One measured operating point of the load sweep.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    /// Offered arrival rate (requests/s across the whole cluster).
+    pub qps: f64,
+    pub drained: bool,
+    /// Meets the SLO on steady-state percentiles.
+    pub feasible: bool,
+    pub ttft_p95: f64,
+    pub tpot_p95: f64,
+    /// Goodput: output tokens/s over the makespan, all engines.
+    pub tokens_per_sec: f64,
+    /// Mean device draw while serving (W per engine/chip).
+    pub watts_mean: f64,
+    pub requests_done: u64,
+    pub preemptions: u64,
+}
+
+/// Steady-state p95; falls back to the whole run when the window holds
+/// no samples (short runs), and to 0 (vacuously met) when the whole
+/// run has none either — e.g. TPOT on single-token outputs.
+fn p95_or_whole(p: &crate::util::stats::TimedPercentiles, t0: f64, t1: f64) -> f64 {
+    let w = p.pct_in(t0, t1, 95.0);
+    if !w.is_nan() {
+        return w;
+    }
+    let whole = p.pct(95.0);
+    if whole.is_nan() {
+        0.0
+    } else {
+        whole
+    }
+}
+
+/// Measure one operating point: a fresh cluster serving `n_requests`
+/// Poisson arrivals at `qps`, judged against `slo` on the steady-state
+/// window.
+pub fn measure_load<B, C, T>(
+    mk_cluster: &C,
+    trace_at: &T,
+    qps: f64,
+    n_requests: usize,
+    seed: u64,
+    slo: &SloSpec,
+) -> LoadPoint
+where
+    B: ExecutionBackend,
+    C: Fn() -> Cluster<B>,
+    T: Fn(f64) -> TraceConfig,
+{
+    let mut cluster = mk_cluster();
+    let gen = TraceGenerator::new(trace_at(qps), seed);
+    let drained = cluster.run(gen.stream(n_requests));
+    let m = cluster.merged_metrics();
+    let makespan = cluster.makespan();
+    let (t0, t1) = slo.window(makespan);
+    let ttft_p95 = p95_or_whole(&m.ttft, t0, t1);
+    let tpot_p95 = p95_or_whole(&m.tpot, t0, t1);
+    let feasible = drained
+        && m.requests_done > 0
+        && ttft_p95 <= slo.ttft_p95_s
+        && tpot_p95 <= slo.tpot_p95_s;
+    LoadPoint {
+        qps,
+        drained,
+        feasible,
+        ttft_p95,
+        tpot_p95,
+        tokens_per_sec: if makespan > 0.0 {
+            m.tokens_out as f64 / makespan
+        } else {
+            0.0
+        },
+        watts_mean: if m.span > 0.0 { m.energy_j / m.span } else { 0.0 },
+        requests_done: m.requests_done,
+        preemptions: cluster.preemptions(),
+    }
+}
+
+/// Search bracket and trial shape for [`max_sustainable_qps`].
+#[derive(Debug, Clone, Copy)]
+pub struct SweepConfig {
+    pub qps_lo: f64,
+    pub qps_hi: f64,
+    /// Bisection refinements after the lo/hi probes.
+    pub iters: usize,
+    /// Poisson arrivals per probe.
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl SweepConfig {
+    pub fn new(qps_lo: f64, qps_hi: f64) -> Self {
+        SweepConfig { qps_lo, qps_hi, iters: 6, n_requests: 240, seed: 7 }
+    }
+}
+
+/// Outcome of [`max_sustainable_qps`]: the best SLO-feasible point
+/// found (None when even `qps_lo` violates the SLO) and every probe.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub best: Option<LoadPoint>,
+    pub probes: Vec<LoadPoint>,
+}
+
+/// Binary-search the highest offered QPS whose steady-state TTFT/TPOT
+/// p95 meet `slo`. Builds a fresh cluster per probe (the search is
+/// over *independent* open-loop runs, not a single warm system), so
+/// `mk_cluster` is a factory. Deterministic for a fixed seed.
+pub fn max_sustainable_qps<B, C, T>(
+    mk_cluster: &C,
+    trace_at: &T,
+    slo: &SloSpec,
+    cfg: &SweepConfig,
+) -> SweepOutcome
+where
+    B: ExecutionBackend,
+    C: Fn() -> Cluster<B>,
+    T: Fn(f64) -> TraceConfig,
+{
+    assert!(cfg.qps_lo > 0.0 && cfg.qps_hi > cfg.qps_lo, "need 0 < lo < hi");
+    let probe =
+        |qps: f64| measure_load(mk_cluster, trace_at, qps, cfg.n_requests, cfg.seed, slo);
+    let mut probes = Vec::new();
+    let lo_pt = probe(cfg.qps_lo);
+    let lo_feasible = lo_pt.feasible;
+    probes.push(lo_pt.clone());
+    if !lo_feasible {
+        return SweepOutcome { best: None, probes };
+    }
+    let hi_pt = probe(cfg.qps_hi);
+    probes.push(hi_pt.clone());
+    if hi_pt.feasible {
+        // Even the ceiling meets the SLO; report it rather than
+        // pretending the search converged.
+        return SweepOutcome { best: Some(hi_pt), probes };
+    }
+    let (mut lo, mut hi) = (cfg.qps_lo, cfg.qps_hi);
+    let mut best = lo_pt;
+    for _ in 0..cfg.iters {
+        let mid = 0.5 * (lo + hi);
+        let pt = probe(mid);
+        let feasible = pt.feasible;
+        probes.push(pt.clone());
+        if feasible {
+            best = pt;
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    SweepOutcome { best: Some(best), probes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::perfmodel::{PrecisionMode, StepConfig};
+    use crate::coordinator::backend::SimBackend;
+    use crate::coordinator::engine::{Engine, EngineConfig};
+    use crate::coordinator::kv_cache::KvCacheConfig;
+    use crate::coordinator::router::{EngineRating, RoutePolicy, Router};
+    use crate::hwsim::spec::Device;
+    use crate::workload::llama::by_name;
+
+    fn engine(total_blocks: usize) -> Engine<SimBackend> {
+        let kv = KvCacheConfig { block_tokens: 16, total_blocks };
+        let backend = SimBackend::new(
+            by_name("llama-8b").unwrap(),
+            StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()),
+        );
+        Engine::new(EngineConfig::new(kv), backend)
+    }
+
+    fn cluster(n_engines: usize, blocks: usize) -> Cluster<SimBackend> {
+        let engines: Vec<_> = (0..n_engines).map(|_| engine(blocks)).collect();
+        let ratings = vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n_engines];
+        Cluster::new(Router::new(engines, ratings, RoutePolicy::RoundRobin))
+    }
+
+    fn req(id: u64, arrival: f64, p: usize, o: usize) -> Request {
+        Request { id, arrival, prompt_len: p, output_len: o }
+    }
+
+    #[test]
+    fn arrivals_admitted_at_their_own_time_across_engines() {
+        let mut c = cluster(2, 10_000);
+        // Round-robin: r0 -> e0 at t=0, r1 -> e1 at t=3.
+        let ok = c.run(vec![req(0, 0.0, 128, 16), req(1, 3.0, 128, 16)]);
+        assert!(ok);
+        let m = c.merged_metrics();
+        assert_eq!(m.requests_done, 2);
+        // Each request's first token comes after its OWN arrival, and
+        // neither TTFT contains the 3 s gap.
+        for e in &c.router.engines {
+            for s in e.sequences() {
+                assert!(s.first_token_at.unwrap() >= s.arrival);
+            }
+        }
+        assert!(m.ttft.pct(100.0) < 1.0, "TTFT leaked the arrival gap");
+        assert!(c.makespan() >= 3.0, "shared clock must cover the last arrival");
+    }
+
+    #[test]
+    fn busy_engine_queues_arrival_idle_engine_starts_at_arrival() {
+        let mut c = cluster(1, 10_000);
+        // Long first request; the second arrives mid-service and must
+        // wait (its TTFT includes genuine queueing delay), not warp.
+        let ok = c.run(vec![req(0, 0.0, 2048, 256), req(1, 0.001, 64, 8)]);
+        assert!(ok);
+        let e = &c.router.engines[0];
+        let s1 = e.sequences().find(|s| s.id == 1).unwrap();
+        assert!(s1.first_token_at.unwrap() > 0.001);
+        assert_eq!(e.metrics.requests_done, 2);
+    }
+
+    #[test]
+    fn step_cap_aborts_instead_of_spinning() {
+        let mut c = cluster(1, 10_000);
+        c.step_cap = 3;
+        assert!(!c.run(vec![req(0, 0.0, 64, 512)]));
+    }
+
+    #[test]
+    fn sweep_none_when_slo_unmeetable() {
+        // TTFT SLO of ~0: even a near-idle system fails.
+        let slo = SloSpec {
+            ttft_p95_s: 1e-9,
+            tpot_p95_s: 1e-9,
+            warmup_frac: 0.1,
+            cooldown_frac: 0.1,
+        };
+        let cfg = SweepConfig { iters: 3, n_requests: 20, seed: 1, ..SweepConfig::new(0.5, 4.0) };
+        let out = max_sustainable_qps(&|| cluster(2, 10_000), &TraceConfig::chat, &slo, &cfg);
+        assert!(out.best.is_none());
+        assert_eq!(out.probes.len(), 1, "stops after the infeasible floor");
+    }
+
+    #[test]
+    fn sweep_finds_feasible_point_and_it_meets_slo() {
+        let slo = SloSpec::interactive();
+        let cfg =
+            SweepConfig { iters: 4, n_requests: 60, seed: 7, ..SweepConfig::new(0.25, 64.0) };
+        let out = max_sustainable_qps(&|| cluster(2, 20_000), &TraceConfig::chat, &slo, &cfg);
+        let best = out.best.expect("near-idle chat load must meet a 2s/50ms SLO");
+        assert!(best.feasible);
+        assert!(best.qps >= 0.25);
+        assert!(best.ttft_p95 <= slo.ttft_p95_s);
+        assert!(best.tpot_p95 <= slo.tpot_p95_s);
+        assert!(best.tokens_per_sec > 0.0);
+        assert!(best.watts_mean > 0.0);
+    }
+
+    #[test]
+    fn sim_cluster_factory_serves() {
+        let mut c = sim_cluster(Device::H100, PrecisionMode::fp8_static(), 2);
+        assert_eq!(c.router.engines.len(), 2);
+        assert!(c.run(vec![req(0, 0.0, 64, 8), req(1, 0.5, 64, 8)]));
+        assert_eq!(c.merged_metrics().requests_done, 2);
+    }
+}

@@ -6,6 +6,24 @@
 //! metrics). The clock is virtual for `SimBackend` (advanced by
 //! modelled step latency) and wall for `PjrtBackend` — identical
 //! scheduling code either way (DESIGN.md §5).
+//!
+//! Virtual-time semantics (DESIGN.md §5 addendum):
+//!
+//! * `submit` never moves the clock — a queued request becomes
+//!   schedulable only once the clock reaches its arrival, so an
+//!   open-loop Poisson trace keeps its shape instead of collapsing to
+//!   batch-at-t0 (and TTFT is measured from each request's own
+//!   arrival).
+//! * When nothing is runnable *now* but queued work exists in the
+//!   future, `step` jumps the clock to the next arrival (idle-advance)
+//!   rather than reporting a deadlock.
+//! * A cluster driver advances several engines on one shared timeline
+//!   with [`Engine::step_until`] + [`Engine::advance_to`]
+//!   (`coordinator::cluster`).
+//! * Preemption accounting: TTFT is sampled once per request at its
+//!   first emission (a recompute re-prefill bumps `metrics.restarts`
+//!   instead), and a token whose KV growth fails is rolled back so
+//!   `tokens_out` counts every delivered token exactly once.
 
 use std::collections::HashMap;
 
@@ -43,6 +61,10 @@ pub struct Engine<B: ExecutionBackend> {
     policy: SchedulerPolicy,
     clock: f64,
     preemptions: u64,
+    /// Sequences not yet Finished — `seqs` retains finished entries
+    /// for post-run inspection, so `pending()` must not rescan it
+    /// (the cluster loop and `LeastLoaded` routing call it per step).
+    active: usize,
 }
 
 impl<B: ExecutionBackend> Engine<B> {
@@ -56,6 +78,7 @@ impl<B: ExecutionBackend> Engine<B> {
             policy: cfg.policy,
             clock: 0.0,
             preemptions: 0,
+            active: 0,
         }
     }
 
@@ -68,27 +91,56 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     pub fn pending(&self) -> usize {
-        self.seqs
-            .values()
-            .filter(|s| s.state != RequestState::Finished)
-            .count()
+        self.active
     }
 
     pub fn kv_utilization(&self) -> f64 {
         self.alloc.utilization()
     }
 
-    /// Submit a request (the router's entry point).
+    /// Iterate every sequence the engine has ever accepted (finished
+    /// ones included) — cluster tests and fairness audits read
+    /// per-request timestamps through this.
+    pub fn sequences(&self) -> impl Iterator<Item = &Sequence> + '_ {
+        self.seqs.values()
+    }
+
+    /// Submit a request (the router's entry point). Does NOT move the
+    /// clock: the request waits in the queue until the clock reaches
+    /// its arrival.
     pub fn submit(&mut self, r: &Request) {
         let seq = Sequence::from_request(r);
         self.batcher.enqueue(seq.id);
-        self.seqs.insert(seq.id, seq);
-        self.clock = self.clock.max(r.arrival);
+        if self.seqs.insert(seq.id, seq).is_none() {
+            self.active += 1;
+        }
     }
 
-    /// Run one engine step. Returns false if there was nothing to do.
+    /// Lift an *idle* engine's clock to `t` (the arrival instant of
+    /// newly routed work). A no-op while work is in flight — the clock
+    /// then already reflects time spent serving and must not skip
+    /// ahead of pending steps.
+    pub fn advance_to(&mut self, t: f64) {
+        if self.pending() == 0 && t > self.clock {
+            self.clock = t;
+        }
+    }
+
+    /// Run one engine step. Returns false if there was nothing to do
+    /// (now or at any queued future arrival).
     pub fn step(&mut self) -> bool {
-        let adm = self.batcher.plan_step(&mut self.seqs, &mut self.alloc);
+        let mut adm = self.batcher.plan_step(&mut self.seqs, &mut self.alloc, self.clock);
+        if adm.prefills.is_empty() && adm.decodes.is_empty() {
+            // Arrival-aware idle: nothing runnable at the current
+            // clock, but queued work exists in the future — jump to
+            // the next arrival instead of reporting a deadlock.
+            if let Some(t) = self.batcher.head_arrival(&self.seqs) {
+                if t > self.clock {
+                    self.clock = t;
+                    adm = self.batcher.plan_step(&mut self.seqs, &mut self.alloc, self.clock);
+                }
+            }
+        }
         let step_plan = plan(self.policy, adm);
         match step_plan {
             StepPlan::Idle => false,
@@ -113,6 +165,23 @@ impl<B: ExecutionBackend> Engine<B> {
                 true
             }
         }
+    }
+
+    /// Advance virtual time toward `t`: execute steps while the clock
+    /// is behind `t` and work is schedulable. As in any discrete-event
+    /// simulation, a step that *begins* before `t` may finish past it.
+    /// Returns the number of steps executed; stops early once the
+    /// engine has nothing left to run (its clock then stays behind
+    /// `t` — see [`Engine::advance_to`]) or after `max_steps`.
+    pub fn step_until(&mut self, t: f64, max_steps: usize) -> usize {
+        let mut n = 0;
+        while self.clock < t && n < max_steps && self.pending() > 0 {
+            if !self.step() {
+                break;
+            }
+            n += 1;
+        }
+        n
     }
 
     /// Step until all submitted requests finish (or `max_steps`).
@@ -141,14 +210,23 @@ impl<B: ExecutionBackend> Engine<B> {
         self.clock += res.seconds;
         let n = ids.len();
         for id in ids {
-            let arrival = {
+            let first_emission = {
                 let seq = self.seqs.get_mut(id).expect("prefilled unknown seq");
                 seq.state = RequestState::Decoding;
-                seq.generated += 1; // prefill emits the first token
-                seq.first_token_at = Some(self.clock);
-                seq.arrival
+                seq.generated += 1; // prefill emits one token
+                seq.delivered += 1;
+                if seq.first_token_at.is_none() {
+                    seq.first_token_at = Some(self.clock);
+                    Some(seq.arrival)
+                } else {
+                    None // recompute re-prefill: token is the rolled-
+                         // back one, TTFT was already sampled
+                }
             };
-            self.metrics.record_first_token(arrival, self.clock);
+            match first_emission {
+                Some(arrival) => self.metrics.record_first_token(arrival, self.clock),
+                None => self.metrics.record_restart(),
+            }
             self.finish_if_done(*id);
         }
         self.metrics.record_step(res.seconds, res.watts, res.flops, n);
@@ -164,6 +242,7 @@ impl<B: ExecutionBackend> Engine<B> {
             .collect();
         let res = self.backend.decode(&specs);
         self.clock += res.seconds;
+        let mut emitted = 0;
         for id in ids {
             let seq = self.seqs.get_mut(id).expect("decoded unknown seq");
             seq.generated += 1;
@@ -173,12 +252,18 @@ impl<B: ExecutionBackend> Engine<B> {
             let seq = self.seqs.get_mut(id).unwrap();
             seq.blocks = blocks;
             if !ok {
+                // The token generated this step has no KV backing:
+                // roll it back so it is re-generated (and counted
+                // exactly once) by the post-preemption re-prefill.
+                seq.generated -= 1;
                 self.preempt(*id);
                 continue;
             }
+            seq.delivered += 1;
+            emitted += 1;
             self.finish_if_done(*id);
         }
-        self.metrics.record_step(res.seconds, res.watts, res.flops, ids.len());
+        self.metrics.record_step(res.seconds, res.watts, res.flops, emitted);
     }
 
     fn finish_if_done(&mut self, id: SeqId) {
@@ -189,8 +274,11 @@ impl<B: ExecutionBackend> Engine<B> {
         let seq = self.seqs.get_mut(&id).unwrap();
         seq.state = RequestState::Finished;
         seq.finished_at = Some(self.clock);
+        self.active -= 1;
         let (arrival, first) = (seq.arrival, seq.first_token_at.unwrap_or(self.clock));
-        let out = seq.generated;
+        // Delivered (not `generated`) so TPOT spans all passes of a
+        // preempted request, whose `generated` was reset on requeue.
+        let out = seq.delivered;
         let mut blocks = std::mem::take(&mut seq.blocks);
         self.alloc.release(&mut blocks);
         self.backend.release(id);
@@ -199,7 +287,9 @@ impl<B: ExecutionBackend> Engine<B> {
 
     /// Evict a sequence under memory pressure: drop its KV, requeue
     /// for a full re-prefill of prompt+generated (vLLM recompute-mode
-    /// preemption).
+    /// preemption). `first_token_at` survives — the user saw the first
+    /// token at its original emission time, so TTFT is never
+    /// re-sampled; the re-prefill is counted via `metrics.restarts`.
     fn preempt(&mut self, id: SeqId) {
         self.preemptions += 1;
         let seq = self.seqs.get_mut(&id).unwrap();
@@ -214,7 +304,11 @@ impl<B: ExecutionBackend> Engine<B> {
         seq.output_len -= gen.min(seq.output_len);
         seq.generated = 0;
         seq.state = RequestState::Queued;
-        self.batcher.enqueue(id);
+        // Front of the queue: the victim predates everything still
+        // waiting, and must never sit behind a not-yet-arrived head
+        // (which would let idle-advance skip past its runnable
+        // re-prefill and inflate its latency artificially).
+        self.batcher.requeue_front(id);
     }
 
     pub fn sequence(&self, id: SeqId) -> Option<&Sequence> {
@@ -289,6 +383,96 @@ mod tests {
         assert!(e.run_to_completion(100_000), "must drain despite pressure");
         assert_eq!(e.metrics.requests_done, 3);
         assert!(e.preemptions() > 0, "expected preemption under pressure");
+        // Preempted tokens are rolled back and re-generated exactly
+        // once: the delivered-token invariant holds despite recompute.
+        assert_eq!(e.metrics.tokens_out, 3 * 40, "no token double-count");
+    }
+
+    #[test]
+    fn late_arrival_ttft_measured_from_own_arrival() {
+        // Regression for the clock-warp bug: `submit` used to advance
+        // the clock to max(clock, arrival), collapsing open-loop
+        // traces to batch-at-t0 and corrupting TTFT.
+        let mut e = engine(1000);
+        e.submit(&req(0, 0.0, 100, 10));
+        e.submit(&req(1, 10.0, 100, 10));
+        assert!(e.run_to_completion(10_000));
+        let s0 = e.sequence(0).unwrap();
+        let s1 = e.sequence(1).unwrap();
+        // The first request was served at t~0, long before the second
+        // arrived — its timeline must not have been warped to t=10.
+        assert!(s0.finished_at.unwrap() < 10.0, "r0 warped to r1's arrival");
+        // The second request's first token comes after its arrival...
+        assert!(s1.first_token_at.unwrap() >= 10.0);
+        // ...and its TTFT is a prefill latency measured from its OWN
+        // arrival — not ~0 (pre-fix r1 under drain-the-queue) and not
+        // ~10s (r0 under the warped clock).
+        assert_eq!(e.metrics.ttft.count(), 2);
+        let worst = e.metrics.ttft.pct(100.0);
+        assert!(worst < 1.0, "TTFT polluted by arrival gap: {worst}");
+    }
+
+    #[test]
+    fn preemption_samples_ttft_once_and_counts_restarts() {
+        // Same pressure workload as above: each preemption triggers a
+        // re-prefill, which must NOT contribute a second TTFT sample.
+        let mut e = engine(8);
+        for i in 0..3 {
+            e.submit(&req(i, 0.0, 32, 40));
+        }
+        assert!(e.run_to_completion(100_000));
+        assert!(e.preemptions() > 0);
+        assert_eq!(
+            e.metrics.ttft.count(),
+            3,
+            "one TTFT sample per request, restarts notwithstanding"
+        );
+        assert_eq!(
+            e.metrics.restarts,
+            e.preemptions(),
+            "every preemption shows up as exactly one counted restart"
+        );
+        // TPOT spans all passes: exactly one sample per multi-token
+        // request, none of them negative.
+        assert_eq!(e.metrics.tpot.count(), 3);
+        assert!(e.metrics.tpot.pct(0.0) > 0.0);
+    }
+
+    #[test]
+    fn preempted_request_not_starved_by_future_arrivals() {
+        // Regression: a preemption victim requeues at the FRONT of the
+        // batcher queue. Requeued at the back it would sit behind a
+        // not-yet-arrived request, and idle-advance would warp the
+        // clock to that arrival while the victim's re-prefill was
+        // runnable immediately — inflating its latency by the gap.
+        let mut e = engine(8); // tiny pool: the t=0 burst preempts
+        for i in 0..3 {
+            e.submit(&req(i, 0.0, 32, 40));
+        }
+        e.submit(&req(3, 50.0, 32, 4));
+        assert!(e.run_to_completion(100_000));
+        assert!(e.preemptions() > 0, "pressure must preempt");
+        for i in 0..3 {
+            let s = e.sequence(i).unwrap();
+            let fin = s.finished_at.unwrap();
+            assert!(fin < 10.0, "victim {i} warped to the future arrival: {fin}");
+        }
+        let s3 = e.sequence(3).unwrap();
+        assert!(s3.first_token_at.unwrap() >= 50.0);
+        assert_eq!(e.metrics.tokens_out, 3 * 40 + 4);
+    }
+
+    #[test]
+    fn idle_engine_advances_to_next_arrival_instead_of_deadlocking() {
+        let mut e = engine(1000);
+        e.submit(&req(0, 5.0, 64, 4));
+        // Nothing is runnable at t=0, but the engine must not report a
+        // dead queue: it jumps to the arrival and serves.
+        assert!(e.step(), "idle-advance step must run the prefill");
+        assert!(e.clock() >= 5.0);
+        assert!(e.run_to_completion(1000));
+        let s = e.sequence(0).unwrap();
+        assert!(s.first_token_at.unwrap() >= 5.0);
     }
 
     #[test]

@@ -3,24 +3,44 @@
 //! §5.2 notes TTFT/TPOT "do not facilitate comparisons across stages";
 //! the engine therefore records both the classic latency metrics and
 //! FLOPs-based throughput so benches can report either view.
+//!
+//! Latency samples are timestamped with the virtual time at which they
+//! completed ([`TimedPercentiles`]), so open-loop runs can cut a
+//! steady-state window out of the run (`pct_in`) instead of letting
+//! warmup/cooldown transients pollute the percentiles. Accounting
+//! rules under preemption (DESIGN.md §5):
+//!
+//! * TTFT is sampled exactly once per request, at its *first* token
+//!   emission — a recompute re-prefill after preemption does not
+//!   re-sample it (it bumps [`Metrics::restarts`] instead);
+//! * `tokens_out` counts each delivered token exactly once — a token
+//!   whose KV growth failed is rolled back and re-counted only when it
+//!   is actually re-generated after the re-prefill.
 
-use crate::util::stats::{Percentiles, Summary};
+use crate::util::stats::{Summary, TimedPercentiles};
 
 #[derive(Debug, Default)]
 pub struct Metrics {
-    pub ttft: Percentiles,
-    pub tpot: Percentiles,
-    pub e2e_latency: Percentiles,
+    pub ttft: TimedPercentiles,
+    pub tpot: TimedPercentiles,
+    pub e2e_latency: TimedPercentiles,
     pub tokens_out: u64,
     pub tokens_in: u64,
     pub requests_done: u64,
+    /// Re-prefills after preemption. Each one re-enters the prefill
+    /// queue but does NOT contribute a second TTFT sample.
+    pub restarts: u64,
     pub steps: u64,
     pub step_time: Summary,
     /// Integrated device energy (J).
     pub energy_j: f64,
     /// Model FLOPs executed.
     pub flops: f64,
-    /// Clock span covered (s).
+    /// Busy time covered by executed steps (s). For a single engine
+    /// this equals the clock span actually spent serving; when metrics
+    /// from several engines are [`Metrics::absorb`]ed it is the *sum*
+    /// of their busy times — divide by the cluster makespan, not by
+    /// `span`, for cluster-level rates.
     pub span: f64,
 }
 
@@ -29,14 +49,20 @@ impl Metrics {
         Self::default()
     }
 
+    /// Sample TTFT for a request first emitted at `now` (virtual s).
     pub fn record_first_token(&mut self, arrival: f64, now: f64) {
-        self.ttft.add(now - arrival);
+        self.ttft.add(now, now - arrival);
+    }
+
+    /// A preempted request re-entered prefill (recompute preemption).
+    pub fn record_restart(&mut self) {
+        self.restarts += 1;
     }
 
     pub fn record_finish(&mut self, arrival: f64, first_token: f64, now: f64, out_tokens: usize) {
-        self.e2e_latency.add(now - arrival);
+        self.e2e_latency.add(now, now - arrival);
         if out_tokens > 1 {
-            self.tpot.add((now - first_token) / (out_tokens - 1) as f64);
+            self.tpot.add(now, (now - first_token) / (out_tokens - 1) as f64);
         }
         self.requests_done += 1;
     }
@@ -48,6 +74,24 @@ impl Metrics {
         self.flops += flops;
         self.tokens_out += new_tokens as u64;
         self.span += dt;
+    }
+
+    /// Merge another engine's metrics into this one (cluster rollup).
+    /// Percentile samples keep their timestamps, so windowed queries
+    /// remain valid on the shared virtual timeline.
+    pub fn absorb(&mut self, other: &Metrics) {
+        self.ttft.absorb(&other.ttft);
+        self.tpot.absorb(&other.tpot);
+        self.e2e_latency.absorb(&other.e2e_latency);
+        self.tokens_out += other.tokens_out;
+        self.tokens_in += other.tokens_in;
+        self.requests_done += other.requests_done;
+        self.restarts += other.restarts;
+        self.steps += other.steps;
+        self.step_time.absorb(&other.step_time);
+        self.energy_j += other.energy_j;
+        self.flops += other.flops;
+        self.span += other.span;
     }
 
     /// Output tokens per second over the covered span.
@@ -81,7 +125,7 @@ impl Metrics {
         format!(
             "requests={} tokens_out={} span={:.2}s tok/s={:.1} \
              TTFT p50/p95={:.3}/{:.3}s TPOT p50/p95={:.4}/{:.4}s \
-             J/token={:.2} model TFLOP/s={:.2}",
+             J/token={:.2} model TFLOP/s={:.2} restarts={}",
             self.requests_done,
             self.tokens_out,
             self.span,
@@ -92,6 +136,7 @@ impl Metrics {
             self.tpot.pct(95.0),
             self.joules_per_token(),
             self.model_flops_per_sec() / 1e12,
+            self.restarts,
         )
     }
 }
@@ -131,11 +176,46 @@ mod tests {
     }
 
     #[test]
+    fn windowed_percentiles_exclude_warmup() {
+        let mut m = Metrics::new();
+        // Cold-start request with a huge TTFT at t=1, then steady state.
+        m.record_first_token(0.0, 1.0);
+        for i in 0..20 {
+            let t = 10.0 + i as f64;
+            m.record_first_token(t - 0.05, t);
+        }
+        assert!(m.ttft.pct(100.0) > 0.9);
+        assert!(m.ttft.pct_in(5.0, 40.0, 100.0) < 0.1);
+    }
+
+    #[test]
+    fn absorb_merges_engines() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record_step(1.0, 100.0, 1e12, 5);
+        a.record_first_token(0.0, 0.5);
+        a.record_finish(0.0, 0.5, 1.0, 5);
+        b.record_step(1.0, 300.0, 3e12, 15);
+        b.record_first_token(0.0, 1.5);
+        b.record_finish(0.0, 1.5, 2.0, 15);
+        b.record_restart();
+        a.absorb(&b);
+        assert_eq!(a.tokens_out, 20);
+        assert_eq!(a.requests_done, 2);
+        assert_eq!(a.restarts, 1);
+        assert_eq!(a.ttft.count(), 2);
+        assert!((a.ttft.median() - 1.0).abs() < 1e-9);
+        assert!((a.energy_j - 400.0).abs() < 1e-9);
+        assert!((a.span - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn report_is_formatted() {
         let mut m = Metrics::new();
         m.record_step(1.0, 100.0, 1e12, 5);
         let r = m.report();
         assert!(r.contains("tokens_out=5"));
         assert!(r.contains("tok/s=5.0"));
+        assert!(r.contains("restarts=0"));
     }
 }

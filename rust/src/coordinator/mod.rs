@@ -9,24 +9,32 @@
 //!   timing, virtual clock — drives every paper figure) and
 //!   `PjrtBackend` (real compute via the AOT artifacts, wall clock).
 //! * [`engine`] — the step loop tying it all together.
+//! * [`cluster`] — virtual-time event loop over the router's engine
+//!   pool (open-loop traffic on one shared clock) and the SLO load
+//!   sweep built on it.
 //! * [`metrics`] — TTFT / TPOT / throughput accounting (§5.2 notes the
-//!   paper's preference for FLOPs-based metrics; we record both).
+//!   paper's preference for FLOPs-based metrics; we record both),
+//!   with steady-state (windowed) percentiles for open-loop runs.
 
 pub mod backend;
 pub mod batcher;
+pub mod cluster;
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_backend;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 
 pub use backend::{ExecutionBackend, SimBackend};
-pub use pjrt_backend::PjrtBackend;
 pub use batcher::{Batcher, BatcherConfig};
+pub use cluster::{Cluster, SloSpec, SweepConfig};
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};
 pub use metrics::Metrics;
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::PjrtBackend;
 pub use request::{RequestState, SeqId, Sequence};
 pub use scheduler::{SchedulerPolicy, StepPlan};

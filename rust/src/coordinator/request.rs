@@ -25,8 +25,13 @@ pub struct Sequence {
     pub prompt_len: usize,
     /// Target number of output tokens.
     pub output_len: usize,
-    /// Tokens generated so far.
+    /// Tokens generated so far *in the current pass* — reset to zero
+    /// by recompute preemption (the re-prefill regenerates them).
     pub generated: usize,
+    /// Tokens actually delivered to the caller across all passes.
+    /// Unlike `generated`, this survives preemption and ends equal to
+    /// the request's original `output_len`.
+    pub delivered: usize,
     /// Arrival time (engine clock, s).
     pub arrival: f64,
     /// Time of first token (TTFT reference), if prefilled.
@@ -45,6 +50,7 @@ impl Sequence {
             prompt_len: r.prompt_len,
             output_len: r.output_len,
             generated: 0,
+            delivered: 0,
             arrival: r.arrival,
             first_token_at: None,
             finished_at: None,

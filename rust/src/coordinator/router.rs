@@ -92,6 +92,20 @@ impl<B: ExecutionBackend> Router<B> {
         i
     }
 
+    /// Time-ordered dispatch (the cluster loop's entry point): route
+    /// the request and lift the target engine's clock to the arrival
+    /// instant if it is idle, so service starts at the arrival rather
+    /// than at a stale earlier clock. Callers must present requests in
+    /// arrival order, with every engine already stepped up to
+    /// `r.arrival` (see `cluster::Cluster::run`).
+    pub fn submit_at(&mut self, r: &Request) -> usize {
+        let i = self.select(r);
+        self.engines[i].advance_to(r.arrival);
+        self.engines[i].submit(r);
+        self.routed[i] += 1;
+        i
+    }
+
     pub fn routed_counts(&self) -> &[u64] {
         &self.routed
     }

@@ -13,11 +13,17 @@
 //!
 //! Python never runs on the request path: the rust binary loads the
 //! AOT HLO artifacts through PJRT (`runtime`) and is self-contained.
+//!
+//! The PJRT surface (`runtime`, `coordinator::pjrt_backend`) depends
+//! on the `xla` bindings and is gated behind the `pjrt` cargo feature;
+//! the default build is dependency-free and covers the entire
+//! simulated testbed (every paper figure and the cluster simulator).
 
 pub mod analysis;
 pub mod coordinator;
 pub mod fp8;
 pub mod hwsim;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tco;
 pub mod util;

@@ -10,6 +10,7 @@
 use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
 use fp8_tco::hwsim::gemm::{gemm_time, GemmConfig};
 use fp8_tco::hwsim::spec::{Accum, Device, Scaling};
+#[cfg(feature = "pjrt")]
 use fp8_tco::runtime::ArtifactDir;
 use fp8_tco::tco;
 use fp8_tco::util::table::{f, Table};
@@ -159,17 +160,22 @@ fn info_cmd() {
     }
     t.print();
 
-    let dir = ArtifactDir::discover();
-    if dir.exists() {
-        match dir.meta("1b") {
-            Ok(meta) => println!(
-                "artifacts: {} (tier {} h={} l={} vocab={} max_seq={})",
-                dir.root.display(), meta.tier, meta.hidden, meta.layers,
-                meta.vocab, meta.max_seq
-            ),
-            Err(e) => println!("artifacts present but unreadable: {e}"),
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = ArtifactDir::discover();
+        if dir.exists() {
+            match dir.meta("1b") {
+                Ok(meta) => println!(
+                    "artifacts: {} (tier {} h={} l={} vocab={} max_seq={})",
+                    dir.root.display(), meta.tier, meta.hidden, meta.layers,
+                    meta.vocab, meta.max_seq
+                ),
+                Err(e) => println!("artifacts present but unreadable: {e}"),
+            }
+        } else {
+            println!("artifacts: not built (run `make artifacts`)");
         }
-    } else {
-        println!("artifacts: not built (run `make artifacts`)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("artifacts: PJRT runtime not compiled in (build with --features pjrt)");
 }

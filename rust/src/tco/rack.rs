@@ -43,6 +43,22 @@ impl RackConfig {
     }
 }
 
+/// Illustrative per-server list prices ($, 8 accelerators each) used
+/// by the examples and benches: the paper's premise that Gaudi 2
+/// servers sell at a steep discount to H100 (Fig. 1's R_SC axis).
+/// Knobs, not measurements — sweep them via [`TcoInputs`] for
+/// sensitivity.
+///
+/// [`TcoInputs`]: crate::tco::TcoInputs
+pub fn assumed_server_price(dev: Device) -> f64 {
+    match dev {
+        Device::H100 => 250_000.0,
+        Device::Gaudi2 => 125_000.0,
+        Device::Gaudi3 => 160_000.0,
+        Device::A100 => 150_000.0,
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct InfraModel {
     pub rack: RackConfig,
@@ -76,6 +92,26 @@ impl InfraModel {
     /// R_IC between two devices at given sustained draws.
     pub fn infra_cost_ratio(&self, a_draw: f64, b_draw: f64) -> f64 {
         self.infra_cost_per_server(a_draw) / self.infra_cost_per_server(b_draw)
+    }
+
+    /// Absolute cost per million output tokens served *at SLO*: the
+    /// server's capex plus its horizon infra cost (rack share +
+    /// electricity at the sustained draw), divided by the tokens the
+    /// server delivers over the horizon at the measured SLO-feasible
+    /// goodput. This is where the serving simulator's load sweep
+    /// (`coordinator::cluster::max_sustainable_qps`) meets Eq. 1: the
+    /// throughput entering the ratio is goodput under a latency SLO,
+    /// not peak tokens/s.
+    pub fn cost_per_mtok(
+        &self,
+        server_price: f64,
+        chip_draw_w: f64,
+        server_tokens_per_sec: f64,
+    ) -> f64 {
+        assert!(server_tokens_per_sec > 0.0, "goodput must be positive");
+        let total_cost = server_price + self.infra_cost_per_server(chip_draw_w);
+        let tokens = server_tokens_per_sec * self.rack.horizon_h * 3600.0;
+        total_cost / tokens * 1e6
     }
 
     /// Convenience: sustained draw for a device at a utilization,
@@ -134,6 +170,24 @@ mod tests {
         // Gaudi 2 at high util (~460 W) vs H100 pegged (~690 W).
         let r = m.infra_cost_ratio(460.0, 690.0);
         assert!(r < 1.0, "{r}");
+    }
+
+    #[test]
+    fn cost_per_mtok_scales_inversely_with_goodput() {
+        let m = model();
+        let slow = m.cost_per_mtok(200_000.0, 600.0, 1_000.0);
+        let fast = m.cost_per_mtok(200_000.0, 600.0, 2_000.0);
+        assert!(slow > 0.0);
+        assert!((slow / fast - 2.0).abs() < 1e-9, "2x goodput = half the $/Mtok");
+        // Cooler chips cut the infra share of $/Mtok at equal goodput.
+        let cool = m.cost_per_mtok(200_000.0, 400.0, 1_000.0);
+        assert!(cool < slow);
+    }
+
+    #[test]
+    #[should_panic(expected = "goodput must be positive")]
+    fn cost_per_mtok_rejects_zero_goodput() {
+        model().cost_per_mtok(200_000.0, 600.0, 0.0);
     }
 
     #[test]

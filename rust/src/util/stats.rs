@@ -53,6 +53,27 @@ impl Summary {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Merge another summary into this one (Chan et al. parallel
+    /// Welford combine) — used when folding per-engine metrics into a
+    /// cluster-level view.
+    pub fn absorb(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * n2 / (n1 + n2);
+        self.m2 += other.m2 + d * d * n1 * n2 / (n1 + n2);
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Exact percentiles over a retained sample (fine at our scales).
@@ -76,24 +97,87 @@ impl Percentiles {
 
     /// Linear-interpolated percentile, q in [0, 100].
     pub fn pct(&self, q: f64) -> f64 {
-        if self.xs.is_empty() {
-            return f64::NAN;
-        }
-        let mut v = self.xs.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = q / 100.0 * (v.len() - 1) as f64;
-        let lo = rank.floor() as usize;
-        let hi = rank.ceil() as usize;
-        if lo == hi {
-            v[lo]
-        } else {
-            let w = rank - lo as f64;
-            v[lo] * (1.0 - w) + v[hi] * w
-        }
+        pct_of(self.xs.clone(), q)
     }
 
     pub fn median(&self) -> f64 {
         self.pct(50.0)
+    }
+}
+
+/// Linear-interpolated percentile of an owned sample, q in [0, 100].
+/// NaN on an empty sample.
+fn pct_of(mut v: Vec<f64>, q: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = q / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Percentiles over *timestamped* samples: each `add` records the
+/// virtual time at which the sample completed, so open-loop serving
+/// runs can report steady-state percentiles over a window that
+/// excludes warmup (empty system filling up) and cooldown (arrivals
+/// exhausted, queues draining).
+#[derive(Debug, Clone, Default)]
+pub struct TimedPercentiles {
+    /// (completion time, value) pairs.
+    samples: Vec<(f64, f64)>,
+}
+
+impl TimedPercentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, t: f64, x: f64) {
+        self.samples.push((t, x));
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Samples whose completion time falls in [t0, t1].
+    pub fn count_in(&self, t0: f64, t1: f64) -> usize {
+        self.samples.iter().filter(|(t, _)| (t0..=t1).contains(t)).count()
+    }
+
+    /// Percentile over every sample, q in [0, 100]. NaN when empty.
+    pub fn pct(&self, q: f64) -> f64 {
+        pct_of(self.samples.iter().map(|&(_, x)| x).collect(), q)
+    }
+
+    /// Percentile over the samples completing in [t0, t1] (the
+    /// steady-state window). NaN when no sample falls inside.
+    pub fn pct_in(&self, t0: f64, t1: f64, q: f64) -> f64 {
+        pct_of(
+            self.samples
+                .iter()
+                .filter(|(t, _)| (t0..=t1).contains(t))
+                .map(|&(_, x)| x)
+                .collect(),
+            q,
+        )
+    }
+
+    pub fn median(&self) -> f64 {
+        self.pct(50.0)
+    }
+
+    /// Merge another distribution's samples (cluster-level rollup of
+    /// per-engine metrics).
+    pub fn absorb(&mut self, other: &TimedPercentiles) {
+        self.samples.extend_from_slice(&other.samples);
     }
 }
 
@@ -129,5 +213,60 @@ mod tests {
     #[test]
     fn empty_percentile_is_nan() {
         assert!(Percentiles::new().pct(50.0).is_nan());
+    }
+
+    #[test]
+    fn timed_percentiles_window() {
+        let mut p = TimedPercentiles::new();
+        for i in 0..100 {
+            // Sample value 1000 at t<10 (warmup junk), value i elsewhere.
+            let t = i as f64;
+            let x = if t < 10.0 { 1000.0 } else { t };
+            p.add(t, x);
+        }
+        assert_eq!(p.count(), 100);
+        assert_eq!(p.count_in(10.0, 99.0), 90);
+        // Whole-run p95 is polluted by the warmup spikes...
+        assert!(p.pct(99.0) > 99.0);
+        // ...the steady-state window is not.
+        assert!(p.pct_in(10.0, 99.0, 100.0) <= 99.0 + 1e-9);
+        assert!(p.pct_in(200.0, 300.0, 50.0).is_nan());
+    }
+
+    #[test]
+    fn timed_percentiles_absorb() {
+        let mut a = TimedPercentiles::new();
+        let mut b = TimedPercentiles::new();
+        a.add(0.0, 1.0);
+        b.add(1.0, 3.0);
+        a.absorb(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.median() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_absorb_matches_sequential() {
+        let xs = [1.0, 5.0, 2.0, 8.0, 3.0, 9.0, 4.0];
+        let mut whole = Summary::new();
+        for &x in &xs {
+            whole.add(x);
+        }
+        let mut left = Summary::new();
+        let mut right = Summary::new();
+        for &x in &xs[..3] {
+            left.add(x);
+        }
+        for &x in &xs[3..] {
+            right.add(x);
+        }
+        left.absorb(&right);
+        assert_eq!(left.count(), whole.count());
+        assert!((left.mean() - whole.mean()).abs() < 1e-12);
+        assert!((left.variance() - whole.variance()).abs() < 1e-12);
+        assert_eq!(left.min(), whole.min());
+        assert_eq!(left.max(), whole.max());
+        // Absorbing an empty summary is a no-op.
+        left.absorb(&Summary::new());
+        assert_eq!(left.count(), whole.count());
     }
 }

@@ -100,6 +100,26 @@ impl TraceGenerator {
     pub fn take(&mut self, n: usize) -> Vec<Request> {
         (0..n).map(|_| self.next_request()).collect()
     }
+
+    /// Consume the generator as a bounded arrival *stream* of `n`
+    /// requests — the lazy form the cluster event loop merges with
+    /// engine completions (requests materialize one at a time, at
+    /// their true arrival timestamps).
+    pub fn stream(self, n: usize) -> std::iter::Take<TraceGenerator> {
+        <Self as Iterator>::take(self, n)
+    }
+}
+
+/// The generator is an (infinite) arrival stream; bound it with
+/// [`TraceGenerator::stream`] or `Iterator` adapters. NOTE: the
+/// inherent [`TraceGenerator::take`] (eager `Vec`) shadows
+/// `Iterator::take` on method-call syntax.
+impl Iterator for TraceGenerator {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        Some(self.next_request())
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +174,20 @@ mod tests {
         let p: f64 = reqs.iter().map(|r| r.prompt_len as f64).sum();
         let o: f64 = reqs.iter().map(|r| r.output_len as f64).sum();
         assert!(p > o * 5.0, "prompt {p} output {o}");
+    }
+
+    #[test]
+    fn stream_matches_eager_take() {
+        let eager = TraceGenerator::new(TraceConfig::chat(5.0), 21).take(50);
+        let lazy: Vec<Request> =
+            TraceGenerator::new(TraceConfig::chat(5.0), 21).stream(50).collect();
+        assert_eq!(lazy.len(), 50);
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+        }
     }
 
     #[test]
