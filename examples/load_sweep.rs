@@ -9,6 +9,7 @@
 //! constraint instead of at peak.
 //!
 //! Run: `cargo run --release --example load_sweep`
+//! (`SWEEP_FAST=1` shrinks the search for smoke tests.)
 
 use fp8_tco::analysis::perfmodel::PrecisionMode;
 use fp8_tco::coordinator::cluster::{max_sustainable_qps, sim_cluster, SloSpec, SweepConfig};
@@ -21,7 +22,11 @@ const N_ENGINES: usize = 2;
 
 fn main() {
     let slo = SloSpec::interactive();
-    let sweep = SweepConfig::new(0.5, 64.0);
+    let sweep = if std::env::var("SWEEP_FAST").ok().as_deref() == Some("1") {
+        SweepConfig { iters: 2, n_requests: 40, ..SweepConfig::new(0.5, 16.0) }
+    } else {
+        SweepConfig::new(0.5, 64.0)
+    };
     let infra = InfraModel::new(RackConfig::a100_era());
     let chips = infra.rack.chips_per_server as f64;
     println!(

@@ -1,0 +1,196 @@
+//! Interconnect-aware parallelism sweep (DESIGN.md §6).
+//!
+//! Part 1 sweeps (model x device x precision x TP/PP plan) through the
+//! HBM capacity check and the comm-aware step model: every row that
+//! passes shows its per-chip weight shard, instance KV budget, decode
+//! step time with TP all-reduce / PP bubble accounting, and per-chip
+//! decode throughput. Rejected plans are listed below the table with
+//! their typed `CapacityError` — infeasible configs no longer simulate
+//! silently. TP=1/PP=1 rows are *exactly* the paper's single-chip
+//! model (the comm terms are zero by construction).
+//!
+//! Part 2 prices the deployment shape the single-chip model could not
+//! express: 70B-class sharded instances serving an open-loop Poisson
+//! trace under an interactive SLO, with the surviving goodput priced
+//! as $/Mtok via `InfraModel::cost_per_mtok`.
+//!
+//! Run: `cargo run --release --example parallelism_sweep`
+//! (`SWEEP_FAST=1` shrinks the SLO search for smoke tests.)
+
+use fp8_tco::analysis::parallel::{check_step, ParallelismPlan};
+use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
+use fp8_tco::coordinator::cluster::{
+    max_sustainable_qps, sharded_sim_cluster, SloSpec, SweepConfig,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama::by_name;
+use fp8_tco::workload::trace::TraceConfig;
+
+const DECODE_BATCH: usize = 32;
+const DECODE_SEQ: usize = 1024;
+
+fn main() {
+    let fast = std::env::var("SWEEP_FAST").ok().as_deref() == Some("1");
+    let models = ["llama-8b", "llama-70b"];
+    let devices = [Device::H100, Device::Gaudi2, Device::Gaudi3];
+    let precisions = [PrecisionMode::Bf16, PrecisionMode::fp8_static()];
+    let plans = [
+        ParallelismPlan::single(),
+        ParallelismPlan::tp(2),
+        ParallelismPlan::tp(4),
+        ParallelismPlan::tp(8),
+        ParallelismPlan::new(4, 2),
+    ];
+
+    println!(
+        "Capacity-checked TP/PP sweep — decode step (b={DECODE_BATCH}, s={DECODE_SEQ}), \
+         BF16 KV.\nTP=1 rows are exactly the single-chip model (zero comm terms).\n"
+    );
+    let mut t = Table::new(
+        "Feasible (model x device x precision x plan) decode operating points",
+        &[
+            "model",
+            "device",
+            "precision",
+            "plan",
+            "chips",
+            "W/chip GB",
+            "KV Ktok",
+            "step ms",
+            "TP comm ms",
+            "PP bubble",
+            "tok/s/chip",
+        ],
+    );
+    let mut rejected: Vec<String> = Vec::new();
+    for model in models {
+        let m = by_name(model).unwrap();
+        for dev in devices {
+            for prec in precisions {
+                for plan in plans {
+                    let w_bytes = prec.weight_bytes_per_elem();
+                    // Gate on the *actual* step about to be simulated:
+                    // weights/shard + KV(b=32, s=1024) must fit.
+                    match check_step(m, dev, plan, w_bytes, 2.0, DECODE_BATCH, DECODE_SEQ) {
+                        Err(e) => rejected.push(e.to_string()),
+                        Ok(fit) => {
+                            let cfg = StepConfig::new(dev, prec).with_plan(plan);
+                            let bd = decode_step(m, &cfg, DECODE_BATCH, DECODE_SEQ);
+                            let chips = plan.chips_per_instance();
+                            let tok_per_chip =
+                                DECODE_BATCH as f64 / bd.seconds / chips as f64;
+                            t.row(vec![
+                                model.into(),
+                                dev.name().into(),
+                                prec.name().into(),
+                                plan.to_string(),
+                                chips.to_string(),
+                                f(fit.weight_bytes_per_chip / 1e9, 1),
+                                f(fit.max_kv_tokens as f64 / 1e3, 0),
+                                f(bd.seconds * 1e3, 3),
+                                f(bd.t_tp_comm * 1e3, 3),
+                                f(bd.pp_bubble_frac, 2),
+                                f(tok_per_chip, 0),
+                            ]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    t.print();
+    println!("\nRejected by the HBM capacity check ({} plans):", rejected.len());
+    for r in &rejected {
+        println!("  - {r}");
+    }
+
+    // ---- Part 2: $/Mtok at SLO for sharded 70B deployments ---------
+    let slo = SloSpec::interactive();
+    let sweep = if fast {
+        SweepConfig { iters: 2, n_requests: 30, seed: 13, ..SweepConfig::new(0.25, 8.0) }
+    } else {
+        SweepConfig { iters: 4, n_requests: 120, seed: 13, ..SweepConfig::new(0.25, 32.0) }
+    };
+    let infra = InfraModel::new(RackConfig::a100_era());
+    println!(
+        "\n$/Mtok at SLO (TTFT p95 <= {:.1} s, TPOT p95 <= {:.0} ms; chat trace,\n\
+         one sharded instance per cluster, goodput normalized per chip):\n",
+        slo.ttft_p95_s,
+        slo.tpot_p95_s * 1e3,
+    );
+    let mut t2 = Table::new(
+        "SLO-priced deployments (sharded instances)",
+        &[
+            "model",
+            "device",
+            "precision",
+            "plan",
+            "QPS @SLO",
+            "tok/s inst",
+            "W/chip",
+            "$/Mtok @SLO",
+        ],
+    );
+    let deployments = [
+        ("llama-8b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::single()),
+        ("llama-8b", Device::Gaudi2, PrecisionMode::fp8_static(), ParallelismPlan::single()),
+        ("llama-70b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::tp(4)),
+        ("llama-70b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::tp(8)),
+        ("llama-70b", Device::Gaudi2, PrecisionMode::fp8_static(), ParallelismPlan::tp(8)),
+    ];
+    for (model, dev, prec, plan) in deployments {
+        let m = by_name(model).unwrap();
+        let out = max_sustainable_qps(
+            &|| {
+                sharded_sim_cluster(m, dev, prec, plan)
+                    .unwrap_or_else(|e| panic!("deployment must be feasible: {e}"))
+            },
+            &TraceConfig::chat,
+            &slo,
+            &sweep,
+        );
+        match out.best {
+            Some(p) => {
+                // Per-chip goodput scaled to the rack's server shape —
+                // the $/Mtok axis Eq. 1 compares across vendors
+                // (cost_per_mtok under the hood).
+                let cost = infra.cost_per_mtok_sharded(
+                    assumed_server_price(dev),
+                    plan.total_chips(),
+                    p.watts_mean,
+                    p.tokens_per_sec,
+                );
+                t2.row(vec![
+                    model.into(),
+                    dev.name().into(),
+                    prec.name().into(),
+                    plan.to_string(),
+                    f(p.qps, 2),
+                    f(p.tokens_per_sec, 0),
+                    f(p.watts_mean, 0),
+                    f(cost, 3),
+                ]);
+            }
+            None => {
+                t2.row(vec![
+                    model.into(),
+                    dev.name().into(),
+                    prec.name().into(),
+                    plan.to_string(),
+                    format!("< {}", sweep.qps_lo),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t2.print();
+    println!(
+        "\n(the 70B rows are the point of the exercise: which fabric a vendor\n \
+         ships decides how much of its single-chip standing survives TP sharding,\n \
+         and the $/Mtok-at-SLO column is where that meets Eq. 1)"
+    );
+}

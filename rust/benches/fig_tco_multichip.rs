@@ -1,0 +1,146 @@
+//! FIG-TCO-MULTICHIP: the $/Mtok-at-SLO frontier for multi-chip
+//! deployments — the paper's Eq. 1 extended past its single-chip
+//! measurements. Each cell builds a cluster of *sharded* model
+//! instances (TP ring all-reduces + PP bubbles priced by
+//! `hwsim::interconnect`), binary-searches the max Poisson QPS meeting
+//! the interactive SLO, and prices the surviving goodput with the
+//! rack/infra model. Alongside the table, every cell is appended to
+//! `BENCH_fig_tco_multichip.json` (directory: `BENCH_JSON_DIR`, default
+//! `.`) so CI can archive the trajectory and PRs stay comparable.
+//!
+//! Run: `cargo bench --bench fig_tco_multichip`
+//! (`SWEEP_FAST=1` shrinks the search for smoke tests.)
+
+use std::collections::BTreeMap;
+
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::PrecisionMode;
+use fp8_tco::coordinator::cluster::{
+    max_sustainable_qps, sharded_sim_cluster, SloSpec, SweepConfig,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::util::json::Json;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama::by_name;
+use fp8_tco::workload::trace::TraceConfig;
+
+fn main() {
+    let fast = std::env::var("SWEEP_FAST").ok().as_deref() == Some("1");
+    let slo = SloSpec::interactive();
+    let sweep = if fast {
+        SweepConfig { iters: 2, n_requests: 30, seed: 17, ..SweepConfig::new(0.25, 8.0) }
+    } else {
+        SweepConfig { iters: 4, n_requests: 120, seed: 17, ..SweepConfig::new(0.25, 32.0) }
+    };
+    let infra = InfraModel::new(RackConfig::a100_era());
+
+    // The frontier: single-chip 8B baselines (paper shape) against the
+    // sharded 70B deployments the interconnect model makes priceable.
+    let cells: [(&str, Device, PrecisionMode, ParallelismPlan); 8] = [
+        ("llama-8b", Device::H100, PrecisionMode::Bf16, ParallelismPlan::single()),
+        ("llama-8b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::single()),
+        ("llama-8b", Device::Gaudi2, PrecisionMode::fp8_static(), ParallelismPlan::single()),
+        ("llama-70b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::tp(2)),
+        ("llama-70b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::tp(4)),
+        ("llama-70b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::tp(8)),
+        ("llama-70b", Device::Gaudi2, PrecisionMode::fp8_static(), ParallelismPlan::single()),
+        ("llama-70b", Device::Gaudi2, PrecisionMode::fp8_static(), ParallelismPlan::tp(8)),
+    ];
+
+    let mut t = Table::new(
+        "Fig. TCO-MULTICHIP — $/Mtok at SLO across (device x precision x plan)",
+        &[
+            "model",
+            "device",
+            "precision",
+            "plan",
+            "QPS @SLO",
+            "tok/s inst",
+            "TPOT p95 ms",
+            "W/chip",
+            "$/Mtok @SLO",
+        ],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for (model, dev, prec, plan) in cells {
+        let m = by_name(model).unwrap();
+        let out = max_sustainable_qps(
+            &|| {
+                sharded_sim_cluster(m, dev, prec, plan)
+                    .unwrap_or_else(|e| panic!("bench cell must be feasible: {e}"))
+            },
+            &TraceConfig::chat,
+            &slo,
+            &sweep,
+        );
+        let mut rec = BTreeMap::new();
+        rec.insert("model".into(), Json::Str(model.into()));
+        rec.insert("device".into(), Json::Str(dev.name().into()));
+        rec.insert("precision".into(), Json::Str(prec.name().into()));
+        rec.insert("plan".into(), Json::Str(plan.to_string()));
+        rec.insert("chips".into(), Json::Num(plan.chips_per_instance() as f64));
+        match out.best {
+            Some(p) => {
+                let cost = infra.cost_per_mtok_sharded(
+                    assumed_server_price(dev),
+                    plan.total_chips(),
+                    p.watts_mean,
+                    p.tokens_per_sec,
+                );
+                t.row(vec![
+                    model.into(),
+                    dev.name().into(),
+                    prec.name().into(),
+                    plan.to_string(),
+                    f(p.qps, 2),
+                    f(p.tokens_per_sec, 0),
+                    f(p.tpot_p95 * 1e3, 2),
+                    f(p.watts_mean, 0),
+                    f(cost, 3),
+                ]);
+                rec.insert("qps".into(), Json::Num(p.qps));
+                rec.insert("tokens_per_sec".into(), Json::Num(p.tokens_per_sec));
+                rec.insert("ttft_p95_s".into(), Json::Num(p.ttft_p95));
+                rec.insert("tpot_p95_s".into(), Json::Num(p.tpot_p95));
+                rec.insert("watts_per_chip".into(), Json::Num(p.watts_mean));
+                rec.insert("usd_per_mtok".into(), Json::Num(cost));
+                rec.insert("feasible".into(), Json::Bool(true));
+            }
+            None => {
+                t.row(vec![
+                    model.into(),
+                    dev.name().into(),
+                    prec.name().into(),
+                    plan.to_string(),
+                    format!("< {}", sweep.qps_lo),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                rec.insert("feasible".into(), Json::Bool(false));
+            }
+        }
+        records.push(Json::Obj(rec));
+    }
+    t.print();
+
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/BENCH_fig_tco_multichip.json");
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("fig_tco_multichip".into()));
+    root.insert("slo_ttft_p95_s".into(), Json::Num(slo.ttft_p95_s));
+    root.insert("slo_tpot_p95_s".into(), Json::Num(slo.tpot_p95_s));
+    root.insert("fast".into(), Json::Bool(fast));
+    root.insert("cells".into(), Json::Arr(records));
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "(sharded 70B rows extend the paper's Fig. 9 axis: the fabric each\n \
+         vendor ships — NVLink vs on-die RoCE — is now part of the TCO verdict)"
+    );
+}

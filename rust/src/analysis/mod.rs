@@ -1,9 +1,16 @@
-//! Analysis layer: roofline/MFU math (§5.2) and the LLM phase
+//! Analysis layer: roofline/MFU math (§5.2), the LLM phase
 //! performance model that composes `workload` FLOPs with `hwsim`
-//! device timing to produce the paper's Figures 2–6.
+//! device timing to produce the paper's Figures 2–6, and the
+//! multi-chip parallelism planner (TP/PP sharding + HBM capacity
+//! feasibility) that extends the model to deployment scale.
 
+pub mod parallel;
 pub mod perfmodel;
 pub mod roofline;
 
+pub use parallel::{
+    auto_plan, check_capacity, check_step, CapacityError, CapacityFit, ParallelismPlan,
+    DEFAULT_MIN_KV_TOKENS,
+};
 pub use perfmodel::{decode_step, prefill, PrecisionMode, StepBreakdown, StepConfig};
 pub use roofline::{mfu, roofline_flops};

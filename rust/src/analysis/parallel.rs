@@ -1,0 +1,457 @@
+//! Multi-chip parallelism planning: TP/PP sharding shapes and the HBM
+//! capacity model that decides whether a (model x device x plan)
+//! deployment is feasible at all.
+//!
+//! The seed perf model divided work by `tp` while ignoring collectives
+//! and never consulted `DeviceSpec::hbm_cap`, so infeasible single-chip
+//! 70B configs simulated happily. This module is the typed gate: every
+//! place a `StepConfig`/`EngineConfig` is built for a real deployment
+//! goes through [`check_capacity`] (weights/shard + KV budget vs. HBM)
+//! or [`auto_plan`], and gets a [`CapacityError`] instead of a silent
+//! impossible simulation.
+
+use std::fmt;
+
+use crate::hwsim::spec::Device;
+use crate::workload::llama::LlamaConfig;
+
+/// How one model instance is sharded across chips. One instance =
+/// `tp * pp` chips acting as a single engine; `replicas` independent
+/// instances serve behind the router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelismPlan {
+    /// Tensor-parallel degree (shards heads / intermediate / vocab).
+    pub tp: usize,
+    /// Pipeline-parallel degree (shards layers into stages).
+    pub pp: usize,
+    /// Independent data-parallel replicas of the sharded instance.
+    pub replicas: usize,
+}
+
+impl Default for ParallelismPlan {
+    fn default() -> Self {
+        ParallelismPlan { tp: 1, pp: 1, replicas: 1 }
+    }
+}
+
+impl fmt::Display for ParallelismPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tp{}", self.tp)?;
+        if self.pp > 1 {
+            write!(f, "-pp{}", self.pp)?;
+        }
+        if self.replicas > 1 {
+            write!(f, "-x{}", self.replicas)?;
+        }
+        Ok(())
+    }
+}
+
+impl ParallelismPlan {
+    pub fn single() -> Self {
+        ParallelismPlan::default()
+    }
+
+    pub fn tp(tp: usize) -> Self {
+        ParallelismPlan { tp, pp: 1, replicas: 1 }
+    }
+
+    pub fn new(tp: usize, pp: usize) -> Self {
+        ParallelismPlan { tp, pp, replicas: 1 }
+    }
+
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Chips forming one model instance (one engine unit).
+    pub fn chips_per_instance(&self) -> usize {
+        self.tp.max(1) * self.pp.max(1)
+    }
+
+    /// Chips across all replicas.
+    pub fn total_chips(&self) -> usize {
+        self.chips_per_instance() * self.replicas.max(1)
+    }
+}
+
+/// Why a deployment cannot run. Typed so callers can auto-replan
+/// (grow the shard) instead of pattern-matching error strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CapacityError {
+    /// The plan's shape does not divide the model architecture.
+    InvalidPlan { model: &'static str, plan: ParallelismPlan, reason: String },
+    /// Per-chip weight shard alone exceeds usable HBM.
+    WeightsExceedHbm {
+        model: &'static str,
+        device: Device,
+        plan: ParallelismPlan,
+        need_bytes: f64,
+        have_bytes: f64,
+    },
+    /// Weights fit, but the leftover KV budget is below the floor the
+    /// caller needs to serve its workload.
+    KvBelowFloor {
+        model: &'static str,
+        device: Device,
+        plan: ParallelismPlan,
+        kv_tokens: usize,
+        min_kv_tokens: usize,
+    },
+    /// Weights fit, but a concrete step's `batch x seq` KV does not
+    /// (the [`check_step`] verdict — distinct from a serviceability
+    /// floor so callers can tell "bad config" from "bad batch").
+    StepDoesntFit {
+        model: &'static str,
+        device: Device,
+        plan: ParallelismPlan,
+        need_tokens: usize,
+        have_tokens: usize,
+    },
+}
+
+impl fmt::Display for CapacityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CapacityError::InvalidPlan { model, plan, reason } => {
+                write!(f, "{model} cannot shard as {plan}: {reason}")
+            }
+            CapacityError::WeightsExceedHbm { model, device, plan, need_bytes, have_bytes } => {
+                write!(
+                    f,
+                    "{model} @ {plan} does not fit {}: weight shard {:.1} GB > usable HBM {:.1} GB",
+                    device.name(),
+                    need_bytes / 1e9,
+                    have_bytes / 1e9,
+                )
+            }
+            CapacityError::KvBelowFloor { model, device, plan, kv_tokens, min_kv_tokens } => {
+                write!(
+                    f,
+                    "{model} @ {plan} on {}: KV budget {} tokens < floor {}",
+                    device.name(),
+                    kv_tokens,
+                    min_kv_tokens,
+                )
+            }
+            CapacityError::StepDoesntFit { model, device, plan, need_tokens, have_tokens } => {
+                write!(
+                    f,
+                    "{model} @ {plan} on {}: step needs {} KV tokens (batch x seq), budget {}",
+                    device.name(),
+                    need_tokens,
+                    have_tokens,
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for CapacityError {}
+
+/// Fraction of HBM held back for activations/workspace/fragmentation.
+pub const HBM_RESERVE_FRAC: f64 = 0.05;
+
+/// Minimum instance-level KV tokens for a deployment to be considered
+/// serviceable: a 32-deep continuous batch of 1K contexts (the
+/// paper's decode measurement shape), which also covers a handful of
+/// full-length 4K chat prompts in flight.
+pub const DEFAULT_MIN_KV_TOKENS: usize = 32_768;
+
+/// What fits where, per chip and per instance.
+#[derive(Debug, Clone)]
+pub struct CapacityFit {
+    pub plan: ParallelismPlan,
+    /// Weight shard resident on each chip (bytes).
+    pub weight_bytes_per_chip: f64,
+    /// HBM left for KV on each chip after weights + reserve (bytes).
+    pub kv_budget_bytes_per_chip: f64,
+    /// KV bytes one token costs on each chip: layers/pp stages times
+    /// kv_heads/min(tp, kv_heads) head shards (GQA replicates KV
+    /// heads beyond `kv_heads`-way TP rather than slicing further).
+    pub kv_bytes_per_token_per_chip: f64,
+    /// Instance-level KV capacity in tokens (every chip holds its own
+    /// shard of the same token's KV, so the instance token budget is
+    /// the per-chip budget over the per-chip per-token cost).
+    pub max_kv_tokens: usize,
+}
+
+/// Check that `model` sharded by `plan` fits `device` HBM with at
+/// least `min_kv_tokens` of instance-level KV budget left over.
+/// Weights are assumed uniformly sharded across the `tp * pp` chips
+/// of one instance (embedding/LM-head asymmetry between pipeline
+/// stages is ignored at this granularity); KV shards across pipeline
+/// stages and at most `kv_heads` TP ways (GQA replication beyond).
+pub fn check_capacity(
+    model: &'static LlamaConfig,
+    device: Device,
+    plan: ParallelismPlan,
+    weight_bytes_per_elem: f64,
+    kv_bytes_per_elem: f64,
+    min_kv_tokens: usize,
+) -> Result<CapacityFit, CapacityError> {
+    if plan.tp == 0 || plan.pp == 0 || plan.replicas == 0 {
+        return Err(CapacityError::InvalidPlan {
+            model: model.name,
+            plan,
+            reason: "tp, pp and replicas must all be >= 1".into(),
+        });
+    }
+    if model.heads % plan.tp != 0 {
+        return Err(CapacityError::InvalidPlan {
+            model: model.name,
+            plan,
+            reason: format!("tp={} does not divide {} query heads", plan.tp, model.heads),
+        });
+    }
+    if model.layers % plan.pp != 0 {
+        return Err(CapacityError::InvalidPlan {
+            model: model.name,
+            plan,
+            reason: format!("pp={} does not divide {} layers", plan.pp, model.layers),
+        });
+    }
+    let chips = plan.chips_per_instance() as f64;
+    // §5.2 precision split: block linears at the configured width,
+    // embedding/LM head resident in BF16 regardless.
+    let weight_bytes_per_chip =
+        model.weight_bytes_mixed(weight_bytes_per_elem, 2.0) / chips;
+    let usable = device.spec().hbm_cap * (1.0 - HBM_RESERVE_FRAC);
+    if weight_bytes_per_chip > usable {
+        return Err(CapacityError::WeightsExceedHbm {
+            model: model.name,
+            device,
+            plan,
+            need_bytes: weight_bytes_per_chip,
+            have_bytes: usable,
+        });
+    }
+    let kv_budget_bytes_per_chip = usable - weight_bytes_per_chip;
+    // GQA: KV has only `kv_heads` shards to give — TP degrees beyond
+    // that replicate KV heads instead of slicing them further, so the
+    // per-chip KV footprint stops shrinking at min(tp, kv_heads).
+    let kv_shards = (plan.tp.min(model.kv_heads) * plan.pp) as f64;
+    let kv_bytes_per_token_per_chip = model.kv_bytes_per_token(kv_bytes_per_elem) / kv_shards;
+    let max_kv_tokens = (kv_budget_bytes_per_chip / kv_bytes_per_token_per_chip) as usize;
+    if max_kv_tokens < min_kv_tokens {
+        return Err(CapacityError::KvBelowFloor {
+            model: model.name,
+            device,
+            plan,
+            kv_tokens: max_kv_tokens,
+            min_kv_tokens,
+        });
+    }
+    Ok(CapacityFit {
+        plan,
+        weight_bytes_per_chip,
+        kv_budget_bytes_per_chip,
+        kv_bytes_per_token_per_chip,
+        max_kv_tokens,
+    })
+}
+
+/// Check a concrete step shape: weights plus KV for `batch` sequences
+/// of context `seq` must fit the instance. This is the gate in front
+/// of `perfmodel::{decode_step, prefill}` for batch sweeps; a budget
+/// miss comes back as [`CapacityError::StepDoesntFit`] naming the
+/// step's demand, not as a phantom configuration "floor".
+pub fn check_step(
+    model: &'static LlamaConfig,
+    device: Device,
+    plan: ParallelismPlan,
+    weight_bytes_per_elem: f64,
+    kv_bytes_per_elem: f64,
+    batch: usize,
+    seq: usize,
+) -> Result<CapacityFit, CapacityError> {
+    let need = batch * seq;
+    check_capacity(model, device, plan, weight_bytes_per_elem, kv_bytes_per_elem, need).map_err(
+        |e| match e {
+            CapacityError::KvBelowFloor { model, device, plan, kv_tokens, .. } => {
+                CapacityError::StepDoesntFit {
+                    model,
+                    device,
+                    plan,
+                    need_tokens: need,
+                    have_tokens: kv_tokens,
+                }
+            }
+            other => other,
+        },
+    )
+}
+
+/// Candidate shard shapes in ascending chip count: prefer pure TP
+/// inside the scale-up domain (one all-reduce fabric hop structure),
+/// fall back to TP x PP once a single domain is not enough.
+const PLAN_CANDIDATES: [(usize, usize); 8] =
+    [(1, 1), (2, 1), (4, 1), (8, 1), (4, 2), (8, 2), (8, 4), (8, 8)];
+
+/// Smallest plan (by chip count, TP-first) under which the model fits
+/// the device with `min_kv_tokens` of KV headroom. Returns the last
+/// capacity error when nothing fits.
+pub fn auto_plan(
+    model: &'static LlamaConfig,
+    device: Device,
+    weight_bytes_per_elem: f64,
+    kv_bytes_per_elem: f64,
+    min_kv_tokens: usize,
+) -> Result<ParallelismPlan, CapacityError> {
+    let mut last_err = None;
+    for (tp, pp) in PLAN_CANDIDATES {
+        let plan = ParallelismPlan::new(tp, pp);
+        match check_capacity(model, device, plan, weight_bytes_per_elem, kv_bytes_per_elem, min_kv_tokens)
+        {
+            Ok(fit) => return Ok(fit.plan),
+            Err(e @ CapacityError::InvalidPlan { .. }) => {
+                // Shape mismatch, not a capacity verdict: keep looking
+                // but remember it in case nothing else fits either.
+                last_err.get_or_insert(e);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.expect("candidate list is non-empty"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::llama::by_name;
+
+    #[test]
+    fn plan_display_and_chips() {
+        assert_eq!(ParallelismPlan::single().to_string(), "tp1");
+        assert_eq!(ParallelismPlan::new(4, 2).to_string(), "tp4-pp2");
+        assert_eq!(
+            ParallelismPlan::new(8, 2).with_replicas(3).to_string(),
+            "tp8-pp2-x3"
+        );
+        assert_eq!(ParallelismPlan::new(4, 2).chips_per_instance(), 8);
+        assert_eq!(ParallelismPlan::new(4, 2).with_replicas(3).total_chips(), 24);
+    }
+
+    #[test]
+    fn llama8b_fits_single_h100() {
+        let m = by_name("llama-8b").unwrap();
+        let fit = check_capacity(m, Device::H100, ParallelismPlan::single(), 1.0, 2.0, 16_384)
+            .expect("8B FP8 fits one H100");
+        assert!(fit.weight_bytes_per_chip > 7e9 && fit.weight_bytes_per_chip < 10e9);
+        assert!(fit.max_kv_tokens > 100_000, "{}", fit.max_kv_tokens);
+    }
+
+    #[test]
+    fn llama70b_bf16_rejected_on_single_chip() {
+        let m = by_name("llama-70b").unwrap();
+        let err = check_capacity(m, Device::H100, ParallelismPlan::single(), 2.0, 2.0, 1)
+            .unwrap_err();
+        assert!(matches!(err, CapacityError::WeightsExceedHbm { .. }), "{err}");
+        // The error is printable and names the offenders.
+        let msg = err.to_string();
+        assert!(msg.contains("llama-70b") && msg.contains("H100"), "{msg}");
+    }
+
+    #[test]
+    fn llama70b_fp8_single_chip_fails_kv_floor() {
+        // ~70.6 GB of FP8 weights squeeze into 76 GB usable, but the
+        // ~16.6K-token KV leftover is half the serviceable floor.
+        let m = by_name("llama-70b").unwrap();
+        let err = check_capacity(
+            m,
+            Device::H100,
+            ParallelismPlan::single(),
+            1.0,
+            2.0,
+            DEFAULT_MIN_KV_TOKENS,
+        )
+        .unwrap_err();
+        assert!(matches!(err, CapacityError::KvBelowFloor { .. }), "{err}");
+    }
+
+    #[test]
+    fn llama70b_fp8_fits_at_tp2_and_above() {
+        let m = by_name("llama-70b").unwrap();
+        for tp in [2usize, 4, 8] {
+            let fit = check_capacity(
+                m,
+                Device::H100,
+                ParallelismPlan::tp(tp),
+                1.0,
+                2.0,
+                DEFAULT_MIN_KV_TOKENS,
+            )
+            .unwrap_or_else(|e| panic!("tp{tp}: {e}"));
+            assert!(fit.max_kv_tokens >= DEFAULT_MIN_KV_TOKENS);
+        }
+    }
+
+    #[test]
+    fn kv_budget_grows_with_shard_count() {
+        let m = by_name("llama-70b").unwrap();
+        let t2 = check_capacity(m, Device::H100, ParallelismPlan::tp(2), 1.0, 2.0, 1)
+            .unwrap()
+            .max_kv_tokens;
+        let t8 = check_capacity(m, Device::H100, ParallelismPlan::tp(8), 1.0, 2.0, 1)
+            .unwrap()
+            .max_kv_tokens;
+        assert!(t8 > t2 * 2, "tp2 {t2} tp8 {t8}");
+    }
+
+    #[test]
+    fn kv_sharding_saturates_at_kv_heads() {
+        // GQA: beyond kv_heads-way TP, KV is replicated, not sliced —
+        // per-chip KV cost must stop shrinking (llama-8b: kv_heads=8).
+        let m = by_name("llama-8b").unwrap();
+        let at = |tp: usize| {
+            check_capacity(m, Device::H100, ParallelismPlan::tp(tp), 1.0, 2.0, 1)
+                .unwrap()
+                .kv_bytes_per_token_per_chip
+        };
+        assert!(at(8) < at(4));
+        assert_eq!(at(16), at(8), "tp16 must not pretend to halve KV again");
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        let m = by_name("llama-8b").unwrap(); // 32 heads, 32 layers
+        let bad_tp = check_capacity(m, Device::H100, ParallelismPlan::tp(3), 1.0, 2.0, 1);
+        assert!(matches!(bad_tp, Err(CapacityError::InvalidPlan { .. })));
+        let bad_pp =
+            check_capacity(m, Device::H100, ParallelismPlan::new(1, 3), 1.0, 2.0, 1);
+        assert!(matches!(bad_pp, Err(CapacityError::InvalidPlan { .. })));
+        let zero = check_capacity(m, Device::H100, ParallelismPlan::new(0, 1), 1.0, 2.0, 1);
+        assert!(matches!(zero, Err(CapacityError::InvalidPlan { .. })));
+    }
+
+    #[test]
+    fn auto_plan_prefers_smallest_feasible_shard() {
+        let m8 = by_name("llama-8b").unwrap();
+        let p8 = auto_plan(m8, Device::H100, 1.0, 2.0, DEFAULT_MIN_KV_TOKENS).unwrap();
+        assert_eq!(p8, ParallelismPlan::single());
+        let m70 = by_name("llama-70b").unwrap();
+        let p70 = auto_plan(m70, Device::H100, 1.0, 2.0, DEFAULT_MIN_KV_TOKENS).unwrap();
+        assert_eq!(p70, ParallelismPlan::tp(2), "tp2 is the smallest FP8 70B fit");
+        // Gaudi 2's 96 GB admits 70B FP8 on a single chip.
+        let g70 = auto_plan(m70, Device::Gaudi2, 1.0, 2.0, DEFAULT_MIN_KV_TOKENS).unwrap();
+        assert_eq!(g70, ParallelismPlan::single());
+    }
+
+    #[test]
+    fn check_step_gates_concrete_batches() {
+        let m = by_name("llama-8b").unwrap();
+        // 64 x 2K contexts of BF16 KV on one H100: ~17 GB, fits.
+        assert!(check_step(m, Device::H100, ParallelismPlan::single(), 1.0, 2.0, 64, 2048).is_ok());
+        // 512 x 8K does not (512 GB of KV) — and the verdict names the
+        // step's demand rather than a phantom configuration floor.
+        let err = check_step(m, Device::H100, ParallelismPlan::single(), 1.0, 2.0, 512, 8192)
+            .unwrap_err();
+        match err {
+            CapacityError::StepDoesntFit { need_tokens, .. } => {
+                assert_eq!(need_tokens, 512 * 8192)
+            }
+            other => panic!("expected StepDoesntFit, got {other}"),
+        }
+    }
+}

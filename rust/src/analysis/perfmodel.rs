@@ -5,7 +5,17 @@
 //! Precision accounting follows §5.2 exactly: block linears run at the
 //! configured precision, the LM head and attention stay BF16, KV cache
 //! dtype is configurable (BF16 default).
+//!
+//! Multi-chip accounting (DESIGN.md §6): tensor parallelism adds two
+//! ring all-reduces per layer (post-attention, post-MLP) over the
+//! device's scale-up fabric ([`crate::hwsim::interconnect`]); pipeline
+//! parallelism splits layers into `pp` stages fed by `microbatches`
+//! microbatches, paying per-hop activation transfers and the classic
+//! fill/drain bubble `(pp-1)/(pp-1+microbatches)`. At `tp=1, pp=1`
+//! both terms are exactly zero and the step reproduces the paper's
+//! single-chip model bit-for-bit.
 
+use super::parallel::ParallelismPlan;
 use crate::hwsim::calib;
 use crate::hwsim::gemm::{gemm_time, GemmConfig};
 use crate::hwsim::power::{self, PowerCap};
@@ -45,6 +55,16 @@ impl PrecisionMode {
             PrecisionMode::Fp8 { scaling: Scaling::HwPow2, .. } => "fp8-hw",
         }
     }
+
+    /// Resident bytes/element of the block-linear weights (FP8 halves
+    /// them; the embedding/LM head stays BF16 either way — capacity
+    /// checks account for that via `weight_bytes_mixed`).
+    pub fn weight_bytes_per_elem(self) -> f64 {
+        match self {
+            PrecisionMode::Bf16 => 2.0,
+            PrecisionMode::Fp8 { .. } => 1.0,
+        }
+    }
 }
 
 /// One simulated model execution setup.
@@ -54,6 +74,12 @@ pub struct StepConfig {
     pub precision: PrecisionMode,
     /// Tensor-parallel degree (shards heads / intermediate / vocab).
     pub tp: usize,
+    /// Pipeline-parallel degree (shards layers into stages).
+    pub pp: usize,
+    /// Microbatches fed through the pipeline per step; 0 = auto
+    /// (`pp`, i.e. just enough to keep every stage busy once filled).
+    /// Ignored when `pp == 1`.
+    pub microbatches: usize,
     /// KV-cache element bytes (2.0 = BF16, 1.0 = FP8 KV).
     pub kv_bytes: f64,
     pub power_cap: PowerCap,
@@ -61,7 +87,15 @@ pub struct StepConfig {
 
 impl StepConfig {
     pub fn new(device: Device, precision: PrecisionMode) -> Self {
-        StepConfig { device, precision, tp: 1, kv_bytes: 2.0, power_cap: PowerCap::None }
+        StepConfig {
+            device,
+            precision,
+            tp: 1,
+            pp: 1,
+            microbatches: 0,
+            kv_bytes: 2.0,
+            power_cap: PowerCap::None,
+        }
     }
 
     pub fn with_cap(mut self, watts: f64) -> Self {
@@ -73,26 +107,55 @@ impl StepConfig {
         self.tp = tp;
         self
     }
+
+    pub fn with_pp(mut self, pp: usize) -> Self {
+        self.pp = pp;
+        self
+    }
+
+    pub fn with_microbatches(mut self, mb: usize) -> Self {
+        self.microbatches = mb;
+        self
+    }
+
+    /// Adopt a [`ParallelismPlan`]'s shard shape (replicas are a
+    /// cluster-level concern — `sharded_sim_cluster` consumes them —
+    /// and do not alter one instance's step).
+    pub fn with_plan(mut self, plan: ParallelismPlan) -> Self {
+        self.tp = plan.tp.max(1);
+        self.pp = plan.pp.max(1);
+        self
+    }
 }
 
-/// Timing decomposition of one phase step (per device, i.e. one TP
-/// shard; collectives are not modelled — the paper measures single
-/// chips).
+/// Timing decomposition of one phase step. Work terms (`t_linears` ..
+/// `t_lm_head`) are per TP shard over the full batch and all layers;
+/// `seconds` is the end-to-end instance latency including TP
+/// collectives and the PP pipeline (fill/drain bubble + activation
+/// hops). At `tp=1, pp=1` the comm terms are zero and `seconds`
+/// equals the single-chip model the paper measures.
 #[derive(Debug, Clone)]
 pub struct StepBreakdown {
-    /// Total step latency (s), post power-cap.
+    /// Total step latency (s), post power-cap, including comm.
     pub seconds: f64,
     pub t_linears: f64,
     pub t_attention_kv: f64,
     pub t_softmax: f64,
     pub t_lm_head: f64,
-    /// Model FLOPs executed (Eq. 3/6 accounting, whole model).
+    /// Time in TP ring all-reduces (2 per layer), whole step.
+    pub t_tp_comm: f64,
+    /// Time in PP activation transfers along the pipeline.
+    pub t_pp_comm: f64,
+    /// Pipeline bubble fraction `(pp-1)/(pp-1+microbatches)`; 0 when
+    /// `pp == 1`.
+    pub pp_bubble_frac: f64,
+    /// Model FLOPs executed per chip (Eq. 3/6 over tp * pp shards).
     pub flops: f64,
-    /// Achieved model throughput (FLOP/s).
+    /// Achieved model throughput (FLOP/s, per chip).
     pub achieved_flops: f64,
     /// Average matrix-engine utilization driving the power model.
     pub util: f64,
-    /// Average power draw (W).
+    /// Average power draw (W, per chip while busy).
     pub watts: f64,
 }
 
@@ -102,12 +165,23 @@ impl StepBreakdown {
     }
 }
 
-/// Time one batched decode step: `batch` sequences, each with context
-/// length `seq` (uniform, the paper's measurement setup).
-pub fn decode_step(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> StepBreakdown {
+/// Work-time decomposition of one decode pass (no comm, no cap).
+struct DecodeWork {
+    t_raw: f64,
+    t_lin: f64,
+    t_kv: f64,
+    t_exp: f64,
+    t_head: f64,
+    lin_compute_frac_acc: f64,
+}
+
+fn decode_work(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> DecodeWork {
     let tp = cfg.tp.max(1);
     let h = m.hidden;
-    let kv_dim = m.kv_heads * m.head_dim() / tp;
+    // GQA: KV heads shard at most kv_heads ways; TP beyond that
+    // replicates them (same rule as the capacity model).
+    let kv_shard = tp.min(m.kv_heads).max(1);
+    let kv_dim = m.kv_heads * m.head_dim() / kv_shard;
     let inter = m.intermediate / tp;
     let gcfg = cfg.precision.gemm_cfg();
 
@@ -135,7 +209,7 @@ pub fn decode_step(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) 
     // --- attention: stream each sequence's KV cache (memory-bound,
     // CI bounded by g — §5.2), plus the thin score/PV GEMMs.
     let spec = cfg.device.spec();
-    // kv_dim = kv_heads/tp * head_dim, so bytes = 2 * b * s * kv_dim * kv_bytes.
+    // Per-chip KV shard bytes = 2 * b * s * kv_dim * kv_bytes.
     let kv_bytes_layer =
         2.0 * batch as f64 * seq as f64 * kv_dim as f64 * cfg.kv_bytes;
     let t_kv_layer = kv_bytes_layer / (spec.hbm_bw * calib::hbm_stream_eff(cfg.device));
@@ -152,24 +226,54 @@ pub fn decode_step(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) 
     let head = gemm_time(cfg.device, batch, h, m.vocab / tp, GemmConfig::bf16());
     let t_head = head.seconds;
 
-    // --- totals + power.
-    let t_raw = t_lin + t_kv + t_exp + t_head;
+    DecodeWork {
+        t_raw: t_lin + t_kv + t_exp + t_head,
+        t_lin,
+        t_kv,
+        t_exp,
+        t_head,
+        lin_compute_frac_acc,
+    }
+}
+
+/// Time one batched decode step: `batch` sequences, each with context
+/// length `seq` (uniform, the paper's measurement setup).
+pub fn decode_step(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> StepBreakdown {
+    let tp = cfg.tp.max(1);
+    let w = decode_work(m, cfg, batch, seq);
+
     let lens = vec![seq; batch];
     let flops = m.decode_step_flops(&lens) / tp as f64;
+    let spec = cfg.device.spec();
     let peak = match cfg.precision {
         PrecisionMode::Bf16 => spec.peak_bf16,
         PrecisionMode::Fp8 { .. } => spec.peak_fp8,
     };
-    let util = (flops / t_raw / peak).min(1.0);
-    let compute_frac = (lin_compute_frac_acc + t_exp) / t_raw;
-    finish(cfg, t_raw, util, compute_frac, flops, t_lin, t_kv, t_exp, t_head)
+    let util = (flops / w.t_raw / peak).min(1.0);
+    let compute_frac = (w.lin_compute_frac_acc + w.t_exp) / w.t_raw;
+
+    // A decode microbatch RE-TIMES the thin GEMMs at the smaller M:
+    // decode is weight-streaming bound, so splitting the batch barely
+    // shrinks per-microbatch time (the weights stream again) — which
+    // is exactly why PP microbatching does not buy decode latency.
+    let mb = resolve_mb(cfg, batch);
+    let t_work_mb_raw = if cfg.pp.max(1) == 1 {
+        w.t_raw
+    } else {
+        decode_work(m, cfg, batch.div_ceil(mb), seq).t_raw
+    };
+
+    let comm = CommShape { tokens: batch, hidden: m.hidden, layers: m.layers, mb, t_work_mb_raw };
+    finish(cfg, w.t_raw, util, compute_frac, flops, w.t_lin, w.t_kv, w.t_exp, w.t_head, comm)
 }
 
 /// Time one prefill of `batch` sequences of length `seq`.
 pub fn prefill(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> StepBreakdown {
     let tp = cfg.tp.max(1);
     let h = m.hidden;
-    let kv_dim = m.kv_heads * m.head_dim() / tp;
+    // GQA: same KV-shard saturation rule as decode/capacity.
+    let kv_shard = tp.min(m.kv_heads).max(1);
+    let kv_dim = m.kv_heads * m.head_dim() / kv_shard;
     let inter = m.intermediate / tp;
     let gcfg = cfg.precision.gemm_cfg();
     let mm = batch * seq; // token-parallel GEMMs (compute-bound, §5.3)
@@ -214,8 +318,42 @@ pub fn prefill(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> S
         PrecisionMode::Fp8 { .. } => spec.peak_fp8,
     };
     let util = (flops / t_raw / peak).min(1.0);
-    // Prefill is essentially all compute-bound.
-    finish(cfg, t_raw, util, 0.95, flops, t_lin, t_attn, t_exp, t_head)
+    // Prefill is essentially all compute-bound, so a microbatch of
+    // 1/mb of the tokens takes ~1/mb of the time — no re-timing pass
+    // needed (unlike decode, where weights re-stream per microbatch).
+    let mb = resolve_mb(cfg, mm);
+    let comm = CommShape {
+        tokens: mm,
+        hidden: h,
+        layers: m.layers,
+        mb,
+        t_work_mb_raw: t_raw / mb as f64,
+    };
+    finish(cfg, t_raw, util, 0.95, flops, t_lin, t_attn, t_exp, t_head, comm)
+}
+
+/// Microbatch count: `pp` by default (fills the pipeline exactly
+/// once), clamped to the available tokens; always 1 when `pp == 1`.
+fn resolve_mb(cfg: &StepConfig, tokens: usize) -> usize {
+    let pp = cfg.pp.max(1);
+    if pp == 1 {
+        1
+    } else {
+        let want = if cfg.microbatches > 0 { cfg.microbatches } else { pp };
+        want.clamp(1, tokens.max(1))
+    }
+}
+
+/// Activation geometry the collectives move (`tokens` rows of
+/// `hidden` BF16 activations, twice per layer for TP, once per stage
+/// hop for PP) plus the pipeline's microbatching: `mb` microbatches,
+/// each costing `t_work_mb_raw` seconds of whole-model work.
+struct CommShape {
+    tokens: usize,
+    hidden: usize,
+    layers: usize,
+    mb: usize,
+    t_work_mb_raw: f64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -229,8 +367,11 @@ fn finish(
     t_kv: f64,
     t_exp: f64,
     t_head: f64,
+    comm: CommShape,
 ) -> StepBreakdown {
-    let (seconds, watts) = match cfg.power_cap {
+    // Power capping slows the on-chip work; collectives ride the
+    // fabric and are unaffected.
+    let (t_work, watts) = match cfg.power_cap {
         PowerCap::None => (t_raw, power::power_draw(cfg.device, util)),
         PowerCap::PerGpu(w) => {
             let capped = power::apply_cap(cfg.device, w, t_raw, util, compute_frac);
@@ -243,14 +384,62 @@ fn finish(
             (capped.seconds, capped.watts)
         }
     };
+
+    let tp = cfg.tp.max(1);
+    let pp = cfg.pp.max(1);
+    let ic = cfg.device.interconnect();
+    let chips = tp * pp;
+
+    let mb = comm.mb.max(1);
+    let tokens_per_mb = comm.tokens.div_ceil(mb);
+    let act_bytes = tokens_per_mb as f64 * comm.hidden as f64 * 2.0;
+
+    // TP: two ring all-reduces per layer (post-attention projection,
+    // post-MLP down projection) along one microbatch's traversal of
+    // the whole model.
+    let t_tp_mb = if tp > 1 {
+        2.0 * comm.layers as f64 * ic.allreduce_time(tp, act_bytes)
+    } else {
+        0.0
+    };
+
+    // The power cap stretches on-chip work; apply the same stretch to
+    // the re-timed microbatch work (collectives ride the fabric and
+    // are unaffected).
+    let stretch = if t_raw > 0.0 { t_work / t_raw } else { 1.0 };
+
+    // PP: store-and-forward pipeline over `pp` stages. Each of the
+    // (mb + pp - 1) slots costs one stage's share of a microbatch's
+    // work + TP comm, plus one activation hop; the fill/drain slots
+    // are the bubble. All reported comm is the critical-path share,
+    // so the terms stay commensurate with `seconds`.
+    let (seconds, t_tp_comm, t_pp_comm, pp_bubble_frac) = if pp == 1 {
+        (t_work + t_tp_mb, t_tp_mb, 0.0, 0.0)
+    } else {
+        let hop = ic.p2p_time(act_bytes, chips <= ic.scale_up_domain);
+        let slots = (mb + pp - 1) as f64;
+        let ppf = pp as f64;
+        let slot_time = (comm.t_work_mb_raw * stretch + t_tp_mb) / ppf + hop;
+        (
+            slots * slot_time,
+            slots * t_tp_mb / ppf,
+            slots * hop,
+            (pp - 1) as f64 / slots,
+        )
+    };
+
+    let flops_per_chip = flops / pp as f64;
     StepBreakdown {
         seconds,
         t_linears: t_lin,
         t_attention_kv: t_kv,
         t_softmax: t_exp,
         t_lm_head: t_head,
-        flops,
-        achieved_flops: flops / seconds,
+        t_tp_comm,
+        t_pp_comm,
+        pp_bubble_frac,
+        flops: flops_per_chip,
+        achieved_flops: flops_per_chip / seconds,
         util,
         watts,
     }

@@ -1,9 +1,10 @@
 //! Cluster simulator: a virtual-time event loop over the router's
 //! engine pool, plus the open-loop SLO load sweep built on it.
 //!
-//! `Router::run_to_completion` drains each engine independently — fine
-//! for closed batches, wrong for open-loop traffic, where arrivals and
-//! step completions interleave on one timeline. [`Cluster::run`]
+//! `Router::drain_closed_batch` drains each engine independently —
+//! fine for closed batches, wrong for open-loop traffic, where
+//! arrivals and step completions interleave on one timeline (its old
+//! `run_to_completion` name is deprecated). [`Cluster::run`]
 //! merges a streaming arrival source (any `Iterator<Item = Request>`,
 //! e.g. [`TraceGenerator`](crate::workload::trace::TraceGenerator))
 //! with per-engine step completions:
@@ -33,9 +34,11 @@ use super::engine::{Engine, EngineConfig};
 use super::kv_cache::KvCacheConfig;
 use super::metrics::Metrics;
 use super::router::{EngineRating, RoutePolicy, Router};
+use crate::analysis::parallel::{CapacityError, ParallelismPlan};
 use crate::analysis::perfmodel::{PrecisionMode, StepConfig};
 use crate::hwsim::spec::Device;
 use crate::workload::llama;
+use crate::workload::llama::LlamaConfig;
 use crate::workload::trace::{Request, TraceConfig, TraceGenerator};
 
 pub struct Cluster<B: ExecutionBackend> {
@@ -101,13 +104,42 @@ impl<B: ExecutionBackend> Cluster<B> {
     }
 }
 
+/// Homogeneous simulated cluster of *sharded* model instances: the
+/// plan's full deployment shape is honored — `plan.replicas` engines,
+/// each one a `plan.tp x plan.pp`-chip instance of `model` on `dev`.
+/// The KV pool is sized per instance from the device spec through the
+/// HBM capacity check, so an infeasible (model x device x plan)
+/// deployment is a typed error, not a cluster that happily simulates
+/// impossible hardware. Least-loaded routing, batch cap 64 — the
+/// `sim_cluster` conventions.
+pub fn sharded_sim_cluster(
+    model: &'static LlamaConfig,
+    dev: Device,
+    prec: PrecisionMode,
+    plan: ParallelismPlan,
+) -> Result<Cluster<SimBackend>, CapacityError> {
+    let w_bytes = prec.weight_bytes_per_elem();
+    let n_instances = plan.replicas.max(1);
+    let mut engines = Vec::with_capacity(n_instances);
+    for _ in 0..n_instances {
+        let mut cfg = EngineConfig::for_instance(model, dev, plan, w_bytes, 2.0)?;
+        cfg.batcher.max_batch = 64;
+        let backend = SimBackend::new(model, StepConfig::new(dev, prec).with_plan(plan));
+        engines.push(Engine::new(cfg, backend));
+    }
+    let ratings =
+        vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n_instances];
+    Ok(Cluster::new(Router::new(engines, ratings, RoutePolicy::LeastLoaded)))
+}
+
 /// Homogeneous simulated cluster for sweeps, examples and benches:
-/// `n_engines` engines of the same device×precision serving llama-8b,
-/// KV pool sized from device HBM (FP8 weights halve the weight
-/// footprint), least-loaded routing, batch cap 64.
+/// `n_engines` single-chip (TP=1) engines serving llama-8b — the
+/// paper's own measurement shape. KV pool sized from device HBM (FP8
+/// weights halve the weight footprint), least-loaded routing, batch
+/// cap 64. Multi-chip deployments go through [`sharded_sim_cluster`].
 pub fn sim_cluster(dev: Device, prec: PrecisionMode, n_engines: usize) -> Cluster<SimBackend> {
     let model = llama::by_name("llama-8b").unwrap();
-    let w_bytes = if prec == PrecisionMode::Bf16 { 2.0 } else { 1.0 };
+    let w_bytes = prec.weight_bytes_per_elem();
     let engines: Vec<Engine<SimBackend>> = (0..n_engines)
         .map(|_| {
             let kv =
@@ -412,6 +444,32 @@ mod tests {
     #[test]
     fn sim_cluster_factory_serves() {
         let mut c = sim_cluster(Device::H100, PrecisionMode::fp8_static(), 2);
+        assert_eq!(c.router.engines.len(), 2);
+        assert!(c.run(vec![req(0, 0.0, 64, 8), req(1, 0.5, 64, 8)]));
+        assert_eq!(c.merged_metrics().requests_done, 2);
+    }
+
+    #[test]
+    fn sharded_cluster_serves_70b_and_rejects_single_chip() {
+        use crate::analysis::parallel::ParallelismPlan;
+        let m70 = by_name("llama-70b").unwrap();
+        // 70B BF16 on one H100 chip: typed capacity rejection.
+        let err = sharded_sim_cluster(
+            m70,
+            Device::H100,
+            PrecisionMode::Bf16,
+            ParallelismPlan::single(),
+        );
+        assert!(err.is_err(), "70B BF16 must not fit one chip");
+        // The same model at TP=4 FP8, twice replicated, is a working
+        // two-engine pool.
+        let mut c = sharded_sim_cluster(
+            m70,
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::tp(4).with_replicas(2),
+        )
+        .expect("70B fits at tp4");
         assert_eq!(c.router.engines.len(), 2);
         assert!(c.run(vec![req(0, 0.0, 64, 8), req(1, 0.5, 64, 8)]));
         assert_eq!(c.merged_metrics().requests_done, 2);

@@ -50,6 +50,29 @@ impl EngineConfig {
             policy: SchedulerPolicy::Fused,
         }
     }
+
+    /// Config for one *sharded* model instance (the engine unit of a
+    /// multi-chip deployment): the KV pool is sized from the device
+    /// spec through the HBM capacity check, so an infeasible
+    /// (model x device x plan) combination is a typed error here
+    /// rather than a silently impossible simulation downstream.
+    pub fn for_instance(
+        model: &'static crate::workload::llama::LlamaConfig,
+        device: crate::hwsim::spec::Device,
+        plan: crate::analysis::parallel::ParallelismPlan,
+        weight_bytes_per_elem: f64,
+        kv_bytes_per_elem: f64,
+    ) -> Result<Self, crate::analysis::parallel::CapacityError> {
+        let kv = KvCacheConfig::for_instance(
+            model,
+            device,
+            plan,
+            weight_bytes_per_elem,
+            kv_bytes_per_elem,
+            crate::analysis::parallel::DEFAULT_MIN_KV_TOKENS,
+        )?;
+        Ok(EngineConfig::new(kv))
+    }
 }
 
 pub struct Engine<B: ExecutionBackend> {

@@ -5,7 +5,12 @@
 //! cache". Blocks are fixed-size token runs; capacity derives from
 //! device HBM minus weights.
 
+use crate::analysis::parallel::{check_capacity, CapacityError, ParallelismPlan};
+use crate::hwsim::spec::Device;
 use crate::workload::llama::LlamaConfig;
+
+/// Default paged-KV block granularity (vLLM's 16-token blocks).
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
 
 #[derive(Debug, Clone)]
 pub struct KvCacheConfig {
@@ -32,6 +37,34 @@ impl KvCacheConfig {
             block_tokens,
             total_blocks: (usable / block_bytes).floor() as usize,
         }
+    }
+
+    /// Size the pool for one *sharded* model instance directly from
+    /// the device spec, going through the HBM capacity check: weights
+    /// per shard plus the KV budget must fit `device.spec().hbm_cap`,
+    /// or a typed [`CapacityError`] comes back instead of a pool for
+    /// an impossible deployment. The block budget derives from the
+    /// spec (no hard-coded totals): instance KV tokens / block size.
+    pub fn for_instance(
+        model: &'static LlamaConfig,
+        device: Device,
+        plan: ParallelismPlan,
+        weight_bytes_per_elem: f64,
+        kv_bytes_per_elem: f64,
+        min_kv_tokens: usize,
+    ) -> Result<Self, CapacityError> {
+        let fit = check_capacity(
+            model,
+            device,
+            plan,
+            weight_bytes_per_elem,
+            kv_bytes_per_elem,
+            min_kv_tokens,
+        )?;
+        Ok(KvCacheConfig {
+            block_tokens: DEFAULT_BLOCK_TOKENS,
+            total_blocks: fit.max_kv_tokens / DEFAULT_BLOCK_TOKENS,
+        })
     }
 
     pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
@@ -169,6 +202,46 @@ mod tests {
         // FP8 weights free up room for more blocks.
         let c8 = KvCacheConfig::from_device(m, 80e9, 1.0, 2.0, 16, 0.05);
         assert!(c8.total_blocks > c.total_blocks);
+    }
+
+    #[test]
+    fn for_instance_enforces_capacity() {
+        use crate::analysis::parallel::{CapacityError, ParallelismPlan, DEFAULT_MIN_KV_TOKENS};
+        use crate::hwsim::spec::Device;
+        let m8 = by_name("llama-8b").unwrap();
+        let ok = KvCacheConfig::for_instance(
+            m8,
+            Device::H100,
+            ParallelismPlan::single(),
+            1.0,
+            2.0,
+            DEFAULT_MIN_KV_TOKENS,
+        )
+        .expect("8B fits one H100");
+        assert!(ok.total_blocks * ok.block_tokens >= DEFAULT_MIN_KV_TOKENS);
+        // 70B BF16 on one chip is a typed rejection, not a silent pool.
+        let m70 = by_name("llama-70b").unwrap();
+        let err = KvCacheConfig::for_instance(
+            m70,
+            Device::H100,
+            ParallelismPlan::single(),
+            2.0,
+            2.0,
+            DEFAULT_MIN_KV_TOKENS,
+        )
+        .unwrap_err();
+        assert!(matches!(err, CapacityError::WeightsExceedHbm { .. }));
+        // Sharded across 4 chips it becomes a real pool.
+        let sharded = KvCacheConfig::for_instance(
+            m70,
+            Device::H100,
+            ParallelismPlan::tp(4),
+            2.0,
+            2.0,
+            DEFAULT_MIN_KV_TOKENS,
+        )
+        .expect("70B BF16 fits at tp4");
+        assert!(sharded.total_blocks > ok.total_blocks / 100);
     }
 
     #[test]

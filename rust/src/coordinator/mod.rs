@@ -30,7 +30,7 @@ pub mod scheduler;
 
 pub use backend::{ExecutionBackend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
-pub use cluster::{Cluster, SloSpec, SweepConfig};
+pub use cluster::{sharded_sim_cluster, sim_cluster, Cluster, SloSpec, SweepConfig};
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};
 pub use metrics::Metrics;

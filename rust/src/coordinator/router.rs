@@ -110,11 +110,29 @@ impl<B: ExecutionBackend> Router<B> {
         &self.routed
     }
 
-    /// Drive every engine until drained.
-    pub fn run_to_completion(&mut self, max_steps: usize) -> bool {
+    /// Drain a *closed batch*: drive every engine independently until
+    /// its queue empties. Correct only when all requests are already
+    /// submitted (arrival times in the past) — for open-loop traffic,
+    /// where arrivals and step completions interleave on one shared
+    /// timeline, use [`Cluster::run`](super::cluster::Cluster::run)
+    /// instead (DESIGN.md §5.2).
+    pub fn drain_closed_batch(&mut self, max_steps: usize) -> bool {
         self.engines
             .iter_mut()
             .all(|e| e.run_to_completion(max_steps))
+    }
+
+    /// Deprecated alias of [`Router::drain_closed_batch`]; the old
+    /// name suggested it was a general driver, which silently corrupts
+    /// open-loop latency metrics (queueing delay between arrivals is
+    /// lost when each engine drains on its own clock).
+    #[deprecated(
+        since = "0.3.0",
+        note = "drains each engine independently, which is wrong for open-loop \
+                traffic; use Cluster::run, or drain_closed_batch for closed batches"
+    )]
+    pub fn run_to_completion(&mut self, max_steps: usize) -> bool {
+        self.drain_closed_batch(max_steps)
     }
 
     /// Slowest engine's virtual completion time (makespan).
@@ -209,7 +227,7 @@ mod tests {
             let (p, o) = if i % 2 == 0 { (2000, 8) } else { (32, 512) };
             r.submit(&req(i, p, o));
         }
-        assert!(r.run_to_completion(1_000_000));
+        assert!(r.drain_closed_batch(1_000_000));
         let done: u64 = r.engines.iter().map(|e| e.metrics.requests_done).sum();
         assert_eq!(done, 40);
         assert!(r.makespan() > 0.0);
@@ -231,7 +249,7 @@ mod tests {
                 let (p, o) = if i % 2 == 0 { (3000, 4) } else { (32, 768) };
                 r.submit(&req(i, p, o));
             }
-            assert!(r.run_to_completion(2_000_000));
+            assert!(r.drain_closed_batch(2_000_000));
             r.makespan()
         };
         let good = run(ratings_h100_gaudi());

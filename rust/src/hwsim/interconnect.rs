@@ -1,0 +1,185 @@
+//! Multi-chip interconnect cost model: scale-up fabrics (NVLink for
+//! the NVIDIA parts, on-die RoCE NICs for Gaudi) and scale-out NICs,
+//! with latency + bandwidth cost models for the two collectives the
+//! parallelism model needs — ring all-reduce (tensor parallelism) and
+//! point-to-point activation transfer (pipeline parallelism).
+//!
+//! The paper's measurements are single-chip; its TCO question is not.
+//! A 70B/405B-class model must shard across chips, and the scale-up
+//! fabric is where the vendors diverge most sharply: an H100 exposes
+//! 900 GB/s of NVLink 4 (450 GB/s per direction) inside an 8-GPU
+//! NVSwitch domain, while Gaudi integrates its fabric on the die as
+//! RoCE NICs — 24x100 GbE on Gaudi 2, 24x200 GbE on Gaudi 3 — of
+//! which 21 ports serve scale-up in the reference HLS server
+//! topologies. Everything here is datasheet-level, like `spec.rs`;
+//! nothing is calibrated against the paper (which does not measure
+//! collectives).
+
+use super::spec::Device;
+
+/// One device's links to the rest of the system.
+#[derive(Debug, Clone)]
+pub struct InterconnectSpec {
+    /// Fabric name for reports.
+    pub name: &'static str,
+    /// Scale-up bandwidth per device, bytes/s, per direction
+    /// (NVLink aggregate or the summed scale-up RoCE ports).
+    pub scale_up_bw: f64,
+    /// Per-hop scale-up latency (s): link + switch/NIC traversal.
+    pub scale_up_lat_s: f64,
+    /// Devices reachable at scale-up bandwidth (NVSwitch domain or
+    /// the directly cabled HLS box).
+    pub scale_up_domain: usize,
+    /// Scale-out bandwidth per device (bytes/s, per direction).
+    pub scale_out_bw: f64,
+    /// Per-hop scale-out latency (s).
+    pub scale_out_lat_s: f64,
+}
+
+/// NVLink 4 via NVSwitch: 900 GB/s bidirectional per GPU; scale-out
+/// over one 400 Gb/s NDR NIC per GPU.
+pub static H100_NVLINK4: InterconnectSpec = InterconnectSpec {
+    name: "NVLink4",
+    scale_up_bw: 450.0e9,
+    scale_up_lat_s: 1.0e-6,
+    scale_up_domain: 8,
+    scale_out_bw: 50.0e9,
+    scale_out_lat_s: 5.0e-6,
+};
+
+/// NVLink 3: 600 GB/s bidirectional per GPU; 200 Gb/s HDR scale-out.
+pub static A100_NVLINK3: InterconnectSpec = InterconnectSpec {
+    name: "NVLink3",
+    scale_up_bw: 300.0e9,
+    scale_up_lat_s: 1.3e-6,
+    scale_up_domain: 8,
+    scale_out_bw: 25.0e9,
+    scale_out_lat_s: 6.0e-6,
+};
+
+/// Gaudi 2 on-die RoCE: 24x100 GbE NICs, 21 ports scale-up inside the
+/// HLS-2 box (all-to-all), 3 ports scale-out.
+pub static GAUDI2_ROCE: InterconnectSpec = InterconnectSpec {
+    name: "RoCE-24x100GbE",
+    scale_up_bw: 262.5e9, // 21 x 100 Gb/s
+    scale_up_lat_s: 3.0e-6,
+    scale_up_domain: 8,
+    scale_out_bw: 37.5e9, // 3 x 100 Gb/s
+    scale_out_lat_s: 6.0e-6,
+};
+
+/// Gaudi 3: same topology, 24x200 GbE.
+pub static GAUDI3_ROCE: InterconnectSpec = InterconnectSpec {
+    name: "RoCE-24x200GbE",
+    scale_up_bw: 525.0e9, // 21 x 200 Gb/s
+    scale_up_lat_s: 2.5e-6,
+    scale_up_domain: 8,
+    scale_out_bw: 75.0e9, // 3 x 200 Gb/s
+    scale_out_lat_s: 5.0e-6,
+};
+
+impl Device {
+    pub fn interconnect(self) -> &'static InterconnectSpec {
+        match self {
+            Device::H100 => &H100_NVLINK4,
+            Device::A100 => &A100_NVLINK3,
+            Device::Gaudi2 => &GAUDI2_ROCE,
+            Device::Gaudi3 => &GAUDI3_ROCE,
+        }
+    }
+}
+
+impl InterconnectSpec {
+    /// (bandwidth, latency) governing a collective over `n` devices:
+    /// scale-up while the group fits the domain, the scale-out NIC
+    /// once the ring must leave the box.
+    pub fn group_link(&self, n: usize) -> (f64, f64) {
+        if n <= self.scale_up_domain {
+            (self.scale_up_bw, self.scale_up_lat_s)
+        } else {
+            (self.scale_out_bw, self.scale_out_lat_s)
+        }
+    }
+
+    /// Ring all-reduce of `bytes` payload over `n` devices:
+    /// `2(n-1)/n * bytes / bw + 2(n-1) * latency` (reduce-scatter +
+    /// all-gather, each n-1 hops). Zero for a single device.
+    pub fn allreduce_time(&self, n: usize, bytes: f64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let (bw, lat) = self.group_link(n);
+        let steps = (n - 1) as f64;
+        2.0 * steps / n as f64 * bytes / bw + 2.0 * steps * lat
+    }
+
+    /// Point-to-point transfer of `bytes` between adjacent pipeline
+    /// stages. `within_scale_up` selects the fabric (stages of one
+    /// instance that fit the domain ride scale-up links).
+    pub fn p2p_time(&self, bytes: f64, within_scale_up: bool) -> f64 {
+        let (bw, lat) = if within_scale_up {
+            (self.scale_up_bw, self.scale_up_lat_s)
+        } else {
+            (self.scale_out_bw, self.scale_out_lat_s)
+        };
+        bytes / bw + lat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_device_collectives_are_free() {
+        for dev in Device::ALL {
+            let ic = dev.interconnect();
+            assert_eq!(ic.allreduce_time(1, 1e9), 0.0);
+            assert_eq!(ic.allreduce_time(0, 1e9), 0.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_monotone_in_bytes_and_devices() {
+        let ic = Device::H100.interconnect();
+        assert!(ic.allreduce_time(4, 2e6) > ic.allreduce_time(4, 1e6));
+        assert!(ic.allreduce_time(8, 1e6) > ic.allreduce_time(2, 1e6));
+    }
+
+    #[test]
+    fn latency_floor_dominates_tiny_payloads() {
+        // A 1 KB all-reduce is pure latency on every fabric.
+        let ic = Device::Gaudi2.interconnect();
+        let t = ic.allreduce_time(8, 1024.0);
+        let lat_only = 2.0 * 7.0 * ic.scale_up_lat_s;
+        assert!(t < lat_only * 1.1, "{t} vs {lat_only}");
+        assert!(t >= lat_only);
+    }
+
+    #[test]
+    fn nvlink_beats_gaudi2_roce_on_bandwidth_and_latency() {
+        // The fabric asymmetry the multi-chip TCO story hinges on.
+        let h = Device::H100.interconnect();
+        let g = Device::Gaudi2.interconnect();
+        assert!(h.scale_up_bw > g.scale_up_bw);
+        assert!(h.scale_up_lat_s < g.scale_up_lat_s);
+        let bytes = 64.0 * 4096.0 * 2.0; // a decode-batch activation
+        assert!(h.allreduce_time(4, bytes) < g.allreduce_time(4, bytes));
+    }
+
+    #[test]
+    fn gaudi3_fabric_doubles_gaudi2() {
+        let g2 = Device::Gaudi2.interconnect();
+        let g3 = Device::Gaudi3.interconnect();
+        assert!((g3.scale_up_bw / g2.scale_up_bw - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leaving_the_scale_up_domain_costs() {
+        let ic = Device::H100.interconnect();
+        let inside = ic.allreduce_time(8, 1e6);
+        let outside = ic.allreduce_time(9, 1e6);
+        assert!(outside > inside * 2.0, "{outside} vs {inside}");
+        assert!(ic.p2p_time(1e6, false) > ic.p2p_time(1e6, true));
+    }
+}

@@ -21,12 +21,14 @@
 
 pub mod calib;
 pub mod gemm;
+pub mod interconnect;
 pub mod mme;
 pub mod power;
 pub mod softmax;
 pub mod spec;
 
 pub use gemm::{gemm_time, GemmBreakdown, GemmConfig};
+pub use interconnect::InterconnectSpec;
 pub use power::{power_draw, PowerCap};
 pub use spec::{Accum, Device, DeviceSpec, DType, Scaling};
 

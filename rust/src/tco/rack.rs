@@ -114,6 +114,28 @@ impl InfraModel {
         total_cost / tokens * 1e6
     }
 
+    /// $/Mtok-at-SLO for a *sharded* deployment: `tokens_per_sec` is
+    /// the goodput produced by `chips` accelerators — one instance's
+    /// `chips_per_instance()` when pricing a single engine, or a whole
+    /// replicated cluster's `total_chips()` with its merged goodput.
+    /// Normalizing to per-chip goodput and scaling to the server's
+    /// chip count prices multi-chip plans on the same axis as
+    /// single-chip ones (a TP=8 instance simply *is* one server here).
+    /// `server_price` stays a caller knob like in [`Self::cost_per_mtok`]
+    /// (pass [`assumed_server_price`] for the illustrative defaults).
+    pub fn cost_per_mtok_sharded(
+        &self,
+        server_price: f64,
+        chips: usize,
+        watts_per_chip: f64,
+        tokens_per_sec: f64,
+    ) -> f64 {
+        assert!(chips > 0, "deployment needs chips");
+        let per_chip_tps = tokens_per_sec / chips as f64;
+        let server_tps = per_chip_tps * self.rack.chips_per_server as f64;
+        self.cost_per_mtok(server_price, watts_per_chip, server_tps)
+    }
+
     /// Convenience: sustained draw for a device at a utilization,
     /// optionally power-capped.
     pub fn sustained_draw(&self, dev: Device, util: f64, cap_w: Option<f64>) -> f64 {
@@ -188,6 +210,21 @@ mod tests {
     #[should_panic(expected = "goodput must be positive")]
     fn cost_per_mtok_rejects_zero_goodput() {
         model().cost_per_mtok(200_000.0, 600.0, 0.0);
+    }
+
+    #[test]
+    fn sharded_cost_normalizes_by_instance_chips() {
+        // A tp8 instance with 8x the goodput of a tp1 instance costs
+        // the same per token: the normalization is per chip.
+        let m = model();
+        let h100 = assumed_server_price(Device::H100);
+        let single = m.cost_per_mtok_sharded(h100, 1, 600.0, 1_000.0);
+        let tp8 = m.cost_per_mtok_sharded(h100, 8, 600.0, 8_000.0);
+        assert!((single / tp8 - 1.0).abs() < 1e-9, "{single} vs {tp8}");
+        // Same per-chip goodput on a cheaper server is cheaper.
+        let gaudi =
+            m.cost_per_mtok_sharded(assumed_server_price(Device::Gaudi2), 8, 450.0, 8_000.0);
+        assert!(gaudi < tp8);
     }
 
     #[test]

@@ -124,6 +124,22 @@ impl LlamaConfig {
         self.param_count() * dtype_bytes
     }
 
+    /// Embedding + LM-head parameters (tied accounting like
+    /// [`LlamaConfig::param_count`]).
+    pub fn embed_param_count(&self) -> f64 {
+        let embed = if self.tied_embeddings { 1.0 } else { 2.0 };
+        embed * self.vocab as f64 * self.hidden as f64
+    }
+
+    /// Weight bytes with the block linears at `block_bytes`/elem and
+    /// the embedding/LM head at `embed_bytes`/elem — the paper's §5.2
+    /// precision split (FP8 blocks, BF16 head) made resident-footprint
+    /// accurate: an "FP8 model" still stores its head in BF16.
+    pub fn weight_bytes_mixed(&self, block_bytes: f64, embed_bytes: f64) -> f64 {
+        let embed = self.embed_param_count();
+        (self.param_count() - embed) * block_bytes + embed * embed_bytes
+    }
+
     /// Computational intensity (FLOP/byte) of one decode step at batch
     /// b, average context s — the §5.2 analysis. Weights stream once
     /// for the whole batch; each sequence reads its own KV cache.
@@ -208,6 +224,18 @@ mod tests {
         let (a, b, c) = m.decode_step_flops_split(&lens);
         let total = m.decode_step_flops(&lens);
         assert!(((a + b + c) / total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_weight_bytes_keeps_head_bf16() {
+        let m = llama8b();
+        // Uniform BF16 is the degenerate case.
+        assert_eq!(m.weight_bytes_mixed(2.0, 2.0), m.weight_bytes(2.0));
+        // FP8 blocks + BF16 head sit strictly between uniform FP8 and
+        // uniform BF16, offset by exactly the embedding params.
+        let mixed = m.weight_bytes_mixed(1.0, 2.0);
+        assert!((mixed - m.weight_bytes(1.0) - m.embed_param_count()).abs() < 1.0);
+        assert!(mixed > m.weight_bytes(1.0) && mixed < m.weight_bytes(2.0));
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! pressure — the open-loop properties the drain-the-queue router
 //! could not express.
 
+use fp8_tco::analysis::parallel::ParallelismPlan;
 use fp8_tco::analysis::perfmodel::{PrecisionMode, StepConfig};
 use fp8_tco::coordinator::cluster::{
-    max_sustainable_qps, measure_load, Cluster, SloSpec, SweepConfig,
+    max_sustainable_qps, measure_load, sharded_sim_cluster, Cluster, SloSpec, SweepConfig,
 };
 use fp8_tco::coordinator::router::{EngineRating, RoutePolicy, Router};
 use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
@@ -19,6 +20,17 @@ fn engine(total_blocks: usize) -> Engine<SimBackend> {
     let backend = SimBackend::new(
         by_name("llama-8b").unwrap(),
         StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()),
+    );
+    Engine::new(EngineConfig::new(kv), backend)
+}
+
+/// A *sharded* engine (one multi-chip instance) with a deliberately
+/// tiny KV pool, for pressure tests.
+fn sharded_engine(total_blocks: usize, plan: ParallelismPlan) -> Engine<SimBackend> {
+    let kv = KvCacheConfig { block_tokens: 16, total_blocks };
+    let backend = SimBackend::new(
+        by_name("llama-70b").unwrap(),
+        StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic()).with_plan(plan),
     );
     Engine::new(EngineConfig::new(kv), backend)
 }
@@ -162,6 +174,94 @@ fn load_sweep_is_deterministic_and_bracketed() {
     if let Some(bad) = last_infeasible {
         assert!(bad.qps > pa.qps, "infeasible probe below the accepted max");
     }
+}
+
+#[test]
+fn sharded_engines_preserve_determinism_invariant() {
+    // The cluster_sim determinism guarantee must survive the engine
+    // unit becoming a multi-chip instance: same seed, bit-identical
+    // makespan/metrics/routing for a 70B TP=4 cluster.
+    let run = || {
+        let mut c = sharded_sim_cluster(
+            by_name("llama-70b").unwrap(),
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::tp(4).with_replicas(2),
+        )
+        .expect("70B fits at tp4");
+        let gen = TraceGenerator::new(TraceConfig::chat(2.0), 99);
+        assert!(c.run(gen.stream(40)));
+        let m = c.merged_metrics();
+        (
+            c.makespan(),
+            m.tokens_out,
+            m.requests_done,
+            m.report(),
+            c.router.routed_counts().to_vec(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0.to_bits(), b.0.to_bits(), "sharded makespan must be bit-identical");
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+    assert_eq!(a.3, b.3);
+    assert_eq!(a.4, b.4);
+    assert_eq!(a.2, 40);
+}
+
+#[test]
+fn sharded_engines_conserve_tokens_under_memory_pressure() {
+    // Tiny pools force preemption churn on sharded instances too:
+    // every delivered token still counted exactly once, TTFT sampled
+    // once per request, restarts == preemptions.
+    let engines: Vec<_> = (0..2)
+        .map(|_| sharded_engine(8, ParallelismPlan::tp(4)))
+        .collect();
+    let ratings = vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; 2];
+    let mut c = Cluster::new(Router::new(engines, ratings, RoutePolicy::RoundRobin));
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.01,
+            prompt_len: 32,
+            output_len: 40,
+        })
+        .collect();
+    let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+    assert!(c.run(reqs));
+    let m = c.merged_metrics();
+    assert_eq!(m.requests_done, 6);
+    assert!(c.preemptions() > 0, "pressure workload must preempt");
+    assert_eq!(m.tokens_out, expected, "sharded preemption double-counted tokens");
+    assert_eq!(m.restarts, c.preemptions());
+    assert_eq!(m.ttft.count(), 6);
+}
+
+#[test]
+fn sharded_70b_cluster_sustains_an_interactive_slo_point() {
+    // End-to-end acceptance for the multi-chip path: a 70B TP=8
+    // instance pool has a non-trivial SLO-feasible operating point
+    // (the quantity cost_per_mtok prices).
+    let slo = SloSpec::interactive();
+    let cfg = SweepConfig { iters: 3, n_requests: 40, seed: 7, ..SweepConfig::new(0.25, 16.0) };
+    let out = max_sustainable_qps(
+        &|| {
+            sharded_sim_cluster(
+                by_name("llama-70b").unwrap(),
+                Device::H100,
+                PrecisionMode::fp8_dynamic(),
+                ParallelismPlan::tp(8),
+            )
+            .expect("70B fits at tp8")
+        },
+        &TraceConfig::chat,
+        &slo,
+        &cfg,
+    );
+    let best = out.best.expect("tp8 70B must sustain a near-idle chat load");
+    assert!(best.feasible && best.tokens_per_sec > 0.0);
+    assert!(best.tpot_p95 <= slo.tpot_p95_s);
 }
 
 #[test]

@@ -1,0 +1,159 @@
+//! Golden snapshots of `StepBreakdown` over a fixed
+//! (device x precision x plan x phase) grid, so refactors of the
+//! perf model cannot silently shift the single-chip numbers the seed
+//! tests lock in (or the multi-chip numbers this PR introduces).
+//!
+//! * `tests/golden/perfmodel.json` holds the snapshot.
+//! * If the file is missing, the test writes it and passes
+//!   (bootstrap); commit the generated file to lock the numbers.
+//! * Set `GOLDEN_REGEN=1` to regenerate intentionally after a
+//!   deliberate model change, and say why in the commit message.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::PathBuf;
+
+use fp8_tco::analysis::perfmodel::{decode_step, prefill, PrecisionMode, StepBreakdown, StepConfig};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::util::json::Json;
+use fp8_tco::workload::llama::by_name;
+
+const REL_TOL: f64 = 1e-9;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/perfmodel.json")
+}
+
+/// The fixed grid. Keep stable: editing it invalidates the snapshot.
+fn grid() -> Vec<(String, StepBreakdown)> {
+    let m8 = by_name("llama-8b").unwrap();
+    let m70 = by_name("llama-70b").unwrap();
+    let devices = [Device::H100, Device::Gaudi2, Device::Gaudi3, Device::A100];
+    let precisions = [
+        PrecisionMode::Bf16,
+        PrecisionMode::fp8_static(),
+        PrecisionMode::fp8_dynamic(),
+    ];
+    let plans: [(usize, usize); 3] = [(1, 1), (2, 1), (4, 2)];
+    let mut out = Vec::new();
+    for dev in devices {
+        for prec in precisions {
+            for (tp, pp) in plans {
+                let cfg = StepConfig::new(dev, prec).with_tp(tp).with_pp(pp);
+                let key = format!("{}|{}|tp{tp}-pp{pp}", dev.name(), prec.name());
+                out.push((
+                    format!("{key}|decode-8b-b32-s1024"),
+                    decode_step(m8, &cfg, 32, 1024),
+                ));
+                out.push((format!("{key}|prefill-8b-b1-s2048"), prefill(m8, &cfg, 1, 2048)));
+            }
+        }
+    }
+    // One 70B multi-chip anchor per vendor (the deployment shape the
+    // single-chip model could not express).
+    for dev in [Device::H100, Device::Gaudi2] {
+        let cfg = StepConfig::new(dev, PrecisionMode::fp8_static()).with_tp(4);
+        out.push((
+            format!("{}|fp8-static|tp4-pp1|decode-70b-b32-s1024", dev.name()),
+            decode_step(m70, &cfg, 32, 1024),
+        ));
+    }
+    out
+}
+
+fn breakdown_to_json(bd: &StepBreakdown) -> Json {
+    let mut m = BTreeMap::new();
+    let mut put = |k: &str, v: f64| {
+        m.insert(k.to_string(), Json::Num(v));
+    };
+    put("seconds", bd.seconds);
+    put("t_linears", bd.t_linears);
+    put("t_attention_kv", bd.t_attention_kv);
+    put("t_softmax", bd.t_softmax);
+    put("t_lm_head", bd.t_lm_head);
+    put("t_tp_comm", bd.t_tp_comm);
+    put("t_pp_comm", bd.t_pp_comm);
+    put("pp_bubble_frac", bd.pp_bubble_frac);
+    put("flops", bd.flops);
+    put("achieved_flops", bd.achieved_flops);
+    put("util", bd.util);
+    put("watts", bd.watts);
+    Json::Obj(m)
+}
+
+fn snapshot() -> Json {
+    let mut m = BTreeMap::new();
+    for (key, bd) in grid() {
+        m.insert(key, breakdown_to_json(&bd));
+    }
+    Json::Obj(m)
+}
+
+fn write_snapshot(j: &Json) {
+    let path = golden_path();
+    fs::create_dir_all(path.parent().unwrap()).expect("mkdir tests/golden");
+    fs::write(&path, format!("{j}\n")).expect("write golden snapshot");
+}
+
+#[test]
+fn perfmodel_matches_golden_snapshot() {
+    let current = snapshot();
+    let path = golden_path();
+    if std::env::var("GOLDEN_REGEN").ok().as_deref() == Some("1") {
+        write_snapshot(&current);
+        eprintln!("regenerated {}", path.display());
+        return;
+    }
+    let Ok(text) = fs::read_to_string(&path) else {
+        write_snapshot(&current);
+        eprintln!(
+            "bootstrap: wrote {} — commit it to lock the numbers",
+            path.display()
+        );
+        return;
+    };
+    let golden = Json::parse(&text).expect("golden snapshot parses");
+    let (Json::Obj(gold), Json::Obj(cur)) = (&golden, &current) else {
+        panic!("snapshot roots must be objects");
+    };
+    // Every golden entry must still exist and match; new grid entries
+    // (a widened grid) are only allowed via explicit regeneration.
+    assert_eq!(
+        gold.keys().collect::<Vec<_>>(),
+        cur.keys().collect::<Vec<_>>(),
+        "grid changed; rerun with GOLDEN_REGEN=1 if intentional"
+    );
+    let mut drift = Vec::new();
+    for (key, gval) in gold {
+        let (Json::Obj(gm), Some(Json::Obj(cm))) = (gval, cur.get(key)) else {
+            panic!("malformed snapshot entry {key}");
+        };
+        for (field, gf) in gm {
+            let g = gf.as_f64().expect("golden fields are numbers");
+            let c = cm
+                .get(field)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("missing field {key}.{field}"));
+            let scale = g.abs().max(c.abs()).max(1e-300);
+            if (g - c).abs() / scale > REL_TOL {
+                drift.push(format!("{key}.{field}: golden {g} vs current {c}"));
+            }
+        }
+    }
+    assert!(
+        drift.is_empty(),
+        "perf model drifted from golden snapshot ({} fields):\n{}\n\
+         If the change is deliberate, regenerate with GOLDEN_REGEN=1.",
+        drift.len(),
+        drift.join("\n")
+    );
+}
+
+#[test]
+fn golden_grid_is_deterministic() {
+    // The snapshot itself must be reproducible within a run, or the
+    // golden comparison would be meaningless.
+    let a = snapshot().to_string();
+    let b = snapshot().to_string();
+    assert_eq!(a, b);
+}

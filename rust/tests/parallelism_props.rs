@@ -1,0 +1,290 @@
+//! Property tests for the interconnect-aware parallelism model:
+//!
+//! * TP=1/PP=1 is *exactly* the single-chip model the paper measures
+//!   (no comm terms, seconds == sum of work parts);
+//! * step time is monotonically non-increasing in TP while work
+//!   dominates, and the comm-dominated U-turn exists;
+//! * the PP bubble fraction equals the closed form
+//!   `(pp-1)/(pp-1+microbatches)`;
+//! * paper-anchored: communication overhead *shrinks* the
+//!   Gaudi-vs-H100 deltas of Figs. 4–5 rather than inverting the
+//!   single-chip conclusions.
+
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::{decode_step, prefill, PrecisionMode, StepConfig};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::workload::llama::by_name;
+
+fn cfg(dev: Device, prec: PrecisionMode) -> StepConfig {
+    StepConfig::new(dev, prec)
+}
+
+#[test]
+fn tp1_pp1_reproduces_single_chip_model_exactly() {
+    // The no-comm baseline: every comm term is zero and the step is
+    // exactly the sum of its single-chip work parts, for both phases
+    // on both vendors.
+    for dev in [Device::H100, Device::Gaudi2] {
+        for prec in [PrecisionMode::Bf16, PrecisionMode::fp8_static()] {
+            let m = by_name("llama-8b").unwrap();
+            let d = decode_step(m, &cfg(dev, prec), 32, 1024);
+            assert_eq!(d.t_tp_comm, 0.0);
+            assert_eq!(d.t_pp_comm, 0.0);
+            assert_eq!(d.pp_bubble_frac, 0.0);
+            let sum = d.t_linears + d.t_attention_kv + d.t_softmax + d.t_lm_head;
+            assert!(
+                (sum / d.seconds - 1.0).abs() < 1e-12,
+                "{} {}: decode {} != {}",
+                dev.name(),
+                prec.name(),
+                sum,
+                d.seconds
+            );
+            let p = prefill(m, &cfg(dev, prec), 1, 2048);
+            assert_eq!(p.t_tp_comm, 0.0);
+            let psum = p.t_linears + p.t_attention_kv + p.t_softmax + p.t_lm_head;
+            assert!((psum / p.seconds - 1.0).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn explicit_plan_at_unit_shape_changes_nothing() {
+    let m = by_name("llama-8b").unwrap();
+    let base = decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_dynamic()), 16, 512);
+    let planned = decode_step(
+        m,
+        &cfg(Device::H100, PrecisionMode::fp8_dynamic()).with_plan(ParallelismPlan::single()),
+        16,
+        512,
+    );
+    assert_eq!(base.seconds.to_bits(), planned.seconds.to_bits());
+}
+
+#[test]
+fn tp_beyond_one_shard_pays_collectives() {
+    let m = by_name("llama-8b").unwrap();
+    let d = decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_dynamic()).with_tp(2), 32, 1024);
+    assert!(d.t_tp_comm > 0.0);
+    // seconds = work + comm: strictly more than the sum of work parts.
+    let work = d.t_linears + d.t_attention_kv + d.t_softmax + d.t_lm_head;
+    assert!((d.seconds - (work + d.t_tp_comm)).abs() < 1e-12 * d.seconds);
+}
+
+#[test]
+fn tp_sweep_has_u_turn() {
+    // Small model, batch 1: work shrinks ~1/tp while the ring's
+    // latency term grows ~tp, so the sweep must dip and come back up.
+    let m = by_name("llama-1b").unwrap();
+    let tps = [1usize, 2, 4, 8, 16, 32];
+    let secs: Vec<f64> = tps
+        .iter()
+        .map(|&tp| {
+            decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_static()).with_tp(tp), 1, 128)
+                .seconds
+        })
+        .collect();
+    let argmin = secs
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    assert!(argmin > 0, "sharding must help initially: {secs:?}");
+    assert!(argmin < tps.len() - 1, "comm must eventually dominate: {secs:?}");
+    // Monotone non-increasing up to the minimum...
+    for i in 0..argmin {
+        assert!(
+            secs[i + 1] <= secs[i] * 1.001,
+            "pre-min wiggle at tp{}: {secs:?}",
+            tps[i + 1]
+        );
+    }
+    // ...then monotone non-decreasing: the U-turn.
+    for i in argmin..tps.len() - 1 {
+        assert!(
+            secs[i + 1] >= secs[i] * 0.999,
+            "post-min dip at tp{}: {secs:?}",
+            tps[i + 1]
+        );
+    }
+    assert!(
+        secs[tps.len() - 1] > secs[argmin] * 1.5,
+        "comm-dominated tail must clearly exceed the optimum: {secs:?}"
+    );
+}
+
+#[test]
+fn tp_monotone_while_work_dominates_on_large_model() {
+    // 70B decode at batch 64 is work-dominated through tp8 on both
+    // fabrics: step time strictly decreases.
+    for dev in [Device::H100, Device::Gaudi2] {
+        let m = by_name("llama-70b").unwrap();
+        let secs: Vec<f64> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&tp| {
+                decode_step(m, &cfg(dev, PrecisionMode::fp8_static()).with_tp(tp), 64, 1024)
+                    .seconds
+            })
+            .collect();
+        for i in 0..secs.len() - 1 {
+            assert!(
+                secs[i + 1] < secs[i],
+                "{}: tp{} not faster: {secs:?}",
+                dev.name(),
+                [1, 2, 4, 8][i + 1]
+            );
+        }
+    }
+}
+
+#[test]
+fn pp_bubble_fraction_matches_closed_form() {
+    let m = by_name("llama-8b").unwrap();
+    for pp in [2usize, 4, 8] {
+        for mb in [1usize, 2, 4, 8, 16] {
+            let bd = decode_step(
+                m,
+                &cfg(Device::H100, PrecisionMode::fp8_dynamic())
+                    .with_pp(pp)
+                    .with_microbatches(mb),
+                32,
+                1024,
+            );
+            let mb_eff = mb.min(32); // clamped to the batch
+            let expect = (pp - 1) as f64 / (pp - 1 + mb_eff) as f64;
+            assert!(
+                (bd.pp_bubble_frac - expect).abs() < 1e-12,
+                "pp{pp} mb{mb}: {} != {expect}",
+                bd.pp_bubble_frac
+            );
+            assert!(bd.t_pp_comm > 0.0);
+        }
+    }
+}
+
+#[test]
+fn pp_microbatching_pipelines_prefill_but_not_decode() {
+    // The phase asymmetry the thin-GEMM thesis predicts: prefill is
+    // compute-bound, so microbatches pipeline and the step speeds up;
+    // decode is weight-streaming bound, so every extra microbatch
+    // re-streams the weights and the step can only get slower.
+    let m = by_name("llama-8b").unwrap();
+    let pre = |mb: usize| {
+        prefill(
+            m,
+            &cfg(Device::H100, PrecisionMode::fp8_static())
+                .with_pp(4)
+                .with_microbatches(mb),
+            1,
+            4096,
+        )
+    };
+    let pre_coarse = pre(1);
+    let pre_fine = pre(8);
+    assert!(pre_fine.pp_bubble_frac < pre_coarse.pp_bubble_frac);
+    assert!(
+        pre_fine.seconds < pre_coarse.seconds,
+        "prefill must pipeline: {} vs {}",
+        pre_fine.seconds,
+        pre_coarse.seconds
+    );
+
+    let dec = |mb: usize| {
+        decode_step(
+            m,
+            &cfg(Device::H100, PrecisionMode::fp8_dynamic())
+                .with_pp(4)
+                .with_microbatches(mb),
+            32,
+            1024,
+        )
+    };
+    let dec_coarse = dec(1);
+    let dec_fine = dec(16);
+    assert!(
+        dec_fine.seconds > dec_coarse.seconds,
+        "decode microbatches re-stream weights: {} vs {}",
+        dec_fine.seconds,
+        dec_coarse.seconds
+    );
+    // With one microbatch the pipeline is fully serialized: no faster
+    // than the unsharded step (the bubble eats the parallelism).
+    let single = decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_dynamic()), 32, 1024);
+    assert!(dec_coarse.seconds >= single.seconds * 0.999);
+    // The bubble fraction itself still vanishes with depth regardless
+    // of phase — it is pure pipeline geometry.
+    let deep = dec(32);
+    assert!(deep.pp_bubble_frac < 0.10, "{}", deep.pp_bubble_frac);
+}
+
+#[test]
+fn pp_stages_outside_scale_up_domain_pay_scale_out() {
+    let m = by_name("llama-70b").unwrap();
+    let mk = |tp: usize, pp: usize| {
+        decode_step(
+            m,
+            &cfg(Device::H100, PrecisionMode::fp8_dynamic())
+                .with_tp(tp)
+                .with_pp(pp)
+                .with_microbatches(4),
+            32,
+            1024,
+        )
+    };
+    // 8 chips fit the NVSwitch domain; 16 chips force the pipeline
+    // hop onto the scale-out NIC.
+    let inside = mk(4, 2);
+    let outside = mk(8, 2);
+    assert!(outside.t_pp_comm > inside.t_pp_comm * 2.0,
+            "{} vs {}", outside.t_pp_comm, inside.t_pp_comm);
+}
+
+#[test]
+fn comm_shrinks_gaudi_decode_advantage_without_inverting_fig5() {
+    // Fig. 5 / §5.4 single-chip conclusion: Gaudi 2 + FP8 decodes
+    // competitively with the H100 (step-time ratio < 1.3). NVLink
+    // outclasses the on-die RoCE fabric, so TP sharding erodes the
+    // Gaudi side — the delta shrinks toward (and past) parity — but
+    // must not explode into an inversion of the competitiveness claim.
+    let m = by_name("llama-8b").unwrap();
+    let ratio = |tp: usize| {
+        let g = decode_step(m, &cfg(Device::Gaudi2, PrecisionMode::fp8_static()).with_tp(tp), 64, 1024);
+        let h = decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_dynamic()).with_tp(tp), 64, 1024);
+        g.seconds / h.seconds
+    };
+    let r1 = ratio(1);
+    let r4 = ratio(4);
+    let r8 = ratio(8);
+    assert!(r1 < 1.3, "single-chip competitiveness is the premise: {r1}");
+    // The fabric gap costs Gaudi relative ground at scale...
+    assert!(r4 >= r1 - 0.02, "tp4 must not flatter Gaudi: {r1} -> {r4}");
+    assert!(r8 > r1, "at tp8 the RoCE fabric must show: {r1} -> {r8}");
+    // ...but never inverts the conclusion: Gaudi stays in contention.
+    assert!(r4 < 1.3, "tp4 inverts Fig. 5: {r4}");
+    assert!(r8 < 1.6, "tp8 explodes the delta: {r8}");
+}
+
+#[test]
+fn prefill_fig4_conclusion_survives_sharding() {
+    // Fig. 4: H100 reaches ~2x Gaudi 2 prefill TFLOPS on 8B. With
+    // TP=4 both pay collectives; the ratio stays in the same regime.
+    let m = by_name("llama-8b").unwrap();
+    let h = prefill(m, &cfg(Device::H100, PrecisionMode::fp8_static()).with_tp(4), 1, 4096);
+    let g = prefill(m, &cfg(Device::Gaudi2, PrecisionMode::fp8_static()).with_tp(4), 1, 4096);
+    let ratio = h.tflops() / g.tflops();
+    assert!(ratio > 1.2 && ratio < 3.2, "tp4 prefill ratio {ratio}");
+}
+
+#[test]
+fn seventy_b_sharded_decode_meets_interactive_tpot() {
+    // The deployment the single-chip model could not express: 70B at
+    // TP8 on one NVSwitch domain decodes a 32-batch step well under
+    // the 50 ms interactive TPOT budget.
+    let m = by_name("llama-70b").unwrap();
+    let bd = decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_dynamic()).with_tp(8), 32, 1024);
+    assert!(bd.seconds < 0.050, "tp8 70B decode step {}", bd.seconds);
+    // Per-chip FLOPs account for the sharding.
+    let single_equiv = decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_dynamic()), 32, 1024);
+    assert!((single_equiv.flops / bd.flops - 8.0).abs() < 1e-9);
+}
