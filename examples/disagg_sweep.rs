@@ -1,0 +1,200 @@
+//! Disaggregated prefill/decode serving walkthrough (DESIGN.md §7).
+//!
+//! Part 1 prices three deployments of the same 4-chip budget serving
+//! the same chat workload at the interactive SLO:
+//!
+//! * colocated — every engine interleaves prefill and decode (the
+//!   PR-1/PR-2 serving shape);
+//! * disaggregated, homogeneous — an H100 prefill pool feeding an
+//!   H100 decode pool over the scale-out fabric, pool sizes balanced
+//!   by `analysis::disagg::auto_size`;
+//! * disaggregated, mixed-vendor — H100 prefill + Gaudi 2 decode, the
+//!   paper's per-phase result turned into a deployable TCO lever.
+//!
+//! Part 2 sweeps the KV-migration link (bandwidth scaling and added
+//! latency) at a fixed load to show where the fabric starts eating
+//! the TTFT budget.
+//!
+//! Run: `cargo run --release --example disagg_sweep`
+//! (`SWEEP_FAST=1` shrinks the SLO search for smoke tests.)
+
+use fp8_tco::analysis::disagg::{auto_size, PoolSpec};
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::PrecisionMode;
+use fp8_tco::coordinator::cluster::{
+    disagg_sim_cluster, max_sustainable_qps, replay_disagg_point, sharded_sim_cluster, SloSpec,
+    SweepConfig,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama::by_name;
+use fp8_tco::workload::trace::{TraceConfig, TraceGenerator};
+
+fn main() {
+    let fast = std::env::var("SWEEP_FAST").ok().as_deref() == Some("1");
+    let slo = SloSpec::interactive();
+    let sweep = if fast {
+        SweepConfig { iters: 2, n_requests: 30, seed: 7, ..SweepConfig::new(0.25, 8.0) }
+    } else {
+        SweepConfig { iters: 4, n_requests: 100, seed: 7, ..SweepConfig::new(0.25, 24.0) }
+    };
+    let infra = InfraModel::new(RackConfig::a100_era());
+    let model = by_name("llama-8b").unwrap();
+    // Chat-mix medians drive the pool balance.
+    let (p_med, o_med) = (245usize, 148usize);
+    let h100 = PoolSpec::new(
+        Device::H100,
+        PrecisionMode::fp8_dynamic(),
+        ParallelismPlan::single(),
+    );
+    let gaudi2 = PoolSpec::new(
+        Device::Gaudi2,
+        PrecisionMode::fp8_static(),
+        ParallelismPlan::single(),
+    );
+    let homog = auto_size(model, h100, h100, p_med, o_med, 4);
+    let mixed = auto_size(model, h100, gaudi2, p_med, o_med, 4);
+
+    println!(
+        "Disaggregated prefill/decode serving — llama-8b, chat traffic, \
+         interactive SLO (TTFT p95 <= {:.1} s, TPOT p95 <= {:.0} ms).\n",
+        slo.ttft_p95_s,
+        slo.tpot_p95_s * 1e3
+    );
+
+    let mut t = Table::new(
+        "Colocated vs disaggregated vs mixed-vendor (4-chip budget)",
+        &[
+            "mode",
+            "pools",
+            "QPS @SLO",
+            "tok/s",
+            "TTFT p95 ms",
+            "TPOT p95 ms",
+            "migrations",
+            "$/Mtok @SLO",
+        ],
+    );
+
+    // Colocated baseline: 4 fused H100 engines.
+    let colo_plan = ParallelismPlan::single().with_replicas(4);
+    let colo = max_sustainable_qps(
+        &|| {
+            sharded_sim_cluster(model, Device::H100, PrecisionMode::fp8_dynamic(), colo_plan)
+                .expect("8B fits one H100")
+        },
+        &TraceConfig::chat,
+        &slo,
+        &sweep,
+    );
+    if let Some(p) = colo.best {
+        let cost = infra.cost_per_mtok_sharded(
+            assumed_server_price(Device::H100),
+            colo_plan.total_chips(),
+            p.watts_mean,
+            p.tokens_per_sec,
+        );
+        t.row(vec![
+            "colocated".into(),
+            format!("H100 {colo_plan}"),
+            f(p.qps, 2),
+            f(p.tokens_per_sec, 0),
+            f(p.ttft_p95 * 1e3, 1),
+            f(p.tpot_p95 * 1e3, 2),
+            "0".into(),
+            f(cost, 3),
+        ]);
+    }
+
+    for (mode, plan) in [("disagg", &homog), ("mixed", &mixed)] {
+        let out = max_sustainable_qps(
+            &|| disagg_sim_cluster(model, plan).expect("pools must be feasible"),
+            &TraceConfig::chat,
+            &slo,
+            &sweep,
+        );
+        match out.best {
+            Some(p) => {
+                // Replay the operating point to split watts per pool
+                // (heterogeneous pools price at their own draw).
+                let (pm, dm, merged) = replay_disagg_point(
+                    model,
+                    plan,
+                    TraceConfig::chat(p.qps),
+                    sweep.n_requests,
+                    sweep.seed,
+                );
+                let cost = infra.cost_per_mtok_disagg_plan(
+                    plan,
+                    pm.watts_mean(),
+                    dm.watts_mean(),
+                    p.tokens_per_sec,
+                );
+                t.row(vec![
+                    mode.into(),
+                    plan.describe(),
+                    f(p.qps, 2),
+                    f(p.tokens_per_sec, 0),
+                    f(p.ttft_p95 * 1e3, 1),
+                    f(p.tpot_p95 * 1e3, 2),
+                    format!("{}", merged.migrations),
+                    f(cost, 3),
+                ]);
+            }
+            None => {
+                t.row(vec![
+                    mode.into(),
+                    plan.describe(),
+                    format!("< {}", sweep.qps_lo),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // Part 2: link sensitivity at a fixed, comfortably feasible load.
+    let qps = 2.0;
+    let n = if fast { 40 } else { 120 };
+    println!(
+        "\nKV-link sensitivity — mixed-vendor plan at {qps} QPS ({n} requests):\n\
+         the closed form bytes/bw + lat is charged per migrated context."
+    );
+    let mut t2 = Table::new(
+        "TTFT vs the migration link",
+        &["link", "TTFT p50 ms", "TTFT p95 ms", "KV GB moved"],
+    );
+    let base = mixed.kv_link();
+    let variants: [(String, f64, f64); 4] = [
+        ("infinite".into(), f64::INFINITY, 0.0),
+        (format!("{:.0} GB/s (datasheet)", base.bw / 1e9), base.bw, base.lat_s),
+        ("1/10 bandwidth".into(), base.bw / 10.0, base.lat_s),
+        ("+10 ms latency".into(), base.bw, base.lat_s + 0.010),
+    ];
+    for (name, bw, lat_s) in variants {
+        let mut c = disagg_sim_cluster(model, &mixed).unwrap();
+        c.link.bw = bw;
+        c.link.lat_s = lat_s;
+        let gen = TraceGenerator::new(TraceConfig::chat(qps), 13);
+        let drained = c.run(gen.stream(n));
+        let m = c.merged_metrics();
+        assert!(drained, "sensitivity run must drain");
+        t2.row(vec![
+            name,
+            f(m.ttft.pct(50.0) * 1e3, 1),
+            f(m.ttft.pct(95.0) * 1e3, 1),
+            f(m.kv_bytes_migrated / 1e9, 2),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\n(The mixed-vendor row is the paper's §2.2/Splitwise argument priced\n \
+         end-to-end: prefill on the compute-rich H100, decode on the cheaper,\n \
+         cooler Gaudi 2 — with the KV migration charged against the fabric.)"
+    );
+}

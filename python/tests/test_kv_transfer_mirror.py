@@ -1,0 +1,104 @@
+"""Python mirror of the Rust KV-transfer closed form (disaggregated
+serving's migration cost path, `hwsim::interconnect::KvLink`).
+
+Both sides compute
+
+    t = context_tokens * kv_bytes_per_token / link_bw + link_lat
+
+with `kv_bytes_per_token = 2 * layers * kv_heads * head_dim * dtype`,
+`link_bw = min(src_scale_out_bw * src_chips, dst_scale_out_bw *
+dst_chips)` and `link_lat = src_lat + dst_lat`, and assert the same
+pinned values (PINNED below mirrors
+`rust/tests/disagg_props.rs::kv_transfer_closed_form_pinned_against_python_mirror`).
+If either implementation drifts, its side fails against the pins.
+
+Stdlib-only on purpose (CI runs it without the JAX toolchain):
+`python python/tests/test_kv_transfer_mirror.py`.
+"""
+
+# Scale-out NIC (bytes/s, per-hop latency s) per device — mirrors
+# rust/src/hwsim/interconnect.rs.
+SCALE_OUT = {
+    "H100": (50.0e9, 5.0e-6),
+    "A100": (25.0e9, 6.0e-6),
+    "Gaudi2": (37.5e9, 6.0e-6),
+    "Gaudi3": (75.0e9, 5.0e-6),
+}
+
+# (layers, kv_heads, head_dim) — mirrors rust/src/workload/llama.rs.
+MODELS = {
+    "llama-8b": (32, 8, 4096 // 32),
+    "llama-70b": (80, 8, 8192 // 64),
+}
+
+# (model, context_tokens, src, src_chips, dst, dst_chips) -> seconds.
+PINNED = [
+    ("llama-8b", 2048, "H100", 1, "H100", 1, 0.005378709119999999),
+    ("llama-8b", 512, "H100", 1, "Gaudi2", 1, 0.0018005697066666665),
+    ("llama-70b", 4096, "H100", 4, "Gaudi2", 1, 0.03580239413333333),
+    ("llama-70b", 2048, "Gaudi3", 2, "Gaudi3", 2, 0.004483924266666666),
+]
+
+
+def kv_bytes_per_token(model, dtype_bytes=2.0):
+    layers, kv_heads, head_dim = MODELS[model]
+    return 2.0 * (layers * kv_heads * head_dim) * dtype_bytes
+
+
+def kv_link(src, src_chips, dst, dst_chips):
+    src_bw, src_lat = SCALE_OUT[src]
+    dst_bw, dst_lat = SCALE_OUT[dst]
+    return min(src_bw * src_chips, dst_bw * dst_chips), src_lat + dst_lat
+
+
+def transfer_time(model, ctx, src, src_chips, dst, dst_chips):
+    bw, lat = kv_link(src, src_chips, dst, dst_chips)
+    bytes_ = ctx * kv_bytes_per_token(model)
+    if bytes_ <= 0.0:
+        return 0.0
+    return bytes_ / bw + lat
+
+
+def test_kv_bytes_per_token_pins():
+    assert kv_bytes_per_token("llama-8b") == 131072.0
+    assert kv_bytes_per_token("llama-70b") == 327680.0
+
+
+def test_closed_form_matches_pinned_rust_values():
+    for model, ctx, src, sc, dst, dc, want in PINNED:
+        got = transfer_time(model, ctx, src, sc, dst, dc)
+        assert abs(got / want - 1.0) < 1e-9, (
+            f"{model} ctx={ctx} {src}x{sc}->{dst}x{dc}: {got!r} != pinned {want!r}"
+        )
+
+
+def test_link_is_bottlenecked_and_latency_summed():
+    bw, lat = kv_link("H100", 4, "Gaudi2", 1)
+    assert bw == 37.5e9, "single Gaudi2 sink caps a 4-chip H100 source"
+    assert lat == 5.0e-6 + 6.0e-6
+    bw44, _ = kv_link("H100", 4, "Gaudi2", 4)
+    assert bw44 == 150.0e9
+
+
+def test_transfer_monotone_and_zero_for_nothing():
+    t1 = transfer_time("llama-8b", 1024, "H100", 1, "Gaudi2", 1)
+    t2 = transfer_time("llama-8b", 2048, "H100", 1, "Gaudi2", 1)
+    assert t2 > t1 > 0.0
+    assert transfer_time("llama-8b", 0, "H100", 1, "Gaudi2", 1) == 0.0
+
+
+def main():
+    tests = [
+        test_kv_bytes_per_token_pins,
+        test_closed_form_matches_pinned_rust_values,
+        test_link_is_bottlenecked_and_latency_summed,
+        test_transfer_monotone_and_zero_for_nothing,
+    ]
+    for t in tests:
+        t()
+        print(f"ok: {t.__name__}")
+    print(f"{len(tests)} KV-transfer mirror checks passed")
+
+
+if __name__ == "__main__":
+    main()

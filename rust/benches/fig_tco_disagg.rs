@@ -1,0 +1,331 @@
+//! FIG-TCO-DISAGG: the phase-split $/Mtok-at-SLO frontier — colocated
+//! vs disaggregated-homogeneous vs mixed-vendor pools, across the
+//! paper's model grid and two SLO points. Each disaggregated cell
+//! builds a two-pool cluster (`DisaggCluster`), migrates KV over the
+//! scale-out fabric at the closed-form cost, binary-searches the max
+//! Poisson QPS meeting the SLO, and prices each pool at its own capex
+//! and sustained draw (`InfraModel::cost_per_mtok_disagg`). Alongside
+//! the table, every cell is appended to `BENCH_fig_tco_disagg.json`
+//! (directory: `BENCH_JSON_DIR`, default `.`) so CI can archive the
+//! trajectory and PRs stay comparable.
+//!
+//! Run: `cargo bench --bench fig_tco_disagg`
+//! (`SWEEP_FAST=1` shrinks the search for smoke tests.)
+
+use std::collections::BTreeMap;
+
+use fp8_tco::analysis::disagg::{auto_size, DisaggPlan, PoolSpec};
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::PrecisionMode;
+use fp8_tco::coordinator::cluster::{
+    disagg_sim_cluster, max_sustainable_qps, replay_disagg_point, sharded_sim_cluster, SloSpec,
+    SweepConfig,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::util::json::Json;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama::{by_name, LlamaConfig};
+use fp8_tco::workload::trace::TraceConfig;
+
+/// One measured frontier cell.
+struct Cell {
+    feasible: bool,
+    qps: f64,
+    tokens_per_sec: f64,
+    ttft_p95: f64,
+    tpot_p95: f64,
+    usd_per_mtok: f64,
+    migrations: u64,
+    kv_gb_migrated: f64,
+}
+
+fn infeasible() -> Cell {
+    Cell {
+        feasible: false,
+        qps: 0.0,
+        tokens_per_sec: 0.0,
+        ttft_p95: 0.0,
+        tpot_p95: 0.0,
+        usd_per_mtok: 0.0,
+        migrations: 0,
+        kv_gb_migrated: 0.0,
+    }
+}
+
+fn colocated_cell(
+    model: &'static LlamaConfig,
+    dev: Device,
+    prec: PrecisionMode,
+    plan: ParallelismPlan,
+    slo: &SloSpec,
+    sweep: &SweepConfig,
+    infra: &InfraModel,
+) -> Cell {
+    let out = max_sustainable_qps(
+        &|| {
+            sharded_sim_cluster(model, dev, prec, plan)
+                .unwrap_or_else(|e| panic!("colocated cell must be feasible: {e}"))
+        },
+        &TraceConfig::chat,
+        slo,
+        sweep,
+    );
+    match out.best {
+        None => infeasible(),
+        Some(p) => {
+            let usd = infra.cost_per_mtok_sharded(
+                assumed_server_price(dev),
+                plan.total_chips(),
+                p.watts_mean,
+                p.tokens_per_sec,
+            );
+            Cell {
+                feasible: true,
+                qps: p.qps,
+                tokens_per_sec: p.tokens_per_sec,
+                ttft_p95: p.ttft_p95,
+                tpot_p95: p.tpot_p95,
+                usd_per_mtok: usd,
+                migrations: 0,
+                kv_gb_migrated: 0.0,
+            }
+        }
+    }
+}
+
+fn disagg_cell(
+    model: &'static LlamaConfig,
+    plan: &DisaggPlan,
+    slo: &SloSpec,
+    sweep: &SweepConfig,
+    infra: &InfraModel,
+) -> Cell {
+    let out = max_sustainable_qps(
+        &|| {
+            disagg_sim_cluster(model, plan)
+                .unwrap_or_else(|e| panic!("disagg cell must be feasible: {e}"))
+        },
+        &TraceConfig::chat,
+        slo,
+        sweep,
+    );
+    match out.best {
+        None => infeasible(),
+        Some(p) => {
+            // Replay the operating point to split the sustained draw
+            // per pool (mixed-vendor pools price separately).
+            let (pm, dm, merged) = replay_disagg_point(
+                model,
+                plan,
+                TraceConfig::chat(p.qps),
+                sweep.n_requests,
+                sweep.seed,
+            );
+            let usd = infra.cost_per_mtok_disagg_plan(
+                plan,
+                pm.watts_mean(),
+                dm.watts_mean(),
+                p.tokens_per_sec,
+            );
+            Cell {
+                feasible: true,
+                qps: p.qps,
+                tokens_per_sec: p.tokens_per_sec,
+                ttft_p95: p.ttft_p95,
+                tpot_p95: p.tpot_p95,
+                usd_per_mtok: usd,
+                migrations: merged.migrations,
+                kv_gb_migrated: merged.kv_bytes_migrated / 1e9,
+            }
+        }
+    }
+}
+
+fn main() {
+    let fast = std::env::var("SWEEP_FAST").ok().as_deref() == Some("1");
+    let infra = InfraModel::new(RackConfig::a100_era());
+    let slos: [(&str, SloSpec); 2] = [
+        ("interactive", SloSpec::interactive()),
+        (
+            "relaxed",
+            SloSpec {
+                ttft_p95_s: 6.0,
+                tpot_p95_s: 0.100,
+                warmup_frac: 0.1,
+                cooldown_frac: 0.1,
+            },
+        ),
+    ];
+    // Chat-mix medians drive the pool balance.
+    let (p_med, o_med) = (245usize, 148usize);
+    let m8 = by_name("llama-8b").unwrap();
+    let m70 = by_name("llama-70b").unwrap();
+    let h100 = |plan: ParallelismPlan| {
+        PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), plan)
+    };
+    let gaudi2 = |plan: ParallelismPlan| {
+        PoolSpec::new(Device::Gaudi2, PrecisionMode::fp8_static(), plan)
+    };
+    // (model, colocated plan, homogeneous disagg, mixed-vendor disagg,
+    // sweep ceiling). Equal instance budgets per mode.
+    let setups: [(&'static LlamaConfig, ParallelismPlan, DisaggPlan, DisaggPlan, f64); 2] = [
+        (
+            m8,
+            ParallelismPlan::single().with_replicas(4),
+            auto_size(
+                m8,
+                h100(ParallelismPlan::single()),
+                h100(ParallelismPlan::single()),
+                p_med,
+                o_med,
+                4,
+            ),
+            auto_size(
+                m8,
+                h100(ParallelismPlan::single()),
+                gaudi2(ParallelismPlan::single()),
+                p_med,
+                o_med,
+                4,
+            ),
+            16.0,
+        ),
+        (
+            m70,
+            ParallelismPlan::tp(2).with_replicas(4),
+            auto_size(
+                m70,
+                h100(ParallelismPlan::tp(2)),
+                h100(ParallelismPlan::tp(2)),
+                p_med,
+                o_med,
+                4,
+            ),
+            auto_size(
+                m70,
+                h100(ParallelismPlan::tp(2)),
+                gaudi2(ParallelismPlan::single()),
+                p_med,
+                o_med,
+                4,
+            ),
+            8.0,
+        ),
+    ];
+
+    let mut t = Table::new(
+        "Fig. TCO-DISAGG — $/Mtok at SLO: colocated vs disaggregated vs mixed-vendor",
+        &[
+            "model",
+            "SLO",
+            "mode",
+            "pools",
+            "chips",
+            "QPS @SLO",
+            "tok/s",
+            "TPOT p95 ms",
+            "migrations",
+            "$/Mtok @SLO",
+        ],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for (model, colo_plan, homog, mixed, qps_hi) in setups {
+        for (slo_name, slo) in &slos {
+            let sweep = if fast {
+                SweepConfig { iters: 2, n_requests: 30, seed: 17, ..SweepConfig::new(0.2, qps_hi) }
+            } else {
+                SweepConfig { iters: 4, n_requests: 100, seed: 17, ..SweepConfig::new(0.2, qps_hi) }
+            };
+            let rows: [(&str, String, usize, Cell); 3] = [
+                (
+                    "colocated",
+                    format!("H100 {colo_plan}"),
+                    colo_plan.total_chips(),
+                    colocated_cell(
+                        model,
+                        Device::H100,
+                        PrecisionMode::fp8_dynamic(),
+                        colo_plan,
+                        slo,
+                        &sweep,
+                        &infra,
+                    ),
+                ),
+                (
+                    "disagg",
+                    homog.describe(),
+                    homog.total_chips(),
+                    disagg_cell(model, &homog, slo, &sweep, &infra),
+                ),
+                (
+                    "mixed",
+                    mixed.describe(),
+                    mixed.total_chips(),
+                    disagg_cell(model, &mixed, slo, &sweep, &infra),
+                ),
+            ];
+            for (mode, pools, chips, cell) in rows {
+                let mut rec = BTreeMap::new();
+                rec.insert("model".into(), Json::Str(model.name.into()));
+                rec.insert("slo".into(), Json::Str((*slo_name).into()));
+                rec.insert("mode".into(), Json::Str(mode.into()));
+                rec.insert("pools".into(), Json::Str(pools.clone()));
+                rec.insert("chips".into(), Json::Num(chips as f64));
+                rec.insert("feasible".into(), Json::Bool(cell.feasible));
+                if cell.feasible {
+                    rec.insert("qps".into(), Json::Num(cell.qps));
+                    rec.insert("tokens_per_sec".into(), Json::Num(cell.tokens_per_sec));
+                    rec.insert("ttft_p95_s".into(), Json::Num(cell.ttft_p95));
+                    rec.insert("tpot_p95_s".into(), Json::Num(cell.tpot_p95));
+                    rec.insert("usd_per_mtok".into(), Json::Num(cell.usd_per_mtok));
+                    rec.insert("migrations".into(), Json::Num(cell.migrations as f64));
+                    rec.insert("kv_gb_migrated".into(), Json::Num(cell.kv_gb_migrated));
+                    t.row(vec![
+                        model.name.into(),
+                        (*slo_name).into(),
+                        mode.into(),
+                        pools,
+                        format!("{chips}"),
+                        f(cell.qps, 2),
+                        f(cell.tokens_per_sec, 0),
+                        f(cell.tpot_p95 * 1e3, 2),
+                        format!("{}", cell.migrations),
+                        f(cell.usd_per_mtok, 3),
+                    ]);
+                } else {
+                    t.row(vec![
+                        model.name.into(),
+                        (*slo_name).into(),
+                        mode.into(),
+                        pools,
+                        format!("{chips}"),
+                        format!("< {}", sweep.qps_lo),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                }
+                records.push(Json::Obj(rec));
+            }
+        }
+    }
+    t.print();
+
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/BENCH_fig_tco_disagg.json");
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("fig_tco_disagg".into()));
+    root.insert("fast".into(), Json::Bool(fast));
+    root.insert("cells".into(), Json::Arr(records));
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "(the mixed-vendor rows price the paper's per-phase asymmetry end-to-end:\n \
+         H100 prefill + Gaudi 2 decode, KV migration charged against the fabric)"
+    );
+}

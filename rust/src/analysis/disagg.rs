@@ -1,0 +1,201 @@
+//! Disaggregated prefill/decode deployment planning.
+//!
+//! The paper's per-phase result — prefill is compute-bound where the
+//! H100's peak GEMM wins, decode is memory-bound where Gaudi's
+//! thin-GEMM utilization and cheaper HBM capacity win — only becomes
+//! a TCO lever if the two phases can run on *different* pools. A
+//! [`DisaggPlan`] names the two pools (device, precision, TP/PP shard
+//! shape, replica count each) plus the KV-migration link between
+//! them; [`auto_size`] balances the replica split from the workload's
+//! prefill:decode service-time ratio so neither pool idles while the
+//! other saturates.
+
+use crate::analysis::parallel::ParallelismPlan;
+use crate::analysis::perfmodel::{decode_step, prefill, PrecisionMode, StepConfig};
+use crate::hwsim::interconnect::KvLink;
+use crate::hwsim::spec::Device;
+use crate::workload::llama::LlamaConfig;
+
+/// One pool of identical sharded instances serving a single phase.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolSpec {
+    pub device: Device,
+    pub precision: PrecisionMode,
+    /// Shard shape of one instance plus the pool's replica count.
+    pub plan: ParallelismPlan,
+}
+
+impl PoolSpec {
+    pub fn new(device: Device, precision: PrecisionMode, plan: ParallelismPlan) -> Self {
+        PoolSpec { device, precision, plan }
+    }
+}
+
+/// A disaggregated deployment: a prefill pool, a decode pool, and the
+/// scale-out link KV caches migrate across. Mixed-vendor pools (e.g.
+/// H100 prefill + Gaudi decode) are first-class.
+#[derive(Debug, Clone, Copy)]
+pub struct DisaggPlan {
+    pub prefill: PoolSpec,
+    pub decode: PoolSpec,
+}
+
+impl DisaggPlan {
+    pub fn new(prefill: PoolSpec, decode: PoolSpec) -> Self {
+        DisaggPlan { prefill, decode }
+    }
+
+    /// Accelerators across both pools (capex/power accounting).
+    pub fn total_chips(&self) -> usize {
+        self.prefill.plan.total_chips() + self.decode.plan.total_chips()
+    }
+
+    /// The KV-migration link implied by the two pools' fabrics: each
+    /// instance streams its KV shards over its own scale-out NICs, so
+    /// the slower endpoint's aggregate NIC bandwidth governs.
+    pub fn kv_link(&self) -> KvLink {
+        KvLink::between(
+            self.prefill.device.interconnect(),
+            self.prefill.plan.chips_per_instance(),
+            self.decode.device.interconnect(),
+            self.decode.plan.chips_per_instance(),
+        )
+    }
+
+    /// Human-readable shape for tables: "H100 tp1-x2 -> Gaudi2 tp1-x6".
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {} -> {} {}",
+            self.prefill.device.name(),
+            self.prefill.plan,
+            self.decode.device.name(),
+            self.decode.plan,
+        )
+    }
+}
+
+/// Split `total_replicas` instances between the two pools so the
+/// per-request service demand balances: one request costs the prefill
+/// pool one prompt prefill and the decode pool `output_tokens` decode
+/// steps (amortized over a 32-deep continuous batch at mid-generation
+/// context, the paper's measurement shape). The pool shares follow the
+/// ratio of those service times — a summarize-style workload (long
+/// prompts, short outputs) earns more prefill instances, a
+/// reasoning-style one more decode instances. Replica counts on the
+/// input [`PoolSpec`]s are overwritten; both pools keep >= 1 instance.
+pub fn auto_size(
+    model: &'static LlamaConfig,
+    prefill_pool: PoolSpec,
+    decode_pool: PoolSpec,
+    prompt_tokens: usize,
+    output_tokens: usize,
+    total_replicas: usize,
+) -> DisaggPlan {
+    assert!(total_replicas >= 2, "need at least one instance per pool");
+    let p_cfg = StepConfig::new(prefill_pool.device, prefill_pool.precision)
+        .with_plan(prefill_pool.plan);
+    let d_cfg =
+        StepConfig::new(decode_pool.device, decode_pool.precision).with_plan(decode_pool.plan);
+    let t_prefill = prefill(model, &p_cfg, 1, prompt_tokens.max(1)).seconds;
+    let batch = 32usize;
+    let ctx = (prompt_tokens + output_tokens / 2).max(1);
+    let t_step = decode_step(model, &d_cfg, batch, ctx).seconds;
+    let t_decode = t_step / batch as f64 * output_tokens.max(1) as f64;
+    let share = t_prefill / (t_prefill + t_decode);
+    let n_prefill =
+        ((total_replicas as f64 * share).round() as usize).clamp(1, total_replicas - 1);
+    let n_decode = total_replicas - n_prefill;
+    DisaggPlan {
+        prefill: PoolSpec {
+            plan: prefill_pool.plan.with_replicas(n_prefill),
+            ..prefill_pool
+        },
+        decode: PoolSpec {
+            plan: decode_pool.plan.with_replicas(n_decode),
+            ..decode_pool
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::llama::by_name;
+
+    fn h100_pool() -> PoolSpec {
+        PoolSpec::new(
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::single(),
+        )
+    }
+
+    fn gaudi2_pool() -> PoolSpec {
+        PoolSpec::new(
+            Device::Gaudi2,
+            PrecisionMode::fp8_static(),
+            ParallelismPlan::single(),
+        )
+    }
+
+    #[test]
+    fn auto_size_follows_phase_demand() {
+        let m = by_name("llama-8b").unwrap();
+        // Summarize-shaped (long prompt, short output) vs
+        // reasoning-shaped (short prompt, long output).
+        let summarize = auto_size(m, h100_pool(), gaudi2_pool(), 2400, 64, 8);
+        let reasoning = auto_size(m, h100_pool(), gaudi2_pool(), 256, 2000, 8);
+        let (sp, sd) = (
+            summarize.prefill.plan.replicas,
+            summarize.decode.plan.replicas,
+        );
+        let (rp, rd) = (
+            reasoning.prefill.plan.replicas,
+            reasoning.decode.plan.replicas,
+        );
+        assert_eq!(sp + sd, 8);
+        assert_eq!(rp + rd, 8);
+        assert!(
+            sp >= rp,
+            "prefill-heavy workload must not earn fewer prefill instances \
+             (summarize {sp}, reasoning {rp})"
+        );
+        assert!(rd >= 4, "reasoning traffic is decode-dominated: {rd}");
+        // Both pools always keep at least one instance.
+        assert!(sp >= 1 && sd >= 1 && rp >= 1 && rd >= 1);
+    }
+
+    #[test]
+    fn plan_chips_and_link() {
+        let m = by_name("llama-8b").unwrap();
+        let plan = auto_size(m, h100_pool(), gaudi2_pool(), 256, 512, 4);
+        assert_eq!(plan.total_chips(), 4, "tp1 instances: chips == replicas");
+        let link = plan.kv_link();
+        // Gaudi2's 3x100GbE scale-out is the bottleneck endpoint.
+        assert_eq!(link.bw, 37.5e9);
+        assert_eq!(link.lat_s, 5.0e-6 + 6.0e-6);
+        assert!(plan.describe().contains("H100"));
+        assert!(plan.describe().contains("Gaudi2"));
+    }
+
+    #[test]
+    fn wider_instances_widen_the_link() {
+        let p = PoolSpec::new(
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::tp(4),
+        );
+        let d = gaudi2_pool();
+        let plan = DisaggPlan::new(p, d);
+        // Source has 4x50 GB/s of NICs but the single-chip Gaudi2 sink
+        // still caps the link.
+        assert_eq!(plan.kv_link().bw, 37.5e9);
+        let d4 = PoolSpec::new(
+            Device::Gaudi2,
+            PrecisionMode::fp8_static(),
+            ParallelismPlan::tp(4),
+        );
+        let plan4 = DisaggPlan::new(p, d4);
+        assert_eq!(plan4.kv_link().bw, 150e9, "4 chips x 37.5 GB/s");
+    }
+}

@@ -2,12 +2,16 @@
 //! performance model that composes `workload` FLOPs with `hwsim`
 //! device timing to produce the paper's Figures 2–6, and the
 //! multi-chip parallelism planner (TP/PP sharding + HBM capacity
-//! feasibility) that extends the model to deployment scale.
+//! feasibility) that extends the model to deployment scale, and the
+//! disaggregated prefill/decode pool planner (`disagg`) that splits a
+//! deployment into phase-specialized — possibly mixed-vendor — pools.
 
+pub mod disagg;
 pub mod parallel;
 pub mod perfmodel;
 pub mod roofline;
 
+pub use disagg::{auto_size, DisaggPlan, PoolSpec};
 pub use parallel::{
     auto_plan, check_capacity, check_step, CapacityError, CapacityFit, ParallelismPlan,
     DEFAULT_MIN_KV_TOKENS,

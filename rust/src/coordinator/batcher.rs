@@ -9,7 +9,7 @@
 use std::collections::VecDeque;
 
 use super::kv_cache::BlockAllocator;
-use super::request::{RequestState, SeqId, Sequence};
+use super::request::{RequestState, SeqId, SeqRole, Sequence};
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -118,7 +118,12 @@ impl Batcher {
             if seq.arrival > now {
                 break; // head-of-line has not arrived yet (FIFO holds)
             }
-            if seq.prompt_len > token_budget {
+            // A migrated decode leg "resumes": its context KV arrived
+            // over the fabric, so admission allocates the blocks but
+            // costs no prefill compute and no token budget — the
+            // sequence joins this step's decode batch directly.
+            let resume = seq.role == SeqRole::DecodeLeg;
+            if !resume && seq.prompt_len > token_budget {
                 // Oversized prompt (bigger than the whole per-step
                 // budget): admit it alone so it cannot starve.
                 if seq.prompt_len > self.cfg.prefill_token_budget
@@ -140,8 +145,13 @@ impl Batcher {
             }
             let blocks = alloc.allocate(blocks_needed).expect("checked");
             seq.blocks = blocks;
-            token_budget -= seq.prompt_len;
-            adm.prefills.push(cand);
+            if resume {
+                seq.state = RequestState::Decoding;
+                adm.decodes.push(cand);
+            } else {
+                token_budget -= seq.prompt_len;
+                adm.prefills.push(cand);
+            }
             self.queue.pop_front();
         }
         adm
@@ -281,6 +291,34 @@ mod tests {
         let adm2 = b.plan_step(&mut seqs, &mut alloc, 5.0);
         assert_eq!(adm2.prefills, vec![0]);
         assert_eq!(b.head_arrival(&seqs), None);
+    }
+
+    #[test]
+    fn migrated_decode_leg_resumes_without_prefill() {
+        use crate::coordinator::request::MigratedRequest;
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig::default());
+        let m = MigratedRequest {
+            id: 0,
+            arrival: 0.0,
+            at: 1.0,
+            context_len: 40,
+            remaining_out: 9,
+            bytes: 40.0 * 131072.0,
+        };
+        seqs.insert(0, Sequence::migrated(&m));
+        b.enqueue(0);
+        // Before the KV arrives: gated like any future arrival.
+        let adm0 = b.plan_step(&mut seqs, &mut alloc, 0.5);
+        assert!(adm0.prefills.is_empty() && adm0.decodes.is_empty());
+        assert_eq!(alloc.allocated_blocks(), 0);
+        // At delivery: admitted straight into the decode batch, blocks
+        // allocated for the migrated context, zero prefill compute.
+        let adm = b.plan_step(&mut seqs, &mut alloc, 1.0);
+        assert!(adm.prefills.is_empty());
+        assert_eq!(adm.decodes, vec![0]);
+        assert_eq!(seqs[&0].blocks.len(), 3); // ceil(40/16)
+        assert_eq!(seqs[&0].state, RequestState::Decoding);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! `Router::drain_closed_batch` drains each engine independently —
 //! fine for closed batches, wrong for open-loop traffic, where
 //! arrivals and step completions interleave on one timeline (its old
-//! `run_to_completion` name is deprecated). [`Cluster::run`]
+//! `run_to_completion` alias is gone as of 0.4). [`Cluster::run`]
 //! merges a streaming arrival source (any `Iterator<Item = Request>`,
 //! e.g. [`TraceGenerator`](crate::workload::trace::TraceGenerator))
 //! with per-engine step completions:
@@ -29,17 +29,41 @@
 //! [`InfraModel::cost_per_mtok`](crate::tco::InfraModel::cost_per_mtok)
 //! turns into $/Mtok-at-SLO.
 
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
 use super::backend::{ExecutionBackend, SimBackend};
 use super::engine::{Engine, EngineConfig};
 use super::kv_cache::KvCacheConfig;
 use super::metrics::Metrics;
+use super::request::{MigratedRequest, SeqId};
 use super::router::{EngineRating, RoutePolicy, Router};
+use crate::analysis::disagg::{DisaggPlan, PoolSpec};
 use crate::analysis::parallel::{CapacityError, ParallelismPlan};
 use crate::analysis::perfmodel::{PrecisionMode, StepConfig};
+use crate::hwsim::interconnect::KvLink;
 use crate::hwsim::spec::Device;
 use crate::workload::llama;
 use crate::workload::llama::LlamaConfig;
 use crate::workload::trace::{Request, TraceConfig, TraceGenerator};
+
+/// A serving system the SLO load sweep can drive: anything that
+/// serves an open-loop arrival stream on a shared virtual timeline
+/// and reports merged metrics. Implemented by [`Cluster`] (colocated
+/// pools) and [`DisaggCluster`] (disaggregated prefill/decode pools),
+/// so `measure_load` / `max_sustainable_qps` price both on the same
+/// $/Mtok-at-SLO axis.
+pub trait ServeSim {
+    /// Serve an arrival stream to completion. False when the step cap
+    /// was exhausted or the workload cannot drain.
+    fn serve<I: IntoIterator<Item = Request>>(&mut self, arrivals: I) -> bool;
+    /// Rollup of every engine's metrics (all pools).
+    fn merged_metrics(&self) -> Metrics;
+    /// Slowest engine's virtual completion time.
+    fn makespan(&self) -> f64;
+    /// Total preemptions across all pools.
+    fn preemptions(&self) -> u64;
+}
 
 pub struct Cluster<B: ExecutionBackend> {
     pub router: Router<B>,
@@ -104,6 +128,322 @@ impl<B: ExecutionBackend> Cluster<B> {
     }
 }
 
+impl<B: ExecutionBackend> ServeSim for Cluster<B> {
+    fn serve<I: IntoIterator<Item = Request>>(&mut self, arrivals: I) -> bool {
+        self.run(arrivals)
+    }
+
+    fn merged_metrics(&self) -> Metrics {
+        Cluster::merged_metrics(self)
+    }
+
+    fn makespan(&self) -> f64 {
+        Cluster::makespan(self)
+    }
+
+    fn preemptions(&self) -> u64 {
+        Cluster::preemptions(self)
+    }
+}
+
+/// Advance every engine of one pool toward `t` on the shared
+/// timeline, charging executed steps against the run's step budget.
+/// False when the budget is exhausted.
+fn step_pool_to<B: ExecutionBackend>(pool: &mut Router<B>, t: f64, left: &mut usize) -> bool {
+    for e in pool.engines.iter_mut() {
+        let taken = e.step_until(t, *left);
+        *left = (*left).saturating_sub(taken);
+        if *left == 0 {
+            return false;
+        }
+    }
+    true
+}
+
+/// An in-flight KV migration: created when a prefill leg finishes,
+/// delivered to the decode pool at `t_done`. Ordered by completion
+/// time (id tiebreak) for the event loop's min-heap.
+#[derive(Debug, Clone)]
+struct Transfer {
+    t_done: f64,
+    id: SeqId,
+    /// Prefill-pool engine holding the in-flight KV blocks.
+    src: usize,
+    /// Original request arrival (TTFT / e2e reference).
+    arrival: f64,
+    /// Context tokens migrated (prompt + the prefill token).
+    context_len: usize,
+    /// Output tokens still to generate on the decode pool.
+    remaining_out: usize,
+    bytes: f64,
+}
+
+impl PartialEq for Transfer {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_done == other.t_done && self.id == other.id
+    }
+}
+
+impl Eq for Transfer {}
+
+impl PartialOrd for Transfer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Transfer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t_done
+            .total_cmp(&other.t_done)
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// Disaggregated serving: requests prefill on a dedicated pool, their
+/// KV cache migrates over the scale-out fabric ([`KvLink`]), and a
+/// decode pool streams the remaining tokens. One shared virtual
+/// timeline spans both pools and the transfers between them:
+///
+/// 1. external arrivals drive the prefill pool exactly like
+///    [`Cluster::run`] drives its engine pool;
+/// 2. a finished prefill leg becomes an in-flight transfer costed at
+///    the closed form `context_tokens x kv_bytes_per_token / link_bw
+///    + link_lat`; its source KV blocks stay resident until delivery
+///    (in-flight accounting), so a saturated prefill pool
+///    back-pressures on slow fabrics;
+/// 3. at `t_done` the sequence resumes on a decode engine
+///    ([`Router::submit_migrated_at`]): TTFT is sampled there —
+///    prefill queueing + compute + transfer — and the decode engine
+///    generates the remaining tokens with zero prefill compute.
+///
+/// Single-token requests never migrate (prefill is the whole
+/// service). Events are processed in global time order; within each
+/// pool the [`Cluster::run`] independence argument applies unchanged.
+///
+/// Known approximation: a prefill engine stalled on in-flight KV
+/// resumes at its stall-time clock when the delivery releases the
+/// blocks, which can predate the delivery instant by up to the
+/// transfer time (DESIGN.md §7.3).
+pub struct DisaggCluster<B: ExecutionBackend> {
+    pub prefill: Router<B>,
+    pub decode: Router<B>,
+    /// Cross-pool migration link (swap for sensitivity sweeps; use
+    /// [`KvLink::infinite`] for the colocated-equivalence limit).
+    pub link: KvLink,
+    /// KV bytes per migrated context token (model x KV dtype).
+    pub kv_bytes_per_token: f64,
+    pub step_cap: usize,
+    /// Original output lengths of requests currently in their prefill
+    /// or transfer leg (the prefill pool only sees `output_len = 1`).
+    out_len: HashMap<SeqId, usize>,
+}
+
+impl<B: ExecutionBackend> DisaggCluster<B> {
+    pub fn new(
+        prefill: Router<B>,
+        decode: Router<B>,
+        link: KvLink,
+        kv_bytes_per_token: f64,
+    ) -> Self {
+        DisaggCluster {
+            prefill,
+            decode,
+            link,
+            kv_bytes_per_token,
+            step_cap: 50_000_000,
+            out_len: HashMap::new(),
+        }
+    }
+
+    /// Run the two-pool event loop over an arrival stream. Returns
+    /// true when every submitted request finished within the step cap.
+    pub fn run(&mut self, arrivals: impl IntoIterator<Item = Request>) -> bool {
+        let mut left = self.step_cap;
+        let mut pending: BinaryHeap<Reverse<Transfer>> = BinaryHeap::new();
+        let mut arrivals = arrivals.into_iter();
+        let mut next = arrivals.next();
+        // Phase 1: external arrivals, interleaved with migration
+        // deliveries in global time order.
+        while let Some(r) = next.take() {
+            loop {
+                let t_mig = match pending.peek() {
+                    Some(Reverse(t)) => t.t_done,
+                    None => f64::INFINITY,
+                };
+                if t_mig > r.arrival {
+                    break;
+                }
+                // Before committing to this delivery order, make every
+                // prefill completion up to `t_mig` visible: transfer
+                // durations vary with context length, so a prefill that
+                // finishes *later* than another can still complete its
+                // (shorter) transfer *earlier*. Stepping + harvesting
+                // here guarantees the heap holds every transfer with
+                // t_done <= t_mig, and the popped minimum is the true
+                // next event.
+                if !step_pool_to(&mut self.prefill, t_mig, &mut left) {
+                    return false;
+                }
+                self.harvest(&mut pending);
+                let Reverse(tr) = pending.pop().unwrap();
+                if !step_pool_to(&mut self.decode, tr.t_done, &mut left) {
+                    return false;
+                }
+                self.deliver(tr);
+            }
+            if !step_pool_to(&mut self.prefill, r.arrival, &mut left) {
+                return false;
+            }
+            self.harvest(&mut pending);
+            self.submit_prefill(&r);
+            next = arrivals.next();
+        }
+        // Phase 2: drain. Deliveries release in-flight source KV,
+        // which can unblock queued prefills, so prefill draining and
+        // migration delivery interleave *one delivery at a time*: each
+        // pop re-drains and re-harvests the prefill pool first, so a
+        // transfer emitted by a stall-released engine enters the heap
+        // before the next delivery is ordered (only the stall-clock
+        // skew documented in DESIGN.md §7.3 remains).
+        loop {
+            for e in self.prefill.engines.iter_mut() {
+                let s0 = e.metrics.steps;
+                e.run_to_completion(left); // may stall on in-flight KV
+                left = left.saturating_sub((e.metrics.steps - s0) as usize);
+                if left == 0 {
+                    return false;
+                }
+            }
+            self.harvest(&mut pending);
+            let Some(Reverse(tr)) = pending.pop() else { break };
+            if !step_pool_to(&mut self.decode, tr.t_done, &mut left) {
+                return false;
+            }
+            self.deliver(tr);
+        }
+        if self.prefill.engines.iter().any(|e| e.pending() > 0) {
+            return false; // stuck prefill work (infeasible request)
+        }
+        // Phase 3: drain the decode pool.
+        for e in self.decode.engines.iter_mut() {
+            let s0 = e.metrics.steps;
+            let ok = e.run_to_completion(left);
+            left = left.saturating_sub((e.metrics.steps - s0) as usize);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Route one external arrival. Requests needing no decode phase
+    /// (single-token outputs) are served entirely by the prefill pool;
+    /// everything else runs as a prefill leg that will hand off.
+    fn submit_prefill(&mut self, r: &Request) {
+        if r.output_len <= 1 {
+            self.prefill.submit_at(r);
+            return;
+        }
+        self.out_len.insert(r.id, r.output_len);
+        self.prefill.submit_handoff_at(r);
+    }
+
+    /// Collect freshly finished prefill legs into pending transfers,
+    /// costed by the closed-form link model.
+    fn harvest(&mut self, pending: &mut BinaryHeap<Reverse<Transfer>>) {
+        for (src, e) in self.prefill.engines.iter_mut().enumerate() {
+            for id in e.take_handoffs() {
+                let seq = e.sequence(id).expect("handoff sequence exists");
+                let context_len = seq.context_len();
+                let bytes = context_len as f64 * self.kv_bytes_per_token;
+                let t_done =
+                    seq.finished_at.expect("handoff finished") + self.link.transfer_time(bytes);
+                let out = self
+                    .out_len
+                    .remove(&id)
+                    .expect("handoff has a recorded output length");
+                pending.push(Reverse(Transfer {
+                    t_done,
+                    id,
+                    src,
+                    arrival: seq.arrival,
+                    context_len,
+                    remaining_out: out - 1,
+                    bytes,
+                }));
+            }
+        }
+    }
+
+    /// Complete one migration: free the source-side in-flight KV and
+    /// resume the sequence on a decode engine.
+    fn deliver(&mut self, tr: Transfer) {
+        self.prefill.engines[tr.src].release_migrated(tr.id);
+        let m = MigratedRequest {
+            id: tr.id,
+            arrival: tr.arrival,
+            at: tr.t_done,
+            context_len: tr.context_len,
+            remaining_out: tr.remaining_out,
+            bytes: tr.bytes,
+        };
+        self.decode.submit_migrated_at(&m);
+    }
+
+    /// Slowest engine's virtual completion time across both pools.
+    pub fn makespan(&self) -> f64 {
+        self.prefill.makespan().max(self.decode.makespan())
+    }
+
+    /// Rollup across both pools. Migration counts/bytes ride along
+    /// (`Metrics::migrations`, `Metrics::kv_bytes_migrated`).
+    pub fn merged_metrics(&self) -> Metrics {
+        let (mut p, d) = self.pool_metrics();
+        p.absorb(&d);
+        p
+    }
+
+    /// Per-pool rollups: (prefill, decode) — heterogeneous pools are
+    /// priced separately (`InfraModel::cost_per_mtok_disagg`), so the
+    /// caller needs each pool's sustained draw on its own.
+    pub fn pool_metrics(&self) -> (Metrics, Metrics) {
+        let mut p = Metrics::new();
+        for e in &self.prefill.engines {
+            p.absorb(&e.metrics);
+        }
+        let mut d = Metrics::new();
+        for e in &self.decode.engines {
+            d.absorb(&e.metrics);
+        }
+        (p, d)
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        let p: u64 = self.prefill.engines.iter().map(|e| e.preemptions()).sum();
+        let d: u64 = self.decode.engines.iter().map(|e| e.preemptions()).sum();
+        p + d
+    }
+}
+
+impl<B: ExecutionBackend> ServeSim for DisaggCluster<B> {
+    fn serve<I: IntoIterator<Item = Request>>(&mut self, arrivals: I) -> bool {
+        self.run(arrivals)
+    }
+
+    fn merged_metrics(&self) -> Metrics {
+        DisaggCluster::merged_metrics(self)
+    }
+
+    fn makespan(&self) -> f64 {
+        DisaggCluster::makespan(self)
+    }
+
+    fn preemptions(&self) -> u64 {
+        DisaggCluster::preemptions(self)
+    }
+}
+
 /// Homogeneous simulated cluster of *sharded* model instances: the
 /// plan's full deployment shape is honored — `plan.replicas` engines,
 /// each one a `plan.tp x plan.pp`-chip instance of `model` on `dev`.
@@ -130,6 +470,70 @@ pub fn sharded_sim_cluster(
     let ratings =
         vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n_instances];
     Ok(Cluster::new(Router::new(engines, ratings, RoutePolicy::LeastLoaded)))
+}
+
+/// One pool of sharded sim engines (the [`disagg_sim_cluster`]
+/// building block): `pool.plan.replicas` instances of `model` on
+/// `pool.device`, each KV-sized through the HBM capacity check.
+fn sim_pool(
+    model: &'static LlamaConfig,
+    pool: &PoolSpec,
+) -> Result<Router<SimBackend>, CapacityError> {
+    let w_bytes = pool.precision.weight_bytes_per_elem();
+    let n = pool.plan.replicas.max(1);
+    let mut engines = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut cfg = EngineConfig::for_instance(model, pool.device, pool.plan, w_bytes, 2.0)?;
+        cfg.batcher.max_batch = 64;
+        let backend = SimBackend::new(
+            model,
+            StepConfig::new(pool.device, pool.precision).with_plan(pool.plan),
+        );
+        engines.push(Engine::new(cfg, backend));
+    }
+    let ratings = vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n];
+    Ok(Router::new(engines, ratings, RoutePolicy::LeastLoaded))
+}
+
+/// Disaggregated simulated cluster from a [`DisaggPlan`]: a prefill
+/// pool and a decode pool of capacity-checked sharded instances —
+/// possibly different vendors — joined by the plan's implied
+/// [`KvLink`]. KV dtype is BF16 (the `StepConfig` default), so the
+/// migrated bytes/token match what the decode pool will hold.
+pub fn disagg_sim_cluster(
+    model: &'static LlamaConfig,
+    plan: &DisaggPlan,
+) -> Result<DisaggCluster<SimBackend>, CapacityError> {
+    let prefill = sim_pool(model, &plan.prefill)?;
+    let decode = sim_pool(model, &plan.decode)?;
+    Ok(DisaggCluster::new(
+        prefill,
+        decode,
+        plan.kv_link(),
+        model.kv_bytes_per_token(2.0),
+    ))
+}
+
+/// Replay a measured disaggregated operating point on a fresh cluster
+/// to split its metrics per pool (heterogeneous pools price at their
+/// own capex and sustained draw). The caller passes the same trace
+/// shape, request count and seed as the probe that found the point —
+/// the simulator is deterministic, so the replay must drain exactly
+/// as the probe did (asserted). Returns (prefill, decode, merged).
+pub fn replay_disagg_point(
+    model: &'static LlamaConfig,
+    plan: &DisaggPlan,
+    trace: TraceConfig,
+    n_requests: usize,
+    seed: u64,
+) -> (Metrics, Metrics, Metrics) {
+    let mut c = disagg_sim_cluster(model, plan).expect("plan was feasible for the probe");
+    let gen = TraceGenerator::new(trace, seed);
+    let drained = c.run(gen.stream(n_requests));
+    assert!(drained, "replay of the feasible probe must drain");
+    let (p, d) = c.pool_metrics();
+    let merged = DisaggCluster::merged_metrics(&c);
+    (p, d, merged)
 }
 
 /// Homogeneous simulated cluster for sweeps, examples and benches:
@@ -222,10 +626,10 @@ fn p95_or_whole(p: &crate::util::stats::TimedPercentiles, t0: f64, t1: f64) -> f
     }
 }
 
-/// Measure one operating point: a fresh cluster serving `n_requests`
-/// Poisson arrivals at `qps`, judged against `slo` on the steady-state
-/// window.
-pub fn measure_load<B, C, T>(
+/// Measure one operating point: a fresh serving system (colocated
+/// [`Cluster`] or [`DisaggCluster`]) serving `n_requests` Poisson
+/// arrivals at `qps`, judged against `slo` on the steady-state window.
+pub fn measure_load<S, C, T>(
     mk_cluster: &C,
     trace_at: &T,
     qps: f64,
@@ -234,13 +638,13 @@ pub fn measure_load<B, C, T>(
     slo: &SloSpec,
 ) -> LoadPoint
 where
-    B: ExecutionBackend,
-    C: Fn() -> Cluster<B>,
+    S: ServeSim,
+    C: Fn() -> S,
     T: Fn(f64) -> TraceConfig,
 {
     let mut cluster = mk_cluster();
     let gen = TraceGenerator::new(trace_at(qps), seed);
-    let drained = cluster.run(gen.stream(n_requests));
+    let drained = cluster.serve(gen.stream(n_requests));
     let m = cluster.merged_metrics();
     let makespan = cluster.makespan();
     let (t0, t1) = slo.window(makespan);
@@ -261,7 +665,7 @@ where
         } else {
             0.0
         },
-        watts_mean: if m.span > 0.0 { m.energy_j / m.span } else { 0.0 },
+        watts_mean: m.watts_mean(),
         requests_done: m.requests_done,
         preemptions: cluster.preemptions(),
     }
@@ -296,16 +700,18 @@ pub struct SweepOutcome {
 /// Binary-search the highest offered QPS whose steady-state TTFT/TPOT
 /// p95 meet `slo`. Builds a fresh cluster per probe (the search is
 /// over *independent* open-loop runs, not a single warm system), so
-/// `mk_cluster` is a factory. Deterministic for a fixed seed.
-pub fn max_sustainable_qps<B, C, T>(
+/// `mk_cluster` is a factory. Deterministic for a fixed seed. Works
+/// for any [`ServeSim`] — colocated and disaggregated deployments
+/// land on the same $/Mtok-at-SLO axis.
+pub fn max_sustainable_qps<S, C, T>(
     mk_cluster: &C,
     trace_at: &T,
     slo: &SloSpec,
     cfg: &SweepConfig,
 ) -> SweepOutcome
 where
-    B: ExecutionBackend,
-    C: Fn() -> Cluster<B>,
+    S: ServeSim,
+    C: Fn() -> S,
     T: Fn(f64) -> TraceConfig,
 {
     assert!(cfg.qps_lo > 0.0 && cfg.qps_hi > cfg.qps_lo, "need 0 < lo < hi");
@@ -447,6 +853,96 @@ mod tests {
         assert_eq!(c.router.engines.len(), 2);
         assert!(c.run(vec![req(0, 0.0, 64, 8), req(1, 0.5, 64, 8)]));
         assert_eq!(c.merged_metrics().requests_done, 2);
+    }
+
+    fn small_disagg_plan() -> DisaggPlan {
+        DisaggPlan::new(
+            PoolSpec::new(
+                Device::H100,
+                PrecisionMode::fp8_dynamic(),
+                ParallelismPlan::single(),
+            ),
+            PoolSpec::new(
+                Device::Gaudi2,
+                PrecisionMode::fp8_static(),
+                ParallelismPlan::single().with_replicas(2),
+            ),
+        )
+    }
+
+    #[test]
+    fn disagg_cluster_serves_and_conserves() {
+        let model = by_name("llama-8b").unwrap();
+        let mut c = disagg_sim_cluster(model, &small_disagg_plan()).expect("8B fits");
+        let reqs: Vec<Request> = (0..10).map(|i| req(i, i as f64 * 0.2, 128, 16)).collect();
+        let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        assert!(c.run(reqs));
+        let m = c.merged_metrics();
+        assert_eq!(m.requests_done, 10, "no request lost across migration");
+        assert_eq!(m.tokens_out, expected, "token conservation across pools");
+        assert_eq!(m.migrations, 10);
+        assert!(m.kv_bytes_migrated > 0.0);
+        assert_eq!(m.ttft.count(), 10, "one TTFT sample per request");
+        // The split of work between the pools is visible per pool:
+        // prefill emits exactly the first token of each request, the
+        // decode pool owns the request ends.
+        let (pm, dm) = c.pool_metrics();
+        assert_eq!(pm.requests_done, 0);
+        assert_eq!(dm.requests_done, 10);
+        assert_eq!(pm.tokens_out, 10);
+        assert_eq!(dm.tokens_out, expected - 10);
+        // All in-flight KV released by the end.
+        for e in c.prefill.engines.iter().chain(c.decode.engines.iter()) {
+            assert_eq!(e.kv_utilization(), 0.0, "leaked in-flight KV");
+        }
+    }
+
+    #[test]
+    fn single_token_requests_never_migrate() {
+        let model = by_name("llama-8b").unwrap();
+        let mut c = disagg_sim_cluster(model, &small_disagg_plan()).expect("8B fits");
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, i as f64 * 0.5, 256, 1)).collect();
+        assert!(c.run(reqs));
+        let m = c.merged_metrics();
+        assert_eq!(m.requests_done, 4);
+        assert_eq!(m.migrations, 0, "prefill-only requests stay put");
+        let (pm, dm) = c.pool_metrics();
+        assert_eq!(pm.requests_done, 4, "prefill pool owns single-token requests");
+        assert_eq!(dm.steps, 0, "decode pool never woke up");
+    }
+
+    #[test]
+    fn disagg_determinism_same_seed_same_everything() {
+        let run = || {
+            let model = by_name("llama-8b").unwrap();
+            let mut c = disagg_sim_cluster(model, &small_disagg_plan()).expect("8B fits");
+            let gen = TraceGenerator::new(TraceConfig::chat(4.0), 23);
+            assert!(c.run(gen.stream(50)));
+            let m = c.merged_metrics();
+            (c.makespan(), m.tokens_out, m.requests_done, m.migrations, m.report())
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0.to_bits(), b.0.to_bits(), "disagg makespan must be bit-identical");
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.3, b.3);
+        assert_eq!(a.4, b.4);
+    }
+
+    #[test]
+    fn disagg_sweep_finds_feasible_point() {
+        let slo = SloSpec::interactive();
+        let cfg = SweepConfig { iters: 2, n_requests: 30, seed: 7, ..SweepConfig::new(0.25, 8.0) };
+        let out = max_sustainable_qps(
+            &|| disagg_sim_cluster(by_name("llama-8b").unwrap(), &small_disagg_plan()).unwrap(),
+            &TraceConfig::chat,
+            &slo,
+            &cfg,
+        );
+        let best = out.best.expect("near-idle chat load must meet the SLO");
+        assert!(best.feasible && best.tokens_per_sec > 0.0);
+        assert!(best.ttft_p95 <= slo.ttft_p95_s);
     }
 
     #[test]

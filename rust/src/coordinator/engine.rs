@@ -31,7 +31,7 @@ use super::backend::ExecutionBackend;
 use super::batcher::{Batcher, BatcherConfig};
 use super::kv_cache::{BlockAllocator, KvCacheConfig};
 use super::metrics::Metrics;
-use super::request::{RequestState, SeqId, Sequence};
+use super::request::{MigratedRequest, RequestState, SeqId, SeqRole, Sequence};
 use super::scheduler::{plan, SchedulerPolicy, StepPlan};
 use crate::workload::trace::Request;
 
@@ -88,6 +88,9 @@ pub struct Engine<B: ExecutionBackend> {
     /// for post-run inspection, so `pending()` must not rescan it
     /// (the cluster loop and `LeastLoaded` routing call it per step).
     active: usize,
+    /// Prefill legs whose prefill finished and whose KV awaits
+    /// migration to a decode pool (drained by `take_handoffs`).
+    handoffs: Vec<SeqId>,
 }
 
 impl<B: ExecutionBackend> Engine<B> {
@@ -102,6 +105,7 @@ impl<B: ExecutionBackend> Engine<B> {
             clock: 0.0,
             preemptions: 0,
             active: 0,
+            handoffs: Vec::new(),
         }
     }
 
@@ -136,6 +140,59 @@ impl<B: ExecutionBackend> Engine<B> {
         self.batcher.enqueue(seq.id);
         if self.seqs.insert(seq.id, seq).is_none() {
             self.active += 1;
+        }
+    }
+
+    /// Submit the prefill leg of a disaggregated request: compute the
+    /// prompt KV + first token, then hold the KV for migration
+    /// (`take_handoffs` / `release_migrated`). Request-level metrics
+    /// are recorded by the decode pool, which owns the request's end.
+    pub fn submit_handoff(&mut self, r: &Request) {
+        let mut seq = Sequence::from_request(r);
+        seq.role = SeqRole::PrefillLeg;
+        seq.output_len = 1; // prefill emits exactly the first token
+        self.batcher.enqueue(seq.id);
+        if self.seqs.insert(seq.id, seq).is_none() {
+            self.active += 1;
+        }
+    }
+
+    /// Submit a migrated decode leg: the context KV (and first token)
+    /// arrived over the fabric at `m.at`. TTFT is sampled here — it
+    /// spans prefill queueing, prefill compute AND the KV transfer,
+    /// because the user sees the first token only when it lands with
+    /// the migrated cache.
+    pub fn submit_migrated(&mut self, m: &MigratedRequest) {
+        debug_assert!(
+            m.context_len <= self.alloc.config().tokens_capacity(),
+            "migrated context ({} tokens) can never fit this decode pool \
+             ({} KV tokens) — it would deadlock, not queue",
+            m.context_len,
+            self.alloc.config().tokens_capacity(),
+        );
+        let seq = Sequence::migrated(m);
+        self.metrics.record_first_token(m.arrival, m.at);
+        self.metrics.record_migration(m.bytes);
+        self.batcher.enqueue(seq.id);
+        if self.seqs.insert(seq.id, seq).is_none() {
+            self.active += 1;
+        }
+    }
+
+    /// Drain the handoff queue: prefill legs whose prefill finished
+    /// since the last call, ready to start their KV migration.
+    pub fn take_handoffs(&mut self) -> Vec<SeqId> {
+        std::mem::take(&mut self.handoffs)
+    }
+
+    /// Release a handed-off sequence's KV blocks once its migration to
+    /// the decode pool completes — in-flight transfers keep their
+    /// source blocks resident until then, so a saturated prefill pool
+    /// back-pressures on slow fabrics.
+    pub fn release_migrated(&mut self, id: SeqId) {
+        if let Some(seq) = self.seqs.get_mut(&id) {
+            let mut blocks = std::mem::take(&mut seq.blocks);
+            self.alloc.release(&mut blocks);
         }
     }
 
@@ -233,22 +290,35 @@ impl<B: ExecutionBackend> Engine<B> {
         self.clock += res.seconds;
         let n = ids.len();
         for id in ids {
-            let first_emission = {
+            // First emission outcome: sample TTFT (normal request),
+            // defer it (prefill leg — the decode pool samples TTFT at
+            // migration delivery), or count a recompute restart.
+            enum Emit {
+                Sample(f64),
+                Defer,
+                Restart,
+            }
+            let emit = {
                 let seq = self.seqs.get_mut(id).expect("prefilled unknown seq");
                 seq.state = RequestState::Decoding;
                 seq.generated += 1; // prefill emits one token
                 seq.delivered += 1;
                 if seq.first_token_at.is_none() {
                     seq.first_token_at = Some(self.clock);
-                    Some(seq.arrival)
+                    if seq.role == SeqRole::PrefillLeg {
+                        Emit::Defer
+                    } else {
+                        Emit::Sample(seq.arrival)
+                    }
                 } else {
-                    None // recompute re-prefill: token is the rolled-
-                         // back one, TTFT was already sampled
+                    Emit::Restart // recompute re-prefill: token is the
+                                  // rolled-back one, TTFT already sampled
                 }
             };
-            match first_emission {
-                Some(arrival) => self.metrics.record_first_token(arrival, self.clock),
-                None => self.metrics.record_restart(),
+            match emit {
+                Emit::Sample(arrival) => self.metrics.record_first_token(arrival, self.clock),
+                Emit::Defer => {}
+                Emit::Restart => self.metrics.record_restart(),
             }
             self.finish_if_done(*id);
         }
@@ -298,7 +368,18 @@ impl<B: ExecutionBackend> Engine<B> {
         seq.state = RequestState::Finished;
         seq.finished_at = Some(self.clock);
         self.active -= 1;
-        let (arrival, first) = (seq.arrival, seq.first_token_at.unwrap_or(self.clock));
+        if seq.role == SeqRole::PrefillLeg {
+            // Handoff: the KV blocks stay resident until the migration
+            // completes (`release_migrated`); request-level metrics
+            // are recorded by the decode pool, which owns the end of
+            // the request. The coordinator harvests the id from the
+            // handoff queue to start the transfer.
+            self.backend.release(id);
+            self.handoffs.push(id);
+            return;
+        }
+        let arrival = seq.origin_arrival.unwrap_or(seq.arrival);
+        let first = seq.first_token_at.unwrap_or(self.clock);
         // Delivered (not `generated`) so TPOT spans all passes of a
         // preempted request, whose `generated` was reset on requeue.
         let out = seq.delivered;
@@ -327,6 +408,10 @@ impl<B: ExecutionBackend> Engine<B> {
         seq.output_len -= gen.min(seq.output_len);
         seq.generated = 0;
         seq.state = RequestState::Queued;
+        // A preempted decode leg lost its migrated KV with the
+        // eviction: demote it to a full sequence so the re-prefill is
+        // a real local recompute, not a free "resume".
+        seq.role = SeqRole::Full;
         // Front of the queue: the victim predates everything still
         // waiting, and must never sit behind a not-yet-arrived head
         // (which would let idle-advance skip past its runnable
@@ -535,6 +620,85 @@ mod tests {
             batched_time < serial_time / 4.0,
             "batched {batched_time} serial {serial_time}"
         );
+    }
+
+    #[test]
+    fn handoff_prefill_leg_holds_kv_and_defers_metrics() {
+        let mut e = engine(1000);
+        e.submit_handoff(&req(0, 0.0, 100, 40));
+        assert!(e.run_to_completion(1000));
+        let s = e.sequence(0).unwrap();
+        assert_eq!(s.state, RequestState::Finished);
+        assert_eq!(s.generated, 1, "prefill leg emits exactly the first token");
+        // Request-level metrics defer to the decode pool.
+        assert_eq!(e.metrics.requests_done, 0);
+        assert_eq!(e.metrics.ttft.count(), 0);
+        assert_eq!(e.metrics.tokens_out, 1);
+        // KV held for the in-flight migration...
+        assert!(e.kv_utilization() > 0.0, "handoff KV released too early");
+        assert_eq!(e.take_handoffs(), vec![0]);
+        assert!(e.take_handoffs().is_empty(), "handoffs drain once");
+        // ...and released only when the transfer completes.
+        e.release_migrated(0);
+        assert_eq!(e.kv_utilization(), 0.0);
+    }
+
+    #[test]
+    fn migrated_leg_streams_remaining_tokens_with_full_accounting() {
+        use crate::coordinator::request::MigratedRequest;
+        let mut e = engine(1000);
+        let m = MigratedRequest {
+            id: 3,
+            arrival: 1.0,
+            at: 4.0,
+            context_len: 101,
+            remaining_out: 9,
+            bytes: 101.0 * 131072.0,
+        };
+        e.submit_migrated(&m);
+        // TTFT sampled at delivery, measured from the ORIGINAL arrival
+        // (it includes prefill queueing, compute, and the transfer).
+        assert_eq!(e.metrics.ttft.count(), 1);
+        assert!((e.metrics.ttft.pct(50.0) - 3.0).abs() < 1e-12);
+        assert_eq!(e.metrics.migrations, 1);
+        assert!(e.run_to_completion(1000));
+        let s = e.sequence(3).unwrap();
+        assert_eq!(s.generated, 9, "only the remaining tokens run here");
+        assert_eq!(s.delivered, 10, "prefill token + decode tokens");
+        assert_eq!(e.metrics.requests_done, 1);
+        assert_eq!(e.metrics.tokens_out, 9, "migrated token not re-counted");
+        assert!(s.first_token_at.unwrap() >= 4.0);
+        assert!(s.finished_at.unwrap() > 4.0);
+        // e2e measured from the origin arrival, so it spans both legs.
+        assert!(e.metrics.e2e_latency.pct(50.0) >= 3.0);
+        assert_eq!(e.metrics.tpot.count(), 1);
+        assert_eq!(e.kv_utilization(), 0.0);
+    }
+
+    #[test]
+    fn preempted_migrated_leg_recomputes_locally_and_conserves_tokens() {
+        use crate::coordinator::request::MigratedRequest;
+        let mut e = engine(8); // 128 tokens of KV: force churn
+        let m = MigratedRequest {
+            id: 0,
+            arrival: 0.0,
+            at: 0.0,
+            context_len: 33,
+            remaining_out: 40,
+            bytes: 33.0 * 131072.0,
+        };
+        e.submit_migrated(&m);
+        e.submit(&req(1, 0.0, 32, 40));
+        assert!(e.run_to_completion(100_000));
+        assert!(e.preemptions() > 0, "pressure must preempt");
+        assert_eq!(e.metrics.requests_done, 2);
+        // Migrated leg: 40 locally generated; full request: 40. The
+        // migrated first token is never re-counted despite recompute.
+        assert_eq!(e.metrics.tokens_out, 80, "token conservation across roles");
+        assert_eq!(e.metrics.ttft.count(), 2, "TTFT sampled once per request");
+        assert_eq!(e.metrics.restarts, e.preemptions());
+        assert_eq!(e.sequence(0).unwrap().delivered, 41);
+        assert_eq!(e.kv_utilization(), 0.0);
     }
 
     #[test]

@@ -70,6 +70,14 @@ impl KvCacheConfig {
     pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
     }
+
+    /// Total KV tokens the pool can hold. `Engine::submit_migrated`
+    /// debug-asserts migrated contexts against this: a context larger
+    /// than the whole pool could never be admitted and would only
+    /// surface later as a generic drain failure.
+    pub fn tokens_capacity(&self) -> usize {
+        self.block_tokens * self.total_blocks
+    }
 }
 
 /// Free-list block allocator.

@@ -30,6 +30,11 @@ pub struct Metrics {
     /// Re-prefills after preemption. Each one re-enters the prefill
     /// queue but does NOT contribute a second TTFT sample.
     pub restarts: u64,
+    /// KV migrations received from a prefill pool (disaggregated
+    /// serving; recorded by the decode engine at delivery).
+    pub migrations: u64,
+    /// KV bytes that crossed the scale-out fabric into this engine.
+    pub kv_bytes_migrated: f64,
     pub steps: u64,
     pub step_time: Summary,
     /// Integrated device energy (J).
@@ -57,6 +62,13 @@ impl Metrics {
     /// A preempted request re-entered prefill (recompute preemption).
     pub fn record_restart(&mut self) {
         self.restarts += 1;
+    }
+
+    /// A KV migration of `bytes` landed on this engine (disaggregated
+    /// prefill→decode handoff).
+    pub fn record_migration(&mut self, bytes: f64) {
+        self.migrations += 1;
+        self.kv_bytes_migrated += bytes;
     }
 
     pub fn record_finish(&mut self, arrival: f64, first_token: f64, now: f64, out_tokens: usize) {
@@ -87,11 +99,22 @@ impl Metrics {
         self.tokens_in += other.tokens_in;
         self.requests_done += other.requests_done;
         self.restarts += other.restarts;
+        self.migrations += other.migrations;
+        self.kv_bytes_migrated += other.kv_bytes_migrated;
         self.steps += other.steps;
         self.step_time.absorb(&other.step_time);
         self.energy_j += other.energy_j;
         self.flops += other.flops;
         self.span += other.span;
+    }
+
+    /// Mean device draw over the busy span (W; 0 when nothing ran).
+    pub fn watts_mean(&self) -> f64 {
+        if self.span > 0.0 {
+            self.energy_j / self.span
+        } else {
+            0.0
+        }
     }
 
     /// Output tokens per second over the covered span.
@@ -125,7 +148,7 @@ impl Metrics {
         format!(
             "requests={} tokens_out={} span={:.2}s tok/s={:.1} \
              TTFT p50/p95={:.3}/{:.3}s TPOT p50/p95={:.4}/{:.4}s \
-             J/token={:.2} model TFLOP/s={:.2} restarts={}",
+             J/token={:.2} model TFLOP/s={:.2} restarts={} migrations={}",
             self.requests_done,
             self.tokens_out,
             self.span,
@@ -137,6 +160,7 @@ impl Metrics {
             self.joules_per_token(),
             self.model_flops_per_sec() / 1e12,
             self.restarts,
+            self.migrations,
         )
     }
 }
@@ -207,6 +231,18 @@ mod tests {
         assert!((a.ttft.median() - 1.0).abs() < 1e-9);
         assert!((a.energy_j - 400.0).abs() < 1e-9);
         assert!((a.span - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn migration_accounting_absorbs() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record_migration(1e6);
+        b.record_migration(2e6);
+        b.record_migration(3e6);
+        a.absorb(&b);
+        assert_eq!(a.migrations, 3);
+        assert!((a.kv_bytes_migrated - 6e6).abs() < 1e-9);
     }
 
     #[test]

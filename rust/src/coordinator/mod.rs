@@ -9,9 +9,10 @@
 //!   timing, virtual clock — drives every paper figure) and
 //!   `PjrtBackend` (real compute via the AOT artifacts, wall clock).
 //! * [`engine`] — the step loop tying it all together.
-//! * [`cluster`] — virtual-time event loop over the router's engine
-//!   pool (open-loop traffic on one shared clock) and the SLO load
-//!   sweep built on it.
+//! * [`cluster`] — virtual-time event loops: [`Cluster`] over one
+//!   colocated engine pool, [`DisaggCluster`] over disaggregated
+//!   prefill/decode pools joined by a KV-migration link, and the SLO
+//!   load sweep ([`ServeSim`]) that prices both.
 //! * [`metrics`] — TTFT / TPOT / throughput accounting (§5.2 notes the
 //!   paper's preference for FLOPs-based metrics; we record both),
 //!   with steady-state (windowed) percentiles for open-loop runs.
@@ -30,11 +31,14 @@ pub mod scheduler;
 
 pub use backend::{ExecutionBackend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
-pub use cluster::{sharded_sim_cluster, sim_cluster, Cluster, SloSpec, SweepConfig};
+pub use cluster::{
+    disagg_sim_cluster, sharded_sim_cluster, sim_cluster, Cluster, DisaggCluster, ServeSim,
+    SloSpec, SweepConfig,
+};
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};
 pub use metrics::Metrics;
 #[cfg(feature = "pjrt")]
 pub use pjrt_backend::PjrtBackend;
-pub use request::{RequestState, SeqId, Sequence};
+pub use request::{MigratedRequest, RequestState, SeqId, SeqRole, Sequence};
 pub use scheduler::{SchedulerPolicy, StepPlan};

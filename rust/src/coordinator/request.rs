@@ -17,11 +17,48 @@ pub enum RequestState {
     Preempted,
 }
 
+/// Which serving leg a sequence represents (disaggregated serving
+/// splits one request across a prefill pool and a decode pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SeqRole {
+    /// Colocated request: prefill + decode on one engine.
+    #[default]
+    Full,
+    /// Disaggregated prefill leg: compute the prompt KV + first token,
+    /// then hold the KV for migration. Request-level metrics (TTFT,
+    /// e2e, requests_done) are deferred to the decode pool, which owns
+    /// the request's end.
+    PrefillLeg,
+    /// Disaggregated decode leg: the context KV arrived over the
+    /// scale-out fabric — no local prefill compute; the engine streams
+    /// the remaining output tokens. Recompute preemption demotes the
+    /// sequence to `Full` (its KV is gone, so the re-prefill is real).
+    DecodeLeg,
+}
+
+/// A prefilled sequence handed to the decode pool: its context KV
+/// (and first token) materialize over the fabric at `at`.
+#[derive(Debug, Clone)]
+pub struct MigratedRequest {
+    pub id: SeqId,
+    /// Original request arrival (TTFT / e2e reference).
+    pub arrival: f64,
+    /// Migration completion instant on the shared virtual timeline.
+    pub at: f64,
+    /// Context tokens whose KV arrived (prompt + the prefill token).
+    pub context_len: usize,
+    /// Output tokens still to generate on the decode pool.
+    pub remaining_out: usize,
+    /// KV bytes that crossed the fabric (migration accounting).
+    pub bytes: f64,
+}
+
 /// A sequence tracked by the engine.
 #[derive(Debug, Clone)]
 pub struct Sequence {
     pub id: SeqId,
     pub state: RequestState,
+    pub role: SeqRole,
     pub prompt_len: usize,
     /// Target number of output tokens.
     pub output_len: usize,
@@ -32,8 +69,13 @@ pub struct Sequence {
     /// Unlike `generated`, this survives preemption and ends equal to
     /// the request's original `output_len`.
     pub delivered: usize,
-    /// Arrival time (engine clock, s).
+    /// Arrival time (engine clock, s). For a migrated decode leg this
+    /// is the migration delivery instant — the moment the sequence
+    /// becomes schedulable on this engine.
     pub arrival: f64,
+    /// Original request arrival for migrated sequences (e2e latency is
+    /// measured from the origin, not from the migration delivery).
+    pub origin_arrival: Option<f64>,
     /// Time of first token (TTFT reference), if prefilled.
     pub first_token_at: Option<f64>,
     /// Completion time.
@@ -47,12 +89,34 @@ impl Sequence {
         Sequence {
             id: r.id,
             state: RequestState::Queued,
+            role: SeqRole::Full,
             prompt_len: r.prompt_len,
             output_len: r.output_len,
             generated: 0,
             delivered: 0,
             arrival: r.arrival,
+            origin_arrival: None,
             first_token_at: None,
+            finished_at: None,
+            blocks: Vec::new(),
+        }
+    }
+
+    /// A decode leg materializing from a KV migration: the context is
+    /// already prefilled (the first token was delivered with the KV at
+    /// `m.at`), so the sequence skips prefill compute entirely.
+    pub fn migrated(m: &MigratedRequest) -> Self {
+        Sequence {
+            id: m.id,
+            state: RequestState::Queued,
+            role: SeqRole::DecodeLeg,
+            prompt_len: m.context_len,
+            output_len: m.remaining_out,
+            generated: 0,
+            delivered: 1, // the prefill-pool token, delivered at `at`
+            arrival: m.at,
+            origin_arrival: Some(m.arrival),
+            first_token_at: Some(m.at),
             finished_at: None,
             blocks: Vec::new(),
         }
@@ -97,5 +161,26 @@ mod tests {
         s.generated = 10;
         assert!(s.is_done());
         assert_eq!(s.context_len(), 110);
+    }
+
+    #[test]
+    fn migrated_sequence_resumes_mid_request() {
+        let m = MigratedRequest {
+            id: 7,
+            arrival: 1.5,
+            at: 2.0,
+            context_len: 101, // prompt 100 + the prefill token
+            remaining_out: 9,
+            bytes: 101.0 * 131072.0,
+        };
+        let s = Sequence::migrated(&m);
+        assert_eq!(s.role, SeqRole::DecodeLeg);
+        assert_eq!(s.state, RequestState::Queued);
+        assert_eq!(s.context_len(), 101);
+        assert_eq!(s.delivered, 1, "the prefill token travelled with the KV");
+        assert_eq!(s.arrival, 2.0, "schedulable only once the KV arrived");
+        assert_eq!(s.origin_arrival, Some(1.5));
+        assert_eq!(s.first_token_at, Some(2.0));
+        assert!(!s.is_done());
     }
 }

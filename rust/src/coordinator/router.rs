@@ -14,6 +14,7 @@
 
 use super::backend::ExecutionBackend;
 use super::engine::Engine;
+use super::request::MigratedRequest;
 use crate::workload::trace::Request;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +107,36 @@ impl<B: ExecutionBackend> Router<B> {
         i
     }
 
+    /// Disaggregated front door of a *prefill pool*: route the prefill
+    /// leg of `r` (prompt KV + first token, held for migration) with
+    /// the same time-ordered semantics as [`Router::submit_at`].
+    pub fn submit_handoff_at(&mut self, r: &Request) -> usize {
+        let i = self.select(r);
+        self.engines[i].advance_to(r.arrival);
+        self.engines[i].submit_handoff(r);
+        self.routed[i] += 1;
+        i
+    }
+
+    /// Disaggregated front door of a *decode pool*: route a migrated
+    /// sequence whose KV lands at `m.at`. An idle target's clock is
+    /// lifted to the delivery instant; a busy one queues the resume.
+    /// Callers must present migrations in delivery order, with every
+    /// engine already stepped up to `m.at` (see `cluster::DisaggCluster`).
+    pub fn submit_migrated_at(&mut self, m: &MigratedRequest) -> usize {
+        let probe = Request {
+            id: m.id,
+            arrival: m.at,
+            prompt_len: m.context_len,
+            output_len: m.remaining_out,
+        };
+        let i = self.select(&probe);
+        self.engines[i].advance_to(m.at);
+        self.engines[i].submit_migrated(m);
+        self.routed[i] += 1;
+        i
+    }
+
     pub fn routed_counts(&self) -> &[u64] {
         &self.routed
     }
@@ -120,19 +151,6 @@ impl<B: ExecutionBackend> Router<B> {
         self.engines
             .iter_mut()
             .all(|e| e.run_to_completion(max_steps))
-    }
-
-    /// Deprecated alias of [`Router::drain_closed_batch`]; the old
-    /// name suggested it was a general driver, which silently corrupts
-    /// open-loop latency metrics (queueing delay between arrivals is
-    /// lost when each engine drains on its own clock).
-    #[deprecated(
-        since = "0.3.0",
-        note = "drains each engine independently, which is wrong for open-loop \
-                traffic; use Cluster::run, or drain_closed_batch for closed batches"
-    )]
-    pub fn run_to_completion(&mut self, max_steps: usize) -> bool {
-        self.drain_closed_batch(max_steps)
     }
 
     /// Slowest engine's virtual completion time (makespan).
@@ -231,6 +249,31 @@ mod tests {
         let done: u64 = r.engines.iter().map(|e| e.metrics.requests_done).sum();
         assert_eq!(done, 40);
         assert!(r.makespan() > 0.0);
+    }
+
+    #[test]
+    fn disagg_submit_paths_route_and_count() {
+        let mut r = Router::new(
+            vec![engine(Device::H100), engine(Device::Gaudi2)],
+            ratings_h100_gaudi(),
+            RoutePolicy::LeastLoaded,
+        );
+        r.submit_handoff_at(&req(0, 2000, 64));
+        let m = MigratedRequest {
+            id: 1,
+            arrival: 0.0,
+            at: 0.5,
+            context_len: 2001,
+            remaining_out: 63,
+            bytes: 2001.0 * 131072.0,
+        };
+        r.submit_migrated_at(&m);
+        assert_eq!(r.routed_counts().iter().sum::<u64>(), 2);
+        assert!(r.drain_closed_batch(1_000_000));
+        let done: u64 = r.engines.iter().map(|e| e.metrics.requests_done).sum();
+        assert_eq!(done, 1, "prefill leg defers; migrated leg finishes");
+        let handed: usize = r.engines.iter_mut().map(|e| e.take_handoffs().len()).sum();
+        assert_eq!(handed, 1);
     }
 
     #[test]

@@ -126,6 +126,69 @@ impl InterconnectSpec {
     }
 }
 
+/// Cross-pool KV-migration link (disaggregated serving: a prefilled
+/// request's KV cache moves from the prefill pool to the decode pool).
+/// Pools live in different boxes — possibly different vendors — so the
+/// transfer always rides the scale-out NICs, never a scale-up fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct KvLink {
+    /// Effective migration bandwidth (bytes/s): the slower endpoint's
+    /// aggregate scale-out NICs across its instance's chips (each chip
+    /// streams its own KV shard in parallel).
+    pub bw: f64,
+    /// Fixed per-migration latency (s): one NIC hop on each side.
+    pub lat_s: f64,
+}
+
+impl KvLink {
+    /// Derive the link between a prefill instance of `src_chips` chips
+    /// on the `src` fabric and a decode instance of `dst_chips` chips
+    /// on `dst`. Bandwidth is min of the two endpoints' aggregate
+    /// scale-out NICs; latency is the sum of the two per-hop terms.
+    pub fn between(
+        src: &InterconnectSpec,
+        src_chips: usize,
+        dst: &InterconnectSpec,
+        dst_chips: usize,
+    ) -> KvLink {
+        let src_bw = src.scale_out_bw * src_chips.max(1) as f64;
+        let dst_bw = dst.scale_out_bw * dst_chips.max(1) as f64;
+        KvLink {
+            bw: src_bw.min(dst_bw),
+            lat_s: src.scale_out_lat_s + dst.scale_out_lat_s,
+        }
+    }
+
+    /// The infinite-bandwidth, zero-latency limit: migration is free,
+    /// and disaggregated serving must reproduce the colocated request
+    /// timeline exactly (the equivalence the property tests pin).
+    pub fn infinite() -> KvLink {
+        KvLink { bw: f64::INFINITY, lat_s: 0.0 }
+    }
+
+    /// Closed-form migration time: `bytes / bw + lat`. Zero bytes cost
+    /// nothing (nothing crossed the fabric). Mirrored in
+    /// `python/tests/test_kv_transfer_mirror.py` — keep the arithmetic
+    /// order identical when editing.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        bytes / self.bw + self.lat_s
+    }
+
+    /// A link uniformly scaled in bandwidth (sensitivity sweeps).
+    pub fn scaled_bw(&self, factor: f64) -> KvLink {
+        KvLink { bw: self.bw * factor, lat_s: self.lat_s }
+    }
+
+    /// The same link with a different fixed latency (TTFT monotonicity
+    /// experiments).
+    pub fn with_latency(&self, lat_s: f64) -> KvLink {
+        KvLink { bw: self.bw, lat_s }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +244,38 @@ mod tests {
         let outside = ic.allreduce_time(9, 1e6);
         assert!(outside > inside * 2.0, "{outside} vs {inside}");
         assert!(ic.p2p_time(1e6, false) > ic.p2p_time(1e6, true));
+    }
+
+    #[test]
+    fn kv_link_bottlenecked_by_slower_endpoint() {
+        let h = Device::H100.interconnect();
+        let g = Device::Gaudi2.interconnect();
+        let l = KvLink::between(h, 1, g, 1);
+        assert_eq!(l.bw, g.scale_out_bw, "Gaudi2 NIC is the bottleneck");
+        assert_eq!(l.lat_s, h.scale_out_lat_s + g.scale_out_lat_s);
+        // A wider source instance cannot lift a single-chip sink.
+        let l4 = KvLink::between(h, 4, g, 1);
+        assert_eq!(l4.bw, l.bw);
+        // Widening the sink does.
+        let l44 = KvLink::between(h, 4, g, 4);
+        assert!(l44.bw > l.bw);
+    }
+
+    #[test]
+    fn kv_transfer_closed_form_and_limits() {
+        let l = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
+        let bytes = 512.0 * 131072.0; // 512 tokens of llama-8b BF16 KV
+        let t = l.transfer_time(bytes);
+        assert!((t - (bytes / 37.5e9 + 1.1e-5)).abs() < 1e-15);
+        // Monotone in bytes; latency floor for tiny payloads.
+        assert!(l.transfer_time(2.0 * bytes) > t);
+        assert!(l.transfer_time(1.0) >= l.lat_s);
+        // Nothing migrated costs nothing.
+        assert_eq!(l.transfer_time(0.0), 0.0);
+        // The infinite link is free for any payload.
+        assert_eq!(KvLink::infinite().transfer_time(1e18), 0.0);
+        // Sensitivity helpers.
+        assert!(l.scaled_bw(10.0).transfer_time(bytes) < t);
+        assert!(l.with_latency(1e-3).transfer_time(bytes) > t);
     }
 }

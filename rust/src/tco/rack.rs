@@ -136,6 +136,61 @@ impl InfraModel {
         self.cost_per_mtok(server_price, watts_per_chip, server_tps)
     }
 
+    /// $/Mtok-at-SLO for a *heterogeneous, disaggregated* deployment:
+    /// each pool contributes `chips / chips_per_server` servers' worth
+    /// of capex plus horizon infra at that pool's sustained draw, and
+    /// the summed cost is divided by the tokens the whole deployment
+    /// delivers at SLO — one workload, one $/Mtok axis, even when the
+    /// prefill and decode pools are different vendors. Each pool tuple
+    /// is `(server_price, chips, watts_per_chip)`. For a single pool
+    /// this reduces exactly to [`Self::cost_per_mtok_sharded`].
+    pub fn cost_per_mtok_disagg(
+        &self,
+        pools: &[(f64, usize, f64)],
+        tokens_per_sec: f64,
+    ) -> f64 {
+        assert!(tokens_per_sec > 0.0, "goodput must be positive");
+        assert!(!pools.is_empty(), "deployment needs at least one pool");
+        let mut total_cost = 0.0;
+        for &(server_price, chips, watts_per_chip) in pools {
+            assert!(chips > 0, "every pool needs chips");
+            let servers = chips as f64 / self.rack.chips_per_server as f64;
+            total_cost += servers * (server_price + self.infra_cost_per_server(watts_per_chip));
+        }
+        let tokens = tokens_per_sec * self.rack.horizon_h * 3600.0;
+        total_cost / tokens * 1e6
+    }
+
+    /// Price a [`DisaggPlan`] at a measured operating point: each pool
+    /// at its device's assumed server price, its shape-derived chip
+    /// count and its measured sustained draw. Keeps the plan→pools
+    /// mapping in one place for the bench, the example and the tests.
+    ///
+    /// [`DisaggPlan`]: crate::analysis::disagg::DisaggPlan
+    pub fn cost_per_mtok_disagg_plan(
+        &self,
+        plan: &crate::analysis::disagg::DisaggPlan,
+        prefill_watts: f64,
+        decode_watts: f64,
+        tokens_per_sec: f64,
+    ) -> f64 {
+        self.cost_per_mtok_disagg(
+            &[
+                (
+                    assumed_server_price(plan.prefill.device),
+                    plan.prefill.plan.total_chips(),
+                    prefill_watts,
+                ),
+                (
+                    assumed_server_price(plan.decode.device),
+                    plan.decode.plan.total_chips(),
+                    decode_watts,
+                ),
+            ],
+            tokens_per_sec,
+        )
+    }
+
     /// Convenience: sustained draw for a device at a utilization,
     /// optionally power-capped.
     pub fn sustained_draw(&self, dev: Device, util: f64, cap_w: Option<f64>) -> f64 {
@@ -225,6 +280,50 @@ mod tests {
         let gaudi =
             m.cost_per_mtok_sharded(assumed_server_price(Device::Gaudi2), 8, 450.0, 8_000.0);
         assert!(gaudi < tp8);
+    }
+
+    #[test]
+    fn disagg_pricing_reduces_to_sharded_for_one_pool() {
+        let m = model();
+        let h100 = assumed_server_price(Device::H100);
+        for (chips, tps) in [(1usize, 900.0), (8, 7200.0), (12, 9000.0)] {
+            let sharded = m.cost_per_mtok_sharded(h100, chips, 600.0, tps);
+            let disagg = m.cost_per_mtok_disagg(&[(h100, chips, 600.0)], tps);
+            assert!(
+                (sharded / disagg - 1.0).abs() < 1e-12,
+                "chips {chips}: sharded {sharded} vs disagg {disagg}"
+            );
+        }
+    }
+
+    #[test]
+    fn disagg_pricing_of_identical_pools_matches_merged_pool() {
+        // Two identical pools priced separately must equal one pool of
+        // the summed chips — the arithmetic backbone of the
+        // infinite-bandwidth colocated-equivalence property.
+        let m = model();
+        let price = assumed_server_price(Device::Gaudi2);
+        let split = m.cost_per_mtok_disagg(&[(price, 2, 450.0), (price, 6, 450.0)], 4000.0);
+        let merged = m.cost_per_mtok_disagg(&[(price, 8, 450.0)], 4000.0);
+        assert!((split / merged - 1.0).abs() < 1e-12, "{split} vs {merged}");
+    }
+
+    #[test]
+    fn mixed_vendor_pools_price_by_their_own_draw_and_capex() {
+        let m = model();
+        let h = assumed_server_price(Device::H100);
+        let g = assumed_server_price(Device::Gaudi2);
+        // Swapping the pricier pool for the cheaper one at equal shape
+        // and goodput lowers $/Mtok.
+        let all_h100 = m.cost_per_mtok_disagg(&[(h, 2, 650.0), (h, 6, 650.0)], 4000.0);
+        let mixed = m.cost_per_mtok_disagg(&[(h, 2, 650.0), (g, 6, 450.0)], 4000.0);
+        assert!(mixed < all_h100, "{mixed} vs {all_h100}");
+    }
+
+    #[test]
+    #[should_panic(expected = "every pool needs chips")]
+    fn disagg_pricing_rejects_empty_pool() {
+        model().cost_per_mtok_disagg(&[(100_000.0, 0, 500.0)], 1000.0);
     }
 
     #[test]

@@ -265,6 +265,38 @@ fn sharded_70b_cluster_sustains_an_interactive_slo_point() {
 }
 
 #[test]
+fn energy_conserved_across_cluster_rollup() {
+    // Per-engine integrated energy must sum to the cluster total after
+    // `absorb`, and joules/token must be consistent with
+    // `watts_mean x span / tokens_out` (watts_mean = energy / span).
+    let mut c = cluster(3, 50_000, RoutePolicy::LeastLoaded);
+    let gen = TraceGenerator::new(TraceConfig::chat(6.0), 17);
+    assert!(c.run(gen.stream(90)));
+    let m = c.merged_metrics();
+    assert!(m.energy_j > 0.0 && m.span > 0.0 && m.tokens_out > 0);
+    let per_engine: f64 = c.router.engines.iter().map(|e| e.metrics.energy_j).sum();
+    assert!(
+        (m.energy_j - per_engine).abs() <= 1e-9 * per_engine,
+        "cluster energy {} != sum of engines {}",
+        m.energy_j,
+        per_engine
+    );
+    let span_sum: f64 = c.router.engines.iter().map(|e| e.metrics.span).sum();
+    assert!((m.span - span_sum).abs() <= 1e-9 * span_sum, "span rollup");
+    let watts_mean = m.energy_j / m.span;
+    let jpt = m.joules_per_token();
+    let reconstructed = watts_mean * m.span / m.tokens_out as f64;
+    assert!(
+        (jpt - reconstructed).abs() <= 1e-9 * jpt,
+        "J/token {jpt} inconsistent with watts_mean x span / tokens ({reconstructed})"
+    );
+    assert!(
+        (jpt - m.energy_j / m.tokens_out as f64).abs() <= 1e-12 * jpt,
+        "joules_per_token drifted from energy/tokens"
+    );
+}
+
+#[test]
 fn higher_load_does_not_improve_latency() {
     let slo = SloSpec::interactive();
     let mk = || cluster(2, 50_000, RoutePolicy::LeastLoaded);

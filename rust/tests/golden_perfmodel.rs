@@ -34,7 +34,10 @@ fn grid() -> Vec<(String, StepBreakdown)> {
         PrecisionMode::fp8_static(),
         PrecisionMode::fp8_dynamic(),
     ];
-    let plans: [(usize, usize); 3] = [(1, 1), (2, 1), (4, 2)];
+    // Single-chip plus the TP-only, PP-only and TP x PP shard shapes:
+    // interconnect-model refactors cannot silently drift
+    // `t_tp_comm`/`t_pp_comm` on any of the comm regimes.
+    let plans: [(usize, usize); 5] = [(1, 1), (2, 1), (8, 1), (1, 2), (4, 2)];
     let mut out = Vec::new();
     for dev in devices {
         for prec in precisions {
@@ -49,13 +52,24 @@ fn grid() -> Vec<(String, StepBreakdown)> {
             }
         }
     }
-    // One 70B multi-chip anchor per vendor (the deployment shape the
-    // single-chip model could not express).
+    // 70B multi-chip anchors per vendor (the deployment shapes the
+    // single-chip model could not express): pure TP and TP x PP.
     for dev in [Device::H100, Device::Gaudi2] {
         let cfg = StepConfig::new(dev, PrecisionMode::fp8_static()).with_tp(4);
         out.push((
             format!("{}|fp8-static|tp4-pp1|decode-70b-b32-s1024", dev.name()),
             decode_step(m70, &cfg, 32, 1024),
+        ));
+        let cfg2 = StepConfig::new(dev, PrecisionMode::fp8_static())
+            .with_tp(4)
+            .with_pp(2);
+        out.push((
+            format!("{}|fp8-static|tp4-pp2|decode-70b-b32-s1024", dev.name()),
+            decode_step(m70, &cfg2, 32, 1024),
+        ));
+        out.push((
+            format!("{}|fp8-static|tp4-pp2|prefill-70b-b1-s2048", dev.name()),
+            prefill(m70, &cfg2, 1, 2048),
         ));
     }
     out
@@ -147,6 +161,43 @@ fn perfmodel_matches_golden_snapshot() {
         drift.len(),
         drift.join("\n")
     );
+}
+
+#[test]
+fn multichip_grid_entries_expose_comm_terms() {
+    // Structural guard independent of the snapshot file: every sharded
+    // shape in the grid must carry its comm terms (and the single-chip
+    // shape must carry exactly none), so a refactor that zeroes or
+    // miscounts `t_tp_comm`/`t_pp_comm` fails even on a fresh checkout
+    // where the snapshot is still bootstrapping.
+    let m8 = by_name("llama-8b").unwrap();
+    for dev in [Device::H100, Device::Gaudi2, Device::Gaudi3, Device::A100] {
+        for (tp, pp) in [(1usize, 1usize), (2, 1), (8, 1), (1, 2), (4, 2)] {
+            let cfg = StepConfig::new(dev, PrecisionMode::fp8_static())
+                .with_tp(tp)
+                .with_pp(pp);
+            let cases = [
+                ("decode", decode_step(m8, &cfg, 32, 1024)),
+                ("prefill", prefill(m8, &cfg, 1, 2048)),
+            ];
+            for (phase, bd) in cases {
+                let tag = format!("{} {phase} tp{tp} pp{pp}", dev.name());
+                assert!(bd.seconds.is_finite() && bd.seconds > 0.0, "{tag}");
+                if tp > 1 {
+                    assert!(bd.t_tp_comm > 0.0, "{tag}: missing TP comm");
+                } else {
+                    assert_eq!(bd.t_tp_comm, 0.0, "{tag}: phantom TP comm");
+                }
+                if pp > 1 {
+                    assert!(bd.t_pp_comm > 0.0, "{tag}: missing PP comm");
+                    assert!(bd.pp_bubble_frac > 0.0, "{tag}: missing PP bubble");
+                } else {
+                    assert_eq!(bd.t_pp_comm, 0.0, "{tag}: phantom PP comm");
+                    assert_eq!(bd.pp_bubble_frac, 0.0, "{tag}: phantom bubble");
+                }
+            }
+        }
+    }
 }
 
 #[test]
