@@ -9,21 +9,27 @@
 //!   H100 decode pool over the scale-out fabric, pool sizes balanced
 //!   by `analysis::disagg::auto_size`;
 //! * disaggregated, mixed-vendor — H100 prefill + Gaudi 2 decode, the
-//!   paper's per-phase result turned into a deployable TCO lever.
+//!   paper's per-phase result turned into a deployable TCO lever;
+//! * the `-stream` variants of both — KV migrated as 8 chunks with
+//!   first-chunk delivery (TTFT overlap) and decode-pool admission
+//!   control (DESIGN.md §8);
+//! * PhaseAffinity — 2 colocated H100 engines beside a 1+1 disagg
+//!   pair, long prompts routed to the pair, short ones colocated.
 //!
-//! Part 2 sweeps the KV-migration link (bandwidth scaling and added
-//! latency) at a fixed load to show where the fabric starts eating
-//! the TTFT budget.
+//! Part 2 sweeps the KV-migration link (bandwidth scaling, added
+//! latency and chunk count) at a fixed load to show where the fabric
+//! starts eating the TTFT budget — and how much chunked streaming
+//! claws back.
 //!
 //! Run: `cargo run --release --example disagg_sweep`
 //! (`SWEEP_FAST=1` shrinks the SLO search for smoke tests.)
 
-use fp8_tco::analysis::disagg::{auto_size, PoolSpec};
+use fp8_tco::analysis::disagg::{auto_size, DisaggPlan, PhaseAffinityPlan, PoolSpec};
 use fp8_tco::analysis::parallel::ParallelismPlan;
 use fp8_tco::analysis::perfmodel::PrecisionMode;
 use fp8_tco::coordinator::cluster::{
-    disagg_sim_cluster, max_sustainable_qps, replay_disagg_point, sharded_sim_cluster, SloSpec,
-    SweepConfig,
+    disagg_sim_cluster, max_sustainable_qps, phase_affinity_sim_cluster, replay_affinity_point,
+    replay_disagg_point, sharded_sim_cluster, SloSpec, SweepConfig,
 };
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
@@ -107,9 +113,19 @@ fn main() {
         ]);
     }
 
-    for (mode, plan) in [("disagg", &homog), ("mixed", &mixed)] {
+    let variants: [(&str, &DisaggPlan, usize, bool); 4] = [
+        ("disagg", &homog, 1, false),
+        ("disagg-stream", &homog, 8, true),
+        ("mixed", &mixed, 1, false),
+        ("mixed-stream", &mixed, 8, true),
+    ];
+    for (mode, plan, chunks, admission) in variants {
         let out = max_sustainable_qps(
-            &|| disagg_sim_cluster(model, plan).expect("pools must be feasible"),
+            &|| {
+                disagg_sim_cluster(model, plan)
+                    .expect("pools must be feasible")
+                    .with_streaming(chunks, admission)
+            },
             &TraceConfig::chat,
             &slo,
             &sweep,
@@ -121,6 +137,8 @@ fn main() {
                 let (pm, dm, merged) = replay_disagg_point(
                     model,
                     plan,
+                    chunks,
+                    admission,
                     TraceConfig::chat(p.qps),
                     sweep.n_requests,
                     sweep.seed,
@@ -156,6 +174,66 @@ fn main() {
             }
         }
     }
+    // PhaseAffinity: 2 colocated H100 engines + the 1+1 mixed-vendor
+    // pair, prompts >= 2x the chat median routed to the pair.
+    let affinity = PhaseAffinityPlan::new(
+        PoolSpec::new(
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::single().with_replicas(2),
+        ),
+        DisaggPlan::new(
+            PoolSpec::new(
+                Device::H100,
+                PrecisionMode::fp8_dynamic(),
+                ParallelismPlan::single(),
+            ),
+            PoolSpec::new(
+                Device::Gaudi2,
+                PrecisionMode::fp8_static(),
+                ParallelismPlan::single(),
+            ),
+        ),
+        2 * p_med,
+    );
+    let out = max_sustainable_qps(
+        &|| {
+            phase_affinity_sim_cluster(model, &affinity)
+                .expect("pools must be feasible")
+                .with_streaming(8, true)
+        },
+        &TraceConfig::chat,
+        &slo,
+        &sweep,
+    );
+    if let Some(p) = out.best {
+        let (cm, pm, dm, merged) = replay_affinity_point(
+            model,
+            &affinity,
+            8,
+            true,
+            TraceConfig::chat(p.qps),
+            sweep.n_requests,
+            sweep.seed,
+        );
+        let cost = infra.cost_per_mtok_phase_affinity_plan(
+            &affinity,
+            cm.watts_mean(),
+            pm.watts_mean(),
+            dm.watts_mean(),
+            p.tokens_per_sec,
+        );
+        t.row(vec![
+            "affinity".into(),
+            affinity.describe(),
+            f(p.qps, 2),
+            f(p.tokens_per_sec, 0),
+            f(p.ttft_p95 * 1e3, 1),
+            f(p.tpot_p95 * 1e3, 2),
+            format!("{}", merged.migrations),
+            f(cost, 3),
+        ]);
+    }
     t.print();
 
     // Part 2: link sensitivity at a fixed, comfortably feasible load.
@@ -166,18 +244,22 @@ fn main() {
          the closed form bytes/bw + lat is charged per migrated context."
     );
     let mut t2 = Table::new(
-        "TTFT vs the migration link",
-        &["link", "TTFT p50 ms", "TTFT p95 ms", "KV GB moved"],
+        "TTFT vs the migration link (chunked streaming claws back the fabric)",
+        &["link", "chunks", "TTFT p50 ms", "TTFT p95 ms", "KV GB moved"],
     );
     let base = mixed.kv_link();
-    let variants: [(String, f64, f64); 4] = [
-        ("infinite".into(), f64::INFINITY, 0.0),
-        (format!("{:.0} GB/s (datasheet)", base.bw / 1e9), base.bw, base.lat_s),
-        ("1/10 bandwidth".into(), base.bw / 10.0, base.lat_s),
-        ("+10 ms latency".into(), base.bw, base.lat_s + 0.010),
+    let variants: [(String, f64, f64, usize); 6] = [
+        ("infinite".into(), f64::INFINITY, 0.0, 1),
+        (format!("{:.0} GB/s (datasheet)", base.bw / 1e9), base.bw, base.lat_s, 1),
+        (format!("{:.0} GB/s (datasheet)", base.bw / 1e9), base.bw, base.lat_s, 8),
+        ("1/10 bandwidth".into(), base.bw / 10.0, base.lat_s, 1),
+        ("1/10 bandwidth".into(), base.bw / 10.0, base.lat_s, 8),
+        ("+10 ms latency".into(), base.bw, base.lat_s + 0.010, 1),
     ];
-    for (name, bw, lat_s) in variants {
-        let mut c = disagg_sim_cluster(model, &mixed).unwrap();
+    for (name, bw, lat_s, chunks) in variants {
+        let mut c = disagg_sim_cluster(model, &mixed)
+            .unwrap()
+            .with_streaming(chunks, false);
         c.link.bw = bw;
         c.link.lat_s = lat_s;
         let gen = TraceGenerator::new(TraceConfig::chat(qps), 13);
@@ -186,6 +268,7 @@ fn main() {
         assert!(drained, "sensitivity run must drain");
         t2.row(vec![
             name,
+            format!("{chunks}"),
             f(m.ttft.pct(50.0) * 1e3, 1),
             f(m.ttft.pct(95.0) * 1e3, 1),
             f(m.kv_bytes_migrated / 1e9, 2),

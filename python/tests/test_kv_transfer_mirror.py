@@ -1,16 +1,22 @@
-"""Python mirror of the Rust KV-transfer closed form (disaggregated
+"""Python mirror of the Rust KV-transfer closed forms (disaggregated
 serving's migration cost path, `hwsim::interconnect::KvLink`).
 
-Both sides compute
+Both sides compute the single-shot form
 
     t = context_tokens * kv_bytes_per_token / link_bw + link_lat
+
+and the chunked-streaming schedule (`KvLink::chunked`, chunk `i`
+0-based of `n`)
+
+    t_i = bytes * (i+1) / n / link_bw + (i+1) * link_lat
 
 with `kv_bytes_per_token = 2 * layers * kv_heads * head_dim * dtype`,
 `link_bw = min(src_scale_out_bw * src_chips, dst_scale_out_bw *
 dst_chips)` and `link_lat = src_lat + dst_lat`, and assert the same
-pinned values (PINNED below mirrors
-`rust/tests/disagg_props.rs::kv_transfer_closed_form_pinned_against_python_mirror`).
-If either implementation drifts, its side fails against the pins.
+pinned values (PINNED / PINNED_CHUNKED below mirror
+`rust/tests/disagg_props.rs::kv_transfer_closed_form_pinned_against_python_mirror`
+and `::chunked_schedule_pinned_against_python_mirror`). If either
+implementation drifts, its side fails against the pins.
 
 Stdlib-only on purpose (CI runs it without the JAX toolchain):
 `python python/tests/test_kv_transfer_mirror.py`.
@@ -39,6 +45,19 @@ PINNED = [
     ("llama-70b", 2048, "Gaudi3", 2, "Gaudi3", 2, 0.004483924266666666),
 ]
 
+# (model, context_tokens, src, src_chips, dst, dst_chips, chunks)
+# -> (first-chunk seconds, last-chunk seconds).
+PINNED_CHUNKED = [
+    ("llama-8b", 2048, "H100", 1, "H100", 1, 4,
+     0.00135217728, 0.00540870912),
+    ("llama-8b", 512, "H100", 1, "Gaudi2", 1, 8,
+     0.00023469621333333332, 0.0018775697066666665),
+    ("llama-70b", 4096, "H100", 4, "Gaudi2", 1, 8,
+     0.0044849242666666666, 0.03587939413333333),
+    ("llama-70b", 2048, "Gaudi3", 2, "Gaudi3", 2, 16,
+     0.0002896202666666667, 0.004633924266666667),
+]
+
 
 def kv_bytes_per_token(model, dtype_bytes=2.0):
     layers, kv_heads, head_dim = MODELS[model]
@@ -57,6 +76,17 @@ def transfer_time(model, ctx, src, src_chips, dst, dst_chips):
     if bytes_ <= 0.0:
         return 0.0
     return bytes_ / bw + lat
+
+
+def chunk_done(model, ctx, src, src_chips, dst, dst_chips, chunks, i):
+    """Landing time of chunk i (0-based) of a `chunks`-way stream —
+    mirrors `ChunkedTransfer::chunk_done` (same arithmetic order)."""
+    assert 0 <= i < chunks
+    bw, lat = kv_link(src, src_chips, dst, dst_chips)
+    bytes_ = ctx * kv_bytes_per_token(model)
+    if bytes_ <= 0.0:
+        return 0.0
+    return bytes_ * (i + 1) / chunks / bw + (i + 1) * lat
 
 
 def test_kv_bytes_per_token_pins():
@@ -87,12 +117,47 @@ def test_transfer_monotone_and_zero_for_nothing():
     assert transfer_time("llama-8b", 0, "H100", 1, "Gaudi2", 1) == 0.0
 
 
+def test_chunked_schedule_matches_pinned_rust_values():
+    for model, ctx, src, sc, dst, dc, n, first, total in PINNED_CHUNKED:
+        got_first = chunk_done(model, ctx, src, sc, dst, dc, n, 0)
+        got_total = chunk_done(model, ctx, src, sc, dst, dc, n, n - 1)
+        assert abs(got_first / first - 1.0) < 1e-9, (
+            f"{model} ctx={ctx} x{n}: first {got_first!r} != pinned {first!r}"
+        )
+        assert abs(got_total / total - 1.0) < 1e-9, (
+            f"{model} ctx={ctx} x{n}: total {got_total!r} != pinned {total!r}"
+        )
+
+
+def test_chunked_limits_and_monotonicity():
+    args = ("llama-8b", 2048, "H100", 1, "Gaudi2", 1)
+    single = transfer_time(*args)
+    # One chunk reproduces the single-shot closed form bit-exactly.
+    assert chunk_done(*args, 1, 0) == single
+    # Chunks land in order; the first chunk strictly beats single-shot;
+    # the total stream time is monotone non-decreasing in chunk count
+    # and never beats the wire.
+    prev_total, prev_first = 0.0, float("inf")
+    for n in range(1, 33):
+        first = chunk_done(*args, n, 0)
+        total = chunk_done(*args, n, n - 1)
+        assert first <= prev_first and total >= prev_total
+        assert single <= total and (n == 1 or first < single)
+        for i in range(1, n):
+            assert chunk_done(*args, n, i) > chunk_done(*args, n, i - 1)
+        prev_total, prev_first = total, first
+    # Zero bytes land instantly however finely chunked.
+    assert chunk_done("llama-8b", 0, "H100", 1, "Gaudi2", 1, 8, 7) == 0.0
+
+
 def main():
     tests = [
         test_kv_bytes_per_token_pins,
         test_closed_form_matches_pinned_rust_values,
         test_link_is_bottlenecked_and_latency_summed,
         test_transfer_monotone_and_zero_for_nothing,
+        test_chunked_schedule_matches_pinned_rust_values,
+        test_chunked_limits_and_monotonicity,
     ]
     for t in tests:
         t()

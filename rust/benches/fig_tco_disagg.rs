@@ -1,11 +1,16 @@
 //! FIG-TCO-DISAGG: the phase-split $/Mtok-at-SLO frontier — colocated
-//! vs disaggregated-homogeneous vs mixed-vendor pools, across the
-//! paper's model grid and two SLO points. Each disaggregated cell
-//! builds a two-pool cluster (`DisaggCluster`), migrates KV over the
-//! scale-out fabric at the closed-form cost, binary-searches the max
-//! Poisson QPS meeting the SLO, and prices each pool at its own capex
-//! and sustained draw (`InfraModel::cost_per_mtok_disagg`). Alongside
-//! the table, every cell is appended to `BENCH_fig_tco_disagg.json`
+//! vs disaggregated-homogeneous vs mixed-vendor pools, each in
+//! single-shot and chunked-streaming (+admission-control) flavors,
+//! plus the PhaseAffinity mixed deployment, across the paper's model
+//! grid and two SLO points. Each disaggregated cell builds a two-pool
+//! cluster (`DisaggCluster`), migrates KV over the scale-out fabric
+//! at the (chunked) closed-form cost, binary-searches the max Poisson
+//! QPS meeting the SLO, and prices each pool at its own capex and
+//! sustained draw (`InfraModel::cost_per_mtok_disagg`). For every
+//! disaggregated plan the bench also replays the single-shot
+//! operating point with chunking enabled and asserts TTFT p95 did not
+//! get worse — the streaming acceptance property. Alongside the
+//! table, every cell is appended to `BENCH_fig_tco_disagg.json`
 //! (directory: `BENCH_JSON_DIR`, default `.`) so CI can archive the
 //! trajectory and PRs stay comparable.
 //!
@@ -14,12 +19,12 @@
 
 use std::collections::BTreeMap;
 
-use fp8_tco::analysis::disagg::{auto_size, DisaggPlan, PoolSpec};
+use fp8_tco::analysis::disagg::{auto_size, DisaggPlan, PhaseAffinityPlan, PoolSpec};
 use fp8_tco::analysis::parallel::ParallelismPlan;
 use fp8_tco::analysis::perfmodel::PrecisionMode;
 use fp8_tco::coordinator::cluster::{
-    disagg_sim_cluster, max_sustainable_qps, replay_disagg_point, sharded_sim_cluster, SloSpec,
-    SweepConfig,
+    disagg_sim_cluster, max_sustainable_qps, phase_affinity_sim_cluster, replay_affinity_point,
+    replay_disagg_point, sharded_sim_cluster, SloSpec, SweepConfig,
 };
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
@@ -27,6 +32,9 @@ use fp8_tco::util::json::Json;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama::{by_name, LlamaConfig};
 use fp8_tco::workload::trace::TraceConfig;
+
+/// KV-streaming chunk count for the streaming frontier rows.
+const STREAM_CHUNKS: usize = 8;
 
 /// One measured frontier cell.
 struct Cell {
@@ -37,7 +45,12 @@ struct Cell {
     tpot_p95: f64,
     usd_per_mtok: f64,
     migrations: u64,
+    bounces: u64,
     kv_gb_migrated: f64,
+    /// Whole-run TTFT p95 of the pricing replay (0 when none ran) —
+    /// reused by the streaming no-worse assertion so the single-shot
+    /// replay is not repeated.
+    replay_ttft_p95: f64,
 }
 
 fn infeasible() -> Cell {
@@ -49,7 +62,9 @@ fn infeasible() -> Cell {
         tpot_p95: 0.0,
         usd_per_mtok: 0.0,
         migrations: 0,
+        bounces: 0,
         kv_gb_migrated: 0.0,
+        replay_ttft_p95: 0.0,
     }
 }
 
@@ -88,7 +103,9 @@ fn colocated_cell(
                 tpot_p95: p.tpot_p95,
                 usd_per_mtok: usd,
                 migrations: 0,
+                bounces: 0,
                 kv_gb_migrated: 0.0,
+                replay_ttft_p95: 0.0,
             }
         }
     }
@@ -97,6 +114,8 @@ fn colocated_cell(
 fn disagg_cell(
     model: &'static LlamaConfig,
     plan: &DisaggPlan,
+    chunks: usize,
+    admission: bool,
     slo: &SloSpec,
     sweep: &SweepConfig,
     infra: &InfraModel,
@@ -105,6 +124,7 @@ fn disagg_cell(
         &|| {
             disagg_sim_cluster(model, plan)
                 .unwrap_or_else(|e| panic!("disagg cell must be feasible: {e}"))
+                .with_streaming(chunks, admission)
         },
         &TraceConfig::chat,
         slo,
@@ -118,6 +138,8 @@ fn disagg_cell(
             let (pm, dm, merged) = replay_disagg_point(
                 model,
                 plan,
+                chunks,
+                admission,
                 TraceConfig::chat(p.qps),
                 sweep.n_requests,
                 sweep.seed,
@@ -136,10 +158,100 @@ fn disagg_cell(
                 tpot_p95: p.tpot_p95,
                 usd_per_mtok: usd,
                 migrations: merged.migrations,
+                bounces: merged.bounces,
                 kv_gb_migrated: merged.kv_bytes_migrated / 1e9,
+                replay_ttft_p95: merged.ttft.pct(95.0),
             }
         }
     }
+}
+
+fn affinity_cell(
+    model: &'static LlamaConfig,
+    plan: &PhaseAffinityPlan,
+    chunks: usize,
+    admission: bool,
+    slo: &SloSpec,
+    sweep: &SweepConfig,
+    infra: &InfraModel,
+) -> Cell {
+    let out = max_sustainable_qps(
+        &|| {
+            phase_affinity_sim_cluster(model, plan)
+                .unwrap_or_else(|e| panic!("affinity cell must be feasible: {e}"))
+                .with_streaming(chunks, admission)
+        },
+        &TraceConfig::chat,
+        slo,
+        sweep,
+    );
+    match out.best {
+        None => infeasible(),
+        Some(p) => {
+            let (cm, pm, dm, merged) = replay_affinity_point(
+                model,
+                plan,
+                chunks,
+                admission,
+                TraceConfig::chat(p.qps),
+                sweep.n_requests,
+                sweep.seed,
+            );
+            let usd = infra.cost_per_mtok_phase_affinity_plan(
+                plan,
+                cm.watts_mean(),
+                pm.watts_mean(),
+                dm.watts_mean(),
+                p.tokens_per_sec,
+            );
+            Cell {
+                feasible: true,
+                qps: p.qps,
+                tokens_per_sec: p.tokens_per_sec,
+                ttft_p95: p.ttft_p95,
+                tpot_p95: p.tpot_p95,
+                usd_per_mtok: usd,
+                migrations: merged.migrations,
+                bounces: merged.bounces,
+                kv_gb_migrated: merged.kv_bytes_migrated / 1e9,
+                replay_ttft_p95: merged.ttft.pct(95.0),
+            }
+        }
+    }
+}
+
+/// The streaming acceptance property, checked on every bench point:
+/// replaying a disaggregated plan's single-shot operating point with
+/// chunking enabled must not worsen TTFT p95 (first-chunk delivery
+/// only moves first tokens earlier; `single_p95` comes from the
+/// pricing replay the single-shot cell already ran, so only the
+/// chunked replay executes here). The 1 µs tolerance absorbs the
+/// `(chunks-1)*lat` of extra source-KV residency a stalled prefill
+/// could theoretically see — never the ms-scale regressions the
+/// assertion guards against.
+fn assert_streaming_ttft_no_worse(
+    model: &'static LlamaConfig,
+    plan: &DisaggPlan,
+    qps: f64,
+    n_requests: usize,
+    seed: u64,
+    single_p95: f64,
+) {
+    let (_, _, chunked) = replay_disagg_point(
+        model,
+        plan,
+        STREAM_CHUNKS,
+        false,
+        TraceConfig::chat(qps),
+        n_requests,
+        seed,
+    );
+    let c95 = chunked.ttft.pct(95.0);
+    assert!(
+        c95 <= single_p95 + 1e-6,
+        "{}: chunked TTFT p95 {c95} worse than single-shot {single_p95} at {qps} QPS",
+        plan.describe(),
+    );
 }
 
 fn main() {
@@ -168,8 +280,28 @@ fn main() {
         PoolSpec::new(Device::Gaudi2, PrecisionMode::fp8_static(), plan)
     };
     // (model, colocated plan, homogeneous disagg, mixed-vendor disagg,
-    // sweep ceiling). Equal instance budgets per mode.
-    let setups: [(&'static LlamaConfig, ParallelismPlan, DisaggPlan, DisaggPlan, f64); 2] = [
+    // PhaseAffinity mix, sweep ceiling). Equal instance budgets for
+    // the colocated/disagg/mixed modes; the affinity mix spends the
+    // same budget 2 colocated + 1 prefill + 1 decode.
+    let affinity8 = PhaseAffinityPlan::new(
+        h100(ParallelismPlan::single().with_replicas(2)),
+        DisaggPlan::new(h100(ParallelismPlan::single()), gaudi2(ParallelismPlan::single())),
+        2 * p_med,
+    );
+    let affinity70 = PhaseAffinityPlan::new(
+        h100(ParallelismPlan::tp(2).with_replicas(2)),
+        DisaggPlan::new(h100(ParallelismPlan::tp(2)), gaudi2(ParallelismPlan::tp(2))),
+        2 * p_med,
+    );
+    type Setup = (
+        &'static LlamaConfig,
+        ParallelismPlan,
+        DisaggPlan,
+        DisaggPlan,
+        PhaseAffinityPlan,
+        f64,
+    );
+    let setups: [Setup; 2] = [
         (
             m8,
             ParallelismPlan::single().with_replicas(4),
@@ -189,6 +321,7 @@ fn main() {
                 o_med,
                 4,
             ),
+            affinity8,
             16.0,
         ),
         (
@@ -210,12 +343,14 @@ fn main() {
                 o_med,
                 4,
             ),
+            affinity70,
             8.0,
         ),
     ];
 
     let mut t = Table::new(
-        "Fig. TCO-DISAGG — $/Mtok at SLO: colocated vs disaggregated vs mixed-vendor",
+        "Fig. TCO-DISAGG — $/Mtok at SLO: colocated vs disagg (single-shot + \
+         chunked streaming) vs mixed-vendor vs PhaseAffinity",
         &[
             "model",
             "SLO",
@@ -225,23 +360,25 @@ fn main() {
             "QPS @SLO",
             "tok/s",
             "TPOT p95 ms",
-            "migrations",
+            "migr",
+            "bounce",
             "$/Mtok @SLO",
         ],
     );
     let mut records: Vec<Json> = Vec::new();
-    for (model, colo_plan, homog, mixed, qps_hi) in setups {
+    for (model, colo_plan, homog, mixed, affinity, qps_hi) in setups {
         for (slo_name, slo) in &slos {
             let sweep = if fast {
                 SweepConfig { iters: 2, n_requests: 30, seed: 17, ..SweepConfig::new(0.2, qps_hi) }
             } else {
                 SweepConfig { iters: 4, n_requests: 100, seed: 17, ..SweepConfig::new(0.2, qps_hi) }
             };
-            let rows: [(&str, String, usize, Cell); 3] = [
+            let rows: [(&str, String, usize, usize, Cell); 6] = [
                 (
                     "colocated",
                     format!("H100 {colo_plan}"),
                     colo_plan.total_chips(),
+                    1,
                     colocated_cell(
                         model,
                         Device::H100,
@@ -256,22 +393,61 @@ fn main() {
                     "disagg",
                     homog.describe(),
                     homog.total_chips(),
-                    disagg_cell(model, &homog, slo, &sweep, &infra),
+                    1,
+                    disagg_cell(model, &homog, 1, false, slo, &sweep, &infra),
+                ),
+                (
+                    "disagg-stream",
+                    homog.describe(),
+                    homog.total_chips(),
+                    STREAM_CHUNKS,
+                    disagg_cell(model, &homog, STREAM_CHUNKS, true, slo, &sweep, &infra),
                 ),
                 (
                     "mixed",
                     mixed.describe(),
                     mixed.total_chips(),
-                    disagg_cell(model, &mixed, slo, &sweep, &infra),
+                    1,
+                    disagg_cell(model, &mixed, 1, false, slo, &sweep, &infra),
+                ),
+                (
+                    "mixed-stream",
+                    mixed.describe(),
+                    mixed.total_chips(),
+                    STREAM_CHUNKS,
+                    disagg_cell(model, &mixed, STREAM_CHUNKS, true, slo, &sweep, &infra),
+                ),
+                (
+                    "affinity",
+                    affinity.describe(),
+                    affinity.total_chips(),
+                    STREAM_CHUNKS,
+                    affinity_cell(model, &affinity, STREAM_CHUNKS, true, slo, &sweep, &infra),
                 ),
             ];
-            for (mode, pools, chips, cell) in rows {
+            // The streaming acceptance property: at the single-shot
+            // operating point of each disaggregated plan, chunked
+            // streaming must not worsen TTFT p95.
+            for (plan, cell) in [(&homog, &rows[1].4), (&mixed, &rows[3].4)] {
+                if cell.feasible {
+                    assert_streaming_ttft_no_worse(
+                        model,
+                        plan,
+                        cell.qps,
+                        sweep.n_requests,
+                        sweep.seed,
+                        cell.replay_ttft_p95,
+                    );
+                }
+            }
+            for (mode, pools, chips, chunks, cell) in rows {
                 let mut rec = BTreeMap::new();
                 rec.insert("model".into(), Json::Str(model.name.into()));
                 rec.insert("slo".into(), Json::Str((*slo_name).into()));
                 rec.insert("mode".into(), Json::Str(mode.into()));
                 rec.insert("pools".into(), Json::Str(pools.clone()));
                 rec.insert("chips".into(), Json::Num(chips as f64));
+                rec.insert("chunks".into(), Json::Num(chunks as f64));
                 rec.insert("feasible".into(), Json::Bool(cell.feasible));
                 if cell.feasible {
                     rec.insert("qps".into(), Json::Num(cell.qps));
@@ -280,6 +456,7 @@ fn main() {
                     rec.insert("tpot_p95_s".into(), Json::Num(cell.tpot_p95));
                     rec.insert("usd_per_mtok".into(), Json::Num(cell.usd_per_mtok));
                     rec.insert("migrations".into(), Json::Num(cell.migrations as f64));
+                    rec.insert("bounces".into(), Json::Num(cell.bounces as f64));
                     rec.insert("kv_gb_migrated".into(), Json::Num(cell.kv_gb_migrated));
                     t.row(vec![
                         model.name.into(),
@@ -291,6 +468,7 @@ fn main() {
                         f(cell.tokens_per_sec, 0),
                         f(cell.tpot_p95 * 1e3, 2),
                         format!("{}", cell.migrations),
+                        format!("{}", cell.bounces),
                         f(cell.usd_per_mtok, 3),
                     ]);
                 } else {
@@ -301,6 +479,7 @@ fn main() {
                         pools,
                         format!("{chips}"),
                         format!("< {}", sweep.qps_lo),
+                        "-".into(),
                         "-".into(),
                         "-".into(),
                         "-".into(),
@@ -326,6 +505,11 @@ fn main() {
     }
     println!(
         "(the mixed-vendor rows price the paper's per-phase asymmetry end-to-end:\n \
-         H100 prefill + Gaudi 2 decode, KV migration charged against the fabric)"
+         H100 prefill + Gaudi 2 decode, KV migration charged against the fabric.\n \
+         *-stream rows migrate in {STREAM_CHUNKS} chunks with decode-pool admission \
+         control;\n \
+         the affinity row routes prompts >= 2x the chat median to the disagg pair\n \
+         and the rest to colocated engines — every streaming point is asserted\n \
+         TTFT-no-worse than its single-shot twin)"
     );
 }

@@ -74,6 +74,48 @@ impl DisaggPlan {
     }
 }
 
+/// A PhaseAffinity deployment: a colocated pool *and* a disaggregated
+/// prefill/decode pair behind one router that splits traffic by
+/// prompt length — long-prefill requests (at or above
+/// `affinity_prompt_tokens`) take the disaggregated path, short ones
+/// stay colocated. The mixed shape hedges the disaggregation bet:
+/// migration cost is only paid where the phase split wins it back,
+/// and short interactive requests never cross the fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseAffinityPlan {
+    pub colocated: PoolSpec,
+    pub disagg: DisaggPlan,
+    /// Prompts at or above this length route to the disagg pools.
+    pub affinity_prompt_tokens: usize,
+}
+
+impl PhaseAffinityPlan {
+    pub fn new(
+        colocated: PoolSpec,
+        disagg: DisaggPlan,
+        affinity_prompt_tokens: usize,
+    ) -> Self {
+        PhaseAffinityPlan { colocated, disagg, affinity_prompt_tokens }
+    }
+
+    /// Accelerators across all three pools (capex/power accounting).
+    pub fn total_chips(&self) -> usize {
+        self.colocated.plan.total_chips() + self.disagg.total_chips()
+    }
+
+    /// Human-readable shape for tables:
+    /// "H100 tp1-x2 + [H100 tp1-x1 -> Gaudi2 tp1-x1] @>=512".
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {} + [{}] @>={}",
+            self.colocated.device.name(),
+            self.colocated.plan,
+            self.disagg.describe(),
+            self.affinity_prompt_tokens,
+        )
+    }
+}
+
 /// Split `total_replicas` instances between the two pools so the
 /// per-request service demand balances: one request costs the prefill
 /// pool one prompt prefill and the decode pool `output_tokens` decode
@@ -176,6 +218,22 @@ mod tests {
         assert_eq!(link.lat_s, 5.0e-6 + 6.0e-6);
         assert!(plan.describe().contains("H100"));
         assert!(plan.describe().contains("Gaudi2"));
+    }
+
+    #[test]
+    fn phase_affinity_plan_chips_and_shape() {
+        let m = by_name("llama-8b").unwrap();
+        let disagg = auto_size(m, h100_pool(), gaudi2_pool(), 2048, 128, 2);
+        let colo = PoolSpec::new(
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::single().with_replicas(2),
+        );
+        let plan = PhaseAffinityPlan::new(colo, disagg, 512);
+        assert_eq!(plan.total_chips(), 4, "2 colocated + 1 prefill + 1 decode");
+        let d = plan.describe();
+        assert!(d.contains("@>=512"), "{d}");
+        assert!(d.contains("H100") && d.contains("Gaudi2"), "{d}");
     }
 
     #[test]

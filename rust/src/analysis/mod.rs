@@ -11,7 +11,7 @@ pub mod parallel;
 pub mod perfmodel;
 pub mod roofline;
 
-pub use disagg::{auto_size, DisaggPlan, PoolSpec};
+pub use disagg::{auto_size, DisaggPlan, PhaseAffinityPlan, PoolSpec};
 pub use parallel::{
     auto_plan, check_capacity, check_step, CapacityError, CapacityFit, ParallelismPlan,
     DEFAULT_MIN_KV_TOKENS,

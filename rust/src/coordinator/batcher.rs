@@ -45,6 +45,15 @@ pub struct Admission {
     pub decodes: Vec<SeqId>,
 }
 
+/// KV tokens a migrated decode leg needs on arrival: its context plus
+/// the first locally generated token. Both the batcher's resume
+/// reservation and decode-pool admission control
+/// ([`Engine::can_admit_migration`](super::engine::Engine::can_admit_migration))
+/// use this, so "accepted" always means "first decode step covered".
+pub fn migration_footprint_tokens(context_len: usize) -> usize {
+    context_len + 1
+}
+
 #[derive(Debug)]
 pub struct Batcher {
     pub cfg: BatcherConfig,
@@ -136,6 +145,13 @@ impl Batcher {
             }
             let reserve_tokens = if self.cfg.reserve_full_context {
                 seq.max_context()
+            } else if resume {
+                // One decode step of lookahead: the migrated context
+                // plus the first locally generated token. This is what
+                // lets admission control promise that an *accepted*
+                // migration never preempts within its first decode
+                // step — the first `grow` is covered by construction.
+                migration_footprint_tokens(seq.prompt_len)
             } else {
                 seq.prompt_len
             };

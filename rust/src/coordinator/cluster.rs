@@ -38,7 +38,7 @@ use super::kv_cache::KvCacheConfig;
 use super::metrics::Metrics;
 use super::request::{MigratedRequest, SeqId};
 use super::router::{EngineRating, RoutePolicy, Router};
-use crate::analysis::disagg::{DisaggPlan, PoolSpec};
+use crate::analysis::disagg::{DisaggPlan, PhaseAffinityPlan, PoolSpec};
 use crate::analysis::parallel::{CapacityError, ParallelismPlan};
 use crate::analysis::perfmodel::{PrecisionMode, StepConfig};
 use crate::hwsim::interconnect::KvLink;
@@ -160,13 +160,32 @@ fn step_pool_to<B: ExecutionBackend>(pool: &mut Router<B>, t: f64, left: &mut us
     true
 }
 
-/// An in-flight KV migration: created when a prefill leg finishes,
-/// delivered to the decode pool at `t_done`. Ordered by completion
-/// time (id tiebreak) for the event loop's min-heap.
+/// What a migration event means when it fires (chunked streaming
+/// splits one transfer into a delivery event and a release event; the
+/// single-shot limit keeps PR 3's combined semantics and ordering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum TransferEvent {
+    /// Whole transfer lands at once (chunk count 1, zero bytes, or an
+    /// infinite link): release the source KV and deliver the decode
+    /// leg in one event — the exact single-shot semantics.
+    Single,
+    /// First chunk landed: the first token and the leading KV layers
+    /// are across, so the decode leg is delivered (TTFT sampled here)
+    /// while the tail chunks still stream.
+    Deliver,
+    /// Last chunk landed: the source engine's in-flight KV blocks are
+    /// released (back-pressure ends here, not at first chunk).
+    Release,
+}
+
+/// An in-flight KV migration event: created when a prefill leg
+/// finishes, fired on the shared timeline at `t`. Ordered by time
+/// (id, then kind tiebreak) for the event loop's min-heap.
 #[derive(Debug, Clone)]
 struct Transfer {
-    t_done: f64,
+    t: f64,
     id: SeqId,
+    kind: TransferEvent,
     /// Prefill-pool engine holding the in-flight KV blocks.
     src: usize,
     /// Original request arrival (TTFT / e2e reference).
@@ -180,7 +199,7 @@ struct Transfer {
 
 impl PartialEq for Transfer {
     fn eq(&self, other: &Self) -> bool {
-        self.t_done == other.t_done && self.id == other.id
+        self.t == other.t && self.id == other.id && self.kind == other.kind
     }
 }
 
@@ -194,9 +213,10 @@ impl PartialOrd for Transfer {
 
 impl Ord for Transfer {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t_done
-            .total_cmp(&other.t_done)
+        self.t
+            .total_cmp(&other.t)
             .then(self.id.cmp(&other.id))
+            .then(self.kind.cmp(&other.kind))
     }
 }
 
@@ -221,10 +241,30 @@ impl Ord for Transfer {
 /// service). Events are processed in global time order; within each
 /// pool the [`Cluster::run`] independence argument applies unchanged.
 ///
+/// Chunked/layerwise streaming (`chunks > 1`, DESIGN.md §8.1): the
+/// migration becomes a [`ChunkedTransfer`](crate::hwsim::interconnect::ChunkedTransfer)
+/// schedule. The decode leg is delivered when the *first* chunk lands
+/// (the first token and the leading KV layers are across; decode
+/// pipelines against the tail chunks layer by layer), so TTFT reflects
+/// first-chunk-plus-compute overlap; the source KV is released only
+/// when the *last* chunk lands, so back-pressure still covers the
+/// whole stream. `chunks = 1` reproduces the single-shot timeline
+/// bit-exactly.
+///
+/// Admission control (`admission = true`, DESIGN.md §8.2): before a
+/// transfer starts, the decode pool is probed for the migration's KV
+/// footprint (context + one decode step); a migration no decode engine
+/// could hold right now is *bounced* — the prefill engine, which still
+/// holds the KV, finishes the request locally as [`SeqRole::Full`]
+/// ([`Engine::resume_bounced`]) instead of shipping KV that would be
+/// evicted on arrival. Bounces are counted in `Metrics::bounces`.
+///
 /// Known approximation: a prefill engine stalled on in-flight KV
 /// resumes at its stall-time clock when the delivery releases the
 /// blocks, which can predate the delivery instant by up to the
 /// transfer time (DESIGN.md §7.3).
+///
+/// [`SeqRole::Full`]: crate::coordinator::request::SeqRole::Full
 pub struct DisaggCluster<B: ExecutionBackend> {
     pub prefill: Router<B>,
     pub decode: Router<B>,
@@ -233,10 +273,18 @@ pub struct DisaggCluster<B: ExecutionBackend> {
     pub link: KvLink,
     /// KV bytes per migrated context token (model x KV dtype).
     pub kv_bytes_per_token: f64,
+    /// KV-streaming chunk count (1 = single-shot, the PR 3 semantics).
+    pub chunks: usize,
+    /// Decode-pool admission control: bounce migrations whose KV
+    /// footprint would trigger immediate preemption (off by default —
+    /// the single-shot limit stays bit-exact).
+    pub admission: bool,
     pub step_cap: usize,
     /// Original output lengths of requests currently in their prefill
     /// or transfer leg (the prefill pool only sees `output_len = 1`).
     out_len: HashMap<SeqId, usize>,
+    /// In-flight migration events, fired in global time order.
+    pending: BinaryHeap<Reverse<Transfer>>,
 }
 
 impl<B: ExecutionBackend> DisaggCluster<B> {
@@ -251,76 +299,103 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
             decode,
             link,
             kv_bytes_per_token,
+            chunks: 1,
+            admission: false,
             step_cap: 50_000_000,
             out_len: HashMap::new(),
+            pending: BinaryHeap::new(),
         }
+    }
+
+    /// Builder-style streaming knobs (chunk count + admission control)
+    /// for the sweep factories.
+    pub fn with_streaming(mut self, chunks: usize, admission: bool) -> Self {
+        self.chunks = chunks.max(1);
+        self.admission = admission;
+        self
     }
 
     /// Run the two-pool event loop over an arrival stream. Returns
     /// true when every submitted request finished within the step cap.
     pub fn run(&mut self, arrivals: impl IntoIterator<Item = Request>) -> bool {
         let mut left = self.step_cap;
-        let mut pending: BinaryHeap<Reverse<Transfer>> = BinaryHeap::new();
-        let mut arrivals = arrivals.into_iter();
-        let mut next = arrivals.next();
         // Phase 1: external arrivals, interleaved with migration
-        // deliveries in global time order.
-        while let Some(r) = next.take() {
-            loop {
-                let t_mig = match pending.peek() {
-                    Some(Reverse(t)) => t.t_done,
-                    None => f64::INFINITY,
-                };
-                if t_mig > r.arrival {
-                    break;
-                }
-                // Before committing to this delivery order, make every
-                // prefill completion up to `t_mig` visible: transfer
-                // durations vary with context length, so a prefill that
-                // finishes *later* than another can still complete its
-                // (shorter) transfer *earlier*. Stepping + harvesting
-                // here guarantees the heap holds every transfer with
-                // t_done <= t_mig, and the popped minimum is the true
-                // next event.
-                if !step_pool_to(&mut self.prefill, t_mig, &mut left) {
-                    return false;
-                }
-                self.harvest(&mut pending);
-                let Reverse(tr) = pending.pop().unwrap();
-                if !step_pool_to(&mut self.decode, tr.t_done, &mut left) {
-                    return false;
-                }
-                self.deliver(tr);
-            }
-            if !step_pool_to(&mut self.prefill, r.arrival, &mut left) {
+        // events in global time order.
+        for r in arrivals {
+            if !self.advance_to(r.arrival, &mut left) {
                 return false;
             }
-            self.harvest(&mut pending);
             self.submit_prefill(&r);
-            next = arrivals.next();
         }
-        // Phase 2: drain. Deliveries release in-flight source KV,
-        // which can unblock queued prefills, so prefill draining and
-        // migration delivery interleave *one delivery at a time*: each
-        // pop re-drains and re-harvests the prefill pool first, so a
-        // transfer emitted by a stall-released engine enters the heap
-        // before the next delivery is ordered (only the stall-clock
-        // skew documented in DESIGN.md §7.3 remains).
+        self.drain_all(&mut left)
+    }
+
+    /// Process every migration event up to `t`, then bring the prefill
+    /// pool to `t` and harvest fresh handoffs. The shared-timeline
+    /// workhorse: [`DisaggCluster::run`] calls it per arrival and
+    /// [`PhaseAffinityCluster`] interleaves it with its colocated pool.
+    fn advance_to(&mut self, t: f64, left: &mut usize) -> bool {
+        loop {
+            let t_ev = match self.pending.peek() {
+                Some(Reverse(tr)) => tr.t,
+                None => f64::INFINITY,
+            };
+            if t_ev > t {
+                break;
+            }
+            // Before committing to this event order, make every
+            // prefill completion up to `t_ev` visible: transfer
+            // durations vary with context length, so a prefill that
+            // finishes *later* than another can still complete its
+            // (shorter) transfer *earlier*. Stepping + harvesting
+            // here guarantees the heap holds every event with
+            // t <= t_ev, and the popped minimum is the true next one.
+            if !step_pool_to(&mut self.prefill, t_ev, left) {
+                return false;
+            }
+            self.harvest();
+            let Reverse(tr) = self.pending.pop().unwrap();
+            if !self.fire(tr, left) {
+                return false;
+            }
+        }
+        if !step_pool_to(&mut self.prefill, t, left) {
+            return false;
+        }
+        self.harvest();
+        true
+    }
+
+    /// Drain everything after the arrival source is exhausted.
+    ///
+    /// Phase 2 interleaves prefill draining with migration events *one
+    /// event at a time*: releases free in-flight source KV (which can
+    /// unblock queued prefills) and admission bounces resume decoding
+    /// on their prefill engine, so each pop re-drains and re-harvests
+    /// the prefill pool first (only the stall-clock skew documented in
+    /// DESIGN.md §7.3 remains). Phase 3 drains the decode pool.
+    fn drain_all(&mut self, left: &mut usize) -> bool {
         loop {
             for e in self.prefill.engines.iter_mut() {
                 let s0 = e.metrics.steps;
-                e.run_to_completion(left); // may stall on in-flight KV
-                left = left.saturating_sub((e.metrics.steps - s0) as usize);
-                if left == 0 {
+                e.run_to_completion(*left); // may stall on in-flight KV
+                *left = left.saturating_sub((e.metrics.steps - s0) as usize);
+                if *left == 0 {
                     return false;
                 }
             }
-            self.harvest(&mut pending);
-            let Some(Reverse(tr)) = pending.pop() else { break };
-            if !step_pool_to(&mut self.decode, tr.t_done, &mut left) {
+            let bounced = self.harvest();
+            let Some(Reverse(tr)) = self.pending.pop() else {
+                if bounced > 0 {
+                    // A bounce re-opened decode work on the prefill
+                    // pool; loop to run it before concluding.
+                    continue;
+                }
+                break;
+            };
+            if !self.fire(tr, left) {
                 return false;
             }
-            self.deliver(tr);
         }
         if self.prefill.engines.iter().any(|e| e.pending() > 0) {
             return false; // stuck prefill work (infeasible request)
@@ -328,8 +403,8 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
         // Phase 3: drain the decode pool.
         for e in self.decode.engines.iter_mut() {
             let s0 = e.metrics.steps;
-            let ok = e.run_to_completion(left);
-            left = left.saturating_sub((e.metrics.steps - s0) as usize);
+            let ok = e.run_to_completion(*left);
+            *left = left.saturating_sub((e.metrics.steps - s0) as usize);
             if !ok {
                 return false;
             }
@@ -349,46 +424,113 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
         self.prefill.submit_handoff_at(r);
     }
 
-    /// Collect freshly finished prefill legs into pending transfers,
-    /// costed by the closed-form link model.
-    fn harvest(&mut self, pending: &mut BinaryHeap<Reverse<Transfer>>) {
+    /// Collect freshly finished prefill legs: admission-check each
+    /// (bouncing rejects back to colocated execution) and push the
+    /// accepted ones' chunk events, costed by the streaming schedule.
+    /// Returns the number of bounces this pass.
+    fn harvest(&mut self) -> usize {
+        let mut bounced = 0;
         for (src, e) in self.prefill.engines.iter_mut().enumerate() {
             for id in e.take_handoffs() {
-                let seq = e.sequence(id).expect("handoff sequence exists");
-                let context_len = seq.context_len();
-                let bytes = context_len as f64 * self.kv_bytes_per_token;
-                let t_done =
-                    seq.finished_at.expect("handoff finished") + self.link.transfer_time(bytes);
+                let (context_len, finished_at, arrival) = {
+                    let seq = e.sequence(id).expect("handoff sequence exists");
+                    (
+                        seq.context_len(),
+                        seq.finished_at.expect("handoff finished"),
+                        seq.arrival,
+                    )
+                };
                 let out = self
                     .out_len
                     .remove(&id)
                     .expect("handoff has a recorded output length");
-                pending.push(Reverse(Transfer {
-                    t_done,
+                if self.admission
+                    && !self.decode.engines.iter().any(|d| d.can_admit_migration(context_len))
+                {
+                    // No decode engine can hold the footprint without
+                    // evicting: keep the KV where it already lives and
+                    // finish the request colocated.
+                    e.resume_bounced(id, out - 1);
+                    bounced += 1;
+                    continue;
+                }
+                let bytes = context_len as f64 * self.kv_bytes_per_token;
+                let sched = self.link.chunked(bytes, self.chunks);
+                let t_first = finished_at + sched.first_time();
+                let t_done = finished_at + sched.total_time();
+                let tr = Transfer {
+                    t: t_done,
                     id,
+                    kind: TransferEvent::Single,
                     src,
-                    arrival: seq.arrival,
+                    arrival,
                     context_len,
                     remaining_out: out - 1,
                     bytes,
-                }));
+                };
+                if t_first == t_done {
+                    // Degenerate schedule (one chunk, zero bytes or a
+                    // free link): one combined event, the single-shot
+                    // ordering bit-for-bit.
+                    self.pending.push(Reverse(tr));
+                } else {
+                    self.pending.push(Reverse(Transfer {
+                        t: t_first,
+                        kind: TransferEvent::Deliver,
+                        ..tr.clone()
+                    }));
+                    self.pending.push(Reverse(Transfer {
+                        kind: TransferEvent::Release,
+                        ..tr
+                    }));
+                }
             }
         }
+        bounced
     }
 
-    /// Complete one migration: free the source-side in-flight KV and
-    /// resume the sequence on a decode engine.
-    fn deliver(&mut self, tr: Transfer) {
-        self.prefill.engines[tr.src].release_migrated(tr.id);
+    /// Fire one migration event.
+    fn fire(&mut self, tr: Transfer, left: &mut usize) -> bool {
+        match tr.kind {
+            TransferEvent::Single => {
+                if !step_pool_to(&mut self.decode, tr.t, left) {
+                    return false;
+                }
+                self.prefill.engines[tr.src].release_migrated(tr.id);
+                self.deliver(&tr);
+            }
+            TransferEvent::Deliver => {
+                if !step_pool_to(&mut self.decode, tr.t, left) {
+                    return false;
+                }
+                self.deliver(&tr);
+            }
+            TransferEvent::Release => {
+                self.prefill.engines[tr.src].release_migrated(tr.id);
+            }
+        }
+        true
+    }
+
+    /// Resume the sequence on a decode engine at the event instant.
+    /// With admission control on, delivery is admission-aware too:
+    /// the migration lands on an engine that can hold its footprint
+    /// (the harvest-time probe said *some* engine could; routing by
+    /// load alone could still pick a full one).
+    fn deliver(&mut self, tr: &Transfer) {
         let m = MigratedRequest {
             id: tr.id,
             arrival: tr.arrival,
-            at: tr.t_done,
+            at: tr.t,
             context_len: tr.context_len,
             remaining_out: tr.remaining_out,
             bytes: tr.bytes,
         };
-        self.decode.submit_migrated_at(&m);
+        if self.admission {
+            self.decode.submit_migrated_at_admitting(&m);
+        } else {
+            self.decode.submit_migrated_at(&m);
+        }
     }
 
     /// Slowest engine's virtual completion time across both pools.
@@ -441,6 +583,137 @@ impl<B: ExecutionBackend> ServeSim for DisaggCluster<B> {
 
     fn preemptions(&self) -> u64 {
         DisaggCluster::preemptions(self)
+    }
+}
+
+/// PhaseAffinity deployment: a colocated pool and a disaggregated
+/// prefill/decode pair serving one arrival stream on one shared
+/// virtual timeline (DESIGN.md §8.3). The router's affinity rule is
+/// prompt length: requests whose prompt is at least
+/// `affinity_prompt_tokens` long (and that have a decode phase at
+/// all) take the disaggregated path, where the prefill pool's compute
+/// advantage and the decode pool's capacity advantage pay for the KV
+/// migration; short-prompt requests stay on the colocated pool, whose
+/// fused engines serve them without any fabric crossing. Between
+/// arrivals the three pools advance independently — the same
+/// independence argument as [`Cluster::run`], with the disaggregated
+/// half's migration events interleaved in global time order by
+/// [`DisaggCluster::advance_to`].
+pub struct PhaseAffinityCluster<B: ExecutionBackend> {
+    pub colocated: Router<B>,
+    pub disagg: DisaggCluster<B>,
+    /// Prompts at or above this length take the disaggregated path.
+    pub affinity_prompt_tokens: usize,
+    pub step_cap: usize,
+}
+
+impl<B: ExecutionBackend> PhaseAffinityCluster<B> {
+    pub fn new(
+        colocated: Router<B>,
+        disagg: DisaggCluster<B>,
+        affinity_prompt_tokens: usize,
+    ) -> Self {
+        PhaseAffinityCluster {
+            colocated,
+            disagg,
+            affinity_prompt_tokens,
+            step_cap: 50_000_000,
+        }
+    }
+
+    /// Streaming knobs for the disaggregated half — delegates to
+    /// [`DisaggCluster::with_streaming`] so the chunk clamp lives in
+    /// one place.
+    pub fn with_streaming(mut self, chunks: usize, admission: bool) -> Self {
+        self.disagg = self.disagg.with_streaming(chunks, admission);
+        self
+    }
+
+    /// Which path an arrival takes (the affinity rule, exposed so
+    /// tests can assert conservation per path).
+    pub fn routes_disagg(&self, r: &Request) -> bool {
+        r.output_len > 1 && r.prompt_len >= self.affinity_prompt_tokens
+    }
+
+    /// Run the mixed event loop over an arrival stream. Returns true
+    /// when every submitted request finished within the step cap.
+    pub fn run(&mut self, arrivals: impl IntoIterator<Item = Request>) -> bool {
+        let mut left = self.step_cap;
+        for r in arrivals {
+            if !self.disagg.advance_to(r.arrival, &mut left) {
+                return false;
+            }
+            if !step_pool_to(&mut self.colocated, r.arrival, &mut left) {
+                return false;
+            }
+            if self.routes_disagg(&r) {
+                self.disagg.submit_prefill(&r);
+            } else {
+                self.colocated.submit_at(&r);
+            }
+        }
+        if !self.disagg.drain_all(&mut left) {
+            return false;
+        }
+        for e in self.colocated.engines.iter_mut() {
+            let s0 = e.metrics.steps;
+            let ok = e.run_to_completion(left);
+            left = left.saturating_sub((e.metrics.steps - s0) as usize);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Slowest engine's virtual completion time across all pools.
+    pub fn makespan(&self) -> f64 {
+        self.colocated.makespan().max(self.disagg.makespan())
+    }
+
+    /// Rollup across the colocated pool and both disaggregated pools.
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for e in &self.colocated.engines {
+            m.absorb(&e.metrics);
+        }
+        m.absorb(&self.disagg.merged_metrics());
+        m
+    }
+
+    /// Per-pool rollups: (colocated, prefill, decode) — each pool is
+    /// priced at its own capex and sustained draw
+    /// (`InfraModel::cost_per_mtok_phase_affinity_plan`).
+    pub fn pool_metrics(&self) -> (Metrics, Metrics, Metrics) {
+        let mut c = Metrics::new();
+        for e in &self.colocated.engines {
+            c.absorb(&e.metrics);
+        }
+        let (p, d) = self.disagg.pool_metrics();
+        (c, p, d)
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        let c: u64 = self.colocated.engines.iter().map(|e| e.preemptions()).sum();
+        c + self.disagg.preemptions()
+    }
+}
+
+impl<B: ExecutionBackend> ServeSim for PhaseAffinityCluster<B> {
+    fn serve<I: IntoIterator<Item = Request>>(&mut self, arrivals: I) -> bool {
+        self.run(arrivals)
+    }
+
+    fn merged_metrics(&self) -> Metrics {
+        PhaseAffinityCluster::merged_metrics(self)
+    }
+
+    fn makespan(&self) -> f64 {
+        PhaseAffinityCluster::makespan(self)
+    }
+
+    fn preemptions(&self) -> u64 {
+        PhaseAffinityCluster::preemptions(self)
     }
 }
 
@@ -514,26 +787,73 @@ pub fn disagg_sim_cluster(
     ))
 }
 
+/// PhaseAffinity simulated cluster from a [`PhaseAffinityPlan`]: a
+/// colocated pool of capacity-checked sharded instances beside a
+/// [`disagg_sim_cluster`], joined by the prompt-length affinity rule.
+/// Streaming knobs (chunks, admission) apply to the disaggregated
+/// half via [`DisaggCluster::with_streaming`].
+pub fn phase_affinity_sim_cluster(
+    model: &'static LlamaConfig,
+    plan: &PhaseAffinityPlan,
+) -> Result<PhaseAffinityCluster<SimBackend>, CapacityError> {
+    let colocated = sim_pool(model, &plan.colocated)?;
+    let disagg = disagg_sim_cluster(model, &plan.disagg)?;
+    Ok(PhaseAffinityCluster::new(
+        colocated,
+        disagg,
+        plan.affinity_prompt_tokens,
+    ))
+}
+
 /// Replay a measured disaggregated operating point on a fresh cluster
 /// to split its metrics per pool (heterogeneous pools price at their
-/// own capex and sustained draw). The caller passes the same trace
+/// own capex and sustained draw). `chunks`/`admission` must match the
+/// probe's streaming configuration. The caller passes the same trace
 /// shape, request count and seed as the probe that found the point —
 /// the simulator is deterministic, so the replay must drain exactly
 /// as the probe did (asserted). Returns (prefill, decode, merged).
 pub fn replay_disagg_point(
     model: &'static LlamaConfig,
     plan: &DisaggPlan,
+    chunks: usize,
+    admission: bool,
     trace: TraceConfig,
     n_requests: usize,
     seed: u64,
 ) -> (Metrics, Metrics, Metrics) {
-    let mut c = disagg_sim_cluster(model, plan).expect("plan was feasible for the probe");
+    let mut c = disagg_sim_cluster(model, plan)
+        .expect("plan was feasible for the probe")
+        .with_streaming(chunks, admission);
     let gen = TraceGenerator::new(trace, seed);
     let drained = c.run(gen.stream(n_requests));
     assert!(drained, "replay of the feasible probe must drain");
     let (p, d) = c.pool_metrics();
     let merged = DisaggCluster::merged_metrics(&c);
     (p, d, merged)
+}
+
+/// Replay a measured PhaseAffinity operating point to split metrics
+/// across the colocated, prefill and decode pools (same determinism
+/// contract as [`replay_disagg_point`]). Returns (colocated, prefill,
+/// decode, merged).
+pub fn replay_affinity_point(
+    model: &'static LlamaConfig,
+    plan: &PhaseAffinityPlan,
+    chunks: usize,
+    admission: bool,
+    trace: TraceConfig,
+    n_requests: usize,
+    seed: u64,
+) -> (Metrics, Metrics, Metrics, Metrics) {
+    let mut c = phase_affinity_sim_cluster(model, plan)
+        .expect("plan was feasible for the probe")
+        .with_streaming(chunks, admission);
+    let gen = TraceGenerator::new(trace, seed);
+    let drained = c.run(gen.stream(n_requests));
+    assert!(drained, "replay of the feasible probe must drain");
+    let (colo, p, d) = c.pool_metrics();
+    let merged = PhaseAffinityCluster::merged_metrics(&c);
+    (colo, p, d, merged)
 }
 
 /// Homogeneous simulated cluster for sweeps, examples and benches:
@@ -943,6 +1263,97 @@ mod tests {
         let best = out.best.expect("near-idle chat load must meet the SLO");
         assert!(best.feasible && best.tokens_per_sec > 0.0);
         assert!(best.ttft_p95 <= slo.ttft_p95_s);
+    }
+
+    #[test]
+    fn chunked_streaming_conserves_and_beats_single_shot_ttft() {
+        let model = by_name("llama-8b").unwrap();
+        let run = |chunks: usize| {
+            let mut c = disagg_sim_cluster(model, &small_disagg_plan())
+                .expect("8B fits")
+                .with_streaming(chunks, false);
+            let reqs: Vec<Request> =
+                (0..10).map(|i| req(i, i as f64 * 0.2, 512, 16)).collect();
+            assert!(c.run(reqs));
+            let m = c.merged_metrics();
+            assert_eq!(m.requests_done, 10);
+            assert_eq!(m.tokens_out, 10 * 16, "token conservation under chunking");
+            assert_eq!(m.migrations, 10);
+            for e in c.prefill.engines.iter().chain(c.decode.engines.iter()) {
+                assert_eq!(e.kv_utilization(), 0.0, "leaked in-flight KV");
+            }
+            m.ttft.pct(95.0)
+        };
+        let single = run(1);
+        let chunked = run(8);
+        assert!(
+            chunked < single,
+            "first-chunk delivery must beat single-shot TTFT: {chunked} vs {single}"
+        );
+    }
+
+    #[test]
+    fn admission_control_bounces_oversized_migrations() {
+        let model = by_name("llama-8b").unwrap();
+        // Decode pool of 64 KV tokens: a 100-token context can never
+        // land there; without admission control it would deadlock
+        // (debug-assert), with it the request bounces and completes
+        // colocated on the prefill engine.
+        let router = |engines: Vec<Engine<SimBackend>>| {
+            let n = engines.len();
+            let ratings =
+                vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n];
+            Router::new(engines, ratings, RoutePolicy::LeastLoaded)
+        };
+        let mut c = DisaggCluster::new(
+            router(vec![engine(10_000)]),
+            router(vec![engine(4)]),
+            KvLink { bw: 37.5e9, lat_s: 1.1e-5 },
+            model.kv_bytes_per_token(2.0),
+        )
+        .with_streaming(1, true);
+        assert!(c.run(vec![req(0, 0.0, 100, 8), req(1, 0.5, 16, 8)]));
+        let m = c.merged_metrics();
+        assert_eq!(m.requests_done, 2, "no request lost");
+        assert_eq!(m.tokens_out, 16, "token conservation across the bounce");
+        assert_eq!(m.bounces, 1, "oversized context bounced");
+        assert_eq!(m.migrations, 1, "small context still migrates");
+        let (pm, dm) = c.pool_metrics();
+        assert_eq!(pm.requests_done, 1, "bounced request finishes on prefill pool");
+        assert_eq!(dm.requests_done, 1);
+    }
+
+    #[test]
+    fn phase_affinity_cluster_splits_by_prompt_length() {
+        let model = by_name("llama-8b").unwrap();
+        let colo = PoolSpec::new(
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::single(),
+        );
+        let plan = PhaseAffinityPlan::new(colo, small_disagg_plan(), 512);
+        let mut c = phase_affinity_sim_cluster(model, &plan).expect("8B fits");
+        // Two short-prompt, one long-prompt, one long-prompt
+        // single-token request (stays colocated: no decode phase).
+        let reqs = vec![
+            req(0, 0.0, 64, 8),
+            req(1, 0.1, 2048, 8),
+            req(2, 0.2, 64, 8),
+            req(3, 0.3, 2048, 1),
+        ];
+        assert!(c.routes_disagg(&reqs[1]));
+        assert!(!c.routes_disagg(&reqs[0]));
+        assert!(!c.routes_disagg(&reqs[3]), "single-token stays colocated");
+        let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+        assert!(c.run(reqs));
+        let m = c.merged_metrics();
+        assert_eq!(m.requests_done, 4);
+        assert_eq!(m.tokens_out, expected, "token conservation across pool kinds");
+        assert_eq!(m.migrations, 1, "only the long multi-token prompt migrated");
+        let (cm, pm, dm) = c.pool_metrics();
+        assert_eq!(cm.requests_done, 3, "short + single-token stay colocated");
+        assert_eq!(pm.requests_done, 0, "prefill legs defer");
+        assert_eq!(dm.requests_done, 1);
     }
 
     #[test]

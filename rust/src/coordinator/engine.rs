@@ -179,6 +179,59 @@ impl<B: ExecutionBackend> Engine<B> {
         }
     }
 
+    /// Decode-pool admission probe: can this engine hold a migrated
+    /// context *and* its first locally generated token right now,
+    /// without evicting anything? The footprint matches the batcher's
+    /// resume reservation
+    /// ([`migration_footprint_tokens`](super::batcher::migration_footprint_tokens)),
+    /// so an
+    /// accepted migration's first decode step can never fail its KV
+    /// grow — admission control rejects exactly the migrations that
+    /// would otherwise preempt immediately (or deadlock outright when
+    /// the context exceeds the whole pool).
+    pub fn can_admit_migration(&self, context_len: usize) -> bool {
+        let blocks = self
+            .alloc
+            .config()
+            .blocks_for_tokens(super::batcher::migration_footprint_tokens(context_len));
+        self.alloc.can_allocate(blocks)
+    }
+
+    /// Bounce a finished prefill leg back to colocated execution:
+    /// decode-pool admission control rejected its migration, so the
+    /// sequence — which still holds its prompt KV — resumes decoding
+    /// the remaining `remaining_out` tokens right here as
+    /// `SeqRole::Full`. The first token was emitted locally at prefill
+    /// time, so the deferred TTFT is sampled now from that original
+    /// emission instant; the bounce is counted in
+    /// [`Metrics::bounces`].
+    pub fn resume_bounced(&mut self, id: SeqId, remaining_out: usize) {
+        let seq = self.seqs.get_mut(&id).expect("bounced sequence exists");
+        debug_assert_eq!(seq.role, SeqRole::PrefillLeg, "only prefill legs bounce");
+        debug_assert_eq!(seq.state, RequestState::Finished, "bounce follows handoff");
+        seq.role = SeqRole::Full;
+        let arrival = seq.arrival;
+        let first = seq.first_token_at.expect("prefill leg emitted its token");
+        self.metrics.record_first_token(arrival, first);
+        self.metrics.record_bounce();
+        if remaining_out == 0 {
+            // Nothing left to decode (the coordinator never hands off
+            // single-token requests, but guard the API): the request
+            // is already complete — close it out without re-activating
+            // a done sequence, which would decode a phantom token.
+            let finished = seq.finished_at.expect("prefill leg finished");
+            let out = seq.delivered;
+            let mut blocks = std::mem::take(&mut seq.blocks);
+            self.alloc.release(&mut blocks);
+            self.metrics.record_finish(arrival, first, finished, out);
+            return;
+        }
+        seq.state = RequestState::Decoding;
+        seq.output_len += remaining_out;
+        seq.finished_at = None;
+        self.active += 1;
+    }
+
     /// Drain the handoff queue: prefill legs whose prefill finished
     /// since the last call, ready to start their KV migration.
     pub fn take_handoffs(&mut self) -> Vec<SeqId> {
@@ -641,6 +694,63 @@ mod tests {
         // ...and released only when the transfer completes.
         e.release_migrated(0);
         assert_eq!(e.kv_utilization(), 0.0);
+    }
+
+    #[test]
+    fn bounced_prefill_leg_finishes_colocated_with_full_accounting() {
+        let mut e = engine(1000);
+        e.submit_handoff(&req(0, 0.0, 100, 40));
+        assert!(e.run_to_completion(1000));
+        assert_eq!(e.take_handoffs(), vec![0]);
+        // Admission control said no: resume locally as Full.
+        e.resume_bounced(0, 39);
+        assert_eq!(e.metrics.bounces, 1);
+        assert_eq!(e.metrics.ttft.count(), 1, "deferred TTFT sampled at bounce");
+        assert!(e.run_to_completion(10_000));
+        let s = e.sequence(0).unwrap();
+        assert_eq!(s.role, SeqRole::Full);
+        assert_eq!(s.state, RequestState::Finished);
+        assert_eq!(s.delivered, 40, "prefill token + locally decoded rest");
+        assert_eq!(e.metrics.requests_done, 1);
+        assert_eq!(e.metrics.tokens_out, 40, "token conservation across the bounce");
+        assert_eq!(e.metrics.migrations, 0, "a bounce is not a migration");
+        assert_eq!(e.metrics.tpot.count(), 1);
+        assert_eq!(e.kv_utilization(), 0.0);
+    }
+
+    #[test]
+    fn bounce_with_nothing_left_closes_out_without_phantom_decode() {
+        // A prefill leg whose whole service was the first token: a
+        // bounce with remaining_out = 0 must finish the request on the
+        // spot, not re-activate a done sequence (which would decode a
+        // phantom extra token).
+        let mut e = engine(1000);
+        e.submit_handoff(&req(0, 0.0, 100, 1));
+        assert!(e.run_to_completion(1000));
+        assert_eq!(e.take_handoffs(), vec![0]);
+        e.resume_bounced(0, 0);
+        assert_eq!(e.pending(), 0, "nothing re-activated");
+        assert_eq!(e.metrics.bounces, 1);
+        assert_eq!(e.metrics.requests_done, 1);
+        assert_eq!(e.metrics.tokens_out, 1, "exactly the prefill token");
+        assert_eq!(e.metrics.ttft.count(), 1);
+        assert_eq!(e.kv_utilization(), 0.0);
+        assert!(e.run_to_completion(10), "engine is quiescent");
+    }
+
+    #[test]
+    fn migration_admission_probe_tracks_footprint_and_free_blocks() {
+        let e = engine(4); // 64 tokens of KV
+        // Context + first decode token must fit: 63 + 1 = 64 fits,
+        // 64 + 1 = 65 does not.
+        assert!(e.can_admit_migration(63));
+        assert!(!e.can_admit_migration(64));
+        // A busy engine's probe reflects what is free *now*.
+        let mut busy = engine(4);
+        busy.submit(&req(0, 0.0, 32, 64));
+        assert!(busy.step(), "prefill holds 2 blocks");
+        assert!(busy.can_admit_migration(31), "2 free blocks hold 32 tokens");
+        assert!(!busy.can_admit_migration(32), "33-token footprint needs 3");
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub struct Metrics {
     pub migrations: u64,
     /// KV bytes that crossed the scale-out fabric into this engine.
     pub kv_bytes_migrated: f64,
+    /// Migrations rejected by decode-pool admission control and bounced
+    /// back to colocated (`SeqRole::Full`) execution on the prefill
+    /// engine that already holds the KV (recorded there).
+    pub bounces: u64,
     pub steps: u64,
     pub step_time: Summary,
     /// Integrated device energy (J).
@@ -71,6 +75,12 @@ impl Metrics {
         self.kv_bytes_migrated += bytes;
     }
 
+    /// A migration was rejected by decode-pool admission control; the
+    /// request fell back to colocated execution on this engine.
+    pub fn record_bounce(&mut self) {
+        self.bounces += 1;
+    }
+
     pub fn record_finish(&mut self, arrival: f64, first_token: f64, now: f64, out_tokens: usize) {
         self.e2e_latency.add(now, now - arrival);
         if out_tokens > 1 {
@@ -101,6 +111,7 @@ impl Metrics {
         self.restarts += other.restarts;
         self.migrations += other.migrations;
         self.kv_bytes_migrated += other.kv_bytes_migrated;
+        self.bounces += other.bounces;
         self.steps += other.steps;
         self.step_time.absorb(&other.step_time);
         self.energy_j += other.energy_j;
@@ -148,7 +159,7 @@ impl Metrics {
         format!(
             "requests={} tokens_out={} span={:.2}s tok/s={:.1} \
              TTFT p50/p95={:.3}/{:.3}s TPOT p50/p95={:.4}/{:.4}s \
-             J/token={:.2} model TFLOP/s={:.2} restarts={} migrations={}",
+             J/token={:.2} model TFLOP/s={:.2} restarts={} migrations={} bounces={}",
             self.requests_done,
             self.tokens_out,
             self.span,
@@ -161,6 +172,7 @@ impl Metrics {
             self.model_flops_per_sec() / 1e12,
             self.restarts,
             self.migrations,
+            self.bounces,
         )
     }
 }
@@ -240,9 +252,12 @@ mod tests {
         a.record_migration(1e6);
         b.record_migration(2e6);
         b.record_migration(3e6);
+        a.record_bounce();
+        b.record_bounce();
         a.absorb(&b);
         assert_eq!(a.migrations, 3);
         assert!((a.kv_bytes_migrated - 6e6).abs() < 1e-9);
+        assert_eq!(a.bounces, 2);
     }
 
     #[test]

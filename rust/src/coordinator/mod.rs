@@ -11,8 +11,10 @@
 //! * [`engine`] — the step loop tying it all together.
 //! * [`cluster`] — virtual-time event loops: [`Cluster`] over one
 //!   colocated engine pool, [`DisaggCluster`] over disaggregated
-//!   prefill/decode pools joined by a KV-migration link, and the SLO
-//!   load sweep ([`ServeSim`]) that prices both.
+//!   prefill/decode pools joined by a (optionally chunked/streaming)
+//!   KV-migration link, [`PhaseAffinityCluster`] mixing both kinds
+//!   behind a prompt-length router, and the SLO load sweep
+//!   ([`ServeSim`]) that prices all of them.
 //! * [`metrics`] — TTFT / TPOT / throughput accounting (§5.2 notes the
 //!   paper's preference for FLOPs-based metrics; we record both),
 //!   with steady-state (windowed) percentiles for open-loop runs.
@@ -32,8 +34,8 @@ pub mod scheduler;
 pub use backend::{ExecutionBackend, SimBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::{
-    disagg_sim_cluster, sharded_sim_cluster, sim_cluster, Cluster, DisaggCluster, ServeSim,
-    SloSpec, SweepConfig,
+    disagg_sim_cluster, phase_affinity_sim_cluster, sharded_sim_cluster, sim_cluster, Cluster,
+    DisaggCluster, PhaseAffinityCluster, ServeSim, SloSpec, SweepConfig,
 };
 pub use engine::{Engine, EngineConfig};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};

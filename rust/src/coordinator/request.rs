@@ -27,7 +27,10 @@ pub enum SeqRole {
     /// Disaggregated prefill leg: compute the prompt KV + first token,
     /// then hold the KV for migration. Request-level metrics (TTFT,
     /// e2e, requests_done) are deferred to the decode pool, which owns
-    /// the request's end.
+    /// the request's end — unless decode-pool admission control
+    /// bounces the migration, in which case the leg resumes locally as
+    /// `Full` (`Engine::resume_bounced`) and this engine samples the
+    /// deferred TTFT at the original prefill emission.
     PrefillLeg,
     /// Disaggregated decode leg: the context KV arrived over the
     /// scale-out fabric — no local prefill compute; the engine streams

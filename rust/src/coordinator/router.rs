@@ -137,6 +137,34 @@ impl<B: ExecutionBackend> Router<B> {
         i
     }
 
+    /// Admission-aware variant of [`Router::submit_migrated_at`]: route
+    /// to the least-loaded decode engine that can hold the migrated
+    /// footprint *right now* ([`Engine::can_admit_migration`]), so an
+    /// accepted migration lands where its KV fits instead of queueing
+    /// behind a full sibling while another engine has room. Falls back
+    /// to the plain policy when no engine can admit (blocks may free
+    /// by the time the batcher looks). Used by `DisaggCluster` when
+    /// admission control is on; the plain path stays byte-identical
+    /// for single-shot (admission-off) runs.
+    pub fn submit_migrated_at_admitting(&mut self, m: &MigratedRequest) -> usize {
+        let fit = self
+            .engines
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.can_admit_migration(m.context_len))
+            .min_by_key(|(_, e)| e.pending())
+            .map(|(i, _)| i);
+        match fit {
+            Some(i) => {
+                self.engines[i].advance_to(m.at);
+                self.engines[i].submit_migrated(m);
+                self.routed[i] += 1;
+                i
+            }
+            None => self.submit_migrated_at(m),
+        }
+    }
+
     pub fn routed_counts(&self) -> &[u64] {
         &self.routed
     }
@@ -274,6 +302,41 @@ mod tests {
         assert_eq!(done, 1, "prefill leg defers; migrated leg finishes");
         let handed: usize = r.engines.iter_mut().map(|e| e.take_handoffs().len()).sum();
         assert_eq!(handed, 1);
+    }
+
+    #[test]
+    fn admitting_route_skips_kv_full_engine_despite_lower_load() {
+        // Engine 0: roomy KV, two queued requests. Engine 1: idle but
+        // only 32 KV tokens. Plain least-loaded would deliver to the
+        // idle engine; the admission-aware route must place the
+        // migration where its footprint actually fits.
+        let kv_tiny = KvCacheConfig { block_tokens: 16, total_blocks: 2 };
+        let tiny = Engine::new(
+            EngineConfig::new(kv_tiny),
+            SimBackend::new(
+                by_name("llama-8b").unwrap(),
+                StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()),
+            ),
+        );
+        let mut r = Router::new(
+            vec![engine(Device::H100), tiny],
+            ratings_h100_gaudi(),
+            RoutePolicy::LeastLoaded,
+        );
+        r.engines[0].submit(&req(0, 64, 16));
+        r.engines[0].submit(&req(1, 64, 16));
+        let m = MigratedRequest {
+            id: 9,
+            arrival: 0.0,
+            at: 0.1,
+            context_len: 100,
+            remaining_out: 4,
+            bytes: 100.0 * 131072.0,
+        };
+        assert_eq!(r.select(&req(2, 100, 4)), 1, "plain policy prefers the idle engine");
+        let i = r.submit_migrated_at_admitting(&m);
+        assert_eq!(i, 0, "KV-full engine skipped despite lower load");
+        assert!(r.drain_closed_batch(1_000_000));
     }
 
     #[test]

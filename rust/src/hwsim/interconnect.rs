@@ -177,6 +177,30 @@ impl KvLink {
         bytes / self.bw + self.lat_s
     }
 
+    /// Chunked/layerwise streaming schedule for a migration of
+    /// `bytes` split into `chunks` equal pieces. Chunks are serialized
+    /// on the link and each pays the per-chunk closed form
+    /// `chunk_bytes / bw + lat`, so chunk `i` (0-based) lands at
+    /// [`ChunkedTransfer::chunk_done`]`(i)` after the stream starts.
+    /// The payoff is overlap: the decode side may start on layer `l`
+    /// once chunks `0..=l` have landed, so the first token travels
+    /// with chunk 0 at a fraction of the single-shot delay, while the
+    /// total stream time `bytes/bw + chunks*lat` is monotone
+    /// non-decreasing in the chunk count (each extra chunk pays one
+    /// more fixed latency). `chunks = 1` reproduces
+    /// [`KvLink::transfer_time`] bit-exactly — the limit the property
+    /// tests pin. Mirrored in
+    /// `python/tests/test_kv_transfer_mirror.py`; keep the arithmetic
+    /// order identical when editing.
+    pub fn chunked(&self, bytes: f64, chunks: usize) -> ChunkedTransfer {
+        ChunkedTransfer {
+            bytes,
+            chunks: chunks.max(1),
+            bw: self.bw,
+            lat_s: self.lat_s,
+        }
+    }
+
     /// A link uniformly scaled in bandwidth (sensitivity sweeps).
     pub fn scaled_bw(&self, factor: f64) -> KvLink {
         KvLink { bw: self.bw * factor, lat_s: self.lat_s }
@@ -186,6 +210,46 @@ impl KvLink {
     /// experiments).
     pub fn with_latency(&self, lat_s: f64) -> KvLink {
         KvLink { bw: self.bw, lat_s }
+    }
+}
+
+/// A KV migration streamed as `chunks` equal pieces over one
+/// [`KvLink`] (see [`KvLink::chunked`]). Zero-byte transfers land
+/// instantly regardless of chunking (nothing crossed the fabric).
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkedTransfer {
+    pub bytes: f64,
+    pub chunks: usize,
+    bw: f64,
+    lat_s: f64,
+}
+
+impl ChunkedTransfer {
+    /// Completion offset (s from stream start) of chunk `i` (0-based):
+    /// `bytes*(i+1)/chunks / bw + (i+1)*lat`. The leading factor keeps
+    /// the last chunk's byte term exactly `bytes / bw` (no remainder
+    /// drift), so `chunks = 1` matches the single-shot closed form
+    /// bit-for-bit.
+    pub fn chunk_done(&self, i: usize) -> f64 {
+        assert!(i < self.chunks, "chunk {i} of {}", self.chunks);
+        if self.bytes <= 0.0 {
+            return 0.0;
+        }
+        let k = (i + 1) as f64;
+        self.bytes * k / self.chunks as f64 / self.bw + k * self.lat_s
+    }
+
+    /// When the first chunk (and the first token riding with it) lands
+    /// — the overlap win: strictly earlier than the single-shot
+    /// `transfer_time` whenever `chunks > 1` at finite bandwidth.
+    pub fn first_time(&self) -> f64 {
+        self.chunk_done(0)
+    }
+
+    /// When the last chunk lands: `bytes/bw + chunks*lat`, monotone
+    /// non-decreasing in the chunk count.
+    pub fn total_time(&self) -> f64 {
+        self.chunk_done(self.chunks - 1)
     }
 }
 
@@ -277,5 +341,69 @@ mod tests {
         // Sensitivity helpers.
         assert!(l.scaled_bw(10.0).transfer_time(bytes) < t);
         assert!(l.with_latency(1e-3).transfer_time(bytes) > t);
+    }
+
+    #[test]
+    fn chunked_single_chunk_is_the_closed_form_bit_exactly() {
+        let l = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
+        for bytes in [1.0, 512.0 * 131072.0, 4096.0 * 327680.0] {
+            let single = l.transfer_time(bytes);
+            let c = l.chunked(bytes, 1);
+            assert_eq!(c.first_time().to_bits(), single.to_bits());
+            assert_eq!(c.total_time().to_bits(), single.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_schedule_orders_and_limits() {
+        let l = KvLink { bw: 50.0e9, lat_s: 1.0e-5 };
+        let bytes = 2048.0 * 131072.0;
+        let c = l.chunked(bytes, 8);
+        // Chunks land strictly in order.
+        for i in 1..8 {
+            assert!(c.chunk_done(i) > c.chunk_done(i - 1));
+        }
+        // First chunk strictly beats single-shot at finite bandwidth;
+        // total stream time is monotone non-decreasing in chunk count.
+        let single = l.transfer_time(bytes);
+        assert!(c.first_time() < single);
+        let mut prev = 0.0;
+        for n in 1..=32 {
+            let total = l.chunked(bytes, n).total_time();
+            assert!(total >= prev, "total not monotone at {n} chunks");
+            assert!(total >= single, "chunking must not beat the wire");
+            prev = total;
+        }
+        // Zero bytes land instantly however finely chunked.
+        assert_eq!(l.chunked(0.0, 16).total_time(), 0.0);
+        // The infinite link collapses the whole schedule to t=0.
+        let free = KvLink::infinite().chunked(bytes, 8);
+        assert_eq!(free.first_time(), 0.0);
+        assert_eq!(free.total_time(), 0.0);
+    }
+
+    #[test]
+    fn chunked_closed_form_pinned_against_python_mirror() {
+        // (bytes via model table, bw, lat) cases mirrored in
+        // python/tests/test_kv_transfer_mirror.py — both sides pin the
+        // same first/total values so neither can drift alone.
+        let cases: [(f64, f64, f64, usize, f64, f64); 2] = [
+            // llama-8b ctx 2048, H100 -> H100, 4 chunks.
+            (2048.0 * 131072.0, 50.0e9, 1.0e-5, 4, 0.00135217728, 0.00540870912),
+            // llama-70b ctx 4096, H100 x4 -> Gaudi2 x1, 8 chunks.
+            (
+                4096.0 * 327680.0,
+                37.5e9,
+                1.1e-5,
+                8,
+                0.0044849242666666666,
+                0.03587939413333333,
+            ),
+        ];
+        for (bytes, bw, lat_s, chunks, first, total) in cases {
+            let c = KvLink { bw, lat_s }.chunked(bytes, chunks);
+            assert!((c.first_time() / first - 1.0).abs() < 1e-12);
+            assert!((c.total_time() / total - 1.0).abs() < 1e-12);
+        }
     }
 }

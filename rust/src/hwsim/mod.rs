@@ -28,7 +28,7 @@ pub mod softmax;
 pub mod spec;
 
 pub use gemm::{gemm_time, GemmBreakdown, GemmConfig};
-pub use interconnect::{InterconnectSpec, KvLink};
+pub use interconnect::{ChunkedTransfer, InterconnectSpec, KvLink};
 pub use power::{power_draw, PowerCap};
 pub use spec::{Accum, Device, DeviceSpec, DType, Scaling};
 

@@ -191,6 +191,43 @@ impl InfraModel {
         )
     }
 
+    /// Price a [`PhaseAffinityPlan`] (mixed colocated + disaggregated
+    /// deployment) at a measured operating point: the colocated pool,
+    /// the prefill pool and the decode pool each at their device's
+    /// assumed server price, shape-derived chip count and measured
+    /// sustained draw, over the one shared goodput.
+    ///
+    /// [`PhaseAffinityPlan`]: crate::analysis::disagg::PhaseAffinityPlan
+    pub fn cost_per_mtok_phase_affinity_plan(
+        &self,
+        plan: &crate::analysis::disagg::PhaseAffinityPlan,
+        colocated_watts: f64,
+        prefill_watts: f64,
+        decode_watts: f64,
+        tokens_per_sec: f64,
+    ) -> f64 {
+        self.cost_per_mtok_disagg(
+            &[
+                (
+                    assumed_server_price(plan.colocated.device),
+                    plan.colocated.plan.total_chips(),
+                    colocated_watts,
+                ),
+                (
+                    assumed_server_price(plan.disagg.prefill.device),
+                    plan.disagg.prefill.plan.total_chips(),
+                    prefill_watts,
+                ),
+                (
+                    assumed_server_price(plan.disagg.decode.device),
+                    plan.disagg.decode.plan.total_chips(),
+                    decode_watts,
+                ),
+            ],
+            tokens_per_sec,
+        )
+    }
+
     /// Convenience: sustained draw for a device at a utilization,
     /// optionally power-capped.
     pub fn sustained_draw(&self, dev: Device, util: f64, cap_w: Option<f64>) -> f64 {
@@ -324,6 +361,28 @@ mod tests {
     #[should_panic(expected = "every pool needs chips")]
     fn disagg_pricing_rejects_empty_pool() {
         model().cost_per_mtok_disagg(&[(100_000.0, 0, 500.0)], 1000.0);
+    }
+
+    #[test]
+    fn phase_affinity_pricing_sums_the_three_pools() {
+        use crate::analysis::disagg::{DisaggPlan, PhaseAffinityPlan, PoolSpec};
+        use crate::analysis::parallel::ParallelismPlan;
+        use crate::analysis::perfmodel::PrecisionMode;
+        let m = model();
+        let h100 = |plan| PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), plan);
+        let plan = PhaseAffinityPlan::new(
+            h100(ParallelismPlan::single().with_replicas(2)),
+            DisaggPlan::new(h100(ParallelismPlan::single()), h100(ParallelismPlan::single())),
+            512,
+        );
+        // Identical devices at identical draw: the three-pool price
+        // must equal one merged pool of the same total chips.
+        let mixed = m.cost_per_mtok_phase_affinity_plan(&plan, 600.0, 600.0, 600.0, 4000.0);
+        let merged = m.cost_per_mtok_disagg(
+            &[(assumed_server_price(Device::H100), plan.total_chips(), 600.0)],
+            4000.0,
+        );
+        assert!((mixed / merged - 1.0).abs() < 1e-12, "{mixed} vs {merged}");
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! pressure — the open-loop properties the drain-the-queue router
 //! could not express.
 
+use fp8_tco::analysis::disagg::{DisaggPlan, PhaseAffinityPlan, PoolSpec};
 use fp8_tco::analysis::parallel::ParallelismPlan;
 use fp8_tco::analysis::perfmodel::{PrecisionMode, StepConfig};
 use fp8_tco::coordinator::cluster::{
-    max_sustainable_qps, measure_load, sharded_sim_cluster, Cluster, SloSpec, SweepConfig,
+    max_sustainable_qps, measure_load, phase_affinity_sim_cluster, sharded_sim_cluster, Cluster,
+    SloSpec, SweepConfig,
 };
 use fp8_tco::coordinator::router::{EngineRating, RoutePolicy, Router};
 use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
@@ -262,6 +264,97 @@ fn sharded_70b_cluster_sustains_an_interactive_slo_point() {
     let best = out.best.expect("tp8 70B must sustain a near-idle chat load");
     assert!(best.feasible && best.tokens_per_sec > 0.0);
     assert!(best.tpot_p95 <= slo.tpot_p95_s);
+}
+
+/// A small mixed deployment: 2 colocated H100 engines beside an
+/// H100-prefill → Gaudi2-decode pair, split at 512 prompt tokens.
+fn small_affinity_plan() -> PhaseAffinityPlan {
+    let h100 = |plan| PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), plan);
+    let gaudi2 = |plan| PoolSpec::new(Device::Gaudi2, PrecisionMode::fp8_static(), plan);
+    PhaseAffinityPlan::new(
+        h100(ParallelismPlan::single().with_replicas(2)),
+        DisaggPlan::new(
+            h100(ParallelismPlan::single()),
+            gaudi2(ParallelismPlan::single()),
+        ),
+        512,
+    )
+}
+
+#[test]
+fn phase_affinity_determinism_same_seed_same_timelines() {
+    // Same trace + seed must yield bit-identical timelines across
+    // runs of the mixed colocated + disaggregated router, chunked
+    // streaming and admission control included.
+    let run = || {
+        let model = by_name("llama-8b").unwrap();
+        let mut c = phase_affinity_sim_cluster(model, &small_affinity_plan())
+            .expect("8B fits everywhere")
+            .with_streaming(4, true);
+        let gen = TraceGenerator::new(TraceConfig::chat(6.0), 77);
+        assert!(c.run(gen.stream(60)));
+        let m = c.merged_metrics();
+        let (cm, pm, dm) = c.pool_metrics();
+        (
+            c.makespan(),
+            m.tokens_out,
+            m.requests_done,
+            m.migrations,
+            m.bounces,
+            m.report(),
+            (cm.tokens_out, pm.tokens_out, dm.tokens_out),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0.to_bits(), b.0.to_bits(), "mixed makespan must be bit-identical");
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+    assert_eq!(a.3, b.3);
+    assert_eq!(a.4, b.4);
+    assert_eq!(a.5, b.5, "metric reports must match");
+    assert_eq!(a.6, b.6, "per-pool splits must match");
+}
+
+#[test]
+fn phase_affinity_conserves_tokens_across_both_pool_kinds() {
+    // Every request finishes exactly once, every token is delivered
+    // exactly once, and the colocated/disaggregated split accounts for
+    // the whole trace: colocated requests + migrations + bounces ==
+    // all requests, with TTFT sampled once each.
+    let model = by_name("llama-8b").unwrap();
+    let mut c = phase_affinity_sim_cluster(model, &small_affinity_plan())
+        .expect("8B fits")
+        .with_streaming(4, true);
+    let gen = TraceGenerator::new(TraceConfig::chat(5.0), 41);
+    let reqs: Vec<Request> = gen.stream(80).collect();
+    let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+    let disagg_bound: u64 = reqs.iter().filter(|r| c.routes_disagg(r)).count() as u64;
+    assert!(disagg_bound > 0, "the chat mix must exercise the disagg path");
+    assert!(
+        (disagg_bound as usize) < reqs.len(),
+        "the chat mix must exercise the colocated path too"
+    );
+    assert!(c.run(reqs));
+    let m = c.merged_metrics();
+    assert_eq!(m.requests_done, 80, "no request lost in the mixed router");
+    assert_eq!(m.tokens_out, expected, "token conservation across pool kinds");
+    assert_eq!(m.ttft.count(), 80, "TTFT sampled exactly once per request");
+    assert_eq!(
+        m.migrations + m.bounces,
+        disagg_bound,
+        "every disagg-routed request either migrated or bounced"
+    );
+    let (cm, pm, dm) = c.pool_metrics();
+    assert_eq!(
+        cm.requests_done + pm.requests_done + dm.requests_done,
+        80,
+        "each request finishes in exactly one pool"
+    );
+    assert_eq!(cm.requests_done, 80 - disagg_bound, "colocated owns the short requests");
+    assert_eq!(pm.requests_done, m.bounces, "bounces finish on the prefill pool");
+    assert_eq!(dm.requests_done, m.migrations, "migrations finish on the decode pool");
+    assert_eq!(cm.migrations, 0, "colocated engines never receive migrations");
 }
 
 #[test]

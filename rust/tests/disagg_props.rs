@@ -6,8 +6,17 @@
 //! * token conservation and no-lost-requests hold across KV
 //!   migration, including under decode-pool memory pressure;
 //! * TTFT is monotonically non-decreasing in transfer latency;
-//! * the KV-transfer closed form matches values pinned against the
-//!   Python mirror (`python/tests/test_kv_transfer_mirror.py`).
+//! * chunked KV streaming: chunk count 1 reproduces the single-shot
+//!   closed form (and timeline) bit-exactly, total stream time is
+//!   monotone non-decreasing in chunk count, and overlap strictly
+//!   improves TTFT at finite bandwidth;
+//! * decode-pool admission control: an accepted migration never
+//!   preempts within its first decode step, a bounced migration
+//!   completes as `SeqRole::Full` with token conservation and no lost
+//!   requests, and `Metrics` counts bounces;
+//! * the KV-transfer closed form (single-shot and chunked) matches
+//!   values pinned against the Python mirror
+//!   (`python/tests/test_kv_transfer_mirror.py`).
 
 use fp8_tco::analysis::disagg::{auto_size, DisaggPlan, PoolSpec};
 use fp8_tco::analysis::parallel::ParallelismPlan;
@@ -37,6 +46,24 @@ fn router(engines: Vec<Engine<SimBackend>>) -> Router<SimBackend> {
     let n = engines.len();
     let ratings = vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n];
     Router::new(engines, ratings, RoutePolicy::LeastLoaded)
+}
+
+/// Single-vendor plan with spec-sized (ample) KV pools: one H100
+/// prefill instance feeding two H100 decode instances — no memory
+/// pressure, so streaming properties isolate the link model.
+fn pressure_free_plan() -> DisaggPlan {
+    DisaggPlan::new(
+        PoolSpec::new(
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::single(),
+        ),
+        PoolSpec::new(
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            ParallelismPlan::single().with_replicas(2),
+        ),
+    )
 }
 
 #[test]
@@ -235,6 +262,181 @@ fn ttft_monotone_in_transfer_latency() {
 }
 
 #[test]
+fn chunk_count_one_reproduces_single_shot_bit_exactly() {
+    // Limit equivalence at both layers. (a) The schedule: one chunk
+    // (equivalently, chunk size >= total KV bytes) lands exactly at
+    // the single-shot closed form, to the bit. (b) The cluster: a
+    // streaming-configured run with chunk count 1 produces the same
+    // timeline and metrics as the default single-shot path.
+    let model = by_name("llama-8b").unwrap();
+    let link = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
+    for ctx in [1usize, 137, 512, 2048, 8192] {
+        let bytes = ctx as f64 * model.kv_bytes_per_token(2.0);
+        let single = link.transfer_time(bytes);
+        let sched = link.chunked(bytes, 1);
+        assert_eq!(sched.first_time().to_bits(), single.to_bits());
+        assert_eq!(sched.total_time().to_bits(), single.to_bits());
+    }
+    let run = |chunks: usize| {
+        let mut c = disagg_sim_cluster(model, &pressure_free_plan())
+            .expect("8B fits")
+            .with_streaming(chunks, false);
+        let gen = TraceGenerator::new(TraceConfig::chat(4.0), 31);
+        assert!(c.run(gen.stream(40)));
+        let m = c.merged_metrics();
+        (c.makespan(), m.report())
+    };
+    let (mk1, rep1) = run(1);
+    let (mk_default, rep_default) = {
+        let mut c = disagg_sim_cluster(model, &pressure_free_plan()).expect("8B fits");
+        let gen = TraceGenerator::new(TraceConfig::chat(4.0), 31);
+        assert!(c.run(gen.stream(40)));
+        let m = c.merged_metrics();
+        (c.makespan(), m.report())
+    };
+    assert_eq!(mk1.to_bits(), mk_default.to_bits(), "chunks=1 must be the PR 3 path");
+    assert_eq!(rep1, rep_default);
+}
+
+#[test]
+fn total_stream_time_monotone_in_chunk_count() {
+    // More chunks = more per-chunk latency on the same bytes: the
+    // last-chunk landing time never decreases, while the first-chunk
+    // landing time never increases — the overlap trade the tentpole
+    // exploits.
+    let model = by_name("llama-70b").unwrap();
+    let link = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
+    let bytes = 4096.0 * model.kv_bytes_per_token(2.0);
+    let single = link.transfer_time(bytes);
+    let mut prev_total = 0.0;
+    let mut prev_first = f64::INFINITY;
+    for chunks in 1..=64 {
+        let s = link.chunked(bytes, chunks);
+        assert!(s.total_time() >= prev_total, "total dipped at {chunks} chunks");
+        assert!(s.total_time() >= single, "chunking must not beat the wire");
+        assert!(s.first_time() <= prev_first, "first chunk got later at {chunks}");
+        assert!(s.first_time() <= s.total_time());
+        prev_total = s.total_time();
+        prev_first = s.first_time();
+    }
+}
+
+#[test]
+fn overlap_strictly_improves_ttft_at_finite_bandwidth() {
+    // Same trace, same pools, finite link: every chunked TTFT
+    // percentile is <= the single-shot one, and the median strictly
+    // improves (first-chunk delivery beats whole-transfer delivery).
+    // On an infinite link chunking changes nothing at all.
+    let model = by_name("llama-8b").unwrap();
+    let at = |chunks: usize, link: Option<KvLink>| {
+        let mut c = disagg_sim_cluster(model, &pressure_free_plan())
+            .expect("8B fits")
+            .with_streaming(chunks, false);
+        if let Some(l) = link {
+            c.link = l;
+        }
+        let gen = TraceGenerator::new(TraceConfig::chat(4.0), 19);
+        assert!(c.run(gen.stream(40)));
+        let m = c.merged_metrics();
+        (m.ttft.pct(50.0), m.ttft.pct(95.0), m.tokens_out)
+    };
+    let slow = KvLink { bw: 3.75e9, lat_s: 1.1e-5 }; // 1/10 fabric
+    let (s50, s95, st) = at(1, Some(slow));
+    let (c50, c95, ct) = at(8, Some(slow));
+    assert_eq!(st, ct, "token conservation is chunking-invariant");
+    assert!(c50 < s50, "overlap must strictly improve median TTFT: {c50} vs {s50}");
+    assert!(c95 <= s95 + 1e-12, "p95 must not regress: {c95} vs {s95}");
+    let (i50, i95, _) = at(1, Some(KvLink::infinite()));
+    let (j50, j95, _) = at(16, Some(KvLink::infinite()));
+    assert_eq!(i50.to_bits(), j50.to_bits(), "free fabric: chunking is a no-op");
+    assert_eq!(i95.to_bits(), j95.to_bits());
+}
+
+#[test]
+fn accepted_migrations_never_preempt_within_first_decode_step() {
+    // Every migrated request has remaining_out = 1: exactly one decode
+    // step runs on the decode pool per accepted migration, so *any*
+    // decode-pool preemption would be a first-step preemption. With
+    // admission control on, the tiny decode pool forces bounces
+    // instead — and zero preemptions anywhere.
+    let model = by_name("llama-8b").unwrap();
+    let mut c = DisaggCluster::new(
+        router(vec![engine(Device::H100, 10_000)]),
+        router(vec![engine(Device::Gaudi2, 8)]), // 128 KV tokens
+        KvLink { bw: 37.5e9, lat_s: 1.1e-5 },
+        model.kv_bytes_per_token(2.0),
+    )
+    .with_streaming(4, true);
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.002,
+            prompt_len: 48 + (i as usize % 3) * 40,
+            output_len: 2,
+        })
+        .collect();
+    assert!(c.run(reqs));
+    let m = c.merged_metrics();
+    assert_eq!(m.requests_done, 12, "no request lost");
+    assert_eq!(m.tokens_out, 24, "token conservation");
+    assert!(m.bounces > 0, "the 128-token pool must bounce some contexts");
+    assert!(m.migrations > 0, "small contexts still migrate");
+    assert_eq!(m.migrations + m.bounces, 12);
+    assert_eq!(
+        c.preemptions(),
+        0,
+        "an accepted migration must never preempt within its first decode step"
+    );
+    assert_eq!(m.restarts, 0);
+    assert_eq!(m.ttft.count(), 12, "TTFT sampled exactly once per request");
+}
+
+#[test]
+fn bounced_migrations_complete_colocated_with_conservation() {
+    // A decode pool too small for *any* context: admission control
+    // bounces everything, each request completes as SeqRole::Full on
+    // its prefill engine, tokens are conserved, and the decode pool
+    // never wakes up.
+    let model = by_name("llama-8b").unwrap();
+    let mut c = DisaggCluster::new(
+        router(vec![engine(Device::H100, 10_000)]),
+        router(vec![engine(Device::Gaudi2, 2)]), // 32 KV tokens
+        KvLink { bw: 37.5e9, lat_s: 1.1e-5 },
+        model.kv_bytes_per_token(2.0),
+    )
+    .with_streaming(1, true);
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.05,
+            prompt_len: 64,
+            output_len: 16,
+        })
+        .collect();
+    let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
+    assert!(c.run(reqs));
+    let m = c.merged_metrics();
+    assert_eq!(m.requests_done, 5, "no request lost across bounces");
+    assert_eq!(m.tokens_out, expected, "token conservation across bounces");
+    assert_eq!(m.bounces, 5, "Metrics counts every bounce");
+    assert_eq!(m.migrations, 0, "nothing crossed the fabric");
+    assert_eq!(m.kv_bytes_migrated, 0.0);
+    let (pm, dm) = c.pool_metrics();
+    assert_eq!(pm.requests_done, 5, "bounced requests finish on the prefill pool");
+    assert_eq!(dm.steps, 0, "decode pool never woke up");
+    for e in c.prefill.engines.iter() {
+        for s in e.sequences() {
+            assert_eq!(
+                s.role,
+                fp8_tco::coordinator::SeqRole::Full,
+                "bounced sequences end as Full"
+            );
+        }
+        assert_eq!(e.kv_utilization(), 0.0, "bounced KV fully released");
+    }
+}
+
+#[test]
 fn kv_transfer_closed_form_pinned_against_python_mirror() {
     // (model, context, src device, src chips, dst device, dst chips,
     // expected seconds). The same table lives in
@@ -291,4 +493,77 @@ fn kv_transfer_closed_form_pinned_against_python_mirror() {
     // The per-token KV footprints the closed form rides on.
     assert_eq!(by_name("llama-8b").unwrap().kv_bytes_per_token(2.0), 131072.0);
     assert_eq!(by_name("llama-70b").unwrap().kv_bytes_per_token(2.0), 327680.0);
+}
+
+#[test]
+fn chunked_schedule_pinned_against_python_mirror() {
+    // (model, context, src device, src chips, dst device, dst chips,
+    // chunks, first-chunk s, last-chunk s). The same table lives in
+    // python/tests/test_kv_transfer_mirror.py (PINNED_CHUNKED); both
+    // sides compute bytes*(i+1)/chunks / bw + (i+1)*lat and must agree
+    // with the pinned values to 1e-9 relative.
+    let cases: [(&str, usize, Device, usize, Device, usize, usize, f64, f64); 4] = [
+        (
+            "llama-8b",
+            2048,
+            Device::H100,
+            1,
+            Device::H100,
+            1,
+            4,
+            0.00135217728,
+            0.00540870912,
+        ),
+        (
+            "llama-8b",
+            512,
+            Device::H100,
+            1,
+            Device::Gaudi2,
+            1,
+            8,
+            0.00023469621333333332,
+            0.0018775697066666665,
+        ),
+        (
+            "llama-70b",
+            4096,
+            Device::H100,
+            4,
+            Device::Gaudi2,
+            1,
+            8,
+            0.0044849242666666666,
+            0.03587939413333333,
+        ),
+        (
+            "llama-70b",
+            2048,
+            Device::Gaudi3,
+            2,
+            Device::Gaudi3,
+            2,
+            16,
+            0.0002896202666666667,
+            0.004633924266666667,
+        ),
+    ];
+    for (name, ctx, src, sc, dst, dc, chunks, first, total) in cases {
+        let m = by_name(name).unwrap();
+        let link = KvLink::between(src.interconnect(), sc, dst.interconnect(), dc);
+        let sched = link.chunked(ctx as f64 * m.kv_bytes_per_token(2.0), chunks);
+        assert!(
+            (sched.first_time() / first - 1.0).abs() < 1e-9,
+            "{name} ctx {ctx} x{chunks}: first {} vs pinned {first}",
+            sched.first_time()
+        );
+        assert!(
+            (sched.total_time() / total - 1.0).abs() < 1e-9,
+            "{name} ctx {ctx} x{chunks}: total {} vs pinned {total}",
+            sched.total_time()
+        );
+        // The single-shot closed form brackets the schedule.
+        let single = link.transfer_time(ctx as f64 * m.kv_bytes_per_token(2.0));
+        assert!(sched.first_time() < single && sched.total_time() >= single);
+    }
 }
