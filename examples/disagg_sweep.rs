@@ -85,95 +85,6 @@ fn main() {
 
     // Colocated baseline: 4 fused H100 engines.
     let colo_plan = ParallelismPlan::single().with_replicas(4);
-    let colo = max_sustainable_qps(
-        &|| {
-            sharded_sim_cluster(model, Device::H100, PrecisionMode::fp8_dynamic(), colo_plan)
-                .expect("8B fits one H100")
-        },
-        &TraceConfig::chat,
-        &slo,
-        &sweep,
-    );
-    if let Some(p) = colo.best {
-        let cost = infra.cost_per_mtok_sharded(
-            assumed_server_price(Device::H100),
-            colo_plan.total_chips(),
-            p.watts_mean,
-            p.tokens_per_sec,
-        );
-        t.row(vec![
-            "colocated".into(),
-            format!("H100 {colo_plan}"),
-            f(p.qps, 2),
-            f(p.tokens_per_sec, 0),
-            f(p.ttft_p95 * 1e3, 1),
-            f(p.tpot_p95 * 1e3, 2),
-            "0".into(),
-            f(cost, 3),
-        ]);
-    }
-
-    let variants: [(&str, &DisaggPlan, usize, bool); 4] = [
-        ("disagg", &homog, 1, false),
-        ("disagg-stream", &homog, 8, true),
-        ("mixed", &mixed, 1, false),
-        ("mixed-stream", &mixed, 8, true),
-    ];
-    for (mode, plan, chunks, admission) in variants {
-        let out = max_sustainable_qps(
-            &|| {
-                disagg_sim_cluster(model, plan)
-                    .expect("pools must be feasible")
-                    .with_streaming(chunks, admission)
-            },
-            &TraceConfig::chat,
-            &slo,
-            &sweep,
-        );
-        match out.best {
-            Some(p) => {
-                // Replay the operating point to split watts per pool
-                // (heterogeneous pools price at their own draw).
-                let (pm, dm, merged) = replay_disagg_point(
-                    model,
-                    plan,
-                    chunks,
-                    admission,
-                    TraceConfig::chat(p.qps),
-                    sweep.n_requests,
-                    sweep.seed,
-                );
-                let cost = infra.cost_per_mtok_disagg_plan(
-                    plan,
-                    pm.watts_mean(),
-                    dm.watts_mean(),
-                    p.tokens_per_sec,
-                );
-                t.row(vec![
-                    mode.into(),
-                    plan.describe(),
-                    f(p.qps, 2),
-                    f(p.tokens_per_sec, 0),
-                    f(p.ttft_p95 * 1e3, 1),
-                    f(p.tpot_p95 * 1e3, 2),
-                    format!("{}", merged.migrations),
-                    f(cost, 3),
-                ]);
-            }
-            None => {
-                t.row(vec![
-                    mode.into(),
-                    plan.describe(),
-                    format!("< {}", sweep.qps_lo),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                ]);
-            }
-        }
-    }
     // PhaseAffinity: 2 colocated H100 engines + the 1+1 mixed-vendor
     // pair, prompts >= 2x the chat median routed to the pair.
     let affinity = PhaseAffinityPlan::new(
@@ -196,43 +107,157 @@ fn main() {
         ),
         2 * p_med,
     );
-    let out = max_sustainable_qps(
-        &|| {
-            phase_affinity_sim_cluster(model, &affinity)
-                .expect("pools must be feasible")
-                .with_streaming(8, true)
-        },
-        &TraceConfig::chat,
-        &slo,
-        &sweep,
-    );
-    if let Some(p) = out.best {
-        let (cm, pm, dm, merged) = replay_affinity_point(
-            model,
-            &affinity,
-            8,
-            true,
-            TraceConfig::chat(p.qps),
-            sweep.n_requests,
-            sweep.seed,
-        );
-        let cost = infra.cost_per_mtok_phase_affinity_plan(
-            &affinity,
-            cm.watts_mean(),
-            pm.watts_mean(),
-            dm.watts_mean(),
-            p.tokens_per_sec,
-        );
-        t.row(vec![
-            "affinity".into(),
-            affinity.describe(),
-            f(p.qps, 2),
-            f(p.tokens_per_sec, 0),
-            f(p.ttft_p95 * 1e3, 1),
-            f(p.tpot_p95 * 1e3, 2),
-            format!("{}", merged.migrations),
-            f(cost, 3),
-        ]);
+
+    // All six deployment cells are independent SLO searches on fresh
+    // clusters: evaluate concurrently (PAR=0 forces serial) and render
+    // in cell order — the printed table is byte-identical either way.
+    enum Pt {
+        Colo,
+        Variant(&'static str, DisaggPlan, usize, bool),
+        Affinity,
+    }
+    let pts = vec![
+        Pt::Colo,
+        Pt::Variant("disagg", homog, 1, false),
+        Pt::Variant("disagg-stream", homog, 8, true),
+        Pt::Variant("mixed", mixed, 1, false),
+        Pt::Variant("mixed-stream", mixed, 8, true),
+        Pt::Affinity,
+    ];
+    let rows: Vec<Option<Vec<String>>> = fp8_tco::util::par::SweepGrid::new(pts).run(|_, pt| {
+        match pt {
+            Pt::Colo => {
+                let colo = max_sustainable_qps(
+                    &|| {
+                        sharded_sim_cluster(
+                            model,
+                            Device::H100,
+                            PrecisionMode::fp8_dynamic(),
+                            colo_plan,
+                        )
+                        .expect("8B fits one H100")
+                    },
+                    &TraceConfig::chat,
+                    &slo,
+                    &sweep,
+                );
+                colo.best.map(|p| {
+                    let cost = infra.cost_per_mtok_sharded(
+                        assumed_server_price(Device::H100),
+                        colo_plan.total_chips(),
+                        p.watts_mean,
+                        p.tokens_per_sec,
+                    );
+                    vec![
+                        "colocated".into(),
+                        format!("H100 {colo_plan}"),
+                        f(p.qps, 2),
+                        f(p.tokens_per_sec, 0),
+                        f(p.ttft_p95 * 1e3, 1),
+                        f(p.tpot_p95 * 1e3, 2),
+                        "0".into(),
+                        f(cost, 3),
+                    ]
+                })
+            }
+            Pt::Variant(mode, plan, chunks, admission) => {
+                let out = max_sustainable_qps(
+                    &|| {
+                        disagg_sim_cluster(model, &plan)
+                            .expect("pools must be feasible")
+                            .with_streaming(chunks, admission)
+                    },
+                    &TraceConfig::chat,
+                    &slo,
+                    &sweep,
+                );
+                Some(match out.best {
+                    Some(p) => {
+                        // Replay the operating point to split watts per
+                        // pool (heterogeneous pools price at their own
+                        // draw).
+                        let (pm, dm, merged) = replay_disagg_point(
+                            model,
+                            &plan,
+                            chunks,
+                            admission,
+                            TraceConfig::chat(p.qps),
+                            sweep.n_requests,
+                            sweep.seed,
+                        );
+                        let cost = infra.cost_per_mtok_disagg_plan(
+                            &plan,
+                            pm.watts_mean(),
+                            dm.watts_mean(),
+                            p.tokens_per_sec,
+                        );
+                        vec![
+                            mode.into(),
+                            plan.describe(),
+                            f(p.qps, 2),
+                            f(p.tokens_per_sec, 0),
+                            f(p.ttft_p95 * 1e3, 1),
+                            f(p.tpot_p95 * 1e3, 2),
+                            format!("{}", merged.migrations),
+                            f(cost, 3),
+                        ]
+                    }
+                    None => vec![
+                        mode.into(),
+                        plan.describe(),
+                        format!("< {}", sweep.qps_lo),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ],
+                })
+            }
+            Pt::Affinity => {
+                let out = max_sustainable_qps(
+                    &|| {
+                        phase_affinity_sim_cluster(model, &affinity)
+                            .expect("pools must be feasible")
+                            .with_streaming(8, true)
+                    },
+                    &TraceConfig::chat,
+                    &slo,
+                    &sweep,
+                );
+                out.best.map(|p| {
+                    let (cm, pm, dm, merged) = replay_affinity_point(
+                        model,
+                        &affinity,
+                        8,
+                        true,
+                        TraceConfig::chat(p.qps),
+                        sweep.n_requests,
+                        sweep.seed,
+                    );
+                    let cost = infra.cost_per_mtok_phase_affinity_plan(
+                        &affinity,
+                        cm.watts_mean(),
+                        pm.watts_mean(),
+                        dm.watts_mean(),
+                        p.tokens_per_sec,
+                    );
+                    vec![
+                        "affinity".into(),
+                        affinity.describe(),
+                        f(p.qps, 2),
+                        f(p.tokens_per_sec, 0),
+                        f(p.ttft_p95 * 1e3, 1),
+                        f(p.tpot_p95 * 1e3, 2),
+                        format!("{}", merged.migrations),
+                        f(cost, 3),
+                    ]
+                })
+            }
+        }
+    });
+    for row in rows.into_iter().flatten() {
+        t.row(row);
     }
     t.print();
 
@@ -256,23 +281,30 @@ fn main() {
         ("1/10 bandwidth".into(), base.bw / 10.0, base.lat_s, 8),
         ("+10 ms latency".into(), base.bw, base.lat_s + 0.010, 1),
     ];
-    for (name, bw, lat_s, chunks) in variants {
-        let mut c = disagg_sim_cluster(model, &mixed)
-            .unwrap()
-            .with_streaming(chunks, false);
-        c.link.bw = bw;
-        c.link.lat_s = lat_s;
-        let gen = TraceGenerator::new(TraceConfig::chat(qps), 13);
-        let drained = c.run(gen.stream(n));
-        let m = c.merged_metrics();
-        assert!(drained, "sensitivity run must drain");
-        t2.row(vec![
-            name,
-            format!("{chunks}"),
-            f(m.ttft.pct(50.0) * 1e3, 1),
-            f(m.ttft.pct(95.0) * 1e3, 1),
-            f(m.kv_bytes_migrated / 1e9, 2),
-        ]);
+    // Fixed-load sensitivity runs are independent too — same parallel
+    // evaluation, same rendered bytes.
+    let rows2: Vec<Vec<String>> = fp8_tco::util::par::SweepGrid::new(variants.to_vec()).run(
+        |_, (name, bw, lat_s, chunks)| {
+            let mut c = disagg_sim_cluster(model, &mixed)
+                .unwrap()
+                .with_streaming(chunks, false);
+            c.link.bw = bw;
+            c.link.lat_s = lat_s;
+            let gen = TraceGenerator::new(TraceConfig::chat(qps), 13);
+            let drained = c.run(gen.stream(n));
+            let m = c.merged_metrics();
+            assert!(drained, "sensitivity run must drain");
+            vec![
+                name,
+                format!("{chunks}"),
+                f(m.ttft.pct(50.0) * 1e3, 1),
+                f(m.ttft.pct(95.0) * 1e3, 1),
+                f(m.kv_bytes_migrated / 1e9, 2),
+            ]
+        },
+    );
+    for row in rows2 {
+        t2.row(row);
     }
     t2.print();
     println!(

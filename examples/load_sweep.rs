@@ -15,6 +15,7 @@ use fp8_tco::analysis::perfmodel::PrecisionMode;
 use fp8_tco::coordinator::cluster::{max_sustainable_qps, sim_cluster, SloSpec, SweepConfig};
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::trace::TraceConfig;
 
@@ -49,51 +50,63 @@ fn main() {
             "$/Mtok @SLO",
         ],
     );
-    for dev in [Device::Gaudi2, Device::H100] {
-        for prec in [
-            PrecisionMode::Bf16,
-            PrecisionMode::fp8_static(),
-            PrecisionMode::fp8_dynamic(),
-        ] {
-            let out = max_sustainable_qps(
-                &|| sim_cluster(dev, prec, N_ENGINES),
-                &TraceConfig::chat,
-                &slo,
-                &sweep,
-            );
-            match out.best {
-                Some(p) => {
-                    let per_chip_tps = p.tokens_per_sec / N_ENGINES as f64;
-                    let cost = infra.cost_per_mtok(
-                        assumed_server_price(dev),
-                        p.watts_mean,
-                        per_chip_tps * chips,
-                    );
-                    t.row(vec![
-                        dev.name().into(),
-                        prec.name().into(),
-                        f(p.qps, 2),
-                        f(p.tokens_per_sec, 0),
-                        f(p.ttft_p95, 3),
-                        f(p.tpot_p95 * 1e3, 2),
-                        f(p.watts_mean, 0),
-                        f(cost, 3),
-                    ]);
-                }
-                None => {
-                    t.row(vec![
-                        dev.name().into(),
-                        prec.name().into(),
-                        format!("< {}", sweep.qps_lo),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                    ]);
-                }
+    // Each (device x precision) cell is an independent SLO search on
+    // its own fresh cluster: evaluate the grid concurrently (PAR=0
+    // forces serial) and render rows in grid order — the printed table
+    // is byte-identical either way.
+    let grid: Vec<(Device, PrecisionMode)> = [Device::Gaudi2, Device::H100]
+        .iter()
+        .flat_map(|&dev| {
+            [
+                PrecisionMode::Bf16,
+                PrecisionMode::fp8_static(),
+                PrecisionMode::fp8_dynamic(),
+            ]
+            .iter()
+            .map(move |&prec| (dev, prec))
+            .collect::<Vec<_>>()
+        })
+        .collect();
+    let rows: Vec<Vec<String>> = SweepGrid::new(grid).run(|_, (dev, prec)| {
+        let out = max_sustainable_qps(
+            &|| sim_cluster(dev, prec, N_ENGINES),
+            &TraceConfig::chat,
+            &slo,
+            &sweep,
+        );
+        match out.best {
+            Some(p) => {
+                let per_chip_tps = p.tokens_per_sec / N_ENGINES as f64;
+                let cost = infra.cost_per_mtok(
+                    assumed_server_price(dev),
+                    p.watts_mean,
+                    per_chip_tps * chips,
+                );
+                vec![
+                    dev.name().into(),
+                    prec.name().into(),
+                    f(p.qps, 2),
+                    f(p.tokens_per_sec, 0),
+                    f(p.ttft_p95, 3),
+                    f(p.tpot_p95 * 1e3, 2),
+                    f(p.watts_mean, 0),
+                    f(cost, 3),
+                ]
             }
+            None => vec![
+                dev.name().into(),
+                prec.name().into(),
+                format!("< {}", sweep.qps_lo),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ],
         }
+    });
+    for row in rows {
+        t.row(row);
     }
     t.print();
     println!(

@@ -24,6 +24,7 @@ use fp8_tco::coordinator::cluster::{
 };
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama::by_name;
 use fp8_tco::workload::trace::TraceConfig;
@@ -140,41 +141,44 @@ fn main() {
         ("llama-70b", Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::tp(8)),
         ("llama-70b", Device::Gaudi2, PrecisionMode::fp8_static(), ParallelismPlan::tp(8)),
     ];
-    for (model, dev, prec, plan) in deployments {
-        let m = by_name(model).unwrap();
-        let out = max_sustainable_qps(
-            &|| {
-                sharded_sim_cluster(m, dev, prec, plan)
-                    .unwrap_or_else(|e| panic!("deployment must be feasible: {e}"))
-            },
-            &TraceConfig::chat,
-            &slo,
-            &sweep,
-        );
-        match out.best {
-            Some(p) => {
-                // Per-chip goodput scaled to the rack's server shape —
-                // the $/Mtok axis Eq. 1 compares across vendors
-                // (cost_per_mtok under the hood).
-                let cost = infra.cost_per_mtok_sharded(
-                    assumed_server_price(dev),
-                    plan.total_chips(),
-                    p.watts_mean,
-                    p.tokens_per_sec,
-                );
-                t2.row(vec![
-                    model.into(),
-                    dev.name().into(),
-                    prec.name().into(),
-                    plan.to_string(),
-                    f(p.qps, 2),
-                    f(p.tokens_per_sec, 0),
-                    f(p.watts_mean, 0),
-                    f(cost, 3),
-                ]);
-            }
-            None => {
-                t2.row(vec![
+    // Independent SLO searches per deployment: evaluate concurrently
+    // (PAR=0 forces serial), render in deployment order — the table is
+    // byte-identical either way.
+    let rows: Vec<Vec<String>> =
+        SweepGrid::new(deployments.to_vec()).run(|_, (model, dev, prec, plan)| {
+            let m = by_name(model).unwrap();
+            let out = max_sustainable_qps(
+                &|| {
+                    sharded_sim_cluster(m, dev, prec, plan)
+                        .unwrap_or_else(|e| panic!("deployment must be feasible: {e}"))
+                },
+                &TraceConfig::chat,
+                &slo,
+                &sweep,
+            );
+            match out.best {
+                Some(p) => {
+                    // Per-chip goodput scaled to the rack's server shape —
+                    // the $/Mtok axis Eq. 1 compares across vendors
+                    // (cost_per_mtok under the hood).
+                    let cost = infra.cost_per_mtok_sharded(
+                        assumed_server_price(dev),
+                        plan.total_chips(),
+                        p.watts_mean,
+                        p.tokens_per_sec,
+                    );
+                    vec![
+                        model.into(),
+                        dev.name().into(),
+                        prec.name().into(),
+                        plan.to_string(),
+                        f(p.qps, 2),
+                        f(p.tokens_per_sec, 0),
+                        f(p.watts_mean, 0),
+                        f(cost, 3),
+                    ]
+                }
+                None => vec![
                     model.into(),
                     dev.name().into(),
                     prec.name().into(),
@@ -183,9 +187,11 @@ fn main() {
                     "-".into(),
                     "-".into(),
                     "-".into(),
-                ]);
+                ],
             }
-        }
+        });
+    for row in rows {
+        t2.row(row);
     }
     t2.print();
     println!(

@@ -10,6 +10,7 @@ use fp8_tco::analysis::perfmodel::PrecisionMode;
 use fp8_tco::coordinator::cluster::{max_sustainable_qps, sim_cluster, SloSpec, SweepConfig};
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::trace::TraceConfig;
 
@@ -55,18 +56,23 @@ fn main() {
         "Fig. SLO-TCO — $/Mtok at SLO and TCO ratio vs H100+BF16 (llama-8b)",
         &["mix", "device", "precision", "QPS @SLO", "$/Mtok", "TCO vs H100-bf16"],
     );
-    for (mix_name, trace_at) in &mixes {
-        let cells: Vec<_> = setups
-            .iter()
-            .map(|&(dev, prec)| {
-                (dev, prec, cost_at_slo(&infra, dev, prec, trace_at, &slo, &sweep))
-            })
-            .collect();
-        let base_cost = cells
-            .first()
-            .and_then(|(_, _, c)| c.as_ref())
-            .map(|&(_, cost)| cost);
-        for (dev, prec, cell) in cells {
+    // Every (mix x setup) cell is an independent SLO search on its own
+    // fresh cluster: evaluate the whole grid concurrently (PAR=0 for
+    // serial), then render in grid order — output bytes are identical
+    // either way.
+    let grid: Vec<(usize, Device, PrecisionMode)> = mixes
+        .iter()
+        .enumerate()
+        .flat_map(|(mi, _)| setups.iter().map(move |&(dev, prec)| (mi, dev, prec)))
+        .collect();
+    let cells: Vec<Option<(f64, f64)>> = SweepGrid::new(grid).run(|_, (mi, dev, prec)| {
+        cost_at_slo(&infra, dev, prec, &mixes[mi].1, &slo, &sweep)
+    });
+    for (mi, (mix_name, _)) in mixes.iter().enumerate() {
+        let row0 = mi * setups.len();
+        let base_cost = cells[row0].map(|(_, cost)| cost);
+        for (si, &(dev, prec)) in setups.iter().enumerate() {
+            let cell = cells[row0 + si];
             match cell {
                 Some((qps, cost)) => {
                     let ratio = match base_cost {

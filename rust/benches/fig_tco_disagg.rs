@@ -29,6 +29,7 @@ use fp8_tco::coordinator::cluster::{
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
 use fp8_tco::util::json::Json;
+use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama::{by_name, LlamaConfig};
 use fp8_tco::workload::trace::TraceConfig;
@@ -366,129 +367,188 @@ fn main() {
         ],
     );
     let mut records: Vec<Json> = Vec::new();
+
+    // One evaluation point per frontier cell. Every cell is an
+    // independent SLO search on fresh clusters with a fixed seed, so
+    // the whole frontier evaluates concurrently (PAR=0 forces serial);
+    // rendering walks the results in build order, so table and JSON
+    // bytes are identical to the serial run.
+    enum CellSpec {
+        Colo(&'static LlamaConfig, ParallelismPlan),
+        Disagg(&'static LlamaConfig, DisaggPlan, usize, bool),
+        Affinity(&'static LlamaConfig, PhaseAffinityPlan, usize, bool),
+    }
+    struct RowMeta {
+        model_name: &'static str,
+        slo_name: &'static str,
+        mode: &'static str,
+        pools: String,
+        chips: usize,
+        chunks: usize,
+        qps_lo: f64,
+    }
+    /// Per (setup x slo) group: what the streaming acceptance
+    /// assertion needs, plus the group's first row index.
+    struct GroupMeta {
+        model: &'static LlamaConfig,
+        homog: DisaggPlan,
+        mixed: DisaggPlan,
+        sweep: SweepConfig,
+        base: usize,
+    }
+    let mut points: Vec<(CellSpec, SloSpec, SweepConfig)> = Vec::new();
+    let mut metas: Vec<RowMeta> = Vec::new();
+    let mut groups: Vec<GroupMeta> = Vec::new();
     for (model, colo_plan, homog, mixed, affinity, qps_hi) in setups {
-        for (slo_name, slo) in &slos {
+        for &(slo_name, slo) in &slos {
             let sweep = if fast {
                 SweepConfig { iters: 2, n_requests: 30, seed: 17, ..SweepConfig::new(0.2, qps_hi) }
             } else {
                 SweepConfig { iters: 4, n_requests: 100, seed: 17, ..SweepConfig::new(0.2, qps_hi) }
             };
-            let rows: [(&str, String, usize, usize, Cell); 6] = [
+            groups.push(GroupMeta { model, homog, mixed, sweep, base: points.len() });
+            let rows: [(&'static str, String, usize, usize, CellSpec); 6] = [
                 (
                     "colocated",
                     format!("H100 {colo_plan}"),
                     colo_plan.total_chips(),
                     1,
-                    colocated_cell(
-                        model,
-                        Device::H100,
-                        PrecisionMode::fp8_dynamic(),
-                        colo_plan,
-                        slo,
-                        &sweep,
-                        &infra,
-                    ),
+                    CellSpec::Colo(model, colo_plan),
                 ),
                 (
                     "disagg",
                     homog.describe(),
                     homog.total_chips(),
                     1,
-                    disagg_cell(model, &homog, 1, false, slo, &sweep, &infra),
+                    CellSpec::Disagg(model, homog, 1, false),
                 ),
                 (
                     "disagg-stream",
                     homog.describe(),
                     homog.total_chips(),
                     STREAM_CHUNKS,
-                    disagg_cell(model, &homog, STREAM_CHUNKS, true, slo, &sweep, &infra),
+                    CellSpec::Disagg(model, homog, STREAM_CHUNKS, true),
                 ),
                 (
                     "mixed",
                     mixed.describe(),
                     mixed.total_chips(),
                     1,
-                    disagg_cell(model, &mixed, 1, false, slo, &sweep, &infra),
+                    CellSpec::Disagg(model, mixed, 1, false),
                 ),
                 (
                     "mixed-stream",
                     mixed.describe(),
                     mixed.total_chips(),
                     STREAM_CHUNKS,
-                    disagg_cell(model, &mixed, STREAM_CHUNKS, true, slo, &sweep, &infra),
+                    CellSpec::Disagg(model, mixed, STREAM_CHUNKS, true),
                 ),
                 (
                     "affinity",
                     affinity.describe(),
                     affinity.total_chips(),
                     STREAM_CHUNKS,
-                    affinity_cell(model, &affinity, STREAM_CHUNKS, true, slo, &sweep, &infra),
+                    CellSpec::Affinity(model, affinity, STREAM_CHUNKS, true),
                 ),
             ];
-            // The streaming acceptance property: at the single-shot
-            // operating point of each disaggregated plan, chunked
-            // streaming must not worsen TTFT p95.
-            for (plan, cell) in [(&homog, &rows[1].4), (&mixed, &rows[3].4)] {
-                if cell.feasible {
-                    assert_streaming_ttft_no_worse(
-                        model,
-                        plan,
-                        cell.qps,
-                        sweep.n_requests,
-                        sweep.seed,
-                        cell.replay_ttft_p95,
-                    );
-                }
-            }
-            for (mode, pools, chips, chunks, cell) in rows {
-                let mut rec = BTreeMap::new();
-                rec.insert("model".into(), Json::Str(model.name.into()));
-                rec.insert("slo".into(), Json::Str((*slo_name).into()));
-                rec.insert("mode".into(), Json::Str(mode.into()));
-                rec.insert("pools".into(), Json::Str(pools.clone()));
-                rec.insert("chips".into(), Json::Num(chips as f64));
-                rec.insert("chunks".into(), Json::Num(chunks as f64));
-                rec.insert("feasible".into(), Json::Bool(cell.feasible));
-                if cell.feasible {
-                    rec.insert("qps".into(), Json::Num(cell.qps));
-                    rec.insert("tokens_per_sec".into(), Json::Num(cell.tokens_per_sec));
-                    rec.insert("ttft_p95_s".into(), Json::Num(cell.ttft_p95));
-                    rec.insert("tpot_p95_s".into(), Json::Num(cell.tpot_p95));
-                    rec.insert("usd_per_mtok".into(), Json::Num(cell.usd_per_mtok));
-                    rec.insert("migrations".into(), Json::Num(cell.migrations as f64));
-                    rec.insert("bounces".into(), Json::Num(cell.bounces as f64));
-                    rec.insert("kv_gb_migrated".into(), Json::Num(cell.kv_gb_migrated));
-                    t.row(vec![
-                        model.name.into(),
-                        (*slo_name).into(),
-                        mode.into(),
-                        pools,
-                        format!("{chips}"),
-                        f(cell.qps, 2),
-                        f(cell.tokens_per_sec, 0),
-                        f(cell.tpot_p95 * 1e3, 2),
-                        format!("{}", cell.migrations),
-                        format!("{}", cell.bounces),
-                        f(cell.usd_per_mtok, 3),
-                    ]);
-                } else {
-                    t.row(vec![
-                        model.name.into(),
-                        (*slo_name).into(),
-                        mode.into(),
-                        pools,
-                        format!("{chips}"),
-                        format!("< {}", sweep.qps_lo),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                    ]);
-                }
-                records.push(Json::Obj(rec));
+            for (mode, pools, chips, chunks, spec) in rows {
+                metas.push(RowMeta {
+                    model_name: model.name,
+                    slo_name,
+                    mode,
+                    pools,
+                    chips,
+                    chunks,
+                    qps_lo: sweep.qps_lo,
+                });
+                points.push((spec, slo, sweep));
             }
         }
+    }
+
+    let cells: Vec<Cell> = SweepGrid::new(points).run(|_, (spec, slo, sweep)| match spec {
+        CellSpec::Colo(m, plan) => colocated_cell(
+            m,
+            Device::H100,
+            PrecisionMode::fp8_dynamic(),
+            plan,
+            &slo,
+            &sweep,
+            &infra,
+        ),
+        CellSpec::Disagg(m, plan, chunks, admission) => {
+            disagg_cell(m, &plan, chunks, admission, &slo, &sweep, &infra)
+        }
+        CellSpec::Affinity(m, plan, chunks, admission) => {
+            affinity_cell(m, &plan, chunks, admission, &slo, &sweep, &infra)
+        }
+    });
+
+    // The streaming acceptance property: at the single-shot operating
+    // point of each disaggregated plan (rows 1 and 3 of every group),
+    // chunked streaming must not worsen TTFT p95.
+    for g in &groups {
+        for (plan, cell) in [(&g.homog, &cells[g.base + 1]), (&g.mixed, &cells[g.base + 3])] {
+            if cell.feasible {
+                assert_streaming_ttft_no_worse(
+                    g.model,
+                    plan,
+                    cell.qps,
+                    g.sweep.n_requests,
+                    g.sweep.seed,
+                    cell.replay_ttft_p95,
+                );
+            }
+        }
+    }
+
+    for (meta, cell) in metas.into_iter().zip(&cells) {
+        let mut rec = BTreeMap::new();
+        rec.insert("model".into(), Json::Str(meta.model_name.into()));
+        rec.insert("slo".into(), Json::Str(meta.slo_name.into()));
+        rec.insert("mode".into(), Json::Str(meta.mode.into()));
+        rec.insert("pools".into(), Json::Str(meta.pools.clone()));
+        rec.insert("chips".into(), Json::Num(meta.chips as f64));
+        rec.insert("chunks".into(), Json::Num(meta.chunks as f64));
+        rec.insert("feasible".into(), Json::Bool(cell.feasible));
+        if cell.feasible {
+            rec.insert("qps".into(), Json::Num(cell.qps));
+            rec.insert("tokens_per_sec".into(), Json::Num(cell.tokens_per_sec));
+            rec.insert("ttft_p95_s".into(), Json::Num(cell.ttft_p95));
+            rec.insert("tpot_p95_s".into(), Json::Num(cell.tpot_p95));
+            rec.insert("usd_per_mtok".into(), Json::Num(cell.usd_per_mtok));
+            rec.insert("migrations".into(), Json::Num(cell.migrations as f64));
+            rec.insert("bounces".into(), Json::Num(cell.bounces as f64));
+            rec.insert("kv_gb_migrated".into(), Json::Num(cell.kv_gb_migrated));
+            t.row(vec![
+                meta.model_name.into(),
+                meta.slo_name.into(),
+                meta.mode.into(),
+                meta.pools,
+                format!("{}", meta.chips),
+                f(cell.qps, 2),
+                f(cell.tokens_per_sec, 0),
+                f(cell.tpot_p95 * 1e3, 2),
+                format!("{}", cell.migrations),
+                format!("{}", cell.bounces),
+                f(cell.usd_per_mtok, 3),
+            ]);
+        } else {
+            t.row(vec![
+                meta.model_name.into(),
+                meta.slo_name.into(),
+                meta.mode.into(),
+                meta.pools,
+                format!("{}", meta.chips),
+                format!("< {}", meta.qps_lo),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+        records.push(Json::Obj(rec));
     }
     t.print();
 

@@ -21,6 +21,7 @@ use fp8_tco::coordinator::cluster::{
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
 use fp8_tco::util::json::Json;
+use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama::by_name;
 use fp8_tco::workload::trace::TraceConfig;
@@ -63,47 +64,57 @@ fn main() {
         ],
     );
     let mut records: Vec<Json> = Vec::new();
-    for (model, dev, prec, plan) in cells {
-        let m = by_name(model).unwrap();
-        let out = max_sustainable_qps(
-            &|| {
-                sharded_sim_cluster(m, dev, prec, plan)
-                    .unwrap_or_else(|e| panic!("bench cell must be feasible: {e}"))
-            },
-            &TraceConfig::chat,
-            &slo,
-            &sweep,
-        );
-        let mut rec = BTreeMap::new();
-        rec.insert("model".into(), Json::Str(model.into()));
-        rec.insert("device".into(), Json::Str(dev.name().into()));
-        rec.insert("precision".into(), Json::Str(prec.name().into()));
-        rec.insert("plan".into(), Json::Str(plan.to_string()));
-        rec.insert("chips".into(), Json::Num(plan.chips_per_instance() as f64));
-        match out.best {
-            Some(p) => {
+    // Each cell is an independent SLO search on a fresh cluster with a
+    // fixed seed: evaluate the grid concurrently (PAR=0 for serial)
+    // and render in grid order, so table and JSON bytes are identical
+    // to the serial run.
+    let results: Vec<Option<(f64, f64, f64, f64, f64, f64)>> = SweepGrid::new(cells.to_vec())
+        .run(|_, (model, dev, prec, plan)| {
+            let m = by_name(model).unwrap();
+            let out = max_sustainable_qps(
+                &|| {
+                    sharded_sim_cluster(m, dev, prec, plan)
+                        .unwrap_or_else(|e| panic!("bench cell must be feasible: {e}"))
+                },
+                &TraceConfig::chat,
+                &slo,
+                &sweep,
+            );
+            out.best.map(|p| {
                 let cost = infra.cost_per_mtok_sharded(
                     assumed_server_price(dev),
                     plan.total_chips(),
                     p.watts_mean,
                     p.tokens_per_sec,
                 );
+                (p.qps, p.tokens_per_sec, p.ttft_p95, p.tpot_p95, p.watts_mean, cost)
+            })
+        });
+    for ((model, dev, prec, plan), best) in cells.into_iter().zip(results) {
+        let mut rec = BTreeMap::new();
+        rec.insert("model".into(), Json::Str(model.into()));
+        rec.insert("device".into(), Json::Str(dev.name().into()));
+        rec.insert("precision".into(), Json::Str(prec.name().into()));
+        rec.insert("plan".into(), Json::Str(plan.to_string()));
+        rec.insert("chips".into(), Json::Num(plan.chips_per_instance() as f64));
+        match best {
+            Some((qps, tokens_per_sec, ttft_p95, tpot_p95, watts_mean, cost)) => {
                 t.row(vec![
                     model.into(),
                     dev.name().into(),
                     prec.name().into(),
                     plan.to_string(),
-                    f(p.qps, 2),
-                    f(p.tokens_per_sec, 0),
-                    f(p.tpot_p95 * 1e3, 2),
-                    f(p.watts_mean, 0),
+                    f(qps, 2),
+                    f(tokens_per_sec, 0),
+                    f(tpot_p95 * 1e3, 2),
+                    f(watts_mean, 0),
                     f(cost, 3),
                 ]);
-                rec.insert("qps".into(), Json::Num(p.qps));
-                rec.insert("tokens_per_sec".into(), Json::Num(p.tokens_per_sec));
-                rec.insert("ttft_p95_s".into(), Json::Num(p.ttft_p95));
-                rec.insert("tpot_p95_s".into(), Json::Num(p.tpot_p95));
-                rec.insert("watts_per_chip".into(), Json::Num(p.watts_mean));
+                rec.insert("qps".into(), Json::Num(qps));
+                rec.insert("tokens_per_sec".into(), Json::Num(tokens_per_sec));
+                rec.insert("ttft_p95_s".into(), Json::Num(ttft_p95));
+                rec.insert("tpot_p95_s".into(), Json::Num(tpot_p95));
+                rec.insert("watts_per_chip".into(), Json::Num(watts_mean));
                 rec.insert("usd_per_mtok".into(), Json::Num(cost));
                 rec.insert("feasible".into(), Json::Bool(true));
             }

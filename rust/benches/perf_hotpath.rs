@@ -1,23 +1,30 @@
 //! §Perf microbenchmarks: the L3 hot paths, timed (no criterion in the
 //! vendored set — fixed-iteration wall-clock with warmup).
 //!
-//! Targets (DESIGN.md §6): hwsim gemm_time < 1 us/call so parameter
+//! Targets (DESIGN.md §6, §9): hwsim gemm_time < 1 us/call so parameter
 //! sweeps are instant; engine step overhead small vs modelled step
-//! latency; JSON+quantize utility throughput.
+//! latency; JSON+quantize utility throughput; and the O(active)
+//! scaling contract — per-step cost flat in the number of *finished*
+//! sequences resident in the harvest archive (<= 2x at 10k finished vs
+//! 100), with the memoized step-cost cache returning bit-identical
+//! breakdowns. The scaling section writes `BENCH_perf_scaling.json`
+//! (directory: `BENCH_JSON_DIR`, default `.`) so CI can archive the
+//! perf trajectory alongside the figure benches.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};
-use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
+use fp8_tco::coordinator::{Engine, EngineConfig, ExecutionBackend, KvCacheConfig, SimBackend};
 use fp8_tco::fp8::{quantize_rtn, Format};
 use fp8_tco::hwsim::gemm::{gemm_time, GemmConfig};
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::util::json::Json;
 use fp8_tco::util::rng::Rng;
 use fp8_tco::workload::llama;
-use fp8_tco::workload::trace::Request;
+use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+fn measure<F: FnMut()>(iters: usize, f: &mut F) -> f64 {
     // warmup
     for _ in 0..iters.min(100) {
         f();
@@ -26,9 +33,58 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     for _ in 0..iters {
         f();
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    let per = measure(iters, &mut f);
     println!("{name:<44} {:>12.3} us/iter ({iters} iters)", per * 1e6);
     per
+}
+
+/// Best of three measurement passes — the asserted gates run on this
+/// so a noisy-neighbor burst on a shared CI runner cannot fail an
+/// unrelated PR (min is a robust estimator of the true cost floor;
+/// noise only ever inflates a pass).
+fn bench_min3<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    let per = (0..3)
+        .map(|_| measure(iters, &mut f))
+        .fold(f64::INFINITY, f64::min);
+    println!("{name:<44} {:>12.3} us/iter (best of 3 x {iters} iters)", per * 1e6);
+    per
+}
+
+/// An engine carrying `finished` already-completed requests in its
+/// harvest archive plus 64 effectively-endless decodes in flight — the
+/// shape a long trace settles into. Per-step cost must not depend on
+/// `finished` (the O(active) contract).
+fn engine_with_resident_finished(finished: usize) -> Engine<SimBackend> {
+    let m = llama::by_name("llama-8b").unwrap();
+    let kv = KvCacheConfig { block_tokens: 16, total_blocks: 1_000_000 };
+    let backend =
+        SimBackend::new(m, StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()));
+    let mut engine = Engine::new(EngineConfig::new(kv), backend);
+    // Ballast: single-token requests that finish at prefill and park
+    // in the archive.
+    for i in 0..finished as u64 {
+        engine.submit(&Request { id: i, arrival: 0.0, prompt_len: 16, output_len: 1 });
+    }
+    assert!(engine.run_to_completion(10 * finished.max(1)), "ballast must drain");
+    assert_eq!(engine.finished_resident(), finished, "archive holds the history");
+    // Active work: 64 decodes that outlive any measurement loop.
+    for i in 0..64u64 {
+        engine.submit(&Request {
+            id: 1_000_000 + i,
+            arrival: 0.0,
+            prompt_len: 64,
+            output_len: 100_000_000,
+        });
+    }
+    // Warm in: prefill everything so steps are pure 64-seq decodes.
+    for _ in 0..80 {
+        engine.step();
+    }
+    engine
 }
 
 fn main() {
@@ -36,17 +92,17 @@ fn main() {
 
     // hwsim GEMM evaluation (drives every sweep).
     let mut acc = 0.0f64;
-    let per = bench("hwsim::gemm_time (thin fp8)", 200_000, || {
+    let per_gemm = bench_min3("hwsim::gemm_time (thin fp8)", 200_000, || {
         let bd = gemm_time(Device::Gaudi2, 64, 4096, 4096,
                            GemmConfig::fp8(fp8_tco::hwsim::spec::Scaling::PerRow,
                                            fp8_tco::hwsim::spec::Accum::Fp32));
         acc += bd.seconds;
     });
-    assert!(per < 1e-6, "gemm_time must stay under 1 us/call: {per}");
+    assert!(per_gemm < 1e-6, "gemm_time must stay under 1 us/call: {per_gemm}");
 
     // Full decode-step model.
     let m = llama::by_name("llama-8b").unwrap();
-    bench("perfmodel::decode_step", 50_000, || {
+    let per_decode_model = bench("perfmodel::decode_step", 50_000, || {
         let bd = decode_step(m, &StepConfig::new(Device::Gaudi2,
                              PrecisionMode::fp8_static()), 64, 1024);
         acc += bd.seconds;
@@ -72,6 +128,90 @@ fn main() {
     println!("  -> scheduler overhead per sequence-token: {:.1} ns",
              per_step / 64.0 * 1e9);
 
+    // ---- O(active) scaling: step cost vs resident finished ---------
+    // The contract the batcher index + harvest archive exist for: an
+    // engine that has already served 10k requests must step (close to)
+    // as fast as one that served 100.
+    let mut e_small = engine_with_resident_finished(100);
+    let per_small = bench_min3("engine.step (100 finished resident)", 5_000, || {
+        e_small.step();
+    });
+    let mut e_big = engine_with_resident_finished(10_000);
+    let per_big = bench_min3("engine.step (10k finished resident)", 5_000, || {
+        e_big.step();
+    });
+    let scaling_ratio = per_big / per_small;
+    println!("  -> step-cost ratio 10k/100 finished: {scaling_ratio:.2}x");
+    assert!(
+        scaling_ratio <= 2.0,
+        "engine step cost must be flat in resident finished sequences: \
+         {per_small}s at 100 vs {per_big}s at 10k ({scaling_ratio:.2}x)"
+    );
+
+    // ---- memoized step-cost cache: bit-identity ---------------------
+    // Exact-key memoization must return the identical StepBreakdown
+    // bits that a fresh computation produces.
+    {
+        let mut cached =
+            SimBackend::new(m, StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()));
+        let mut plain =
+            SimBackend::new(m, StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()));
+        plain.set_cache(false);
+        let specs: Vec<(u64, usize)> = (0..64).map(|i| (i, 1024)).collect();
+        let first = cached.decode(&specs);
+        let hit = cached.decode(&specs);
+        let fresh = plain.decode(&specs);
+        for (a, b) in [
+            (first.seconds, hit.seconds),
+            (first.watts, hit.watts),
+            (first.flops, hit.flops),
+            (first.seconds, fresh.seconds),
+            (first.watts, fresh.watts),
+            (first.flops, fresh.flops),
+        ] {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "memoized decode_step must be bit-identical to recompute"
+            );
+        }
+        let cs = cached.cache_stats().expect("sim backend memoizes by default");
+        assert_eq!((cs.hits, cs.misses), (1, 1));
+        println!("memoized decode_step: bit-identical (hit rate {:.2})", cs.hit_rate());
+    }
+
+    // ---- end-to-end: 10k-request open-loop sim ---------------------
+    // The production-scale shape PR 6+ sweeps: one engine, 10k Poisson
+    // chat arrivals, virtual clock. Wall time is pure coordinator +
+    // model-cache cost.
+    let (e2e_wall_s, e2e_steps, e2e_virtual_s, cache_hit_rate) = {
+        let backend =
+            SimBackend::new(m, StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()));
+        let mut engine = Engine::new(
+            EngineConfig::new(KvCacheConfig { block_tokens: 16, total_blocks: 1_000_000 }),
+            backend,
+        );
+        let mut gen = TraceGenerator::new(TraceConfig::chat(50.0), 11);
+        for r in gen.take(10_000) {
+            engine.submit(&r);
+        }
+        let t0 = Instant::now();
+        let drained = engine.run_to_completion(50_000_000);
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(drained, "10k-request trace must drain");
+        assert_eq!(engine.metrics.requests_done, 10_000);
+        assert_eq!(engine.finished_resident(), 10_000);
+        println!(
+            "{:<44} {:>12.3} ms total ({} steps, {:.1} s virtual, cache hit {:.2})",
+            "engine e2e (10k-request chat trace)",
+            wall * 1e3,
+            engine.metrics.steps,
+            engine.clock(),
+            engine.metrics.step_cache_hit_rate(),
+        );
+        (wall, engine.metrics.steps, engine.clock(), engine.metrics.step_cache_hit_rate())
+    };
+
     // FP8 scalar quantization.
     let mut rng = Rng::new(1);
     let xs: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
@@ -90,6 +230,28 @@ fn main() {
         let j = Json::parse(&doc).unwrap();
         acc += j.get("x").unwrap().idx(0).unwrap().as_f64().unwrap();
     });
+
+    // ---- BENCH_perf_scaling.json: seed the perf trajectory ---------
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/BENCH_perf_scaling.json");
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("perf_scaling".into()));
+    root.insert("gemm_time_us".into(), Json::Num(per_gemm * 1e6));
+    root.insert("decode_step_model_us".into(), Json::Num(per_decode_model * 1e6));
+    root.insert("engine_step_64seq_us".into(), Json::Num(per_step * 1e6));
+    root.insert("step_us_finished_100".into(), Json::Num(per_small * 1e6));
+    root.insert("step_us_finished_10k".into(), Json::Num(per_big * 1e6));
+    root.insert("scaling_ratio_10k_over_100".into(), Json::Num(scaling_ratio));
+    root.insert("e2e_requests".into(), Json::Num(10_000.0));
+    root.insert("e2e_wall_s".into(), Json::Num(e2e_wall_s));
+    root.insert("e2e_steps".into(), Json::Num(e2e_steps as f64));
+    root.insert("e2e_virtual_s".into(), Json::Num(e2e_virtual_s));
+    root.insert("e2e_cache_hit_rate".into(), Json::Num(cache_hit_rate));
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 
     println!("(sink {acc:.3e})");
 }

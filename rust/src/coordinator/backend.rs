@@ -2,8 +2,18 @@
 //! hwsim virtual testbed (`SimBackend`, used by every paper figure) or
 //! real PJRT compute over the AOT artifacts (`PjrtBackend`, the
 //! end-to-end validation path).
+//!
+//! `SimBackend` memoizes the pure analytic step model through a
+//! [`StepCostCache`]: `perfmodel::{prefill, decode_step}` are exact
+//! functions of `(batch, len)` for a fixed model/config, so a cached
+//! [`StepBreakdown`] is bit-identical to a recomputed one by
+//! construction (DESIGN.md §9). Hit/miss counters surface in
+//! [`Metrics`](super::metrics::Metrics) via
+//! [`ExecutionBackend::cache_stats`].
 
-use crate::analysis::perfmodel::{self, StepConfig};
+use std::collections::HashMap;
+
+use crate::analysis::perfmodel::{self, StepBreakdown, StepConfig};
 use crate::workload::llama::LlamaConfig;
 
 use super::request::SeqId;
@@ -19,6 +29,77 @@ pub struct StepResult {
     pub flops: f64,
 }
 
+/// Cumulative counters of a memoizing backend's step-cost cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Hits over all lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Memoization table for the pure analytic step model, keyed on the
+/// exact `(batch, len)` pair each phase is evaluated at. Exact-key
+/// memoization of a deterministic function returns bit-identical
+/// `StepBreakdown`s by construction — the cached value *is* the value
+/// the first computation produced. Insertion stops at
+/// [`StepCostCache::MAX_ENTRIES`] (lookups still count) so an
+/// adversarially diverse trace cannot balloon resident memory; hits
+/// simply stop growing past that point.
+#[derive(Debug, Default)]
+pub struct StepCostCache {
+    prefill: HashMap<(usize, usize), StepBreakdown>,
+    decode: HashMap<(usize, usize), StepBreakdown>,
+    hits: u64,
+    misses: u64,
+}
+
+impl StepCostCache {
+    /// Cap on entries per phase map (~96 B each; two maps ≈ 50 MB
+    /// worst case) — far above what real traces visit.
+    pub const MAX_ENTRIES: usize = 1 << 18;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits, misses: self.misses }
+    }
+
+    fn lookup<F>(
+        map: &mut HashMap<(usize, usize), StepBreakdown>,
+        hits: &mut u64,
+        misses: &mut u64,
+        key: (usize, usize),
+        compute: F,
+    ) -> StepBreakdown
+    where
+        F: FnOnce() -> StepBreakdown,
+    {
+        if let Some(bd) = map.get(&key) {
+            *hits += 1;
+            return bd.clone();
+        }
+        *misses += 1;
+        let bd = compute();
+        if map.len() < Self::MAX_ENTRIES {
+            map.insert(key, bd.clone());
+        }
+        bd
+    }
+}
+
 /// Abstract executor the engine drives. Sequence content is the
 /// backend's business; the engine only schedules ids and lengths.
 pub trait ExecutionBackend {
@@ -28,8 +109,18 @@ pub trait ExecutionBackend {
     /// Run one decode step over `(id, context_len)` pairs.
     fn decode(&mut self, seqs: &[(SeqId, usize)]) -> StepResult;
 
-    /// Sequence finished or was evicted: drop backend state.
+    /// Sequence finished or was evicted: drop backend state. The
+    /// engine fires this for *every* sequence that leaves service —
+    /// finished, evicted, or handed off — so per-sequence backend
+    /// state cannot leak across a long trace (regression-tested in
+    /// `tests/hotpath_equiv.rs`).
     fn release(&mut self, _id: SeqId) {}
+
+    /// Cumulative step-cost cache counters, if this backend memoizes
+    /// (None for backends that execute real compute).
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
 
     /// Human-readable identity for reports.
     fn describe(&self) -> String;
@@ -37,14 +128,37 @@ pub trait ExecutionBackend {
 
 /// hwsim-backed backend: timing from the performance model, virtual
 /// clock, no real numerics. This is the paper's testbed stand-in.
+/// Step costs are memoized on exact `(batch, len)` keys by default
+/// (`set_cache(false)` restores always-recompute, used by the
+/// bit-identity equivalence tests).
+///
+/// `model`/`cfg` are private on purpose: the cache key assumes both
+/// are fixed for the backend's lifetime, so mutating them in place
+/// would silently serve breakdowns computed under the old config.
+/// Build a new backend for a new configuration.
 pub struct SimBackend {
-    pub model: &'static LlamaConfig,
-    pub cfg: StepConfig,
+    model: &'static LlamaConfig,
+    cfg: StepConfig,
+    cache: Option<StepCostCache>,
 }
 
 impl SimBackend {
     pub fn new(model: &'static LlamaConfig, cfg: StepConfig) -> Self {
-        SimBackend { model, cfg }
+        SimBackend { model, cfg, cache: Some(StepCostCache::new()) }
+    }
+
+    pub fn model(&self) -> &'static LlamaConfig {
+        self.model
+    }
+
+    pub fn cfg(&self) -> &StepConfig {
+        &self.cfg
+    }
+
+    /// Toggle step-cost memoization (on by default). Turning it off
+    /// drops the table and its counters.
+    pub fn set_cache(&mut self, on: bool) {
+        self.cache = if on { Some(StepCostCache::new()) } else { None };
     }
 }
 
@@ -56,7 +170,17 @@ impl ExecutionBackend for SimBackend {
         // Batched prefill of mixed lengths: model as max-length batch
         // (padding, the common production compromise).
         let max_len = seqs.iter().map(|&(_, l)| l).max().unwrap();
-        let bd = perfmodel::prefill(self.model, &self.cfg, seqs.len(), max_len);
+        let key = (seqs.len(), max_len);
+        let bd = match self.cache.as_mut() {
+            Some(c) => StepCostCache::lookup(
+                &mut c.prefill,
+                &mut c.hits,
+                &mut c.misses,
+                key,
+                || perfmodel::prefill(self.model, &self.cfg, key.0, key.1),
+            ),
+            None => perfmodel::prefill(self.model, &self.cfg, key.0, key.1),
+        };
         StepResult { seconds: bd.seconds, watts: bd.watts, flops: bd.flops }
     }
 
@@ -68,8 +192,22 @@ impl ExecutionBackend for SimBackend {
         // depend only on b; attention on sum of s_i).
         let avg: usize =
             seqs.iter().map(|&(_, l)| l).sum::<usize>() / seqs.len();
-        let bd = perfmodel::decode_step(self.model, &self.cfg, seqs.len(), avg.max(1));
+        let key = (seqs.len(), avg.max(1));
+        let bd = match self.cache.as_mut() {
+            Some(c) => StepCostCache::lookup(
+                &mut c.decode,
+                &mut c.hits,
+                &mut c.misses,
+                key,
+                || perfmodel::decode_step(self.model, &self.cfg, key.0, key.1),
+            ),
+            None => perfmodel::decode_step(self.model, &self.cfg, key.0, key.1),
+        };
         StepResult { seconds: bd.seconds, watts: bd.watts, flops: bd.flops }
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     fn describe(&self) -> String {
@@ -126,5 +264,41 @@ mod tests {
     #[test]
     fn describe_names_setup() {
         assert_eq!(backend().describe(), "sim:Gaudi2:llama-8b:fp8-static");
+    }
+
+    #[test]
+    fn memoized_steps_are_bit_identical_to_recompute() {
+        let mut cached = backend();
+        let mut plain = backend();
+        plain.set_cache(false);
+        assert!(plain.cache_stats().is_none());
+        let specs: Vec<(SeqId, usize)> = (0..32).map(|i| (i, 1024)).collect();
+        let a = cached.decode(&specs); // miss: computes + stores
+        let b = cached.decode(&specs); // hit: returns the stored value
+        let c = plain.decode(&specs); // reference recompute
+        for (x, y) in [(a.seconds, b.seconds), (a.watts, b.watts), (a.flops, b.flops)] {
+            assert_eq!(x.to_bits(), y.to_bits(), "cache hit must be bit-identical");
+        }
+        for (x, y) in [(a.seconds, c.seconds), (a.watts, c.watts), (a.flops, c.flops)] {
+            assert_eq!(x.to_bits(), y.to_bits(), "cache must match recompute");
+        }
+        let p1 = cached.prefill(&[(0, 777), (1, 500)]);
+        let p2 = cached.prefill(&[(5, 500), (9, 777)]); // same (batch, max_len) key
+        assert_eq!(p1.seconds.to_bits(), p2.seconds.to_bits());
+        let cs = cached.cache_stats().unwrap();
+        assert_eq!(cs.hits, 2, "one decode hit + one prefill hit");
+        assert_eq!(cs.misses, 2, "one decode miss + one prefill miss");
+        assert!((cs.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_distinguishes_batch_and_length() {
+        let mut b = backend();
+        let one = b.decode(&[(0, 1024)]);
+        let other_len = b.decode(&[(0, 2048)]);
+        let other_batch = b.decode(&[(0, 1024), (1, 1024)]);
+        assert_ne!(one.seconds.to_bits(), other_len.seconds.to_bits());
+        assert_ne!(one.seconds.to_bits(), other_batch.seconds.to_bits());
+        assert_eq!(b.cache_stats().unwrap().misses, 3, "three distinct keys");
     }
 }

@@ -5,8 +5,17 @@
 //! admitted under (a) a token budget per step, (b) a max batch size,
 //! and (c) KV-block availability (checked against the *full* future
 //! context so admitted sequences never deadlock mid-decode).
+//!
+//! Complexity contract (DESIGN.md §9): the decode half of the batch is
+//! an *incrementally maintained* sorted set — the engine marks every
+//! state transition (prefill completion, finish, preemption, bounce
+//! resume) and `plan_step` snapshots the set instead of rescanning and
+//! re-sorting the whole sequence map, so planning one step costs
+//! O(batch + admissions), independent of how many requests the engine
+//! has ever served. Debug builds cross-check the set against a full
+//! scan every step, so every test run audits the index.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 use super::kv_cache::BlockAllocator;
 use super::request::{RequestState, SeqId, SeqRole, Sequence};
@@ -58,15 +67,32 @@ pub fn migration_footprint_tokens(context_len: usize) -> usize {
 pub struct Batcher {
     pub cfg: BatcherConfig,
     queue: VecDeque<SeqId>,
+    /// Sequences currently in [`RequestState::Decoding`], kept sorted
+    /// by id (the order the old full-scan-plus-sort produced). The
+    /// engine updates it on every state transition, so `plan_step`
+    /// costs O(batch), not O(every sequence ever submitted).
+    decoding: BTreeSet<SeqId>,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, queue: VecDeque::new() }
+        Batcher { cfg, queue: VecDeque::new(), decoding: BTreeSet::new() }
     }
 
     pub fn enqueue(&mut self, id: SeqId) {
         self.queue.push_back(id);
+    }
+
+    /// A sequence entered [`RequestState::Decoding`] (prefill
+    /// completed, or a bounced prefill leg resumed). Idempotent.
+    pub fn mark_decoding(&mut self, id: SeqId) {
+        self.decoding.insert(id);
+    }
+
+    /// A sequence left [`RequestState::Decoding`] (finished or
+    /// preempted). A no-op for ids never marked.
+    pub fn unmark_decoding(&mut self, id: SeqId) {
+        self.decoding.remove(&id);
     }
 
     /// Requeue a preempted sequence at the *front* (vLLM recompute
@@ -105,14 +131,11 @@ impl Batcher {
     ) -> Admission {
         let mut adm = Admission::default();
 
-        // 1. Continue running decodes (iteration-level batching).
-        let mut decoding: Vec<SeqId> = seqs
-            .values()
-            .filter(|s| s.state == RequestState::Decoding)
-            .map(|s| s.id)
-            .collect();
-        decoding.sort_unstable();
-        adm.decodes = decoding;
+        // 1. Continue running decodes (iteration-level batching). The
+        // incremental index already holds exactly the Decoding ids in
+        // ascending order — the order the old scan-and-sort produced.
+        self.audit_decoding_index(seqs);
+        adm.decodes = self.decoding.iter().copied().collect();
 
         // 2. Admit prefills under budgets.
         let mut token_budget = self.cfg.prefill_token_budget;
@@ -163,6 +186,7 @@ impl Batcher {
             seq.blocks = blocks;
             if resume {
                 seq.state = RequestState::Decoding;
+                self.decoding.insert(cand);
                 adm.decodes.push(cand);
             } else {
                 token_budget -= seq.prompt_len;
@@ -171,6 +195,27 @@ impl Batcher {
             self.queue.pop_front();
         }
         adm
+    }
+
+    /// Debug-build cross-check: the incremental decode index must be
+    /// exactly the set a full scan of `seqs` would produce. Every test
+    /// run therefore audits the index against the reference scan on
+    /// every planned step; release builds skip the scan entirely.
+    #[inline]
+    fn audit_decoding_index(&self, seqs: &std::collections::HashMap<SeqId, Sequence>) {
+        if cfg!(debug_assertions) {
+            let mut scan: Vec<SeqId> = seqs
+                .values()
+                .filter(|s| s.state == RequestState::Decoding)
+                .map(|s| s.id)
+                .collect();
+            scan.sort_unstable();
+            let index: Vec<SeqId> = self.decoding.iter().copied().collect();
+            debug_assert_eq!(
+                index, scan,
+                "incremental decode index diverged from the reference scan"
+            );
+        }
     }
 }
 
@@ -217,13 +262,15 @@ mod tests {
     fn respects_max_batch_with_running_decodes() {
         let (mut seqs, mut alloc) = setup(1000);
         let mut b = Batcher::new(BatcherConfig { max_batch: 3, ..Default::default() });
-        // two already decoding
+        // two already decoding (marked, as the engine does on the
+        // prefill-completion transition)
         for id in [10u64, 11] {
             let mut s = Sequence::from_request(&Request {
                 id, arrival: 0.0, prompt_len: 10, output_len: 10,
             });
             s.state = RequestState::Decoding;
             seqs.insert(id, s);
+            b.mark_decoding(id);
         }
         add_seq(&mut seqs, &mut b, 0, 16, 4);
         add_seq(&mut seqs, &mut b, 1, 16, 4);

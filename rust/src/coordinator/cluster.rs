@@ -85,11 +85,9 @@ impl<B: ExecutionBackend> Cluster<B> {
             // Advance every engine to the arrival instant on the
             // shared timeline (busy engines may overshoot by the step
             // in flight; idle ones stop short and are lifted below).
-            for e in self.router.engines.iter_mut() {
-                let taken = e.step_until(r.arrival, left);
-                left = left.saturating_sub(taken);
-            }
-            if left == 0 {
+            // `step_to` skips engines whose next-event hint says they
+            // have nothing to run before the arrival.
+            if !self.router.step_to(r.arrival, &mut left) {
                 return false;
             }
             self.router.submit_at(&r);
@@ -144,20 +142,6 @@ impl<B: ExecutionBackend> ServeSim for Cluster<B> {
     fn preemptions(&self) -> u64 {
         Cluster::preemptions(self)
     }
-}
-
-/// Advance every engine of one pool toward `t` on the shared
-/// timeline, charging executed steps against the run's step budget.
-/// False when the budget is exhausted.
-fn step_pool_to<B: ExecutionBackend>(pool: &mut Router<B>, t: f64, left: &mut usize) -> bool {
-    for e in pool.engines.iter_mut() {
-        let taken = e.step_until(t, *left);
-        *left = (*left).saturating_sub(taken);
-        if *left == 0 {
-            return false;
-        }
-    }
-    true
 }
 
 /// What a migration event means when it fires (chunked streaming
@@ -350,7 +334,7 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
             // (shorter) transfer *earlier*. Stepping + harvesting
             // here guarantees the heap holds every event with
             // t <= t_ev, and the popped minimum is the true next one.
-            if !step_pool_to(&mut self.prefill, t_ev, left) {
+            if !self.prefill.step_to(t_ev, left) {
                 return false;
             }
             self.harvest();
@@ -359,7 +343,7 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
                 return false;
             }
         }
-        if !step_pool_to(&mut self.prefill, t, left) {
+        if !self.prefill.step_to(t, left) {
             return false;
         }
         self.harvest();
@@ -430,6 +414,7 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
     /// Returns the number of bounces this pass.
     fn harvest(&mut self) -> usize {
         let mut bounced = 0;
+        let mut bounced_srcs: Vec<usize> = Vec::new();
         for (src, e) in self.prefill.engines.iter_mut().enumerate() {
             for id in e.take_handoffs() {
                 let (context_len, finished_at, arrival) = {
@@ -452,6 +437,7 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
                     // finish the request colocated.
                     e.resume_bounced(id, out - 1);
                     bounced += 1;
+                    bounced_srcs.push(src);
                     continue;
                 }
                 let bytes = context_len as f64 * self.kv_bytes_per_token;
@@ -486,6 +472,11 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
                 }
             }
         }
+        // A bounce injected decode work outside the router's submit
+        // paths: invalidate those engines' next-event hints.
+        for src in bounced_srcs {
+            self.prefill.note_mutation(src);
+        }
         bounced
     }
 
@@ -493,20 +484,20 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
     fn fire(&mut self, tr: Transfer, left: &mut usize) -> bool {
         match tr.kind {
             TransferEvent::Single => {
-                if !step_pool_to(&mut self.decode, tr.t, left) {
+                if !self.decode.step_to(tr.t, left) {
                     return false;
                 }
-                self.prefill.engines[tr.src].release_migrated(tr.id);
+                self.prefill.release_migrated_on(tr.src, tr.id);
                 self.deliver(&tr);
             }
             TransferEvent::Deliver => {
-                if !step_pool_to(&mut self.decode, tr.t, left) {
+                if !self.decode.step_to(tr.t, left) {
                     return false;
                 }
                 self.deliver(&tr);
             }
             TransferEvent::Release => {
-                self.prefill.engines[tr.src].release_migrated(tr.id);
+                self.prefill.release_migrated_on(tr.src, tr.id);
             }
         }
         true
@@ -643,7 +634,7 @@ impl<B: ExecutionBackend> PhaseAffinityCluster<B> {
             if !self.disagg.advance_to(r.arrival, &mut left) {
                 return false;
             }
-            if !step_pool_to(&mut self.colocated, r.arrival, &mut left) {
+            if !self.colocated.step_to(r.arrival, &mut left) {
                 return false;
             }
             if self.routes_disagg(&r) {

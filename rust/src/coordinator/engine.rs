@@ -78,15 +78,25 @@ impl EngineConfig {
 pub struct Engine<B: ExecutionBackend> {
     pub backend: B,
     pub metrics: Metrics,
+    /// The *hot* map: only sequences that are still live (queued,
+    /// decoding, preempted, or holding KV for an in-flight migration
+    /// hand-off). Finished sequences move to `archive`, so per-step
+    /// work scales with active load, not with trace length
+    /// (DESIGN.md §9).
     seqs: HashMap<SeqId, Sequence>,
+    /// Harvest archive: finished sequences, kept for post-run
+    /// inspection (`sequences`, `sequence`) off the hot path. A
+    /// hand-off leg parks here with its KV blocks until
+    /// `release_migrated` / `resume_bounced` settles the migration.
+    archive: HashMap<SeqId, Sequence>,
     batcher: Batcher,
     alloc: BlockAllocator,
     policy: SchedulerPolicy,
     clock: f64,
     preemptions: u64,
-    /// Sequences not yet Finished — `seqs` retains finished entries
-    /// for post-run inspection, so `pending()` must not rescan it
-    /// (the cluster loop and `LeastLoaded` routing call it per step).
+    /// Sequences not yet Finished — `pending()` must not rescan the
+    /// maps (the cluster loop and `LeastLoaded` routing call it per
+    /// step).
     active: usize,
     /// Prefill legs whose prefill finished and whose KV awaits
     /// migration to a decode pool (drained by `take_handoffs`).
@@ -99,6 +109,7 @@ impl<B: ExecutionBackend> Engine<B> {
             backend,
             metrics: Metrics::new(),
             seqs: HashMap::new(),
+            archive: HashMap::new(),
             batcher: Batcher::new(cfg.batcher),
             alloc: BlockAllocator::new(cfg.kv),
             policy: cfg.policy,
@@ -129,7 +140,14 @@ impl<B: ExecutionBackend> Engine<B> {
     /// ones included) — cluster tests and fairness audits read
     /// per-request timestamps through this.
     pub fn sequences(&self) -> impl Iterator<Item = &Sequence> + '_ {
-        self.seqs.values()
+        self.seqs.values().chain(self.archive.values())
+    }
+
+    /// Finished sequences parked in the harvest archive — the resident
+    /// history the hot path must *not* scale with (asserted by
+    /// `benches/perf_hotpath.rs`).
+    pub fn finished_resident(&self) -> usize {
+        self.archive.len()
     }
 
     /// Submit a request (the router's entry point). Does NOT move the
@@ -206,7 +224,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// emission instant; the bounce is counted in
     /// [`Metrics::bounces`].
     pub fn resume_bounced(&mut self, id: SeqId, remaining_out: usize) {
-        let seq = self.seqs.get_mut(&id).expect("bounced sequence exists");
+        let mut seq = self.archive.remove(&id).expect("bounced sequence exists");
         debug_assert_eq!(seq.role, SeqRole::PrefillLeg, "only prefill legs bounce");
         debug_assert_eq!(seq.state, RequestState::Finished, "bounce follows handoff");
         seq.role = SeqRole::Full;
@@ -224,12 +242,15 @@ impl<B: ExecutionBackend> Engine<B> {
             let mut blocks = std::mem::take(&mut seq.blocks);
             self.alloc.release(&mut blocks);
             self.metrics.record_finish(arrival, first, finished, out);
+            self.archive.insert(id, seq);
             return;
         }
         seq.state = RequestState::Decoding;
         seq.output_len += remaining_out;
         seq.finished_at = None;
         self.active += 1;
+        self.batcher.mark_decoding(id);
+        self.seqs.insert(id, seq);
     }
 
     /// Drain the handoff queue: prefill legs whose prefill finished
@@ -241,9 +262,10 @@ impl<B: ExecutionBackend> Engine<B> {
     /// Release a handed-off sequence's KV blocks once its migration to
     /// the decode pool completes — in-flight transfers keep their
     /// source blocks resident until then, so a saturated prefill pool
-    /// back-pressures on slow fabrics.
+    /// back-pressures on slow fabrics. The finished leg lives in the
+    /// harvest archive by the time its transfer settles.
     pub fn release_migrated(&mut self, id: SeqId) {
-        if let Some(seq) = self.seqs.get_mut(&id) {
+        if let Some(seq) = self.archive.get_mut(&id).or_else(|| self.seqs.get_mut(&id)) {
             let mut blocks = std::mem::take(&mut seq.blocks);
             self.alloc.release(&mut blocks);
         }
@@ -275,7 +297,7 @@ impl<B: ExecutionBackend> Engine<B> {
             }
         }
         let step_plan = plan(self.policy, adm);
-        match step_plan {
+        let ran = match step_plan {
             StepPlan::Idle => false,
             StepPlan::Prefill(ids) => {
                 self.run_prefill(&ids);
@@ -297,7 +319,16 @@ impl<B: ExecutionBackend> Engine<B> {
                 self.clock = t0 + t_pre.max(t_dec);
                 true
             }
+        };
+        if ran {
+            // Mirror the backend's cumulative step-cost cache counters
+            // (memoizing backends only) so cluster rollups report them.
+            if let Some(cs) = self.backend.cache_stats() {
+                self.metrics.step_cache_hits = cs.hits;
+                self.metrics.step_cache_misses = cs.misses;
+            }
         }
+        ran
     }
 
     /// Advance virtual time toward `t`: execute steps while the clock
@@ -373,6 +404,7 @@ impl<B: ExecutionBackend> Engine<B> {
                 Emit::Defer => {}
                 Emit::Restart => self.metrics.record_restart(),
             }
+            self.batcher.mark_decoding(*id);
             self.finish_if_done(*id);
         }
         self.metrics.record_step(res.seconds, res.watts, res.flops, n);
@@ -417,10 +449,13 @@ impl<B: ExecutionBackend> Engine<B> {
         if !done {
             return;
         }
-        let seq = self.seqs.get_mut(&id).unwrap();
+        // Finished: out of the hot map and the decode index, into the
+        // harvest archive — per-step cost stays O(active).
+        let mut seq = self.seqs.remove(&id).unwrap();
         seq.state = RequestState::Finished;
         seq.finished_at = Some(self.clock);
         self.active -= 1;
+        self.batcher.unmark_decoding(id);
         if seq.role == SeqRole::PrefillLeg {
             // Handoff: the KV blocks stay resident until the migration
             // completes (`release_migrated`); request-level metrics
@@ -429,6 +464,7 @@ impl<B: ExecutionBackend> Engine<B> {
             // handoff queue to start the transfer.
             self.backend.release(id);
             self.handoffs.push(id);
+            self.archive.insert(id, seq);
             return;
         }
         let arrival = seq.origin_arrival.unwrap_or(seq.arrival);
@@ -440,6 +476,7 @@ impl<B: ExecutionBackend> Engine<B> {
         self.alloc.release(&mut blocks);
         self.backend.release(id);
         self.metrics.record_finish(arrival, first, self.clock, out);
+        self.archive.insert(id, seq);
     }
 
     /// Evict a sequence under memory pressure: drop its KV, requeue
@@ -449,6 +486,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// re-sampled; the re-prefill is counted via `metrics.restarts`.
     fn preempt(&mut self, id: SeqId) {
         self.preemptions += 1;
+        self.batcher.unmark_decoding(id);
         let seq = self.seqs.get_mut(&id).unwrap();
         seq.state = RequestState::Preempted;
         let mut blocks = std::mem::take(&mut seq.blocks);
@@ -473,7 +511,7 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     pub fn sequence(&self, id: SeqId) -> Option<&Sequence> {
-        self.seqs.get(&id)
+        self.seqs.get(&id).or_else(|| self.archive.get(&id))
     }
 }
 

@@ -40,6 +40,13 @@ pub struct Metrics {
     /// engine that already holds the KV (recorded there).
     pub bounces: u64,
     pub steps: u64,
+    /// Cumulative step-cost cache hits of this engine's backend
+    /// (mirrored from `ExecutionBackend::cache_stats` after each step;
+    /// 0 for non-memoizing backends). Summed across engines by
+    /// [`Metrics::absorb`].
+    pub step_cache_hits: u64,
+    /// Cumulative step-cost cache misses (see `step_cache_hits`).
+    pub step_cache_misses: u64,
     pub step_time: Summary,
     /// Integrated device energy (J).
     pub energy_j: f64,
@@ -113,10 +120,22 @@ impl Metrics {
         self.kv_bytes_migrated += other.kv_bytes_migrated;
         self.bounces += other.bounces;
         self.steps += other.steps;
+        self.step_cache_hits += other.step_cache_hits;
+        self.step_cache_misses += other.step_cache_misses;
         self.step_time.absorb(&other.step_time);
         self.energy_j += other.energy_j;
         self.flops += other.flops;
         self.span += other.span;
+    }
+
+    /// Step-cost cache hit rate across every lookup the backend(s)
+    /// served (0 when nothing was looked up / nothing memoizes).
+    pub fn step_cache_hit_rate(&self) -> f64 {
+        crate::coordinator::backend::CacheStats {
+            hits: self.step_cache_hits,
+            misses: self.step_cache_misses,
+        }
+        .hit_rate()
     }
 
     /// Mean device draw over the busy span (W; 0 when nothing ran).
@@ -159,7 +178,8 @@ impl Metrics {
         format!(
             "requests={} tokens_out={} span={:.2}s tok/s={:.1} \
              TTFT p50/p95={:.3}/{:.3}s TPOT p50/p95={:.4}/{:.4}s \
-             J/token={:.2} model TFLOP/s={:.2} restarts={} migrations={} bounces={}",
+             J/token={:.2} model TFLOP/s={:.2} restarts={} migrations={} bounces={} \
+             cache_hit={:.3}",
             self.requests_done,
             self.tokens_out,
             self.span,
@@ -173,6 +193,7 @@ impl Metrics {
             self.restarts,
             self.migrations,
             self.bounces,
+            self.step_cache_hit_rate(),
         )
     }
 }
@@ -258,6 +279,21 @@ mod tests {
         assert_eq!(a.migrations, 3);
         assert!((a.kv_bytes_migrated - 6e6).abs() < 1e-9);
         assert_eq!(a.bounces, 2);
+    }
+
+    #[test]
+    fn cache_counters_absorb_and_rate() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        assert_eq!(a.step_cache_hit_rate(), 0.0, "no lookups: rate 0");
+        a.step_cache_hits = 3;
+        a.step_cache_misses = 1;
+        b.step_cache_hits = 5;
+        b.step_cache_misses = 7;
+        a.absorb(&b);
+        assert_eq!(a.step_cache_hits, 8);
+        assert_eq!(a.step_cache_misses, 8);
+        assert!((a.step_cache_hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 
-pub use backend::{ExecutionBackend, SimBackend};
+pub use backend::{CacheStats, ExecutionBackend, SimBackend, StepCostCache};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::{
     disagg_sim_cluster, phase_affinity_sim_cluster, sharded_sim_cluster, sim_cluster, Cluster,

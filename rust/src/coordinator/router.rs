@@ -38,6 +38,15 @@ pub struct Router<B: ExecutionBackend> {
     policy: RoutePolicy,
     rr_next: usize,
     routed: Vec<u64>,
+    /// Per-engine next-event hint: engine `i` executes no step before
+    /// `hints[i]`, so [`Router::step_to`] skips it for targets at or
+    /// below the hint instead of re-entering its step loop on every
+    /// cluster event (DESIGN.md §9). `-inf` = unknown (must check);
+    /// `+inf` = idle with an empty queue (nothing to do until new work
+    /// arrives). Every path that injects work — the submit methods,
+    /// [`Router::release_migrated_on`], [`Router::note_mutation`] —
+    /// resets the hint, so a stale hint is always conservative.
+    hints: Vec<f64>,
 }
 
 impl<B: ExecutionBackend> Router<B> {
@@ -46,7 +55,14 @@ impl<B: ExecutionBackend> Router<B> {
         assert_eq!(engines.len(), ratings.len());
         assert!(!engines.is_empty());
         let n = engines.len();
-        Router { engines, ratings, policy, rr_next: 0, routed: vec![0; n] }
+        Router {
+            engines,
+            ratings,
+            policy,
+            rr_next: 0,
+            routed: vec![0; n],
+            hints: vec![f64::NEG_INFINITY; n],
+        }
     }
 
     /// Pick a target engine for a request (does not submit).
@@ -90,6 +106,7 @@ impl<B: ExecutionBackend> Router<B> {
         let i = self.select(r);
         self.engines[i].submit(r);
         self.routed[i] += 1;
+        self.hints[i] = f64::NEG_INFINITY;
         i
     }
 
@@ -104,6 +121,7 @@ impl<B: ExecutionBackend> Router<B> {
         self.engines[i].advance_to(r.arrival);
         self.engines[i].submit(r);
         self.routed[i] += 1;
+        self.hints[i] = f64::NEG_INFINITY;
         i
     }
 
@@ -115,6 +133,7 @@ impl<B: ExecutionBackend> Router<B> {
         self.engines[i].advance_to(r.arrival);
         self.engines[i].submit_handoff(r);
         self.routed[i] += 1;
+        self.hints[i] = f64::NEG_INFINITY;
         i
     }
 
@@ -134,6 +153,7 @@ impl<B: ExecutionBackend> Router<B> {
         self.engines[i].advance_to(m.at);
         self.engines[i].submit_migrated(m);
         self.routed[i] += 1;
+        self.hints[i] = f64::NEG_INFINITY;
         i
     }
 
@@ -159,10 +179,60 @@ impl<B: ExecutionBackend> Router<B> {
                 self.engines[i].advance_to(m.at);
                 self.engines[i].submit_migrated(m);
                 self.routed[i] += 1;
+                self.hints[i] = f64::NEG_INFINITY;
                 i
             }
             None => self.submit_migrated_at(m),
         }
+    }
+
+    /// Release engine `i`'s in-flight KV for a completed migration and
+    /// invalidate its next-event hint — freed blocks can unblock a
+    /// stalled prefill queue, so the engine must be re-checked.
+    pub fn release_migrated_on(&mut self, i: usize, id: super::request::SeqId) {
+        self.engines[i].release_migrated(id);
+        self.hints[i] = f64::NEG_INFINITY;
+    }
+
+    /// Invalidate engine `i`'s next-event hint after work was injected
+    /// outside the router's submit paths (e.g. an admission bounce
+    /// resumed decoding directly on the engine).
+    pub fn note_mutation(&mut self, i: usize) {
+        self.hints[i] = f64::NEG_INFINITY;
+    }
+
+    /// Advance every engine toward `t` on the shared timeline,
+    /// charging executed steps against `left` (the run's step budget).
+    /// False when the budget is exhausted. Engines whose next-event
+    /// hint is at or past `t` are skipped — idle engines cost one
+    /// float compare per event instead of a step-loop re-entry, so
+    /// cluster event processing is O(engines with runnable work).
+    pub fn step_to(&mut self, t: f64, left: &mut usize) -> bool {
+        if *left == 0 {
+            return false;
+        }
+        for i in 0..self.engines.len() {
+            if self.hints[i] >= t {
+                continue;
+            }
+            let e = &mut self.engines[i];
+            let taken = e.step_until(t, *left);
+            *left = (*left).saturating_sub(taken);
+            self.hints[i] = if self.engines[i].pending() == 0 {
+                // Empty queue: nothing can run until new work arrives
+                // (every arrival path resets the hint).
+                f64::INFINITY
+            } else {
+                // Busy (next step begins at its clock) or stalled on
+                // KV back-pressure (re-check past `t`; the release
+                // path resets the hint explicitly).
+                self.engines[i].clock().max(t)
+            };
+            if *left == 0 {
+                return false;
+            }
+        }
+        true
     }
 
     pub fn routed_counts(&self) -> &[u64] {

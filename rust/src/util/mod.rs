@@ -3,10 +3,12 @@
 //! The offline vendored crate set has no `serde`/`serde_json`, no
 //! `rand`, and no `criterion`, so this module provides the small,
 //! fully-tested replacements the rest of the crate builds on:
-//! a JSON parser/writer, a seeded PRNG, streaming statistics, and an
-//! ASCII table printer used by every table/figure regeneration bench.
+//! a JSON parser/writer, a seeded PRNG, streaming statistics, an
+//! ASCII table printer used by every table/figure regeneration bench,
+//! and a scoped-thread parallel map ([`par`]) driving the sweep grids.
 
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,197 @@
+//! Dependency-free data parallelism for sweep grids.
+//!
+//! The vendored crate set has no `rayon`, so [`par_map`] provides the
+//! one primitive the benches and examples need: map a function over a
+//! work list on scoped OS threads (`std::thread::scope`) and return
+//! the results **in input order**. Determinism contract (DESIGN.md
+//! §9): every grid point must be self-contained — it builds its own
+//! simulator state and derives randomness from its own seed (see
+//! [`point_seed`]) — so the output is a pure function of the input
+//! list, and parallel and serial execution produce byte-identical
+//! downstream artifacts (`BENCH_*.json`, tables). `PAR=0` (or `PAR=1`)
+//! forces the serial path as an escape hatch; any other value sets the
+//! worker count; unset uses the machine's available parallelism.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Worker count for sweep grids: the `PAR` env var when set (`0`/`1` =
+/// serial escape hatch, anything unparsable = serial), otherwise the
+/// machine's available parallelism.
+pub fn sweep_threads() -> usize {
+    match std::env::var("PAR") {
+        Ok(v) => v.trim().parse::<usize>().unwrap_or(1).max(1),
+        Err(_) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped threads, returning
+/// results in input order. `f` receives `(index, item)`; it must be
+/// `Sync` (shared by reference across workers) and self-contained per
+/// point. `threads <= 1` (or a single-item list) runs serially on the
+/// calling thread with zero spawn overhead — the `PAR=0` escape hatch
+/// bottoms out here. A panicking point propagates its panic to the
+/// caller after the scope unwinds.
+pub fn par_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(usize, T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    // Shared FIFO of (index, item): workers pull the next point as
+    // they free up (contention is negligible — points are simulator
+    // runs, not microtasks) and tag results with the input index.
+    let queue: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let buckets: Vec<Vec<(usize, U)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let next = queue.lock().unwrap().pop_front();
+                        match next {
+                            Some((i, x)) => out.push((i, f(i, x))),
+                            None => break,
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    });
+    let mut results: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    for (i, u) in buckets.into_iter().flatten() {
+        debug_assert!(results[i].is_none(), "point {i} computed twice");
+        results[i] = Some(u);
+    }
+    results
+        .into_iter()
+        .map(|o| o.expect("every point computed exactly once"))
+        .collect()
+}
+
+/// Deterministic per-point seed: mixes a base seed with the point's
+/// grid index (splitmix64 finalizer) so concurrent points never share
+/// a random stream yet every run — serial or parallel — derives the
+/// same seed for the same point.
+pub fn point_seed(base: u64, idx: usize) -> u64 {
+    let mut z = base ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Sweep-grid driver: the one-liner the benches and examples use to
+/// evaluate independent grid points concurrently. Holds the point list
+/// and a worker count (default: [`sweep_threads`], i.e. the `PAR` env
+/// contract) and maps a point-evaluation function over it with
+/// order-preserving [`par_map`] — callers render tables / JSON from
+/// the returned Vec exactly as the serial loop did, so output bytes do
+/// not depend on the worker count.
+pub struct SweepGrid<P> {
+    points: Vec<P>,
+    threads: usize,
+}
+
+impl<P: Send> SweepGrid<P> {
+    pub fn new(points: Vec<P>) -> Self {
+        SweepGrid { points, threads: sweep_threads() }
+    }
+
+    /// Override the worker count (tests pin serial vs parallel
+    /// explicitly instead of mutating the process environment).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Evaluate every point, returning results in point order.
+    pub fn run<U: Send>(self, f: impl Fn(usize, P) -> U + Sync) -> Vec<U> {
+        par_map(self.points, self.threads, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_results_any_thread_count() {
+        let items: Vec<usize> = (0..97).collect();
+        let expect: Vec<usize> = items.iter().map(|x| x * x).collect();
+        for threads in [1, 2, 4, 16, 200] {
+            let got = par_map(items.clone(), threads, |_, x| x * x);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn index_matches_item_position() {
+        let got = par_map(vec![10, 20, 30], 3, |i, x| (i, x));
+        assert_eq!(got, vec![(0, 10), (1, 20), (2, 30)]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = par_map(Vec::<u32>::new(), 8, |_, x| x);
+        assert!(empty.is_empty());
+        assert_eq!(par_map(vec![7], 8, |_, x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn serial_and_parallel_bitwise_equal_floats() {
+        // The determinism contract benches rely on: same inputs, same
+        // bits, regardless of worker count or completion order.
+        let items: Vec<u64> = (0..50).collect();
+        let f = |i: usize, s: u64| {
+            let mut rng = crate::util::rng::Rng::new(point_seed(s, i));
+            (0..100).map(|_| rng.normal()).sum::<f64>()
+        };
+        let serial = par_map(items.clone(), 1, f);
+        let parallel = par_map(items, 8, f);
+        let a: Vec<u64> = serial.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u64> = parallel.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn point_seed_is_deterministic_and_spreads() {
+        assert_eq!(point_seed(7, 3), point_seed(7, 3));
+        assert_ne!(point_seed(7, 3), point_seed(7, 4));
+        assert_ne!(point_seed(7, 3), point_seed(8, 3));
+        // Index 0 must not collapse to the base seed's raw stream for
+        // every base (the finalizer still mixes).
+        assert_ne!(point_seed(1, 0), 1);
+    }
+
+    #[test]
+    fn sweep_grid_runs_ordered() {
+        let rows = SweepGrid::new((0..20).collect::<Vec<i64>>())
+            .with_threads(4)
+            .run(|i, x| format!("{i}:{x}"));
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(*row, format!("{i}:{i}"));
+        }
+    }
+}

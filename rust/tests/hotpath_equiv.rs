@@ -1,0 +1,285 @@
+//! Equivalence and hygiene tests for the simulator hot-path overhaul
+//! (DESIGN.md §9).
+//!
+//! * The *indexed batcher* (incrementally maintained decode set) is
+//!   audited against the reference full-scan on every planned step in
+//!   debug builds — every test in this suite (and the whole tier-1
+//!   run) therefore exercises that equivalence on colocated,
+//!   disaggregated and PhaseAffinity timelines, including preemption,
+//!   resume and bounce transitions.
+//! * The *memoized backend* must be a pure transparent cache: a cached
+//!   run and an always-recompute run of the same trace produce
+//!   bit-identical metrics and makespans.
+//! * `par_map` sweeps must match serial sweeps probe-for-probe.
+//! * `ExecutionBackend::release` must fire for every sequence that
+//!   leaves service — finished ones included — so per-sequence backend
+//!   state cannot leak across a long trace.
+
+use std::collections::{HashMap, HashSet};
+
+use fp8_tco::analysis::disagg::{DisaggPlan, PhaseAffinityPlan, PoolSpec};
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::{PrecisionMode, StepConfig};
+use fp8_tco::coordinator::backend::StepResult;
+use fp8_tco::coordinator::cluster::{
+    disagg_sim_cluster, measure_load, phase_affinity_sim_cluster, sim_cluster, LoadPoint,
+    SloSpec,
+};
+use fp8_tco::coordinator::router::Router;
+use fp8_tco::coordinator::{
+    Engine, EngineConfig, ExecutionBackend, KvCacheConfig, Metrics, SeqId, SimBackend,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::util::par::par_map;
+use fp8_tco::workload::llama::by_name;
+use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
+
+/// Everything a simulation outcome is made of, with floats as bits —
+/// two runs compare equal iff they were bit-identical. Cache counters
+/// are deliberately excluded: they are the one legitimate difference
+/// between a cached and an uncached run.
+fn fingerprint(makespan: f64, m: &Metrics) -> Vec<u64> {
+    vec![
+        makespan.to_bits(),
+        m.tokens_out,
+        m.requests_done,
+        m.restarts,
+        m.migrations,
+        m.bounces,
+        m.steps,
+        m.kv_bytes_migrated.to_bits(),
+        m.energy_j.to_bits(),
+        m.flops.to_bits(),
+        m.span.to_bits(),
+        m.ttft.pct(50.0).to_bits(),
+        m.ttft.pct(95.0).to_bits(),
+        m.tpot.pct(50.0).to_bits(),
+        m.tpot.pct(95.0).to_bits(),
+        m.e2e_latency.pct(95.0).to_bits(),
+    ]
+}
+
+fn uncache(router: &mut Router<SimBackend>) {
+    for e in router.engines.iter_mut() {
+        e.backend.set_cache(false);
+    }
+}
+
+fn trace(n: usize) -> Vec<Request> {
+    TraceGenerator::new(TraceConfig::chat(4.0), 23).take(n)
+}
+
+fn small_disagg_plan() -> DisaggPlan {
+    DisaggPlan::new(
+        PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::single()),
+        PoolSpec::new(
+            Device::Gaudi2,
+            PrecisionMode::fp8_static(),
+            ParallelismPlan::single().with_replicas(2),
+        ),
+    )
+}
+
+#[test]
+fn memoized_backend_bit_identical_colocated() {
+    let run = |cached: bool| {
+        let mut c = sim_cluster(Device::H100, PrecisionMode::fp8_static(), 2);
+        if !cached {
+            uncache(&mut c.router);
+        }
+        assert!(c.run(trace(80)), "trace must drain");
+        let m = c.merged_metrics();
+        if cached {
+            assert!(
+                m.step_cache_hits + m.step_cache_misses > 0,
+                "cached run must actually exercise the cache"
+            );
+        } else {
+            assert_eq!(m.step_cache_hits + m.step_cache_misses, 0);
+        }
+        fingerprint(c.makespan(), &m)
+    };
+    assert_eq!(run(true), run(false), "cache must be a transparent memoization");
+}
+
+#[test]
+fn memoized_backend_bit_identical_disagg_chunked_admission() {
+    let model = by_name("llama-8b").unwrap();
+    let run = |cached: bool| {
+        let mut c = disagg_sim_cluster(model, &small_disagg_plan())
+            .expect("8B fits")
+            .with_streaming(8, true);
+        if !cached {
+            uncache(&mut c.prefill);
+            uncache(&mut c.decode);
+        }
+        assert!(c.run(trace(60)), "trace must drain");
+        fingerprint(c.makespan(), &c.merged_metrics())
+    };
+    assert_eq!(run(true), run(false));
+}
+
+#[test]
+fn memoized_backend_bit_identical_phase_affinity() {
+    let model = by_name("llama-8b").unwrap();
+    let plan = PhaseAffinityPlan::new(
+        PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::single()),
+        small_disagg_plan(),
+        512,
+    );
+    let run = |cached: bool| {
+        let mut c = phase_affinity_sim_cluster(model, &plan)
+            .expect("8B fits")
+            .with_streaming(8, true);
+        if !cached {
+            uncache(&mut c.colocated);
+            uncache(&mut c.disagg.prefill);
+            uncache(&mut c.disagg.decode);
+        }
+        assert!(c.run(trace(60)), "trace must drain");
+        fingerprint(c.makespan(), &c.merged_metrics())
+    };
+    assert_eq!(run(true), run(false));
+}
+
+#[test]
+fn par_map_sweep_matches_serial_probe_for_probe() {
+    let slo = SloSpec::interactive();
+    let grid: Vec<f64> = vec![0.5, 1.0, 2.0, 4.0, 8.0];
+    let probe = |qps: f64| {
+        measure_load(
+            &|| sim_cluster(Device::Gaudi2, PrecisionMode::fp8_static(), 2),
+            &TraceConfig::chat,
+            qps,
+            40,
+            7,
+            &slo,
+        )
+    };
+    let serial: Vec<LoadPoint> = par_map(grid.clone(), 1, |_, q| probe(q));
+    let parallel: Vec<LoadPoint> = par_map(grid, 4, |_, q| probe(q));
+    // Debug formatting prints every f64 exactly (shortest roundtrip),
+    // so equal strings mean equal bits, probe for probe.
+    assert_eq!(format!("{serial:?}"), format!("{parallel:?}"));
+}
+
+#[test]
+fn archive_keeps_finished_sequences_inspectable() {
+    // Finished sequences leave the hot map but must stay readable
+    // through the same APIs (post-run inspection contract).
+    let mut c = sim_cluster(Device::H100, PrecisionMode::fp8_static(), 2);
+    let reqs = trace(30);
+    let n = reqs.len() as u64;
+    assert!(c.run(reqs));
+    let seen: usize = c.router.engines.iter().map(|e| e.sequences().count()).sum();
+    assert_eq!(seen as u64, n, "every request inspectable after finishing");
+    for e in &c.router.engines {
+        assert_eq!(e.pending(), 0);
+        assert_eq!(
+            e.finished_resident(),
+            e.sequences().count(),
+            "all sequences finished => all archived"
+        );
+        for s in e.sequences() {
+            assert!(s.finished_at.is_some(), "archived sequence keeps its timestamps");
+        }
+    }
+}
+
+/// Wrapper backend that records which sequences currently hold backend
+/// state (`live`: touched by prefill/decode, not yet released) and how
+/// often each id was released.
+struct ReleaseAudit {
+    inner: SimBackend,
+    live: HashSet<SeqId>,
+    released: HashMap<SeqId, u32>,
+}
+
+impl ReleaseAudit {
+    fn new() -> Self {
+        ReleaseAudit {
+            inner: SimBackend::new(
+                by_name("llama-8b").unwrap(),
+                StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()),
+            ),
+            live: HashSet::new(),
+            released: HashMap::new(),
+        }
+    }
+}
+
+impl ExecutionBackend for ReleaseAudit {
+    fn prefill(&mut self, seqs: &[(SeqId, usize)]) -> StepResult {
+        for &(id, _) in seqs {
+            self.live.insert(id);
+        }
+        self.inner.prefill(seqs)
+    }
+
+    fn decode(&mut self, seqs: &[(SeqId, usize)]) -> StepResult {
+        for &(id, _) in seqs {
+            self.live.insert(id);
+        }
+        self.inner.decode(seqs)
+    }
+
+    fn release(&mut self, id: SeqId) {
+        self.live.remove(&id);
+        *self.released.entry(id).or_insert(0) += 1;
+        self.inner.release(id);
+    }
+
+    fn describe(&self) -> String {
+        format!("release-audit:{}", self.inner.describe())
+    }
+}
+
+fn audit_engine(total_blocks: usize) -> Engine<ReleaseAudit> {
+    let kv = KvCacheConfig { block_tokens: 16, total_blocks };
+    Engine::new(EngineConfig::new(kv), ReleaseAudit::new())
+}
+
+#[test]
+fn release_fires_for_finished_sequences_no_backend_leak() {
+    // Pressure workload: finishes AND preemptions AND clean finishes —
+    // every sequence that ever touched the backend must be released by
+    // the end, finished ones included (not just evicted ones).
+    let mut e = audit_engine(8);
+    for i in 0..3u64 {
+        e.submit(&Request { id: i, arrival: 0.0, prompt_len: 32, output_len: 40 });
+    }
+    e.submit(&Request { id: 3, arrival: 0.5, prompt_len: 16, output_len: 4 });
+    assert!(e.run_to_completion(100_000));
+    assert!(e.preemptions() > 0, "pressure must preempt");
+    assert_eq!(e.metrics.requests_done, 4);
+    assert!(
+        e.backend.live.is_empty(),
+        "backend state leaked for {:?}",
+        e.backend.live
+    );
+    for id in 0..4u64 {
+        assert!(
+            e.backend.released.get(&id).copied().unwrap_or(0) >= 1,
+            "finished sequence {id} never released"
+        );
+    }
+}
+
+#[test]
+fn release_fires_for_handoff_legs_and_bounces() {
+    // A prefill leg releases backend state when its prefill finishes
+    // (the KV blocks stay for the migration, backend state must not);
+    // a bounced leg decodes again and releases again at its real end.
+    let mut e = audit_engine(1000);
+    e.submit_handoff(&Request { id: 0, arrival: 0.0, prompt_len: 100, output_len: 40 });
+    assert!(e.run_to_completion(1000));
+    assert_eq!(e.take_handoffs(), vec![0]);
+    assert!(e.backend.live.is_empty(), "handoff leg must release at prefill finish");
+    assert_eq!(e.backend.released[&0], 1);
+    e.resume_bounced(0, 39);
+    assert!(e.run_to_completion(10_000));
+    assert_eq!(e.metrics.requests_done, 1);
+    assert!(e.backend.live.is_empty(), "bounced leg must release at its real end");
+    assert_eq!(e.backend.released[&0], 2);
+    assert_eq!(e.kv_utilization(), 0.0);
+}
