@@ -45,10 +45,10 @@ fn main() {
                     prec.name().into(),
                     s.to_string(),
                     f(bd.seconds * 1e3, 2),
-                    f(bd.t_linears * 1e3, 2),
-                    f(bd.t_attention_kv * 1e3, 2),
-                    f(bd.t_softmax * 1e3, 3),
-                    f(bd.t_lm_head * 1e3, 2),
+                    f(bd.t_linears_s * 1e3, 2),
+                    f(bd.t_attention_kv_s * 1e3, 2),
+                    f(bd.t_softmax_s * 1e3, 3),
+                    f(bd.t_lm_head_s * 1e3, 2),
                     f(64.0 / bd.seconds, 0),
                     f(model.decode_ci(64, s, w_bytes, 2.0), 1),
                 ]);

@@ -32,7 +32,7 @@ use fp8_tco::coordinator::cluster::{
     replay_disagg_point, sharded_sim_cluster, SloSpec, SweepConfig,
 };
 use fp8_tco::hwsim::spec::Device;
-use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::tco::{assumed_server_price_usd, InfraModel, RackConfig};
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama::by_name;
 use fp8_tco::workload::trace::{TraceConfig, TraceGenerator};
@@ -143,7 +143,7 @@ fn main() {
                 );
                 colo.best.map(|p| {
                     let cost = infra.cost_per_mtok_sharded(
-                        assumed_server_price(Device::H100),
+                        assumed_server_price_usd(Device::H100),
                         colo_plan.total_chips(),
                         p.watts_mean,
                         p.tokens_per_sec,
@@ -184,7 +184,8 @@ fn main() {
                             TraceConfig::chat(p.qps),
                             sweep.n_requests,
                             sweep.seed,
-                        );
+                        )
+                        .expect("plan was feasible for the probe");
                         let cost = infra.cost_per_mtok_disagg_plan(
                             &plan,
                             pm.watts_mean(),
@@ -234,7 +235,8 @@ fn main() {
                         TraceConfig::chat(p.qps),
                         sweep.n_requests,
                         sweep.seed,
-                    );
+                    )
+                    .expect("plan was feasible for the probe");
                     let cost = infra.cost_per_mtok_phase_affinity_plan(
                         &affinity,
                         cm.watts_mean(),

@@ -23,7 +23,7 @@ use fp8_tco::coordinator::cluster::{
     max_sustainable_qps, sharded_sim_cluster, SloSpec, SweepConfig,
 };
 use fp8_tco::hwsim::spec::Device;
-use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::tco::{assumed_server_price_usd, InfraModel, RackConfig};
 use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama::by_name;
@@ -91,7 +91,7 @@ fn main() {
                                 f(fit.weight_bytes_per_chip / 1e9, 1),
                                 f(fit.max_kv_tokens as f64 / 1e3, 0),
                                 f(bd.seconds * 1e3, 3),
-                                f(bd.t_tp_comm * 1e3, 3),
+                                f(bd.t_tp_comm_s * 1e3, 3),
                                 f(bd.pp_bubble_frac, 2),
                                 f(tok_per_chip, 0),
                             ]);
@@ -162,7 +162,7 @@ fn main() {
                     // the $/Mtok axis Eq. 1 compares across vendors
                     // (cost_per_mtok under the hood).
                     let cost = infra.cost_per_mtok_sharded(
-                        assumed_server_price(dev),
+                        assumed_server_price_usd(dev),
                         plan.total_chips(),
                         p.watts_mean,
                         p.tokens_per_sec,

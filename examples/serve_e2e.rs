@@ -9,6 +9,8 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve_e2e`
 
+// simlint: allow-file(determinism) -- end-to-end driver timing real PJRT execution with wall-clock
+
 use fp8_tco::analysis::perfmodel::{PrecisionMode, StepConfig};
 use fp8_tco::coordinator::{
     Engine, EngineConfig, ExecutionBackend, KvCacheConfig, PjrtBackend, SimBackend,

@@ -80,7 +80,7 @@ def transfer_time(model, ctx, src, src_chips, dst, dst_chips):
 
 def chunk_done(model, ctx, src, src_chips, dst, dst_chips, chunks, i):
     """Landing time of chunk i (0-based) of a `chunks`-way stream —
-    mirrors `ChunkedTransfer::chunk_done` (same arithmetic order)."""
+    mirrors `ChunkedTransfer::chunk_done_s` (same arithmetic order)."""
     assert 0 <= i < chunks
     bw, lat = kv_link(src, src_chips, dst, dst_chips)
     bytes_ = ctx * kv_bytes_per_token(model)

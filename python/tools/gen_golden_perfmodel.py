@@ -1,0 +1,542 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/perfmodel.json from a stdlib-only mirror
+of the Rust perf model.
+
+This is the same discipline as tests/test_kv_transfer_mirror.py: an
+independent implementation of the closed-form model, kept in lock-step
+with rust/src/analysis/perfmodel.rs (and the hwsim gemm/mme/softmax/
+power models it composes), so the golden snapshot is produced by a
+second implementation rather than by the code under test. The Rust
+side (tests/golden_perfmodel.rs) compares at 1e-9 relative tolerance,
+which comfortably absorbs libm ulp differences between the two
+runtimes while pinning every structural term.
+
+Every function here mirrors its Rust namesake operation-for-operation
+(same associativity, same integer divisions) — do not "simplify" the
+arithmetic: x / a / b and x / (a * b) differ in the last ulp, and the
+point of the mirror is bit-level agreement up to libm.
+
+Run from the repo root:  python3 python/tools/gen_golden_perfmodel.py
+"""
+
+import json
+import math
+import os
+
+# --------------------------------------------------------------- spec.rs
+
+DEVICES = {
+    # name: (peak_fp8, peak_bf16, hbm_bw, vector_flops, has_sfu,
+    #        tdp, idle_w, engine, clock_hz)
+    "H100": dict(
+        peak_fp8=1989.9e12, peak_bf16=989.4e12, hbm_bw=3.35e12,
+        vector_flops=133.8e12, has_sfu=True, tdp=700.0, idle_w=90.0,
+        engine=("many_small", dict(units=528, feed_rate=1.05e12, tile=128)),
+        clock_hz=1.59e9,
+    ),
+    "Gaudi2": dict(
+        peak_fp8=865.0e12, peak_bf16=432.0e12, hbm_bw=2.4e12,
+        vector_flops=11.0e12, has_sfu=False, tdp=600.0, idle_w=100.0,
+        engine=("large_systolic", dict(
+            units=2, pes_per_unit=256 * 256,
+            geometries=[(256, 256), (128, 512), (512, 128)])),
+        clock_hz=1.65e9,
+    ),
+    "Gaudi3": dict(
+        peak_fp8=1835.0e12, peak_bf16=1835.0e12, hbm_bw=3.7e12,
+        vector_flops=28.7e12, has_sfu=False, tdp=900.0, idle_w=120.0,
+        engine=("large_systolic", dict(
+            units=8, pes_per_unit=256 * 256,
+            geometries=[(256, 256), (128, 512), (512, 128)])),
+        clock_hz=1.6e9,
+    ),
+    "A100": dict(
+        peak_fp8=624.0e12, peak_bf16=312.0e12, hbm_bw=2.04e12,
+        vector_flops=78.0e12, has_sfu=True, tdp=400.0, idle_w=60.0,
+        engine=("many_small", dict(units=432, feed_rate=0.7e12, tile=128)),
+        clock_hz=1.41e9,
+    ),
+}
+
+DTYPE_BYTES = {"bf16": 2.0, "fp8": 1.0}
+
+
+def peak(dev, dtype):
+    return DEVICES[dev]["peak_fp8"] if dtype == "fp8" else DEVICES[dev]["peak_bf16"]
+
+
+# -------------------------------------------------------------- calib.rs
+
+def launch_overhead(dev):
+    return {"H100": 7.5e-6, "A100": 9.0e-6, "Gaudi2": 2.2e-6, "Gaudi3": 2.2e-6}[dev]
+
+
+def mfu_cap_fp8(dev, scaling, accum):
+    if dev in ("H100", "A100"):
+        if scaling == "per_row":
+            return 0.21 if accum == "fp32" else 0.58
+        return 0.67 if accum == "fp32" else 0.71
+    # Gaudi: accumulation is always FP32 in the MME, cap keyed on scaling.
+    if scaling == "per_row":
+        return 0.90
+    if scaling == "hw_pow2":
+        return 1.0
+    return 0.985
+
+
+def mfu_cap_bf16(dev):
+    return 0.72 if dev in ("H100", "A100") else 0.95
+
+
+def h100_ramp_midpoint(scaling, dtype):
+    if dtype == "bf16":
+        return 1100.0
+    return 1150.0 if scaling == "per_row" else 1750.0
+
+
+H100_RAMP_POWER = 3.0
+GAUDI_TPC_QUANT_RATE = 5.5e12
+EXP_FLOP_EQUIV = 4.0
+
+
+def hbm_stream_eff(dev):
+    return 0.83 if dev in ("H100", "A100") else 0.78
+
+
+def power_curve(dev):
+    return {
+        "H100": (1.63, 0.62, 1.0),
+        "A100": (1.5, 0.62, 1.0),
+        "Gaudi2": (0.78, 0.41, 0.80),
+        "Gaudi3": (0.80, 0.45, 0.85),
+    }[dev]
+
+
+def sfu_exp_rate(dev):
+    return {"H100": 3.4e12, "A100": 2.4e12}.get(dev, 0.0)
+
+
+# -------------------------------------------------------------- power.rs
+
+def power_draw_w(dev, util_frac):
+    spec = DEVICES[dev]
+    a, b, max_frac = power_curve(dev)
+    frac = min(a * max(util_frac, 0.0) ** b, max_frac)
+    return spec["idle_w"] + (spec["tdp"] - spec["idle_w"]) * frac
+
+
+# ---------------------------------------------------------------- mme.rs
+
+def macs_per_pe(dev, dtype):
+    spec = DEVICES[dev]
+    kind, e = spec["engine"]
+    if kind == "large_systolic":
+        return peak(dev, dtype) / (e["units"] * e["pes_per_unit"] * 2.0 * spec["clock_hz"])
+    return 1.0
+
+
+def div_ceil(a, b):
+    return -(-a // b)
+
+
+def mme_cycles(m, k, n, units, geometries, macs):
+    fp8_boost = macs
+    best = None  # (cycles, geometry)
+    for rows, cols in geometries:
+        tiles_m = div_ceil(m, rows)
+        tiles_n = div_ceil(n, cols)
+        tiles = float(tiles_m * tiles_n)
+        tiles_per_unit = math.ceil(tiles / units)
+        stream = max(k / fp8_boost, 1.0)
+        bubble = float(rows + cols)
+        cycles = tiles_per_unit * (stream + bubble)
+        if best is None or cycles < best[0]:
+            best = (cycles, (rows, cols))
+    return best
+
+
+def ceil_frac(dim, tile):
+    padded = div_ceil(dim, tile) * tile
+    return dim / padded
+
+
+# --------------------------------------------------------------- gemm.rs
+# GemmConfig mirror: (dtype, scaling, accum) tuples.
+
+GEMM_BF16 = ("bf16", "per_tensor", "fp32")
+
+
+def gemm_time(dev, m, k, n, cfg):
+    dtype, scaling, accum = cfg
+    spec = DEVICES[dev]
+    flops = 2.0 * m * k * n
+    in_bytes = (m * k + k * n) * DTYPE_BYTES[dtype]
+    out_bytes = (m * n) * 2.0
+    in_elems = float(m * k + k * n)
+
+    t_hbm = (in_bytes + out_bytes) / (spec["hbm_bw"] * hbm_stream_eff(dev))
+
+    kind, e = spec["engine"]
+    if kind == "large_systolic":
+        macs = macs_per_pe(dev, dtype)
+        cycles, (rows, cols) = mme_cycles(
+            m, k, n, e["units"], e["geometries"], macs)
+        if dtype == "fp8":
+            cap = mfu_cap_fp8(dev, scaling, "fp32")
+        else:
+            cap = mfu_cap_bf16(dev)
+        t_compute = cycles / spec["clock_hz"] / cap
+        feed_rate = e["units"] * float(rows + cols) * spec["clock_hz"]
+        t_feed = in_elems / feed_rate
+    else:  # many_small
+        if dtype == "fp8":
+            cap = mfu_cap_fp8(dev, scaling, accum)
+        else:
+            cap = mfu_cap_bf16(dev)
+        feed_rate = e["feed_rate"]
+        if dtype == "fp8" and scaling == "per_row":
+            feed_rate = feed_rate * 1.12
+        elif dtype == "fp8":
+            feed_rate = feed_rate * 1.05
+        m_eff = float(max(m, e["tile"]))
+        s_eff = (m_eff * k * n) ** (1.0 / 3.0)
+        mid = h100_ramp_midpoint(scaling, dtype)
+        ramp = 1.0 / (1.0 + (mid / s_eff) ** H100_RAMP_POWER)
+        align = max(ceil_frac(m, e["tile"]), 0.25) * max(ceil_frac(n, e["tile"]), 0.25)
+        eff = max(cap * ramp * align, 1e-4)
+        t_compute = flops / (peak(dev, dtype) * eff)
+        t_feed = in_elems / feed_rate
+
+    if dtype == "fp8" and scaling == "per_row" and dev in ("Gaudi2", "Gaudi3"):
+        t_quant = (m * k) / GAUDI_TPC_QUANT_RATE
+    else:
+        t_quant = 0.0
+
+    t_launch = launch_overhead(dev)
+    body = max(t_compute, max(t_hbm, t_feed))
+    seconds = t_launch + body + t_quant
+    bound = max(t_compute, max(t_hbm, t_feed))
+    if bound == t_compute:
+        bound_by = "compute"
+    elif bound == t_hbm:
+        bound_by = "hbm"
+    else:
+        bound_by = "feed"
+    return dict(seconds=seconds, t_launch=t_launch, bound_by=bound_by)
+
+
+# ------------------------------------------------------------ softmax.rs
+
+def exp_time(dev, n_exp, overlap_budget):
+    spec = DEVICES[dev]
+    if spec["has_sfu"]:
+        t = n_exp / sfu_exp_rate(dev)
+        return max(t - overlap_budget, 0.0)
+    return n_exp * EXP_FLOP_EQUIV / spec["vector_flops"]
+
+
+def decode_exp_count(batch, seq, heads):
+    return float(batch) * float(seq) * float(heads)
+
+
+def prefill_exp_count(batch, seq, heads):
+    s = float(seq)
+    return float(batch) * (s * s / 2.0) * float(heads)
+
+
+# ------------------------------------------------------- interconnect.rs
+
+INTERCONNECT = {
+    "H100": dict(scale_up_bw=450.0e9, scale_up_lat_s=1.0e-6, scale_up_domain=8,
+                 scale_out_bw=50.0e9, scale_out_lat_s=5.0e-6),
+    "A100": dict(scale_up_bw=300.0e9, scale_up_lat_s=1.3e-6, scale_up_domain=8,
+                 scale_out_bw=25.0e9, scale_out_lat_s=6.0e-6),
+    "Gaudi2": dict(scale_up_bw=262.5e9, scale_up_lat_s=3.0e-6, scale_up_domain=8,
+                   scale_out_bw=37.5e9, scale_out_lat_s=6.0e-6),
+    "Gaudi3": dict(scale_up_bw=525.0e9, scale_up_lat_s=2.5e-6, scale_up_domain=8,
+                   scale_out_bw=75.0e9, scale_out_lat_s=5.0e-6),
+}
+
+
+def group_link(ic, n):
+    if n <= ic["scale_up_domain"]:
+        return ic["scale_up_bw"], ic["scale_up_lat_s"]
+    return ic["scale_out_bw"], ic["scale_out_lat_s"]
+
+
+def allreduce_time_s(ic, n, nbytes):
+    if n <= 1:
+        return 0.0
+    bw, lat = group_link(ic, n)
+    steps = float(n - 1)
+    return 2.0 * steps / n * nbytes / bw + 2.0 * steps * lat
+
+
+def p2p_time_s(ic, nbytes, within_scale_up):
+    if within_scale_up:
+        bw, lat = ic["scale_up_bw"], ic["scale_up_lat_s"]
+    else:
+        bw, lat = ic["scale_out_bw"], ic["scale_out_lat_s"]
+    return nbytes / bw + lat
+
+
+# -------------------------------------------------------------- llama.rs
+
+MODELS = {
+    "llama-8b": dict(hidden=4096, layers=32, heads=32, kv_heads=8,
+                     intermediate=14336, vocab=128256),
+    "llama-70b": dict(hidden=8192, layers=80, heads=64, kv_heads=8,
+                      intermediate=28672, vocab=128256),
+}
+
+
+def head_dim(m):
+    return m["hidden"] // m["heads"]
+
+
+def a_const(m):
+    mlp_ratio = m["intermediate"] / m["hidden"]
+    gqa_groups = m["heads"] / m["kv_heads"]
+    return 3.0 * mlp_ratio + 2.0 + 2.0 / gqa_groups
+
+
+def prefill_flops(m, s):
+    h, l, v = float(m["hidden"]), float(m["layers"]), float(m["vocab"])
+    s = float(s)
+    return 2.0 * s * h * h * l * a_const(m) + 2.0 * s * s * h * l + 2.0 * v * s * h
+
+
+def decode_step_flops(m, context_lens):
+    h, l, v = float(m["hidden"]), float(m["layers"]), float(m["vocab"])
+    b = float(len(context_lens))
+    sum_s = 0.0
+    for s in context_lens:
+        sum_s += float(s)
+    return 2.0 * b * (a_const(m) * h * h * l + v * h) + 4.0 * h * l * sum_s
+
+
+# ----------------------------------------------------------- perfmodel.rs
+
+PRECISIONS = {
+    # name -> (dtype, scaling, accum) of the block linears; None = bf16
+    "bf16": GEMM_BF16,
+    "fp8-static": ("fp8", "static", "fast"),
+    "fp8-dynamic": ("fp8", "per_row", "fast"),
+}
+
+
+def decode_work(m, dev, prec, tp, kv_bytes, batch, seq):
+    h = m["hidden"]
+    kv_shard = max(min(tp, m["kv_heads"]), 1)
+    kv_dim = m["kv_heads"] * head_dim(m) // kv_shard
+    inter = m["intermediate"] // tp
+    gcfg = PRECISIONS[prec]
+
+    shapes = [
+        (batch, h, h // tp),
+        (batch, h, kv_dim),
+        (batch, h, kv_dim),
+        (batch, h // tp, h),
+        (batch, h, inter),
+        (batch, h, inter),
+        (batch, inter, h),
+    ]
+    t_lin = 0.0
+    lin_compute_frac_acc = 0.0
+    for mm, kk, nn in shapes:
+        bd = gemm_time(dev, mm, kk, nn, gcfg)
+        t_lin += bd["seconds"]
+        lin_compute_frac_acc += bd["seconds"] * (0.0 if bd["bound_by"] == "hbm" else 1.0)
+    t_lin *= float(m["layers"])
+    lin_compute_frac_acc *= float(m["layers"])
+
+    kv_bytes_layer = 2.0 * batch * float(seq) * float(kv_dim) * kv_bytes
+    spec = DEVICES[dev]
+    t_kv_layer = kv_bytes_layer / (spec["hbm_bw"] * hbm_stream_eff(dev))
+    t_kv = t_kv_layer * float(m["layers"])
+
+    heads = m["heads"] // tp
+    n_exp = decode_exp_count(batch, seq, heads) * float(m["layers"])
+    overlap = t_lin + t_kv
+    t_exp = exp_time(dev, n_exp, overlap)
+
+    head = gemm_time(dev, batch, h, m["vocab"] // tp, GEMM_BF16)
+    t_head = head["seconds"]
+
+    return dict(
+        t_raw=t_lin + t_kv + t_exp + t_head,
+        t_lin=t_lin, t_kv=t_kv, t_exp=t_exp, t_head=t_head,
+        lin_compute_frac_acc=lin_compute_frac_acc,
+    )
+
+
+def resolve_mb(pp, microbatches, tokens):
+    if pp == 1:
+        return 1
+    want = microbatches if microbatches > 0 else pp
+    return max(1, min(want, max(tokens, 1)))
+
+
+def finish(dev, prec, tp, pp, t_raw, util, flops,
+           t_lin, t_kv, t_exp, t_head, tokens, hidden, layers, mb, t_work_mb_raw):
+    # PowerCap::None: no stretch, draw at the utilization point.
+    t_work = t_raw
+    watts = power_draw_w(dev, util)
+
+    ic = INTERCONNECT[dev]
+    chips = tp * pp
+
+    mb = max(mb, 1)
+    tokens_per_mb = div_ceil(tokens, mb)
+    act_bytes = tokens_per_mb * float(hidden) * 2.0
+
+    if tp > 1:
+        t_tp_mb = 2.0 * float(layers) * allreduce_time_s(ic, tp, act_bytes)
+    else:
+        t_tp_mb = 0.0
+
+    stretch = t_work / t_raw if t_raw > 0.0 else 1.0
+
+    if pp == 1:
+        seconds = t_work + t_tp_mb
+        t_tp_comm, t_pp_comm, pp_bubble_frac = t_tp_mb, 0.0, 0.0
+    else:
+        hop = p2p_time_s(ic, act_bytes, chips <= ic["scale_up_domain"])
+        slots = float(mb + pp - 1)
+        ppf = float(pp)
+        slot_time = (t_work_mb_raw * stretch + t_tp_mb) / ppf + hop
+        seconds = slots * slot_time
+        t_tp_comm = slots * t_tp_mb / ppf
+        t_pp_comm = slots * hop
+        pp_bubble_frac = float(pp - 1) / slots
+
+    flops_per_chip = flops / pp
+    return dict(
+        seconds=seconds,
+        t_linears_s=t_lin,
+        t_attention_kv_s=t_kv,
+        t_softmax_s=t_exp,
+        t_lm_head_s=t_head,
+        t_tp_comm_s=t_tp_comm,
+        t_pp_comm_s=t_pp_comm,
+        pp_bubble_frac=pp_bubble_frac,
+        flops=flops_per_chip,
+        achieved_flops=flops_per_chip / seconds,
+        util_frac=util,
+        watts=watts,
+    )
+
+
+def decode_step(m, dev, prec, tp, pp, batch, seq, kv_bytes=2.0):
+    tp = max(tp, 1)
+    w = decode_work(m, dev, prec, tp, kv_bytes, batch, seq)
+
+    lens = [seq] * batch
+    flops = decode_step_flops(m, lens) / tp
+    dtype = PRECISIONS[prec][0]
+    pk = peak(dev, dtype)
+    util = min(flops / w["t_raw"] / pk, 1.0)
+
+    mb = resolve_mb(max(pp, 1), 0, batch)
+    if max(pp, 1) == 1:
+        t_work_mb_raw = w["t_raw"]
+    else:
+        t_work_mb_raw = decode_work(m, dev, prec, tp, kv_bytes,
+                                    div_ceil(batch, mb), seq)["t_raw"]
+
+    return finish(dev, prec, tp, max(pp, 1), w["t_raw"], util, flops,
+                  w["t_lin"], w["t_kv"], w["t_exp"], w["t_head"],
+                  batch, m["hidden"], m["layers"], mb, t_work_mb_raw)
+
+
+def prefill(m, dev, prec, tp, pp, batch, seq):
+    tp = max(tp, 1)
+    h = m["hidden"]
+    kv_shard = max(min(tp, m["kv_heads"]), 1)
+    kv_dim = m["kv_heads"] * head_dim(m) // kv_shard
+    inter = m["intermediate"] // tp
+    gcfg = PRECISIONS[prec]
+    mm = batch * seq
+
+    shapes = [
+        (mm, h, h // tp),
+        (mm, h, kv_dim),
+        (mm, h, kv_dim),
+        (mm, h // tp, h),
+        (mm, h, inter),
+        (mm, h, inter),
+        (mm, inter, h),
+    ]
+    t_lin = 0.0
+    for a, b, c in shapes:
+        t_lin += gemm_time(dev, a, b, c, gcfg)["seconds"]
+    t_lin *= float(m["layers"])
+
+    d = head_dim(m)
+    heads = m["heads"] // tp
+    per_head = gemm_time(dev, seq, d, seq, GEMM_BF16)
+    body = per_head["seconds"] - per_head["t_launch"]
+    t_attn_layer = body * float(heads * batch) * 2.0 * 0.5 + per_head["t_launch"]
+    t_attn = t_attn_layer * float(m["layers"])
+
+    n_exp = prefill_exp_count(batch, seq, heads) * float(m["layers"])
+    overlap = t_lin + t_attn
+    t_exp = exp_time(dev, n_exp, overlap)
+
+    head = gemm_time(dev, mm, h, m["vocab"] // tp, GEMM_BF16)
+    t_head = head["seconds"]
+
+    t_raw = t_lin + t_attn + t_exp + t_head
+    flops = float(batch) * prefill_flops(m, seq) / tp
+    dtype = PRECISIONS[prec][0]
+    pk = peak(dev, dtype)
+    util = min(flops / t_raw / pk, 1.0)
+    mb = resolve_mb(max(pp, 1), 0, mm)
+    t_work_mb_raw = t_raw / float(mb)
+    return finish(dev, prec, tp, max(pp, 1), t_raw, util, flops,
+                  t_lin, t_attn, t_exp, t_head,
+                  mm, h, m["layers"], mb, t_work_mb_raw)
+
+
+# ------------------------------------------------------------------ grid
+# Mirrors grid() in rust/tests/golden_perfmodel.rs exactly.
+
+def grid():
+    m8 = MODELS["llama-8b"]
+    m70 = MODELS["llama-70b"]
+    out = {}
+    for dev in ["H100", "Gaudi2", "Gaudi3", "A100"]:
+        for prec in ["bf16", "fp8-static", "fp8-dynamic"]:
+            for tp, pp in [(1, 1), (2, 1), (8, 1), (1, 2), (4, 2)]:
+                key = f"{dev}|{prec}|tp{tp}-pp{pp}"
+                out[f"{key}|decode-8b-b32-s1024"] = decode_step(
+                    m8, dev, prec, tp, pp, 32, 1024)
+                out[f"{key}|prefill-8b-b1-s2048"] = prefill(
+                    m8, dev, prec, tp, pp, 1, 2048)
+    for dev in ["H100", "Gaudi2"]:
+        out[f"{dev}|fp8-static|tp4-pp1|decode-70b-b32-s1024"] = decode_step(
+            m70, dev, "fp8-static", 4, 1, 32, 1024)
+        out[f"{dev}|fp8-static|tp4-pp2|decode-70b-b32-s1024"] = decode_step(
+            m70, dev, "fp8-static", 4, 2, 32, 1024)
+        out[f"{dev}|fp8-static|tp4-pp2|prefill-70b-b1-s2048"] = prefill(
+            m70, dev, "fp8-static", 4, 2, 1, 2048)
+    return out
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    path = os.path.join(root, "rust", "tests", "golden", "perfmodel.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    snap = grid()
+    assert len(snap) == 126, f"grid size {len(snap)} != 126"
+    for key, bd in snap.items():
+        for field, v in bd.items():
+            assert math.isfinite(v), f"{key}.{field} = {v}"
+    with open(path, "w") as f:
+        json.dump(snap, f, sort_keys=True, separators=(",", ":"))
+        f.write("\n")
+    print(f"wrote {path} ({len(snap)} entries)")
+
+
+if __name__ == "__main__":
+    main()

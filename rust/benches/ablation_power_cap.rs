@@ -3,7 +3,7 @@
 //! GPUs borrow headroom from decode-heavy ones.
 
 use fp8_tco::analysis::perfmodel::{decode_step, prefill, PrecisionMode, StepConfig};
-use fp8_tco::hwsim::power::{apply_cap, power_draw, rack_allocation};
+use fp8_tco::hwsim::power::{apply_cap, power_draw_w, rack_allocation};
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama;
@@ -20,26 +20,26 @@ fn main() {
     let demands: Vec<f64> = (0..8)
         .map(|i| {
             if i < 2 {
-                power_draw(dev, pre.util)
+                power_draw_w(dev, pre.util_frac)
             } else {
-                power_draw(dev, dec.util)
+                power_draw_w(dev, dec.util_frac)
             }
         })
         .collect();
     let budget = 8.0 * 400.0; // A100-era 400 W/GPU provisioning (§5.5)
 
     // Per-GPU: everyone clamped to 400 W.
-    let per_gpu_pre = apply_cap(dev, 400.0, pre.seconds, pre.util, 0.95);
+    let per_gpu_pre = apply_cap(dev, 400.0, pre.seconds, pre.util_frac, 0.95);
     // Per-rack: water-filling allocation.
     let alloc = rack_allocation(budget, &demands);
-    let per_rack_pre = apply_cap(dev, alloc[0], pre.seconds, pre.util, 0.95);
+    let per_rack_pre = apply_cap(dev, alloc[0], pre.seconds, pre.util_frac, 0.95);
 
     let mut t = Table::new(
         "ablation — power capping policy (8x H100, 3.2 kW budget)",
         &["policy", "prefill GPU W", "prefill slowdown", "decode GPU W",
           "decode slowdown", "rack W used"],
     );
-    let dec_capped = apply_cap(dev, 400.0, dec.seconds, dec.util, 0.05);
+    let dec_capped = apply_cap(dev, 400.0, dec.seconds, dec.util_frac, 0.05);
     t.row(vec![
         "per-GPU 400 W".into(),
         f(per_gpu_pre.watts, 0),
@@ -48,7 +48,7 @@ fn main() {
         f(dec_capped.seconds / dec.seconds, 2),
         f(per_gpu_pre.watts * 2.0 + dec_capped.watts * 6.0, 0),
     ]);
-    let dec_rack = apply_cap(dev, alloc[7], dec.seconds, dec.util, 0.05);
+    let dec_rack = apply_cap(dev, alloc[7], dec.seconds, dec.util_frac, 0.05);
     t.row(vec![
         "per-rack 3.2 kW".into(),
         f(per_rack_pre.watts, 0),

@@ -35,7 +35,7 @@ fn main() {
 
         let dec = decode_step(m, &cfg, 64, 1024);
         let dec_ci = m.decode_ci(64, 1024, 1.0, 2.0);
-        let dominant = if dec.t_linears > dec.t_attention_kv {
+        let dominant = if dec.t_linears_s > dec.t_attention_kv_s {
             "weight streaming (thin GEMM)"
         } else {
             "KV-cache bandwidth"

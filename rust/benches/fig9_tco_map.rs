@@ -49,7 +49,7 @@ fn main() {
         &["scenario", "R_Th (G2/H100)", "TCO ratio", "region"],
     );
     for s in &scenarios {
-        let ratio = s.tco();
+        let ratio = s.tco_ratio();
         t.row(vec![
             s.name.clone(),
             f(s.r_th, 2),

@@ -9,7 +9,7 @@
 use fp8_tco::analysis::perfmodel::PrecisionMode;
 use fp8_tco::coordinator::cluster::{max_sustainable_qps, sim_cluster, SloSpec, SweepConfig};
 use fp8_tco::hwsim::spec::Device;
-use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::tco::{assumed_server_price_usd, InfraModel, RackConfig};
 use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::trace::TraceConfig;
@@ -34,7 +34,7 @@ fn cost_at_slo(
         let chips = infra.rack.chips_per_server as f64;
         let per_chip_tps = p.tokens_per_sec / N_ENGINES as f64;
         let cost =
-            infra.cost_per_mtok(assumed_server_price(dev), p.watts_mean, per_chip_tps * chips);
+            infra.cost_per_mtok(assumed_server_price_usd(dev), p.watts_mean, per_chip_tps * chips);
         (p.qps, cost)
     })
 }

@@ -27,7 +27,7 @@ use fp8_tco::coordinator::cluster::{
     replay_disagg_point, sharded_sim_cluster, SloSpec, SweepConfig,
 };
 use fp8_tco::hwsim::spec::Device;
-use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::tco::{assumed_server_price_usd, InfraModel, RackConfig};
 use fp8_tco::util::json::Json;
 use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
@@ -91,7 +91,7 @@ fn colocated_cell(
         None => infeasible(),
         Some(p) => {
             let usd = infra.cost_per_mtok_sharded(
-                assumed_server_price(dev),
+                assumed_server_price_usd(dev),
                 plan.total_chips(),
                 p.watts_mean,
                 p.tokens_per_sec,
@@ -144,7 +144,8 @@ fn disagg_cell(
                 TraceConfig::chat(p.qps),
                 sweep.n_requests,
                 sweep.seed,
-            );
+            )
+            .expect("plan was feasible for the probe");
             let usd = infra.cost_per_mtok_disagg_plan(
                 plan,
                 pm.watts_mean(),
@@ -197,7 +198,8 @@ fn affinity_cell(
                 TraceConfig::chat(p.qps),
                 sweep.n_requests,
                 sweep.seed,
-            );
+            )
+            .expect("plan was feasible for the probe");
             let usd = infra.cost_per_mtok_phase_affinity_plan(
                 plan,
                 cm.watts_mean(),
@@ -246,7 +248,8 @@ fn assert_streaming_ttft_no_worse(
         TraceConfig::chat(qps),
         n_requests,
         seed,
-    );
+    )
+    .expect("plan was feasible for the probe");
     let c95 = chunked.ttft.pct(95.0);
     assert!(
         c95 <= single_p95 + 1e-6,

@@ -19,7 +19,7 @@ use fp8_tco::coordinator::cluster::{
     max_sustainable_qps, sharded_sim_cluster, SloSpec, SweepConfig,
 };
 use fp8_tco::hwsim::spec::Device;
-use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::tco::{assumed_server_price_usd, InfraModel, RackConfig};
 use fp8_tco::util::json::Json;
 use fp8_tco::util::par::SweepGrid;
 use fp8_tco::util::table::{f, Table};
@@ -82,7 +82,7 @@ fn main() {
             );
             out.best.map(|p| {
                 let cost = infra.cost_per_mtok_sharded(
-                    assumed_server_price(dev),
+                    assumed_server_price_usd(dev),
                     plan.total_chips(),
                     p.watts_mean,
                     p.tokens_per_sec,

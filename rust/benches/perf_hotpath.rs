@@ -12,6 +12,7 @@
 //! perf trajectory alongside the figure benches.
 
 use std::collections::BTreeMap;
+// simlint: allow-file(determinism) -- wall-clock microbenchmark: timing real execution is the point
 use std::time::Instant;
 
 use fp8_tco::analysis::perfmodel::{decode_step, PrecisionMode, StepConfig};

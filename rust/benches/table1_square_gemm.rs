@@ -2,7 +2,7 @@
 //! TFLOPS/W on both devices, model vs paper.
 
 use fp8_tco::hwsim::gemm::{gemm_time, GemmConfig};
-use fp8_tco::hwsim::power::power_draw;
+use fp8_tco::hwsim::power::power_draw_w;
 use fp8_tco::hwsim::spec::{Accum, Device, Scaling};
 use fp8_tco::util::table::{f, pct, Table};
 
@@ -29,7 +29,7 @@ fn main() {
     ] {
         for &(s, p_tf, p_w) in paper.iter() {
             let bd = gemm_time(dev, s, s, s, GemmConfig::fp8(Scaling::PerRow, accum));
-            let w = power_draw(dev, bd.mfu);
+            let w = power_draw_w(dev, bd.mfu);
             t.row(vec![
                 dev.name().into(),
                 format!("{}K", s / 1024),
@@ -55,9 +55,9 @@ fn main() {
     let h1 = gemm_time(Device::H100, 1024, 1024, 1024,
                        GemmConfig::fp8(Scaling::PerRow, Accum::Fast));
     assert!(g1.tflops() > h1.tflops(), "Gaudi 2 higher TFLOPS at 1K");
-    assert!(power_draw(Device::Gaudi2, 0.95) < 0.85 * 600.0,
+    assert!(power_draw_w(Device::Gaudi2, 0.95) < 0.85 * 600.0,
             "Gaudi 2 stays below TDP");
-    assert!(power_draw(Device::H100, 0.44) > 0.9 * 700.0,
+    assert!(power_draw_w(Device::H100, 0.44) > 0.9 * 700.0,
             "H100 pegs near TDP from moderate utilization");
     println!("T1: {}", if ok { "REPRODUCED (shape)" } else { "DEVIATIONS — see above" });
 }

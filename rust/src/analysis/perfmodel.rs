@@ -128,9 +128,9 @@ impl StepConfig {
     }
 }
 
-/// Timing decomposition of one phase step. Work terms (`t_linears` ..
-/// `t_lm_head`) are per TP shard over the full batch and all layers;
-/// `seconds` is the end-to-end instance latency including TP
+/// Timing decomposition of one phase step. Work terms (`t_linears_s`
+/// .. `t_lm_head_s`) are per TP shard over the full batch and all
+/// layers; `seconds` is the end-to-end instance latency including TP
 /// collectives and the PP pipeline (fill/drain bubble + activation
 /// hops). At `tp=1, pp=1` the comm terms are zero and `seconds`
 /// equals the single-chip model the paper measures.
@@ -138,14 +138,14 @@ impl StepConfig {
 pub struct StepBreakdown {
     /// Total step latency (s), post power-cap, including comm.
     pub seconds: f64,
-    pub t_linears: f64,
-    pub t_attention_kv: f64,
-    pub t_softmax: f64,
-    pub t_lm_head: f64,
+    pub t_linears_s: f64,
+    pub t_attention_kv_s: f64,
+    pub t_softmax_s: f64,
+    pub t_lm_head_s: f64,
     /// Time in TP ring all-reduces (2 per layer), whole step.
-    pub t_tp_comm: f64,
+    pub t_tp_comm_s: f64,
     /// Time in PP activation transfers along the pipeline.
-    pub t_pp_comm: f64,
+    pub t_pp_comm_s: f64,
     /// Pipeline bubble fraction `(pp-1)/(pp-1+microbatches)`; 0 when
     /// `pp == 1`.
     pub pp_bubble_frac: f64,
@@ -154,7 +154,7 @@ pub struct StepBreakdown {
     /// Achieved model throughput (FLOP/s, per chip).
     pub achieved_flops: f64,
     /// Average matrix-engine utilization driving the power model.
-    pub util: f64,
+    pub util_frac: f64,
     /// Average power draw (W, per chip while busy).
     pub watts: f64,
 }
@@ -372,7 +372,7 @@ fn finish(
     // Power capping slows the on-chip work; collectives ride the
     // fabric and are unaffected.
     let (t_work, watts) = match cfg.power_cap {
-        PowerCap::None => (t_raw, power::power_draw(cfg.device, util)),
+        PowerCap::None => (t_raw, power::power_draw_w(cfg.device, util)),
         PowerCap::PerGpu(w) => {
             let capped = power::apply_cap(cfg.device, w, t_raw, util, compute_frac);
             (capped.seconds, capped.watts)
@@ -398,7 +398,7 @@ fn finish(
     // post-MLP down projection) along one microbatch's traversal of
     // the whole model.
     let t_tp_mb = if tp > 1 {
-        2.0 * comm.layers as f64 * ic.allreduce_time(tp, act_bytes)
+        2.0 * comm.layers as f64 * ic.allreduce_time_s(tp, act_bytes)
     } else {
         0.0
     };
@@ -416,7 +416,7 @@ fn finish(
     let (seconds, t_tp_comm, t_pp_comm, pp_bubble_frac) = if pp == 1 {
         (t_work + t_tp_mb, t_tp_mb, 0.0, 0.0)
     } else {
-        let hop = ic.p2p_time(act_bytes, chips <= ic.scale_up_domain);
+        let hop = ic.p2p_time_s(act_bytes, chips <= ic.scale_up_domain);
         let slots = (mb + pp - 1) as f64;
         let ppf = pp as f64;
         let slot_time = (comm.t_work_mb_raw * stretch + t_tp_mb) / ppf + hop;
@@ -431,16 +431,16 @@ fn finish(
     let flops_per_chip = flops / pp as f64;
     StepBreakdown {
         seconds,
-        t_linears: t_lin,
-        t_attention_kv: t_kv,
-        t_softmax: t_exp,
-        t_lm_head: t_head,
-        t_tp_comm,
-        t_pp_comm,
+        t_linears_s: t_lin,
+        t_attention_kv_s: t_kv,
+        t_softmax_s: t_exp,
+        t_lm_head_s: t_head,
+        t_tp_comm_s: t_tp_comm,
+        t_pp_comm_s: t_pp_comm,
         pp_bubble_frac,
         flops: flops_per_chip,
         achieved_flops: flops_per_chip / seconds,
-        util,
+        util_frac: util,
         watts,
     }
 }
@@ -559,7 +559,7 @@ mod tests {
     #[test]
     fn breakdown_sums() {
         let bd = decode_step(m8b(), &StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()), 16, 512);
-        let sum = bd.t_linears + bd.t_attention_kv + bd.t_softmax + bd.t_lm_head;
+        let sum = bd.t_linears_s + bd.t_attention_kv_s + bd.t_softmax_s + bd.t_lm_head_s;
         assert!((sum / bd.seconds - 1.0).abs() < 1e-9);
     }
 }

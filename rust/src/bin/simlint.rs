@@ -1,0 +1,43 @@
+//! `simlint` driver: lint the crate tree and exit non-zero on any
+//! unwaived finding. Waived findings are inventoried in the summary so
+//! every `// simlint: allow(...)` stays auditable from CI logs.
+//!
+//! Usage: `cargo run --release --bin simlint` (from `rust/`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fp8_tco::simlint::check_tree;
+
+fn main() -> ExitCode {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let findings = check_tree(&root);
+    let (waived, unwaived): (Vec<_>, Vec<_>) =
+        findings.into_iter().partition(|f| f.waived.is_some());
+
+    for f in &unwaived {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule.name(), f.msg);
+    }
+    if !unwaived.is_empty() {
+        println!();
+    }
+    println!(
+        "simlint: {} finding(s), {} waiver(s)",
+        unwaived.len(),
+        waived.len()
+    );
+    for f in &waived {
+        println!(
+            "  waived {}:{} [{}] -- {}",
+            f.file,
+            f.line,
+            f.rule.name(),
+            f.waived.as_deref().unwrap_or("(no reason given)")
+        );
+    }
+    if unwaived.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -169,7 +169,7 @@ impl ExecutionBackend for SimBackend {
         }
         // Batched prefill of mixed lengths: model as max-length batch
         // (padding, the common production compromise).
-        let max_len = seqs.iter().map(|&(_, l)| l).max().unwrap();
+        let max_len = seqs.iter().map(|&(_, l)| l).max().unwrap_or(1);
         let key = (seqs.len(), max_len);
         let bd = match self.cache.as_mut() {
             Some(c) => StepCostCache::lookup(

@@ -182,7 +182,10 @@ impl Batcher {
             if !alloc.can_allocate(blocks_needed) {
                 break; // memory pressure: wait for releases
             }
-            let blocks = alloc.allocate(blocks_needed).expect("checked");
+            let Some(blocks) = alloc.allocate(blocks_needed) else {
+                debug_assert!(false, "allocate failed after can_allocate said yes");
+                break;
+            };
             seq.blocks = blocks;
             if resume {
                 seq.state = RequestState::Decoding;
@@ -204,6 +207,7 @@ impl Batcher {
     #[inline]
     fn audit_decoding_index(&self, seqs: &std::collections::HashMap<SeqId, Sequence>) {
         if cfg!(debug_assertions) {
+            // simlint: allow(determinism) -- debug-only reference scan, sorted before the comparison
             let mut scan: Vec<SeqId> = seqs
                 .values()
                 .filter(|s| s.state == RequestState::Decoding)

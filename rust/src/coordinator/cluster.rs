@@ -338,7 +338,11 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
                 return false;
             }
             self.harvest();
-            let Reverse(tr) = self.pending.pop().unwrap();
+            // The peek above guarantees a populated heap; a let-else
+            // keeps the pop panic-free regardless.
+            let Some(Reverse(tr)) = self.pending.pop() else {
+                break;
+            };
             if !self.fire(tr, left) {
                 return false;
             }
@@ -417,18 +421,23 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
         let mut bounced_srcs: Vec<usize> = Vec::new();
         for (src, e) in self.prefill.engines.iter_mut().enumerate() {
             for id in e.take_handoffs() {
-                let (context_len, finished_at, arrival) = {
-                    let seq = e.sequence(id).expect("handoff sequence exists");
-                    (
-                        seq.context_len(),
-                        seq.finished_at.expect("handoff finished"),
-                        seq.arrival,
-                    )
+                let Some((context_len, finished_at, arrival)) =
+                    e.sequence(id).map(|seq| {
+                        debug_assert!(seq.finished_at.is_some(), "handoff finished");
+                        (
+                            seq.context_len(),
+                            seq.finished_at.unwrap_or(seq.arrival),
+                            seq.arrival,
+                        )
+                    })
+                else {
+                    debug_assert!(false, "handoff sequence {id} exists");
+                    continue;
                 };
-                let out = self
-                    .out_len
-                    .remove(&id)
-                    .expect("handoff has a recorded output length");
+                let Some(out) = self.out_len.remove(&id) else {
+                    debug_assert!(false, "handoff {id} has a recorded output length");
+                    continue;
+                };
                 if self.admission
                     && !self.decode.engines.iter().any(|d| d.can_admit_migration(context_len))
                 {
@@ -442,8 +451,8 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
                 }
                 let bytes = context_len as f64 * self.kv_bytes_per_token;
                 let sched = self.link.chunked(bytes, self.chunks);
-                let t_first = finished_at + sched.first_time();
-                let t_done = finished_at + sched.total_time();
+                let t_first = finished_at + sched.first_time_s();
+                let t_done = finished_at + sched.total_time_s();
                 let tr = Transfer {
                     t: t_done,
                     id,
@@ -802,7 +811,8 @@ pub fn phase_affinity_sim_cluster(
 /// probe's streaming configuration. The caller passes the same trace
 /// shape, request count and seed as the probe that found the point —
 /// the simulator is deterministic, so the replay must drain exactly
-/// as the probe did (asserted). Returns (prefill, decode, merged).
+/// as the probe did (asserted). Returns (prefill, decode, merged), or
+/// the capacity error when the plan cannot host the model at all.
 pub fn replay_disagg_point(
     model: &'static LlamaConfig,
     plan: &DisaggPlan,
@@ -811,22 +821,20 @@ pub fn replay_disagg_point(
     trace: TraceConfig,
     n_requests: usize,
     seed: u64,
-) -> (Metrics, Metrics, Metrics) {
-    let mut c = disagg_sim_cluster(model, plan)
-        .expect("plan was feasible for the probe")
-        .with_streaming(chunks, admission);
+) -> Result<(Metrics, Metrics, Metrics), CapacityError> {
+    let mut c = disagg_sim_cluster(model, plan)?.with_streaming(chunks, admission);
     let gen = TraceGenerator::new(trace, seed);
     let drained = c.run(gen.stream(n_requests));
     assert!(drained, "replay of the feasible probe must drain");
     let (p, d) = c.pool_metrics();
     let merged = DisaggCluster::merged_metrics(&c);
-    (p, d, merged)
+    Ok((p, d, merged))
 }
 
 /// Replay a measured PhaseAffinity operating point to split metrics
 /// across the colocated, prefill and decode pools (same determinism
 /// contract as [`replay_disagg_point`]). Returns (colocated, prefill,
-/// decode, merged).
+/// decode, merged), or the capacity error when the plan is infeasible.
 pub fn replay_affinity_point(
     model: &'static LlamaConfig,
     plan: &PhaseAffinityPlan,
@@ -835,16 +843,14 @@ pub fn replay_affinity_point(
     trace: TraceConfig,
     n_requests: usize,
     seed: u64,
-) -> (Metrics, Metrics, Metrics, Metrics) {
-    let mut c = phase_affinity_sim_cluster(model, plan)
-        .expect("plan was feasible for the probe")
-        .with_streaming(chunks, admission);
+) -> Result<(Metrics, Metrics, Metrics, Metrics), CapacityError> {
+    let mut c = phase_affinity_sim_cluster(model, plan)?.with_streaming(chunks, admission);
     let gen = TraceGenerator::new(trace, seed);
     let drained = c.run(gen.stream(n_requests));
     assert!(drained, "replay of the feasible probe must drain");
     let (colo, p, d) = c.pool_metrics();
     let merged = PhaseAffinityCluster::merged_metrics(&c);
-    (colo, p, d, merged)
+    Ok((colo, p, d, merged))
 }
 
 /// Homogeneous simulated cluster for sweeps, examples and benches:
@@ -853,7 +859,7 @@ pub fn replay_affinity_point(
 /// weights halve the weight footprint), least-loaded routing, batch
 /// cap 64. Multi-chip deployments go through [`sharded_sim_cluster`].
 pub fn sim_cluster(dev: Device, prec: PrecisionMode, n_engines: usize) -> Cluster<SimBackend> {
-    let model = llama::by_name("llama-8b").unwrap();
+    let model = llama::llama_8b();
     let w_bytes = prec.weight_bytes_per_elem();
     let engines: Vec<Engine<SimBackend>> = (0..n_engines)
         .map(|_| {

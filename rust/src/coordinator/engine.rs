@@ -140,6 +140,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// ones included) — cluster tests and fairness audits read
     /// per-request timestamps through this.
     pub fn sequences(&self) -> impl Iterator<Item = &Sequence> + '_ {
+        // simlint: allow(determinism) -- post-run inspection API; callers sort (tests, audits), nothing ordered feeds the schedule
         self.seqs.values().chain(self.archive.values())
     }
 
@@ -224,12 +225,16 @@ impl<B: ExecutionBackend> Engine<B> {
     /// emission instant; the bounce is counted in
     /// [`Metrics::bounces`].
     pub fn resume_bounced(&mut self, id: SeqId, remaining_out: usize) {
-        let mut seq = self.archive.remove(&id).expect("bounced sequence exists");
+        let Some(mut seq) = self.archive.remove(&id) else {
+            debug_assert!(false, "resume_bounced: unknown sequence {id}");
+            return;
+        };
         debug_assert_eq!(seq.role, SeqRole::PrefillLeg, "only prefill legs bounce");
         debug_assert_eq!(seq.state, RequestState::Finished, "bounce follows handoff");
         seq.role = SeqRole::Full;
         let arrival = seq.arrival;
-        let first = seq.first_token_at.expect("prefill leg emitted its token");
+        debug_assert!(seq.first_token_at.is_some(), "prefill leg emitted its token");
+        let first = seq.first_token_at.unwrap_or(self.clock);
         self.metrics.record_first_token(arrival, first);
         self.metrics.record_bounce();
         if remaining_out == 0 {
@@ -237,7 +242,8 @@ impl<B: ExecutionBackend> Engine<B> {
             // single-token requests, but guard the API): the request
             // is already complete — close it out without re-activating
             // a done sequence, which would decode a phantom token.
-            let finished = seq.finished_at.expect("prefill leg finished");
+            debug_assert!(seq.finished_at.is_some(), "prefill leg finished");
+            let finished = seq.finished_at.unwrap_or(self.clock);
             let out = seq.delivered;
             let mut blocks = std::mem::take(&mut seq.blocks);
             self.alloc.release(&mut blocks);
@@ -368,7 +374,7 @@ impl<B: ExecutionBackend> Engine<B> {
         }
         let specs: Vec<(SeqId, usize)> = ids
             .iter()
-            .map(|id| (*id, self.seqs[id].context_len()))
+            .filter_map(|id| self.seqs.get(id).map(|s| (*id, s.context_len())))
             .collect();
         let res = self.backend.prefill(&specs);
         self.clock += res.seconds;
@@ -383,7 +389,10 @@ impl<B: ExecutionBackend> Engine<B> {
                 Restart,
             }
             let emit = {
-                let seq = self.seqs.get_mut(id).expect("prefilled unknown seq");
+                let Some(seq) = self.seqs.get_mut(id) else {
+                    debug_assert!(false, "prefilled unknown sequence {id}");
+                    continue;
+                };
                 seq.state = RequestState::Decoding;
                 seq.generated += 1; // prefill emits one token
                 seq.delivered += 1;
@@ -416,18 +425,20 @@ impl<B: ExecutionBackend> Engine<B> {
         }
         let specs: Vec<(SeqId, usize)> = ids
             .iter()
-            .map(|id| (*id, self.seqs[id].context_len()))
+            .filter_map(|id| self.seqs.get(id).map(|s| (*id, s.context_len())))
             .collect();
         let res = self.backend.decode(&specs);
         self.clock += res.seconds;
         let mut emitted = 0;
         for id in ids {
-            let seq = self.seqs.get_mut(id).expect("decoded unknown seq");
+            let Some(seq) = self.seqs.get_mut(id) else {
+                debug_assert!(false, "decoded unknown sequence {id}");
+                continue;
+            };
             seq.generated += 1;
             let needed = seq.context_len();
             let mut blocks = std::mem::take(&mut seq.blocks);
             let ok = self.alloc.grow(&mut blocks, needed);
-            let seq = self.seqs.get_mut(id).unwrap();
             seq.blocks = blocks;
             if !ok {
                 // The token generated this step has no KV backing:
@@ -445,13 +456,15 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     fn finish_if_done(&mut self, id: SeqId) {
-        let done = self.seqs[&id].is_done();
+        let done = self.seqs.get(&id).is_some_and(Sequence::is_done);
         if !done {
             return;
         }
         // Finished: out of the hot map and the decode index, into the
         // harvest archive — per-step cost stays O(active).
-        let mut seq = self.seqs.remove(&id).unwrap();
+        let Some(mut seq) = self.seqs.remove(&id) else {
+            return;
+        };
         seq.state = RequestState::Finished;
         seq.finished_at = Some(self.clock);
         self.active -= 1;
@@ -487,13 +500,15 @@ impl<B: ExecutionBackend> Engine<B> {
     fn preempt(&mut self, id: SeqId) {
         self.preemptions += 1;
         self.batcher.unmark_decoding(id);
-        let seq = self.seqs.get_mut(&id).unwrap();
+        let Some(seq) = self.seqs.get_mut(&id) else {
+            debug_assert!(false, "preempted unknown sequence {id}");
+            return;
+        };
         seq.state = RequestState::Preempted;
         let mut blocks = std::mem::take(&mut seq.blocks);
         self.alloc.release(&mut blocks);
         self.backend.release(id);
         // Re-prefill covers everything generated so far.
-        let seq = self.seqs.get_mut(&id).unwrap();
         seq.prompt_len = seq.context_len();
         let gen = seq.generated;
         seq.output_len -= gen.min(seq.output_len);

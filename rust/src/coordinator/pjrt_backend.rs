@@ -12,6 +12,7 @@
 //! between steps and gathered/scattered around each batched decode —
 //! the dense-cache analogue of paged KV at toy scale.
 
+// simlint: allow-file(determinism) -- real-hardware backend: wall-clock measurement of actual PJRT execution is the point
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;

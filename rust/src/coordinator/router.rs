@@ -78,8 +78,7 @@ impl<B: ExecutionBackend> Router<B> {
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, e)| e.pending())
-                .map(|(i, _)| i)
-                .unwrap(),
+                .map_or(0, |(i, _)| i),
             RoutePolicy::PhaseAffinity => {
                 // Decode-heaviness of the request in [0, 1].
                 let total = (r.prompt_len + r.output_len) as f64;
@@ -94,9 +93,8 @@ impl<B: ExecutionBackend> Router<B> {
                         let load = self.engines[i].pending() as f64;
                         (i, fit / (1.0 + 0.1 * load))
                     })
-                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
+                    .max_by(|a, b| a.1.total_cmp(&b.1))
+                    .map_or(0, |(i, _)| i)
             }
         }
     }

@@ -6,7 +6,7 @@
 //! substrate is a model, not the authors' testbed.
 
 use super::gemm::{gemm_time, GemmConfig};
-use super::power::power_draw;
+use super::power::power_draw_w;
 use super::spec::{Accum, Device, Scaling};
 
 fn tf(dev: Device, m: usize, k: usize, n: usize, cfg: GemmConfig) -> f64 {
@@ -53,8 +53,8 @@ fn table1_power_shape() {
     // At the utilizations the model achieves for 4K squares:
     let g = gemm_time(Device::Gaudi2, 4096, 4096, 4096, fp8_row(Device::Gaudi2));
     let h = gemm_time(Device::H100, 4096, 4096, 4096, fp8_row(Device::H100));
-    let pg = power_draw(Device::Gaudi2, g.mfu);
-    let ph = power_draw(Device::H100, h.mfu);
+    let pg = power_draw_w(Device::Gaudi2, g.mfu);
+    let ph = power_draw_w(Device::H100, h.mfu);
     assert!(pg < 0.85 * 600.0, "gaudi {pg} W");
     assert!(ph > 0.90 * 700.0, "h100 {ph} W");
     // TFLOPS/W comparable at 4K (paper: 1.8 vs 1.7).

@@ -104,7 +104,7 @@ impl InterconnectSpec {
     /// Ring all-reduce of `bytes` payload over `n` devices:
     /// `2(n-1)/n * bytes / bw + 2(n-1) * latency` (reduce-scatter +
     /// all-gather, each n-1 hops). Zero for a single device.
-    pub fn allreduce_time(&self, n: usize, bytes: f64) -> f64 {
+    pub fn allreduce_time_s(&self, n: usize, bytes: f64) -> f64 {
         if n <= 1 {
             return 0.0;
         }
@@ -116,7 +116,7 @@ impl InterconnectSpec {
     /// Point-to-point transfer of `bytes` between adjacent pipeline
     /// stages. `within_scale_up` selects the fabric (stages of one
     /// instance that fit the domain ride scale-up links).
-    pub fn p2p_time(&self, bytes: f64, within_scale_up: bool) -> f64 {
+    pub fn p2p_time_s(&self, bytes: f64, within_scale_up: bool) -> f64 {
         let (bw, lat) = if within_scale_up {
             (self.scale_up_bw, self.scale_up_lat_s)
         } else {
@@ -170,7 +170,7 @@ impl KvLink {
     /// nothing (nothing crossed the fabric). Mirrored in
     /// `python/tests/test_kv_transfer_mirror.py` — keep the arithmetic
     /// order identical when editing.
-    pub fn transfer_time(&self, bytes: f64) -> f64 {
+    pub fn transfer_time_s(&self, bytes: f64) -> f64 {
         if bytes <= 0.0 {
             return 0.0;
         }
@@ -181,14 +181,14 @@ impl KvLink {
     /// `bytes` split into `chunks` equal pieces. Chunks are serialized
     /// on the link and each pays the per-chunk closed form
     /// `chunk_bytes / bw + lat`, so chunk `i` (0-based) lands at
-    /// [`ChunkedTransfer::chunk_done`]`(i)` after the stream starts.
+    /// [`ChunkedTransfer::chunk_done_s`]`(i)` after the stream starts.
     /// The payoff is overlap: the decode side may start on layer `l`
     /// once chunks `0..=l` have landed, so the first token travels
     /// with chunk 0 at a fraction of the single-shot delay, while the
     /// total stream time `bytes/bw + chunks*lat` is monotone
     /// non-decreasing in the chunk count (each extra chunk pays one
     /// more fixed latency). `chunks = 1` reproduces
-    /// [`KvLink::transfer_time`] bit-exactly — the limit the property
+    /// [`KvLink::transfer_time_s`] bit-exactly — the limit the property
     /// tests pin. Mirrored in
     /// `python/tests/test_kv_transfer_mirror.py`; keep the arithmetic
     /// order identical when editing.
@@ -202,8 +202,8 @@ impl KvLink {
     }
 
     /// A link uniformly scaled in bandwidth (sensitivity sweeps).
-    pub fn scaled_bw(&self, factor: f64) -> KvLink {
-        KvLink { bw: self.bw * factor, lat_s: self.lat_s }
+    pub fn scaled_bw(&self, ratio: f64) -> KvLink {
+        KvLink { bw: self.bw * ratio, lat_s: self.lat_s }
     }
 
     /// The same link with a different fixed latency (TTFT monotonicity
@@ -230,7 +230,7 @@ impl ChunkedTransfer {
     /// the last chunk's byte term exactly `bytes / bw` (no remainder
     /// drift), so `chunks = 1` matches the single-shot closed form
     /// bit-for-bit.
-    pub fn chunk_done(&self, i: usize) -> f64 {
+    pub fn chunk_done_s(&self, i: usize) -> f64 {
         assert!(i < self.chunks, "chunk {i} of {}", self.chunks);
         if self.bytes <= 0.0 {
             return 0.0;
@@ -241,15 +241,15 @@ impl ChunkedTransfer {
 
     /// When the first chunk (and the first token riding with it) lands
     /// — the overlap win: strictly earlier than the single-shot
-    /// `transfer_time` whenever `chunks > 1` at finite bandwidth.
-    pub fn first_time(&self) -> f64 {
-        self.chunk_done(0)
+    /// `transfer_time_s` whenever `chunks > 1` at finite bandwidth.
+    pub fn first_time_s(&self) -> f64 {
+        self.chunk_done_s(0)
     }
 
     /// When the last chunk lands: `bytes/bw + chunks*lat`, monotone
     /// non-decreasing in the chunk count.
-    pub fn total_time(&self) -> f64 {
-        self.chunk_done(self.chunks - 1)
+    pub fn total_time_s(&self) -> f64 {
+        self.chunk_done_s(self.chunks - 1)
     }
 }
 
@@ -261,23 +261,23 @@ mod tests {
     fn single_device_collectives_are_free() {
         for dev in Device::ALL {
             let ic = dev.interconnect();
-            assert_eq!(ic.allreduce_time(1, 1e9), 0.0);
-            assert_eq!(ic.allreduce_time(0, 1e9), 0.0);
+            assert_eq!(ic.allreduce_time_s(1, 1e9), 0.0);
+            assert_eq!(ic.allreduce_time_s(0, 1e9), 0.0);
         }
     }
 
     #[test]
     fn allreduce_monotone_in_bytes_and_devices() {
         let ic = Device::H100.interconnect();
-        assert!(ic.allreduce_time(4, 2e6) > ic.allreduce_time(4, 1e6));
-        assert!(ic.allreduce_time(8, 1e6) > ic.allreduce_time(2, 1e6));
+        assert!(ic.allreduce_time_s(4, 2e6) > ic.allreduce_time_s(4, 1e6));
+        assert!(ic.allreduce_time_s(8, 1e6) > ic.allreduce_time_s(2, 1e6));
     }
 
     #[test]
     fn latency_floor_dominates_tiny_payloads() {
         // A 1 KB all-reduce is pure latency on every fabric.
         let ic = Device::Gaudi2.interconnect();
-        let t = ic.allreduce_time(8, 1024.0);
+        let t = ic.allreduce_time_s(8, 1024.0);
         let lat_only = 2.0 * 7.0 * ic.scale_up_lat_s;
         assert!(t < lat_only * 1.1, "{t} vs {lat_only}");
         assert!(t >= lat_only);
@@ -291,7 +291,7 @@ mod tests {
         assert!(h.scale_up_bw > g.scale_up_bw);
         assert!(h.scale_up_lat_s < g.scale_up_lat_s);
         let bytes = 64.0 * 4096.0 * 2.0; // a decode-batch activation
-        assert!(h.allreduce_time(4, bytes) < g.allreduce_time(4, bytes));
+        assert!(h.allreduce_time_s(4, bytes) < g.allreduce_time_s(4, bytes));
     }
 
     #[test]
@@ -304,10 +304,10 @@ mod tests {
     #[test]
     fn leaving_the_scale_up_domain_costs() {
         let ic = Device::H100.interconnect();
-        let inside = ic.allreduce_time(8, 1e6);
-        let outside = ic.allreduce_time(9, 1e6);
+        let inside = ic.allreduce_time_s(8, 1e6);
+        let outside = ic.allreduce_time_s(9, 1e6);
         assert!(outside > inside * 2.0, "{outside} vs {inside}");
-        assert!(ic.p2p_time(1e6, false) > ic.p2p_time(1e6, true));
+        assert!(ic.p2p_time_s(1e6, false) > ic.p2p_time_s(1e6, true));
     }
 
     #[test]
@@ -329,28 +329,28 @@ mod tests {
     fn kv_transfer_closed_form_and_limits() {
         let l = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
         let bytes = 512.0 * 131072.0; // 512 tokens of llama-8b BF16 KV
-        let t = l.transfer_time(bytes);
+        let t = l.transfer_time_s(bytes);
         assert!((t - (bytes / 37.5e9 + 1.1e-5)).abs() < 1e-15);
         // Monotone in bytes; latency floor for tiny payloads.
-        assert!(l.transfer_time(2.0 * bytes) > t);
-        assert!(l.transfer_time(1.0) >= l.lat_s);
+        assert!(l.transfer_time_s(2.0 * bytes) > t);
+        assert!(l.transfer_time_s(1.0) >= l.lat_s);
         // Nothing migrated costs nothing.
-        assert_eq!(l.transfer_time(0.0), 0.0);
+        assert_eq!(l.transfer_time_s(0.0), 0.0);
         // The infinite link is free for any payload.
-        assert_eq!(KvLink::infinite().transfer_time(1e18), 0.0);
+        assert_eq!(KvLink::infinite().transfer_time_s(1e18), 0.0);
         // Sensitivity helpers.
-        assert!(l.scaled_bw(10.0).transfer_time(bytes) < t);
-        assert!(l.with_latency(1e-3).transfer_time(bytes) > t);
+        assert!(l.scaled_bw(10.0).transfer_time_s(bytes) < t);
+        assert!(l.with_latency(1e-3).transfer_time_s(bytes) > t);
     }
 
     #[test]
     fn chunked_single_chunk_is_the_closed_form_bit_exactly() {
         let l = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
         for bytes in [1.0, 512.0 * 131072.0, 4096.0 * 327680.0] {
-            let single = l.transfer_time(bytes);
+            let single = l.transfer_time_s(bytes);
             let c = l.chunked(bytes, 1);
-            assert_eq!(c.first_time().to_bits(), single.to_bits());
-            assert_eq!(c.total_time().to_bits(), single.to_bits());
+            assert_eq!(c.first_time_s().to_bits(), single.to_bits());
+            assert_eq!(c.total_time_s().to_bits(), single.to_bits());
         }
     }
 
@@ -361,25 +361,25 @@ mod tests {
         let c = l.chunked(bytes, 8);
         // Chunks land strictly in order.
         for i in 1..8 {
-            assert!(c.chunk_done(i) > c.chunk_done(i - 1));
+            assert!(c.chunk_done_s(i) > c.chunk_done_s(i - 1));
         }
         // First chunk strictly beats single-shot at finite bandwidth;
         // total stream time is monotone non-decreasing in chunk count.
-        let single = l.transfer_time(bytes);
-        assert!(c.first_time() < single);
+        let single = l.transfer_time_s(bytes);
+        assert!(c.first_time_s() < single);
         let mut prev = 0.0;
         for n in 1..=32 {
-            let total = l.chunked(bytes, n).total_time();
+            let total = l.chunked(bytes, n).total_time_s();
             assert!(total >= prev, "total not monotone at {n} chunks");
             assert!(total >= single, "chunking must not beat the wire");
             prev = total;
         }
         // Zero bytes land instantly however finely chunked.
-        assert_eq!(l.chunked(0.0, 16).total_time(), 0.0);
+        assert_eq!(l.chunked(0.0, 16).total_time_s(), 0.0);
         // The infinite link collapses the whole schedule to t=0.
         let free = KvLink::infinite().chunked(bytes, 8);
-        assert_eq!(free.first_time(), 0.0);
-        assert_eq!(free.total_time(), 0.0);
+        assert_eq!(free.first_time_s(), 0.0);
+        assert_eq!(free.total_time_s(), 0.0);
     }
 
     #[test]
@@ -402,8 +402,8 @@ mod tests {
         ];
         for (bytes, bw, lat_s, chunks, first, total) in cases {
             let c = KvLink { bw, lat_s }.chunked(bytes, chunks);
-            assert!((c.first_time() / first - 1.0).abs() < 1e-12);
-            assert!((c.total_time() / total - 1.0).abs() < 1e-12);
+            assert!((c.first_time_s() / first - 1.0).abs() < 1e-12);
+            assert!((c.total_time_s() / total - 1.0).abs() < 1e-12);
         }
     }
 }

@@ -29,7 +29,7 @@ pub mod spec;
 
 pub use gemm::{gemm_time, GemmBreakdown, GemmConfig};
 pub use interconnect::{ChunkedTransfer, InterconnectSpec, KvLink};
-pub use power::{power_draw, PowerCap};
+pub use power::{power_draw_w, PowerCap};
 pub use spec::{Accum, Device, DeviceSpec, DType, Scaling};
 
 #[cfg(test)]

@@ -23,10 +23,10 @@ pub enum PowerCap {
 }
 
 /// Uncapped draw (W) at a given matrix utilization in [0, 1].
-pub fn power_draw(dev: Device, util: f64) -> f64 {
+pub fn power_draw_w(dev: Device, util_frac: f64) -> f64 {
     let spec = dev.spec();
     let c = calib::power_curve(dev);
-    let frac = (c.a * util.max(0.0).powf(c.b)).min(c.max_frac);
+    let frac = (c.a * util_frac.max(0.0).powf(c.b)).min(c.max_frac);
     spec.idle_w + (spec.tdp - spec.idle_w) * frac
 }
 
@@ -42,21 +42,21 @@ pub struct CappedOp {
 }
 
 /// Apply a per-GPU cap to an op with the given compute-bound time
-/// fraction. `t`: uncapped op time; `util`: uncapped engine
-/// utilization; `compute_frac`: fraction of `t` that scales with
+/// fraction. `t_s`: uncapped op time; `util_frac`: uncapped engine
+/// utilization; `compute_frac`: fraction of `t_s` that scales with
 /// clock (compute/feed-bound), the rest is HBM-bound.
-pub fn apply_cap(dev: Device, cap_w: f64, t: f64, util: f64, compute_frac: f64) -> CappedOp {
+pub fn apply_cap(dev: Device, cap_w: f64, t_s: f64, util_frac: f64, compute_frac: f64) -> CappedOp {
     let spec = dev.spec();
-    let p0 = power_draw(dev, util);
+    let p0 = power_draw_w(dev, util_frac);
     if p0 <= cap_w {
-        return CappedOp { clock_frac: 1.0, seconds: t, watts: p0 };
+        return CappedOp { clock_frac: 1.0, seconds: t_s, watts: p0 };
     }
     // DVFS: dynamic power ~ f^DVFS_POWER. Solve for f hitting the cap.
     let dyn0 = p0 - spec.idle_w;
     let target_dyn = (cap_w - spec.idle_w).max(dyn0 * 0.05);
     let f = (target_dyn / dyn0).powf(1.0 / DVFS_POWER).clamp(0.2, 1.0);
     // Compute-bound portion stretches by 1/f; memory-bound does not.
-    let seconds = t * (compute_frac / f + (1.0 - compute_frac));
+    let seconds = t_s * (compute_frac / f + (1.0 - compute_frac));
     // Average power over the stretched op.
     let watts = spec.idle_w + dyn0 * f.powf(DVFS_POWER);
     CappedOp { clock_frac: f, seconds, watts }
@@ -79,7 +79,7 @@ pub fn rack_allocation(total_w: f64, demands: &[f64]) -> Vec<f64> {
     let mut alloc = vec![0.0; n];
     let mut remaining = total_w;
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+    idx.sort_by(|&a, &b| demands[a].total_cmp(&demands[b]));
     let mut left = n;
     for &i in &idx {
         let fair = remaining / left as f64;
@@ -98,10 +98,10 @@ mod tests {
     #[test]
     fn h100_pegs_near_tdp_at_moderate_util() {
         // Table 1: H100 draws ~690 W (99%) from ~44% utilization.
-        let p = power_draw(Device::H100, 0.44);
+        let p = power_draw_w(Device::H100, 0.44);
         assert!(p > 650.0, "{p}");
         // ...but much less at 11% utilization (350 W measured).
-        let p_small = power_draw(Device::H100, 0.11);
+        let p_small = power_draw_w(Device::H100, 0.11);
         assert!(p_small < 500.0 && p_small > 250.0, "{p_small}");
     }
 
@@ -109,7 +109,7 @@ mod tests {
     fn gaudi_stays_below_tdp() {
         // Table 1: Gaudi 2 draws <= 490 W at up to 94.5% utilization.
         for util in [0.4, 0.7, 0.95, 1.0] {
-            let p = power_draw(Device::Gaudi2, util);
+            let p = power_draw_w(Device::Gaudi2, util);
             assert!(p < 520.0, "util {util} -> {p} W");
         }
     }
@@ -119,12 +119,12 @@ mod tests {
         for dev in Device::ALL {
             let mut last = 0.0;
             for i in 0..=20 {
-                let p = power_draw(dev, i as f64 / 20.0);
+                let p = power_draw_w(dev, i as f64 / 20.0);
                 assert!(p >= last);
                 last = p;
             }
-            assert!(power_draw(dev, 0.0) >= dev.spec().idle_w - 1e-9);
-            assert!(power_draw(dev, 1.0) <= dev.spec().tdp + 1e-9);
+            assert!(power_draw_w(dev, 0.0) >= dev.spec().idle_w - 1e-9);
+            assert!(power_draw_w(dev, 1.0) <= dev.spec().tdp + 1e-9);
         }
     }
 

@@ -25,6 +25,7 @@ pub mod fp8;
 pub mod hwsim;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod simlint;
 pub mod tco;
 pub mod util;
 pub mod workload;

@@ -111,10 +111,10 @@ fn decode_cmd(args: &[String]) {
                 f(b as f64 / bd.seconds, 0),
                 f(bd.tflops(), 1),
                 f(bd.watts, 0),
-                f(bd.t_linears * 1e3, 3),
-                f(bd.t_attention_kv * 1e3, 3),
-                f(bd.t_softmax * 1e3, 3),
-                f(bd.t_lm_head * 1e3, 3),
+                f(bd.t_linears_s * 1e3, 3),
+                f(bd.t_attention_kv_s * 1e3, 3),
+                f(bd.t_softmax_s * 1e3, 3),
+                f(bd.t_lm_head_s * 1e3, 3),
             ]);
         }
     }

@@ -1,0 +1,728 @@
+//! `simlint`: the repo's static-analysis pass (DESIGN.md §10).
+//!
+//! Four rule families over the token stream of
+//! [`util::srclex`](crate::util::srclex):
+//!
+//! * **determinism** — the simulator's bit-identity contracts
+//!   (cached-vs-uncached, serial-vs-parallel) must not be broken by a
+//!   wall-clock read, stray RNG, or hash-order iteration feeding an
+//!   ordered decision. Flags `Instant`/`SystemTime`/`std::time`
+//!   tree-wide, RNG outside `util::rng`, and iteration over
+//!   `HashMap`/`HashSet`-typed names in `coordinator/`.
+//! * **units** — `f64` public fn parameters/returns and public struct
+//!   fields in `analysis/perfmodel.rs`, `hwsim/power.rs`,
+//!   `hwsim/interconnect.rs` and `tco/` must carry a unit suffix from
+//!   the fixed vocabulary (`_s`, `_j`, `_w`, `_usd`, `_tokens`,
+//!   `_bytes`, `_flops`, `_frac`, their spelled-out forms, and `_per_`
+//!   compounds).
+//! * **unit-mix** — adding or subtracting two unit-suffixed names of
+//!   *different* units in one expression (J + W, s + h) is flagged in
+//!   the same files.
+//! * **panic** — no `unwrap()`/`expect()`/`panic!`-family macros in
+//!   the hot-path coordinator files
+//!   (`engine`/`batcher`/`router`/`cluster`/`backend`); `assert!` and
+//!   `debug_assert!` stay allowed (they are the audit mechanism).
+//!
+//! Waivers: `// simlint: allow(<rule>) -- <reason>` on the offending
+//! line or the line above, or `// simlint: allow-file(<rule>) --
+//! <reason>` anywhere in the file. Waived findings are not errors but
+//! are inventoried by the binary (`cargo run --bin simlint`) and the
+//! gate test (`tests/simlint_gate.rs`). `#[cfg(test)]` regions are
+//! exempt from every rule.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::srclex::{lex, TokKind, Token};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    Determinism,
+    Units,
+    UnitMix,
+    Panic,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Determinism => "determinism",
+            Rule::Units => "units",
+            Rule::UnitMix => "unit-mix",
+            Rule::Panic => "panic",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Rule> {
+        match s {
+            "determinism" => Some(Rule::Determinism),
+            "units" => Some(Rule::Units),
+            "unit-mix" => Some(Rule::UnitMix),
+            "panic" => Some(Rule::Panic),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Crate-relative path (`src/...`, `benches/...`, `examples/...`).
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+    /// Waiver reason when suppressed by `// simlint: allow(...)`.
+    pub waived: Option<String>,
+}
+
+/// Hot-path files under the panic policy.
+const PANIC_FILES: [&str; 5] = [
+    "src/coordinator/engine.rs",
+    "src/coordinator/batcher.rs",
+    "src/coordinator/router.rs",
+    "src/coordinator/cluster.rs",
+    "src/coordinator/backend.rs",
+];
+
+/// Files under the unit-suffix discipline.
+fn units_scoped(rel: &str) -> bool {
+    rel == "src/analysis/perfmodel.rs"
+        || rel == "src/hwsim/power.rs"
+        || rel == "src/hwsim/interconnect.rs"
+        || rel.starts_with("src/tco/")
+}
+
+/// Unit class of a name, by its last `_`-separated segment (or the
+/// `_per_` compound form). `None` = not unit-bearing.
+fn unit_class(name: &str) -> Option<&'static str> {
+    if name.contains("_per_") {
+        return Some("per");
+    }
+    let seg = name.rsplit('_').next().unwrap_or(name);
+    match seg {
+        "s" | "seconds" => Some("s"),
+        "j" | "joules" => Some("j"),
+        "w" | "watts" => Some("w"),
+        "usd" => Some("usd"),
+        "tokens" => Some("tokens"),
+        "bytes" => Some("bytes"),
+        "flops" => Some("flops"),
+        "tflops" => Some("tflops"),
+        "frac" | "ratio" | "share" => Some("frac"),
+        "bw" => Some("bw"),
+        "hours" => Some("hours"),
+        "qps" => Some("qps"),
+        _ => None,
+    }
+}
+
+/// `HashMap`/`HashSet` methods whose call on a tainted name means the
+/// code observes hash order.
+const HASH_ITER_METHODS: [&str; 8] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "drain",
+    "retain",
+];
+
+struct Waivers {
+    /// Rules waived for the whole file, with reasons.
+    file_level: Vec<(Rule, String)>,
+    /// Line -> waived rules with reasons (covers that line and the
+    /// next, so a waiver sits on the offending line or just above it).
+    lines: BTreeMap<usize, Vec<(Rule, String)>>,
+}
+
+impl Waivers {
+    fn parse(toks: &[Token]) -> Waivers {
+        let mut w = Waivers { file_level: Vec::new(), lines: BTreeMap::new() };
+        for t in toks.iter().filter(|t| t.kind == TokKind::Comment) {
+            let Some(pos) = t.text.find("simlint:") else { continue };
+            let rest = t.text[pos + "simlint:".len()..].trim_start();
+            let (file_level, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+                (true, r)
+            } else if let Some(r) = rest.strip_prefix("allow(") {
+                (false, r)
+            } else {
+                continue;
+            };
+            let Some(close) = rest.find(')') else { continue };
+            let reason = rest[close + 1..]
+                .trim_start()
+                .strip_prefix("--")
+                .map(|r| r.trim().to_string())
+                .unwrap_or_else(|| "(no reason given)".to_string());
+            for name in rest[..close].split(',') {
+                if let Some(rule) = Rule::from_name(name.trim()) {
+                    if file_level {
+                        w.file_level.push((rule, reason.clone()));
+                    } else {
+                        w.lines
+                            .entry(t.line)
+                            .or_default()
+                            .push((rule, reason.clone()));
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    fn lookup(&self, rule: Rule, line: usize) -> Option<&str> {
+        if let Some((_, reason)) =
+            self.file_level.iter().find(|(r, _)| *r == rule)
+        {
+            return Some(reason);
+        }
+        for l in [line.saturating_sub(1), line] {
+            if let Some(entries) = self.lines.get(&l) {
+                if let Some((_, reason)) =
+                    entries.iter().find(|(r, _)| *r == rule)
+                {
+                    return Some(reason);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Lint one file's source. `rel` is the crate-relative path; it
+/// selects which rule families apply. Waived findings are returned
+/// with `waived = Some(reason)` so callers can inventory them.
+pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
+    let toks = lex(src);
+    let waivers = Waivers::parse(&toks);
+    // Structural rules see only code tokens; comments matter only for
+    // waivers.
+    let code: Vec<&Token> = toks.iter().filter(|t| t.kind != TokKind::Comment).collect();
+    let in_test = test_region_mask(&code);
+
+    let mut raw: Vec<(Rule, usize, String)> = Vec::new();
+    determinism_rule(rel, &code, &in_test, &mut raw);
+    if units_scoped(rel) {
+        units_rule(&code, &in_test, &mut raw);
+        unit_mix_rule(&code, &in_test, &mut raw);
+    }
+    if PANIC_FILES.contains(&rel) {
+        panic_rule(&code, &in_test, &mut raw);
+    }
+
+    raw.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.2.cmp(&b.2)));
+    raw.into_iter()
+        .map(|(rule, line, msg)| Finding {
+            file: rel.to_string(),
+            line,
+            rule,
+            msg,
+            waived: waivers.lookup(rule, line).map(str::to_string),
+        })
+        .collect()
+}
+
+/// Mark code-token indices inside `#[cfg(test)]` items (the attribute
+/// through the end of the following brace-delimited item).
+fn test_region_mask(code: &[&Token]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let is = |i: usize, k: TokKind, s: &str| {
+        code.get(i).is_some_and(|t| t.kind == k && t.text == s)
+    };
+    let mut i = 0;
+    while i < code.len() {
+        let attr = is(i, TokKind::Punct, "#")
+            && is(i + 1, TokKind::Punct, "[")
+            && is(i + 2, TokKind::Ident, "cfg")
+            && is(i + 3, TokKind::Punct, "(")
+            && is(i + 4, TokKind::Ident, "test")
+            && is(i + 5, TokKind::Punct, ")")
+            && is(i + 6, TokKind::Punct, "]");
+        if !attr {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + 7;
+        // Find the item body: first `{` (mod/fn/impl) or a terminating
+        // `;` (e.g. a cfg'd `use`).
+        while j < code.len()
+            && !(code[j].kind == TokKind::Punct
+                && (code[j].text == "{" || code[j].text == ";"))
+        {
+            j += 1;
+        }
+        if j < code.len() && code[j].text == "{" {
+            let mut depth = 0usize;
+            while j < code.len() {
+                if code[j].kind == TokKind::Punct {
+                    if code[j].text == "{" {
+                        depth += 1;
+                    } else if code[j].text == "}" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                }
+                j += 1;
+            }
+        }
+        for m in mask.iter_mut().take((j + 1).min(code.len())).skip(start) {
+            *m = true;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+fn determinism_rule(
+    rel: &str,
+    code: &[&Token],
+    in_test: &[bool],
+    out: &mut Vec<(Rule, usize, String)>,
+) {
+    let ident = |i: usize| -> Option<&str> {
+        code.get(i)
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+    };
+    let punct = |i: usize, s: &str| {
+        code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+    };
+
+    // Pass 1: names declared with a HashMap/HashSet type (or
+    // constructed from one) in coordinator files.
+    let mut tainted: Vec<String> = Vec::new();
+    let hash_scope = rel.starts_with("src/coordinator/");
+    if hash_scope {
+        for i in 0..code.len() {
+            if in_test[i] {
+                continue;
+            }
+            let Some(name) = ident(i) else { continue };
+            // `name: [&mut] [path::]HashMap<...>` (field, param, let).
+            let mut j = i + 1;
+            let colon = punct(j, ":");
+            if colon {
+                j += 1;
+                loop {
+                    if punct(j, "&") || ident(j) == Some("mut") {
+                        j += 1;
+                    } else if punct(j, "'") {
+                        j += 2; // lifetime tick + ident
+                    } else if ident(j).is_some() && punct(j + 1, ":") && punct(j + 2, ":") {
+                        j += 3; // path segment `std::` / `collections::`
+                    } else {
+                        break;
+                    }
+                }
+            } else if punct(j, "=") {
+                j += 1; // `let name = HashMap::new()` and friends
+            } else {
+                continue;
+            }
+            if matches!(ident(j), Some("HashMap") | Some("HashSet"))
+                && !tainted.iter().any(|t| t == name)
+            {
+                tainted.push(name.to_string());
+            }
+        }
+    }
+
+    for i in 0..code.len() {
+        if in_test[i] {
+            continue;
+        }
+        let Some(name) = ident(i) else { continue };
+        match name {
+            // Wall clock: breaks virtual-time determinism everywhere.
+            "Instant" | "SystemTime" => out.push((
+                Rule::Determinism,
+                code[i].line,
+                format!("wall-clock type `{name}` in simulation code (virtual time only)"),
+            )),
+            "std" if punct(i + 1, ":")
+                && punct(i + 2, ":")
+                && ident(i + 3) == Some("time") =>
+            {
+                out.push((
+                    Rule::Determinism,
+                    code[i].line,
+                    "`std::time` in simulation code (virtual time only)".to_string(),
+                ))
+            }
+            // RNG outside the seeded util::rng substrate.
+            "thread_rng" | "from_entropy" | "StdRng" | "SmallRng" | "RandomState"
+                if rel != "src/util/rng.rs" =>
+            {
+                out.push((
+                    Rule::Determinism,
+                    code[i].line,
+                    format!("`{name}`: RNG outside util::rng breaks seeded reproducibility"),
+                ))
+            }
+            "rand" if rel != "src/util/rng.rs"
+                && punct(i + 1, ":")
+                && punct(i + 2, ":") =>
+            {
+                out.push((
+                    Rule::Determinism,
+                    code[i].line,
+                    "`rand::` path: RNG outside util::rng breaks seeded reproducibility"
+                        .to_string(),
+                ))
+            }
+            // Hash-order iteration on a tainted name.
+            _ if hash_scope && tainted.iter().any(|t| t == name) => {
+                // `name.iter()` / `.values()` / ... observe hash order.
+                if punct(i + 1, ".") {
+                    if let Some(m) = ident(i + 2) {
+                        if HASH_ITER_METHODS.contains(&m) && punct(i + 3, "(") {
+                            out.push((
+                                Rule::Determinism,
+                                code[i].line,
+                                format!(
+                                    "iteration over hash-ordered `{name}.{m}()` in \
+                                     coordinator/ (use BTreeMap, a sorted snapshot, \
+                                     or the decode index)"
+                                ),
+                            ));
+                        }
+                    }
+                }
+                // `for x in [&[mut]] [chain.]name {` observes hash order.
+                if punct(i + 1, "{") {
+                    let mut j = i;
+                    while j >= 2 && punct(j - 1, ".") && ident(j - 2).is_some() {
+                        j -= 2;
+                    }
+                    while j >= 1 && (punct(j - 1, "&") || ident(j - 1) == Some("mut")) {
+                        j -= 1;
+                    }
+                    if j >= 1 && ident(j - 1) == Some("in") {
+                        out.push((
+                            Rule::Determinism,
+                            code[i].line,
+                            format!(
+                                "for-loop over hash-ordered `{name}` in coordinator/ \
+                                 (use BTreeMap, a sorted snapshot, or the decode index)"
+                            ),
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn units_rule(code: &[&Token], in_test: &[bool], out: &mut Vec<(Rule, usize, String)>) {
+    let ident = |i: usize| -> Option<&str> {
+        code.get(i)
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+    };
+    let punct = |i: usize, s: &str| {
+        code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+    };
+    let mut i = 0;
+    while i < code.len() {
+        if in_test[i] || ident(i) != Some("pub") {
+            i += 1;
+            continue;
+        }
+        // Public struct field `pub name: f64`.
+        if let Some(fname) = ident(i + 1) {
+            if punct(i + 2, ":")
+                && ident(i + 3) == Some("f64")
+                && (punct(i + 4, ",") || punct(i + 4, "}"))
+                && unit_class(fname).is_none()
+            {
+                out.push((
+                    Rule::Units,
+                    code[i + 1].line,
+                    format!("pub f64 field `{fname}` lacks a unit suffix"),
+                ));
+                i += 4;
+                continue;
+            }
+        }
+        // Public fn: parameters and return type.
+        if ident(i + 1) != Some("fn") {
+            i += 1;
+            continue;
+        }
+        let Some(fn_name) = ident(i + 2) else {
+            i += 2;
+            continue;
+        };
+        // Find the parameter list opener (skip generics `<...>`).
+        let mut j = i + 3;
+        while j < code.len() && !punct(j, "(") {
+            if punct(j, "{") || punct(j, ";") {
+                break;
+            }
+            j += 1;
+        }
+        if !punct(j, "(") {
+            i = j;
+            continue;
+        }
+        let mut depth = 0usize;
+        let open = j;
+        while j < code.len() {
+            if punct(j, "(") {
+                depth += 1;
+            } else if punct(j, ")") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if depth == 1 && code[j].kind == TokKind::Ident && punct(j + 1, ":") {
+                // Parameter name at the top level of the list.
+                let after_open_or_comma =
+                    punct(j - 1, "(") || punct(j - 1, ",") || ident(j - 1) == Some("mut");
+                if after_open_or_comma && j > open {
+                    let pname = &code[j].text;
+                    let mut k = j + 2;
+                    loop {
+                        if punct(k, "&") || ident(k) == Some("mut") {
+                            k += 1;
+                        } else if punct(k, "'") {
+                            k += 2;
+                        } else {
+                            break;
+                        }
+                    }
+                    if ident(k) == Some("f64")
+                        && (punct(k + 1, ",") || punct(k + 1, ")"))
+                        && unit_class(pname).is_none()
+                    {
+                        out.push((
+                            Rule::Units,
+                            code[j].line,
+                            format!(
+                                "f64 parameter `{pname}` of pub fn `{fn_name}` lacks \
+                                 a unit suffix"
+                            ),
+                        ));
+                    }
+                }
+            }
+            j += 1;
+        }
+        // Bare-f64 return: the fn name itself must carry the unit.
+        if punct(j + 1, "-")
+            && punct(j + 2, ">")
+            && ident(j + 3) == Some("f64")
+            && (punct(j + 4, "{") || punct(j + 4, ";") || ident(j + 4) == Some("where"))
+            && unit_class(fn_name).is_none()
+        {
+            out.push((
+                Rule::Units,
+                code[i + 2].line,
+                format!("pub fn `{fn_name}` returns bare f64 but lacks a unit suffix"),
+            ));
+        }
+        i = j + 1;
+    }
+}
+
+fn unit_mix_rule(code: &[&Token], in_test: &[bool], out: &mut Vec<(Rule, usize, String)>) {
+    let ident_tok = |i: usize| -> Option<&Token> {
+        code.get(i).copied().filter(|t| t.kind == TokKind::Ident)
+    };
+    let punct = |i: usize, s: &str| {
+        code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+    };
+    for i in 0..code.len() {
+        if in_test[i] {
+            continue;
+        }
+        let op = match code[i] {
+            t if t.kind == TokKind::Punct && (t.text == "+" || t.text == "-") => &t.text,
+            _ => continue,
+        };
+        // `->`, `+=`, `-=` and unary minus are not additive mixes.
+        if punct(i + 1, ">") || punct(i + 1, "=") {
+            continue;
+        }
+        // Left operand: a plain ident chain `a.b.c` ending just before
+        // the operator, not itself part of a product or quotient.
+        let Some(l) = ident_tok(i.wrapping_sub(1)) else { continue };
+        let mut start = i - 1;
+        while start >= 2 && punct(start - 1, ".") && ident_tok(start - 2).is_some() {
+            start -= 2;
+        }
+        if start >= 1 && (punct(start - 1, "*") || punct(start - 1, "/")) {
+            continue;
+        }
+        // Right operand: a plain ident chain, not a call, cast, index,
+        // or the head of a product/quotient.
+        let Some(mut r) = ident_tok(i + 1) else { continue };
+        let mut k = i + 1;
+        while punct(k + 1, ".") && ident_tok(k + 2).is_some() {
+            k += 2;
+            r = ident_tok(k).unwrap_or(r);
+        }
+        if punct(k + 1, "(")
+            || punct(k + 1, "*")
+            || punct(k + 1, "/")
+            || punct(k + 1, "[")
+            || ident_tok(k + 1).map(|t| t.text.as_str()) == Some("as")
+        {
+            continue;
+        }
+        let (Some(cl), Some(cr)) = (unit_class(&l.text), unit_class(&r.text)) else {
+            continue;
+        };
+        if cl != cr {
+            out.push((
+                Rule::UnitMix,
+                code[i].line,
+                format!(
+                    "`{} {op} {}` mixes units `{cl}` and `{cr}` in one expression",
+                    l.text, r.text
+                ),
+            ));
+        }
+    }
+}
+
+fn panic_rule(code: &[&Token], in_test: &[bool], out: &mut Vec<(Rule, usize, String)>) {
+    let punct = |i: usize, s: &str| {
+        code.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+    };
+    for i in 0..code.len() {
+        if in_test[i] || code[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = code[i].text.as_str();
+        match name {
+            "unwrap" | "expect" if i > 0 && punct(i - 1, ".") && punct(i + 1, "(") => {
+                out.push((
+                    Rule::Panic,
+                    code[i].line,
+                    format!(
+                        "`.{name}()` on the hot path (return a typed error, \
+                         use let-else + debug_assert!, or a non-panicking default)"
+                    ),
+                ));
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented" if punct(i + 1, "!") => {
+                out.push((
+                    Rule::Panic,
+                    code[i].line,
+                    format!("`{name}!` on the hot path (debug_assert! is the audit form)"),
+                ));
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Walk `src/`, `benches/` and `../examples/` under the crate root and
+/// lint every `.rs` file. File order is sorted (deterministic output).
+pub fn check_tree(manifest_dir: &Path) -> Vec<Finding> {
+    let roots = [
+        (manifest_dir.join("src"), "src"),
+        (manifest_dir.join("benches"), "benches"),
+        (manifest_dir.join("../examples"), "examples"),
+    ];
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    for (root, label) in &roots {
+        collect_rs_files(root, label, &mut files);
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for (rel, path) in files {
+        let Ok(src) = fs::read_to_string(&path) else { continue };
+        out.extend(check_file(&rel, &src));
+    }
+    out
+}
+
+fn collect_rs_files(dir: &Path, rel: &str, out: &mut Vec<(String, PathBuf)>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut names: Vec<(String, PathBuf, bool)> = entries
+        .flatten()
+        .map(|e| {
+            let p = e.path();
+            let name = e.file_name().to_string_lossy().into_owned();
+            let is_dir = p.is_dir();
+            (name, p, is_dir)
+        })
+        .collect();
+    names.sort();
+    for (name, path, is_dir) in names {
+        if is_dir {
+            if name != "target" {
+                collect_rs_files(&path, &format!("{rel}/{name}"), out);
+            }
+        } else if name.ends_with(".rs") {
+            out.push((format!("{rel}/{name}"), path));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active(rel: &str, src: &str) -> Vec<Rule> {
+        check_file(rel, src)
+            .into_iter()
+            .filter(|f| f.waived.is_none())
+            .map(|f| f.rule)
+            .collect()
+    }
+
+    #[test]
+    fn unit_class_vocabulary() {
+        assert_eq!(unit_class("t_tp_comm_s"), Some("s"));
+        assert_eq!(unit_class("seconds"), Some("s"));
+        assert_eq!(unit_class("usd_per_kwh"), Some("per"));
+        assert_eq!(unit_class("util_frac"), Some("frac"));
+        assert_eq!(unit_class("throughput_ratio"), Some("frac"));
+        assert_eq!(unit_class("util"), None);
+        assert_eq!(unit_class("t_linears"), None);
+    }
+
+    #[test]
+    fn waiver_parse_and_lookup() {
+        let src = "// simlint: allow(panic) -- startup path\nfn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let fs = check_file("src/coordinator/engine.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].waived.as_deref(), Some("startup path"));
+    }
+
+    #[test]
+    fn file_level_waiver_covers_everything() {
+        let src = "// simlint: allow-file(determinism) -- real hardware\n\
+                   fn f() { let _ = std::time::Instant::now(); }";
+        let fs = check_file("src/coordinator/pjrt_x.rs", src);
+        assert!(!fs.is_empty());
+        assert!(fs.iter().all(|f| f.waived.is_some()));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(o: Option<u32>) -> u32 { o.unwrap() }\n}";
+        assert!(active("src/coordinator/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sorted_output_is_stable() {
+        let src = "fn a() { let t = std::time::Instant::now(); }";
+        let a = check_file("src/x.rs", src);
+        let b = check_file("src/x.rs", src);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.line, x.msg.clone()), (y.line, y.msg.clone()));
+        }
+    }
+}

@@ -14,7 +14,7 @@
 
 pub mod rack;
 
-pub use rack::{assumed_server_price, InfraModel, RackConfig};
+pub use rack::{assumed_server_price_usd, InfraModel, RackConfig};
 
 /// Relative-cost inputs of the paper's Eq. 1.
 #[derive(Debug, Clone, Copy)]
@@ -32,6 +32,7 @@ pub struct TcoInputs {
 
 impl TcoInputs {
     /// The paper's Fig. 1 setting: C_S = C_I, R_IC = 1.
+    // simlint: allow(units) -- paper Eq. 1 notation (R_SC, R_Th are ratios)
     pub fn fig1(r_sc: f64, r_th: f64) -> Self {
         TcoInputs {
             server_cost_ratio: r_sc,
@@ -69,6 +70,7 @@ pub fn fig1_grid() -> Vec<(f64, f64, f64)> {
 
 /// Break-even R_SC: the server-cost ratio at which A and B tie, given
 /// R_Th (and the C_S share). Above this price ratio, A loses.
+// simlint: allow(units) -- paper Eq. 1 notation (R_Th, R_IC are ratios)
 pub fn breakeven_server_cost_ratio(r_th: f64, server_cost_share: f64, r_ic: f64) -> f64 {
     // Solve (cs·x + ci·r_ic) / r_th = 1.
     let cs = server_cost_share;
@@ -81,12 +83,14 @@ pub fn breakeven_server_cost_ratio(r_th: f64, server_cost_share: f64, r_ic: f64)
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub name: String,
+    // simlint: allow(units) -- paper Eq. 1 notation (R_Th is a ratio)
     pub r_th: f64,
+    // simlint: allow(units) -- paper Eq. 1 notation (R_SC is a ratio)
     pub r_sc: f64,
 }
 
 impl Scenario {
-    pub fn tco(&self) -> f64 {
+    pub fn tco_ratio(&self) -> f64 {
         tco_ratio(TcoInputs::fig1(self.r_sc, self.r_th))
     }
 }

@@ -16,11 +16,11 @@ pub struct RackConfig {
     pub power_budget_w: f64,
     /// Amortized fixed cost of the rack + cooling + power equipment
     /// over the planning horizon ($/rack).
-    pub fixed_cost: f64,
+    pub fixed_cost_usd: f64,
     /// Electricity price ($/kWh).
-    pub kwh_price: f64,
+    pub usd_per_kwh: f64,
     /// Planning horizon (hours).
-    pub horizon_h: f64,
+    pub horizon_hours: f64,
     /// Accelerators per server.
     pub chips_per_server: usize,
     /// Non-accelerator server overhead power (CPU, NICs, fans) per
@@ -34,9 +34,9 @@ impl RackConfig {
     pub fn a100_era() -> Self {
         RackConfig {
             power_budget_w: 40_000.0,
-            fixed_cost: 120_000.0,
-            kwh_price: 0.08,
-            horizon_h: 5.0 * 365.0 * 24.0, // 5-year amortization
+            fixed_cost_usd: 120_000.0,
+            usd_per_kwh: 0.08,
+            horizon_hours: 5.0 * 365.0 * 24.0, // 5-year amortization
             chips_per_server: 8,
             server_overhead_w: 1_500.0,
         }
@@ -50,7 +50,7 @@ impl RackConfig {
 /// sensitivity.
 ///
 /// [`TcoInputs`]: crate::tco::TcoInputs
-pub fn assumed_server_price(dev: Device) -> f64 {
+pub fn assumed_server_price_usd(dev: Device) -> f64 {
     match dev {
         Device::H100 => 250_000.0,
         Device::Gaudi2 => 125_000.0,
@@ -84,14 +84,14 @@ impl InfraModel {
     /// electricity.
     pub fn infra_cost_per_server(&self, chip_draw_w: f64) -> f64 {
         let per_rack = self.servers_per_rack(chip_draw_w).max(1) as f64;
-        let rack_share = self.rack.fixed_cost / per_rack;
-        let energy_kwh = self.server_power_w(chip_draw_w) / 1000.0 * self.rack.horizon_h;
-        rack_share + energy_kwh * self.rack.kwh_price
+        let rack_share = self.rack.fixed_cost_usd / per_rack;
+        let energy_kwh = self.server_power_w(chip_draw_w) / 1000.0 * self.rack.horizon_hours;
+        rack_share + energy_kwh * self.rack.usd_per_kwh
     }
 
     /// R_IC between two devices at given sustained draws.
-    pub fn infra_cost_ratio(&self, a_draw: f64, b_draw: f64) -> f64 {
-        self.infra_cost_per_server(a_draw) / self.infra_cost_per_server(b_draw)
+    pub fn infra_cost_ratio(&self, a_draw_w: f64, b_draw_w: f64) -> f64 {
+        self.infra_cost_per_server(a_draw_w) / self.infra_cost_per_server(b_draw_w)
     }
 
     /// Absolute cost per million output tokens served *at SLO*: the
@@ -104,13 +104,13 @@ impl InfraModel {
     /// not peak tokens/s.
     pub fn cost_per_mtok(
         &self,
-        server_price: f64,
+        server_price_usd: f64,
         chip_draw_w: f64,
         server_tokens_per_sec: f64,
     ) -> f64 {
         assert!(server_tokens_per_sec > 0.0, "goodput must be positive");
-        let total_cost = server_price + self.infra_cost_per_server(chip_draw_w);
-        let tokens = server_tokens_per_sec * self.rack.horizon_h * 3600.0;
+        let total_cost = server_price_usd + self.infra_cost_per_server(chip_draw_w);
+        let tokens = server_tokens_per_sec * self.rack.horizon_hours * 3600.0;
         total_cost / tokens * 1e6
     }
 
@@ -121,11 +121,11 @@ impl InfraModel {
     /// Normalizing to per-chip goodput and scaling to the server's
     /// chip count prices multi-chip plans on the same axis as
     /// single-chip ones (a TP=8 instance simply *is* one server here).
-    /// `server_price` stays a caller knob like in [`Self::cost_per_mtok`]
-    /// (pass [`assumed_server_price`] for the illustrative defaults).
+    /// `server_price_usd` stays a caller knob like in [`Self::cost_per_mtok`]
+    /// (pass [`assumed_server_price_usd`] for the illustrative defaults).
     pub fn cost_per_mtok_sharded(
         &self,
-        server_price: f64,
+        server_price_usd: f64,
         chips: usize,
         watts_per_chip: f64,
         tokens_per_sec: f64,
@@ -133,7 +133,7 @@ impl InfraModel {
         assert!(chips > 0, "deployment needs chips");
         let per_chip_tps = tokens_per_sec / chips as f64;
         let server_tps = per_chip_tps * self.rack.chips_per_server as f64;
-        self.cost_per_mtok(server_price, watts_per_chip, server_tps)
+        self.cost_per_mtok(server_price_usd, watts_per_chip, server_tps)
     }
 
     /// $/Mtok-at-SLO for a *heterogeneous, disaggregated* deployment:
@@ -142,7 +142,7 @@ impl InfraModel {
     /// the summed cost is divided by the tokens the whole deployment
     /// delivers at SLO — one workload, one $/Mtok axis, even when the
     /// prefill and decode pools are different vendors. Each pool tuple
-    /// is `(server_price, chips, watts_per_chip)`. For a single pool
+    /// is `(server_price_usd, chips, watts_per_chip)`. For a single pool
     /// this reduces exactly to [`Self::cost_per_mtok_sharded`].
     pub fn cost_per_mtok_disagg(
         &self,
@@ -152,12 +152,12 @@ impl InfraModel {
         assert!(tokens_per_sec > 0.0, "goodput must be positive");
         assert!(!pools.is_empty(), "deployment needs at least one pool");
         let mut total_cost = 0.0;
-        for &(server_price, chips, watts_per_chip) in pools {
+        for &(server_price_usd, chips, watts_per_chip) in pools {
             assert!(chips > 0, "every pool needs chips");
             let servers = chips as f64 / self.rack.chips_per_server as f64;
-            total_cost += servers * (server_price + self.infra_cost_per_server(watts_per_chip));
+            total_cost += servers * (server_price_usd + self.infra_cost_per_server(watts_per_chip));
         }
-        let tokens = tokens_per_sec * self.rack.horizon_h * 3600.0;
+        let tokens = tokens_per_sec * self.rack.horizon_hours * 3600.0;
         total_cost / tokens * 1e6
     }
 
@@ -177,12 +177,12 @@ impl InfraModel {
         self.cost_per_mtok_disagg(
             &[
                 (
-                    assumed_server_price(plan.prefill.device),
+                    assumed_server_price_usd(plan.prefill.device),
                     plan.prefill.plan.total_chips(),
                     prefill_watts,
                 ),
                 (
-                    assumed_server_price(plan.decode.device),
+                    assumed_server_price_usd(plan.decode.device),
                     plan.decode.plan.total_chips(),
                     decode_watts,
                 ),
@@ -209,17 +209,17 @@ impl InfraModel {
         self.cost_per_mtok_disagg(
             &[
                 (
-                    assumed_server_price(plan.colocated.device),
+                    assumed_server_price_usd(plan.colocated.device),
                     plan.colocated.plan.total_chips(),
                     colocated_watts,
                 ),
                 (
-                    assumed_server_price(plan.disagg.prefill.device),
+                    assumed_server_price_usd(plan.disagg.prefill.device),
                     plan.disagg.prefill.plan.total_chips(),
                     prefill_watts,
                 ),
                 (
-                    assumed_server_price(plan.disagg.decode.device),
+                    assumed_server_price_usd(plan.disagg.decode.device),
                     plan.disagg.decode.plan.total_chips(),
                     decode_watts,
                 ),
@@ -230,8 +230,8 @@ impl InfraModel {
 
     /// Convenience: sustained draw for a device at a utilization,
     /// optionally power-capped.
-    pub fn sustained_draw(&self, dev: Device, util: f64, cap_w: Option<f64>) -> f64 {
-        let p = crate::hwsim::power::power_draw(dev, util);
+    pub fn sustained_draw_w(&self, dev: Device, util_frac: f64, cap_w: Option<f64>) -> f64 {
+        let p = crate::hwsim::power::power_draw_w(dev, util_frac);
         match cap_w {
             Some(c) => p.min(c),
             None => p,
@@ -271,8 +271,8 @@ mod tests {
         // cost of the rack and other equipment".
         let m = model();
         let per_rack = m.servers_per_rack(600.0) as f64;
-        let rack_share = m.rack.fixed_cost / per_rack;
-        let energy = m.server_power_w(600.0) / 1000.0 * m.rack.horizon_h * m.rack.kwh_price;
+        let rack_share = m.rack.fixed_cost_usd / per_rack;
+        let energy = m.server_power_w(600.0) / 1000.0 * m.rack.horizon_hours * m.rack.usd_per_kwh;
         // With 5-year horizon energy is material but same order; the
         // fixed share must be at least comparable.
         assert!(rack_share * 2.0 > energy, "rack {rack_share} energy {energy}");
@@ -309,20 +309,20 @@ mod tests {
         // A tp8 instance with 8x the goodput of a tp1 instance costs
         // the same per token: the normalization is per chip.
         let m = model();
-        let h100 = assumed_server_price(Device::H100);
+        let h100 = assumed_server_price_usd(Device::H100);
         let single = m.cost_per_mtok_sharded(h100, 1, 600.0, 1_000.0);
         let tp8 = m.cost_per_mtok_sharded(h100, 8, 600.0, 8_000.0);
         assert!((single / tp8 - 1.0).abs() < 1e-9, "{single} vs {tp8}");
         // Same per-chip goodput on a cheaper server is cheaper.
         let gaudi =
-            m.cost_per_mtok_sharded(assumed_server_price(Device::Gaudi2), 8, 450.0, 8_000.0);
+            m.cost_per_mtok_sharded(assumed_server_price_usd(Device::Gaudi2), 8, 450.0, 8_000.0);
         assert!(gaudi < tp8);
     }
 
     #[test]
     fn disagg_pricing_reduces_to_sharded_for_one_pool() {
         let m = model();
-        let h100 = assumed_server_price(Device::H100);
+        let h100 = assumed_server_price_usd(Device::H100);
         for (chips, tps) in [(1usize, 900.0), (8, 7200.0), (12, 9000.0)] {
             let sharded = m.cost_per_mtok_sharded(h100, chips, 600.0, tps);
             let disagg = m.cost_per_mtok_disagg(&[(h100, chips, 600.0)], tps);
@@ -339,7 +339,7 @@ mod tests {
         // the summed chips — the arithmetic backbone of the
         // infinite-bandwidth colocated-equivalence property.
         let m = model();
-        let price = assumed_server_price(Device::Gaudi2);
+        let price = assumed_server_price_usd(Device::Gaudi2);
         let split = m.cost_per_mtok_disagg(&[(price, 2, 450.0), (price, 6, 450.0)], 4000.0);
         let merged = m.cost_per_mtok_disagg(&[(price, 8, 450.0)], 4000.0);
         assert!((split / merged - 1.0).abs() < 1e-12, "{split} vs {merged}");
@@ -348,8 +348,8 @@ mod tests {
     #[test]
     fn mixed_vendor_pools_price_by_their_own_draw_and_capex() {
         let m = model();
-        let h = assumed_server_price(Device::H100);
-        let g = assumed_server_price(Device::Gaudi2);
+        let h = assumed_server_price_usd(Device::H100);
+        let g = assumed_server_price_usd(Device::Gaudi2);
         // Swapping the pricier pool for the cheaper one at equal shape
         // and goodput lowers $/Mtok.
         let all_h100 = m.cost_per_mtok_disagg(&[(h, 2, 650.0), (h, 6, 650.0)], 4000.0);
@@ -379,7 +379,7 @@ mod tests {
         // must equal one merged pool of the same total chips.
         let mixed = m.cost_per_mtok_phase_affinity_plan(&plan, 600.0, 600.0, 600.0, 4000.0);
         let merged = m.cost_per_mtok_disagg(
-            &[(assumed_server_price(Device::H100), plan.total_chips(), 600.0)],
+            &[(assumed_server_price_usd(Device::H100), plan.total_chips(), 600.0)],
             4000.0,
         );
         assert!((mixed / merged - 1.0).abs() < 1e-12, "{mixed} vs {merged}");
@@ -388,8 +388,8 @@ mod tests {
     #[test]
     fn sustained_draw_caps() {
         let m = model();
-        let uncapped = m.sustained_draw(Device::H100, 0.6, None);
-        let capped = m.sustained_draw(Device::H100, 0.6, Some(400.0));
+        let uncapped = m.sustained_draw_w(Device::H100, 0.6, None);
+        let capped = m.sustained_draw_w(Device::H100, 0.6, Some(400.0));
         assert!(uncapped > 600.0);
         assert_eq!(capped, 400.0);
     }

@@ -5,11 +5,14 @@
 //! fully-tested replacements the rest of the crate builds on:
 //! a JSON parser/writer, a seeded PRNG, streaming statistics, an
 //! ASCII table printer used by every table/figure regeneration bench,
-//! and a scoped-thread parallel map ([`par`]) driving the sweep grids.
+//! a scoped-thread parallel map ([`par`]) driving the sweep grids, and
+//! the minimal Rust tokenizer ([`srclex`]) behind the `simlint`
+//! static-analysis pass.
 
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod srclex;
 pub mod stats;
 pub mod table;
 

@@ -1,0 +1,355 @@
+//! Minimal Rust source tokenizer backing `simlint` (the repo's
+//! static-analysis pass, `src/simlint.rs`).
+//!
+//! The lexer is deliberately small: it only needs to be right about
+//! the things that make naive grep-based linting wrong — comments
+//! (line, doc, nested block), string literals (plain, byte, and raw
+//! with arbitrary `#` fencing), char literals vs. lifetimes, and
+//! numeric literals with exponents — so that rule text appearing
+//! inside a string or a doc comment never fires a finding. Tokens
+//! carry their 1-based source line for finding reports and waiver
+//! matching.
+
+/// Token class. Comments are kept as tokens (not skipped) because the
+/// waiver syntax (`// simlint: allow(...)`) lives in them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `HashMap`, `t_tp_comm_s`, ...).
+    Ident,
+    /// Single punctuation character (`::` arrives as two `:` tokens,
+    /// `->` as `-` then `>`; rules match the pairs).
+    Punct,
+    /// String / raw-string / byte-string / char / numeric literal.
+    Literal,
+    /// Line, doc, or (possibly nested) block comment, full text.
+    Comment,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+}
+
+impl Token {
+    fn new(kind: TokKind, text: impl Into<String>, line: usize) -> Self {
+        Token { kind, text: text.into(), line }
+    }
+}
+
+/// Tokenize Rust source. Never panics: malformed input (an unclosed
+/// string or comment) simply ends the current token at end-of-file,
+/// which is the right behavior for a linter that must not crash on
+/// the tree it is judging.
+pub fn lex(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers /// and //! doc comments).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Token::new(TokKind::Comment, collect(&chars, start, i), line));
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Token::new(TokKind::Comment, collect(&chars, start, i), start_line));
+            continue;
+        }
+        // Raw strings r"..." / r#"..."# (and br variants): the body is
+        // opaque — rule-looking text inside must never fire.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if chars[j] == 'b' {
+                j += 1;
+            }
+            if j < n && chars[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    let start = i;
+                    let start_line = line;
+                    k += 1;
+                    'scan: while k < n {
+                        if chars[k] == '\n' {
+                            line += 1;
+                            k += 1;
+                            continue;
+                        }
+                        if chars[k] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && k + 1 + h < n && chars[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                k += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        k += 1;
+                    }
+                    i = k;
+                    toks.push(Token::new(
+                        TokKind::Literal,
+                        collect(&chars, start, i),
+                        start_line,
+                    ));
+                    continue;
+                }
+            }
+            // Byte string b"...": delegate to the plain-string scanner.
+            if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                let start = i;
+                let start_line = line;
+                let (ni, nl) = scan_string(&chars, i + 1, line);
+                i = ni;
+                line = nl;
+                toks.push(Token::new(
+                    TokKind::Literal,
+                    collect(&chars, start, i),
+                    start_line,
+                ));
+                continue;
+            }
+            // Plain identifier starting with r/b falls through below.
+        }
+        if c == '"' {
+            let start = i;
+            let start_line = line;
+            let (ni, nl) = scan_string(&chars, i, line);
+            i = ni;
+            line = nl;
+            toks.push(Token::new(TokKind::Literal, collect(&chars, start, i), start_line));
+            continue;
+        }
+        // Char literal vs. lifetime: 'x' and '\n' are literals; 'a in
+        // `&'a str` is a lifetime tick followed by an ident.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                let start = i;
+                let mut k = i + 2;
+                while k < n && chars[k] != '\'' {
+                    k += 1;
+                }
+                i = (k + 1).min(n);
+                toks.push(Token::new(TokKind::Literal, collect(&chars, start, i), line));
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                let start = i;
+                i += 3;
+                toks.push(Token::new(TokKind::Literal, collect(&chars, start, i), line));
+                continue;
+            }
+            toks.push(Token::new(TokKind::Punct, "'", line));
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' && i + 1 < n && chars[i + 1].is_ascii_digit() {
+                    // `1.5` continues the number; `0..n` and `1.max(2)`
+                    // end it at the dot.
+                    i += 1;
+                } else if (d == '+' || d == '-')
+                    && matches!(chars[i - 1], 'e' | 'E')
+                    && i + 1 < n
+                    && chars[i + 1].is_ascii_digit()
+                {
+                    // Exponent sign: 1.5e-6, 2.2e+12.
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token::new(TokKind::Literal, collect(&chars, start, i), line));
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            i += 1;
+            while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            toks.push(Token::new(TokKind::Ident, collect(&chars, start, i), line));
+            continue;
+        }
+        toks.push(Token::new(TokKind::Punct, c, line));
+        i += 1;
+    }
+    toks
+}
+
+/// Scan a plain string literal starting at the opening quote `chars[i]`.
+/// Returns (index past the closing quote, updated line).
+fn scan_string(chars: &[char], i: usize, line: usize) -> (usize, usize) {
+    let n = chars.len();
+    let mut k = i + 1;
+    let mut l = line;
+    while k < n {
+        match chars[k] {
+            '\\' => k += 2,
+            '"' => return (k + 1, l),
+            '\n' => {
+                l += 1;
+                k += 1;
+            }
+            _ => k += 1,
+        }
+    }
+    (n, l)
+}
+
+fn collect(chars: &[char], start: usize, end: usize) -> String {
+    chars[start..end.min(chars.len())].iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let toks = lex("fn main() {\n    let x_s = 1.5e-6;\n}\n");
+        assert_eq!(toks[0].text, "fn");
+        assert_eq!(toks[0].line, 1);
+        let x = toks.iter().find(|t| t.text == "x_s").unwrap();
+        assert_eq!((x.kind, x.line), (TokKind::Ident, 2));
+        let num = toks.iter().find(|t| t.text == "1.5e-6").unwrap();
+        assert_eq!(num.kind, TokKind::Literal);
+    }
+
+    #[test]
+    fn strings_swallow_rule_text() {
+        let src = r#"let s = "Instant::now().unwrap()";"#;
+        assert_eq!(idents(src), vec!["let", "s"]);
+    }
+
+    #[test]
+    fn raw_strings_swallow_rule_text() {
+        let src = r###"let s = r#"std::time::SystemTime "quoted" panic!()"#;"###;
+        assert_eq!(idents(src), vec!["let", "s"]);
+        let lit = lex(src)
+            .into_iter()
+            .find(|t| t.kind == TokKind::Literal)
+            .unwrap();
+        assert!(lit.text.contains("SystemTime"));
+    }
+
+    #[test]
+    fn comments_are_tokens_not_idents() {
+        let src = "// simlint: allow(panic) -- reason\nfn f() {} /* unwrap() */";
+        let toks = lex(src);
+        let comments: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Comment).collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("allow(panic)"));
+        assert_eq!(comments[0].line, 1);
+        assert!(!idents(src).contains(&"unwrap".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner unwrap() */ still comment */ fn f() {}";
+        assert_eq!(idents(src), vec!["fn", "f"]);
+    }
+
+    #[test]
+    fn doc_comments_swallow_rule_text() {
+        let src = "/// calls .unwrap() on Instant\nfn f() {}";
+        assert_eq!(idents(src), vec!["fn", "f"]);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let src = "fn f<'a>(x: &'a str) -> char { '\\n' }";
+        let ids = idents(src);
+        assert!(ids.contains(&"a".to_string()), "lifetime ident survives");
+        let lits: Vec<_> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Literal)
+            .collect();
+        assert_eq!(lits.len(), 1);
+        assert_eq!(lits[0].text, "'\\n'");
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges_or_methods() {
+        let src = "for i in 0..n { let y = 1.max(2); let z = 50_000_000; }";
+        let texts: Vec<String> = kinds(src).into_iter().map(|(_, t)| t).collect();
+        assert!(texts.contains(&"0".to_string()));
+        assert!(texts.contains(&"n".to_string()));
+        assert!(texts.contains(&"max".to_string()));
+        assert!(texts.contains(&"50_000_000".to_string()));
+    }
+
+    #[test]
+    fn multiline_string_tracks_lines() {
+        let src = "let s = \"a\nb\";\nlet t = 1;";
+        let t = lex(src).into_iter().find(|tk| tk.text == "t").unwrap();
+        assert_eq!(t.line, 3);
+    }
+
+    #[test]
+    fn unclosed_string_does_not_panic() {
+        let toks = lex("let s = \"never closed");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Literal));
+    }
+}

@@ -54,6 +54,12 @@ pub fn by_name(name: &str) -> Option<&'static LlamaConfig> {
     MODEL_ZOO.iter().find(|m| m.name == name)
 }
 
+/// The paper's measurement model, statically guaranteed to be in the
+/// zoo — hot-path callers use this instead of `by_name(..).unwrap()`.
+pub fn llama_8b() -> &'static LlamaConfig {
+    by_name("llama-8b").expect("llama-8b is in the model zoo")
+}
+
 impl LlamaConfig {
     pub fn head_dim(&self) -> usize {
         self.hidden / self.heads

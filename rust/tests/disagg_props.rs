@@ -29,7 +29,7 @@ use fp8_tco::coordinator::router::{EngineRating, RoutePolicy, Router};
 use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
 use fp8_tco::hwsim::interconnect::KvLink;
 use fp8_tco::hwsim::spec::Device;
-use fp8_tco::tco::{assumed_server_price, InfraModel, RackConfig};
+use fp8_tco::tco::{assumed_server_price_usd, InfraModel, RackConfig};
 use fp8_tco::workload::llama::by_name;
 use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
 
@@ -152,7 +152,7 @@ fn infinite_bandwidth_identical_pools_cost_converges_to_colocated() {
     let cp = colo_out.best.expect("colocated floor feasible");
     let dp = dis_out.best.expect("disaggregated floor feasible");
     let infra = InfraModel::new(RackConfig::a100_era());
-    let h100 = assumed_server_price(Device::H100);
+    let h100 = assumed_server_price_usd(Device::H100);
     let colo_cost = infra.cost_per_mtok_sharded(h100, 4, cp.watts_mean, cp.tokens_per_sec);
     // Merged watts for both pools: identical devices, and the band
     // below is wide; the example/bench do the per-pool split.
@@ -272,10 +272,10 @@ fn chunk_count_one_reproduces_single_shot_bit_exactly() {
     let link = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
     for ctx in [1usize, 137, 512, 2048, 8192] {
         let bytes = ctx as f64 * model.kv_bytes_per_token(2.0);
-        let single = link.transfer_time(bytes);
+        let single = link.transfer_time_s(bytes);
         let sched = link.chunked(bytes, 1);
-        assert_eq!(sched.first_time().to_bits(), single.to_bits());
-        assert_eq!(sched.total_time().to_bits(), single.to_bits());
+        assert_eq!(sched.first_time_s().to_bits(), single.to_bits());
+        assert_eq!(sched.total_time_s().to_bits(), single.to_bits());
     }
     let run = |chunks: usize| {
         let mut c = disagg_sim_cluster(model, &pressure_free_plan())
@@ -307,17 +307,17 @@ fn total_stream_time_monotone_in_chunk_count() {
     let model = by_name("llama-70b").unwrap();
     let link = KvLink { bw: 37.5e9, lat_s: 1.1e-5 };
     let bytes = 4096.0 * model.kv_bytes_per_token(2.0);
-    let single = link.transfer_time(bytes);
+    let single = link.transfer_time_s(bytes);
     let mut prev_total = 0.0;
     let mut prev_first = f64::INFINITY;
     for chunks in 1..=64 {
         let s = link.chunked(bytes, chunks);
-        assert!(s.total_time() >= prev_total, "total dipped at {chunks} chunks");
-        assert!(s.total_time() >= single, "chunking must not beat the wire");
-        assert!(s.first_time() <= prev_first, "first chunk got later at {chunks}");
-        assert!(s.first_time() <= s.total_time());
-        prev_total = s.total_time();
-        prev_first = s.first_time();
+        assert!(s.total_time_s() >= prev_total, "total dipped at {chunks} chunks");
+        assert!(s.total_time_s() >= single, "chunking must not beat the wire");
+        assert!(s.first_time_s() <= prev_first, "first chunk got later at {chunks}");
+        assert!(s.first_time_s() <= s.total_time_s());
+        prev_total = s.total_time_s();
+        prev_first = s.first_time_s();
     }
 }
 
@@ -484,7 +484,7 @@ fn kv_transfer_closed_form_pinned_against_python_mirror() {
     for (name, ctx, src, sc, dst, dc, want) in cases {
         let m = by_name(name).unwrap();
         let link = KvLink::between(src.interconnect(), sc, dst.interconnect(), dc);
-        let t = link.transfer_time(ctx as f64 * m.kv_bytes_per_token(2.0));
+        let t = link.transfer_time_s(ctx as f64 * m.kv_bytes_per_token(2.0));
         assert!(
             (t / want - 1.0).abs() < 1e-9,
             "{name} ctx {ctx}: got {t}, pinned {want}"
@@ -553,17 +553,17 @@ fn chunked_schedule_pinned_against_python_mirror() {
         let link = KvLink::between(src.interconnect(), sc, dst.interconnect(), dc);
         let sched = link.chunked(ctx as f64 * m.kv_bytes_per_token(2.0), chunks);
         assert!(
-            (sched.first_time() / first - 1.0).abs() < 1e-9,
+            (sched.first_time_s() / first - 1.0).abs() < 1e-9,
             "{name} ctx {ctx} x{chunks}: first {} vs pinned {first}",
-            sched.first_time()
+            sched.first_time_s()
         );
         assert!(
-            (sched.total_time() / total - 1.0).abs() < 1e-9,
+            (sched.total_time_s() / total - 1.0).abs() < 1e-9,
             "{name} ctx {ctx} x{chunks}: total {} vs pinned {total}",
-            sched.total_time()
+            sched.total_time_s()
         );
         // The single-shot closed form brackets the schedule.
-        let single = link.transfer_time(ctx as f64 * m.kv_bytes_per_token(2.0));
-        assert!(sched.first_time() < single && sched.total_time() >= single);
+        let single = link.transfer_time_s(ctx as f64 * m.kv_bytes_per_token(2.0));
+        assert!(sched.first_time_s() < single && sched.total_time_s() >= single);
     }
 }

@@ -81,16 +81,16 @@ fn breakdown_to_json(bd: &StepBreakdown) -> Json {
         m.insert(k.to_string(), Json::Num(v));
     };
     put("seconds", bd.seconds);
-    put("t_linears", bd.t_linears);
-    put("t_attention_kv", bd.t_attention_kv);
-    put("t_softmax", bd.t_softmax);
-    put("t_lm_head", bd.t_lm_head);
-    put("t_tp_comm", bd.t_tp_comm);
-    put("t_pp_comm", bd.t_pp_comm);
+    put("t_linears_s", bd.t_linears_s);
+    put("t_attention_kv_s", bd.t_attention_kv_s);
+    put("t_softmax_s", bd.t_softmax_s);
+    put("t_lm_head_s", bd.t_lm_head_s);
+    put("t_tp_comm_s", bd.t_tp_comm_s);
+    put("t_pp_comm_s", bd.t_pp_comm_s);
     put("pp_bubble_frac", bd.pp_bubble_frac);
     put("flops", bd.flops);
     put("achieved_flops", bd.achieved_flops);
-    put("util", bd.util);
+    put("util_frac", bd.util_frac);
     put("watts", bd.watts);
     Json::Obj(m)
 }
@@ -184,15 +184,15 @@ fn multichip_grid_entries_expose_comm_terms() {
                 let tag = format!("{} {phase} tp{tp} pp{pp}", dev.name());
                 assert!(bd.seconds.is_finite() && bd.seconds > 0.0, "{tag}");
                 if tp > 1 {
-                    assert!(bd.t_tp_comm > 0.0, "{tag}: missing TP comm");
+                    assert!(bd.t_tp_comm_s > 0.0, "{tag}: missing TP comm");
                 } else {
-                    assert_eq!(bd.t_tp_comm, 0.0, "{tag}: phantom TP comm");
+                    assert_eq!(bd.t_tp_comm_s, 0.0, "{tag}: phantom TP comm");
                 }
                 if pp > 1 {
-                    assert!(bd.t_pp_comm > 0.0, "{tag}: missing PP comm");
+                    assert!(bd.t_pp_comm_s > 0.0, "{tag}: missing PP comm");
                     assert!(bd.pp_bubble_frac > 0.0, "{tag}: missing PP bubble");
                 } else {
-                    assert_eq!(bd.t_pp_comm, 0.0, "{tag}: phantom PP comm");
+                    assert_eq!(bd.t_pp_comm_s, 0.0, "{tag}: phantom PP comm");
                     assert_eq!(bd.pp_bubble_frac, 0.0, "{tag}: phantom bubble");
                 }
             }

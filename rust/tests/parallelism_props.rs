@@ -28,10 +28,10 @@ fn tp1_pp1_reproduces_single_chip_model_exactly() {
         for prec in [PrecisionMode::Bf16, PrecisionMode::fp8_static()] {
             let m = by_name("llama-8b").unwrap();
             let d = decode_step(m, &cfg(dev, prec), 32, 1024);
-            assert_eq!(d.t_tp_comm, 0.0);
-            assert_eq!(d.t_pp_comm, 0.0);
+            assert_eq!(d.t_tp_comm_s, 0.0);
+            assert_eq!(d.t_pp_comm_s, 0.0);
             assert_eq!(d.pp_bubble_frac, 0.0);
-            let sum = d.t_linears + d.t_attention_kv + d.t_softmax + d.t_lm_head;
+            let sum = d.t_linears_s + d.t_attention_kv_s + d.t_softmax_s + d.t_lm_head_s;
             assert!(
                 (sum / d.seconds - 1.0).abs() < 1e-12,
                 "{} {}: decode {} != {}",
@@ -41,8 +41,8 @@ fn tp1_pp1_reproduces_single_chip_model_exactly() {
                 d.seconds
             );
             let p = prefill(m, &cfg(dev, prec), 1, 2048);
-            assert_eq!(p.t_tp_comm, 0.0);
-            let psum = p.t_linears + p.t_attention_kv + p.t_softmax + p.t_lm_head;
+            assert_eq!(p.t_tp_comm_s, 0.0);
+            let psum = p.t_linears_s + p.t_attention_kv_s + p.t_softmax_s + p.t_lm_head_s;
             assert!((psum / p.seconds - 1.0).abs() < 1e-12);
         }
     }
@@ -65,10 +65,10 @@ fn explicit_plan_at_unit_shape_changes_nothing() {
 fn tp_beyond_one_shard_pays_collectives() {
     let m = by_name("llama-8b").unwrap();
     let d = decode_step(m, &cfg(Device::H100, PrecisionMode::fp8_dynamic()).with_tp(2), 32, 1024);
-    assert!(d.t_tp_comm > 0.0);
+    assert!(d.t_tp_comm_s > 0.0);
     // seconds = work + comm: strictly more than the sum of work parts.
-    let work = d.t_linears + d.t_attention_kv + d.t_softmax + d.t_lm_head;
-    assert!((d.seconds - (work + d.t_tp_comm)).abs() < 1e-12 * d.seconds);
+    let work = d.t_linears_s + d.t_attention_kv_s + d.t_softmax_s + d.t_lm_head_s;
+    assert!((d.seconds - (work + d.t_tp_comm_s)).abs() < 1e-12 * d.seconds);
 }
 
 #[test]
@@ -158,7 +158,7 @@ fn pp_bubble_fraction_matches_closed_form() {
                 "pp{pp} mb{mb}: {} != {expect}",
                 bd.pp_bubble_frac
             );
-            assert!(bd.t_pp_comm > 0.0);
+            assert!(bd.t_pp_comm_s > 0.0);
         }
     }
 }
@@ -236,8 +236,8 @@ fn pp_stages_outside_scale_up_domain_pay_scale_out() {
     // hop onto the scale-out NIC.
     let inside = mk(4, 2);
     let outside = mk(8, 2);
-    assert!(outside.t_pp_comm > inside.t_pp_comm * 2.0,
-            "{} vs {}", outside.t_pp_comm, inside.t_pp_comm);
+    assert!(outside.t_pp_comm_s > inside.t_pp_comm_s * 2.0,
+            "{} vs {}", outside.t_pp_comm_s, inside.t_pp_comm_s);
 }
 
 #[test]

@@ -1,0 +1,55 @@
+//! The blocking lint gate (tier 1): the merged tree must carry zero
+//! unwaived simlint findings, and every waiver must carry a reason.
+//!
+//! This is the same check `cargo run --bin simlint` performs in CI,
+//! run in-process so `cargo test` alone enforces the policy.
+
+use std::path::PathBuf;
+
+use fp8_tco::simlint::{check_tree, Finding};
+
+fn tree() -> Vec<Finding> {
+    check_tree(&PathBuf::from(env!("CARGO_MANIFEST_DIR")))
+}
+
+#[test]
+fn tree_has_no_unwaived_findings() {
+    let unwaived: Vec<Finding> =
+        tree().into_iter().filter(|f| f.waived.is_none()).collect();
+    let listing: String = unwaived
+        .iter()
+        .map(|f| format!("  {}:{}: [{}] {}\n", f.file, f.line, f.rule.name(), f.msg))
+        .collect();
+    assert!(
+        unwaived.is_empty(),
+        "simlint found {} unwaived finding(s):\n{listing}\
+         fix the code or add `// simlint: allow(<rule>) -- <reason>`",
+        unwaived.len()
+    );
+}
+
+#[test]
+fn every_waiver_carries_a_reason() {
+    let waived: Vec<Finding> =
+        tree().into_iter().filter(|f| f.waived.is_some()).collect();
+    // The tree is expected to carry at least the pjrt backend's
+    // wall-clock waiver — an empty inventory means the waiver parser
+    // silently broke, not that the tree got cleaner.
+    assert!(
+        waived
+            .iter()
+            .any(|f| f.file == "src/coordinator/pjrt_backend.rs"),
+        "expected the pjrt_backend wall-clock waiver in the inventory; got: {:?}",
+        waived.iter().map(|f| &f.file).collect::<Vec<_>>()
+    );
+    for f in &waived {
+        let reason = f.waived.as_deref().unwrap_or_default();
+        assert!(
+            !reason.is_empty() && reason != "(no reason given)",
+            "{}:{} [{}] is waived without a reason",
+            f.file,
+            f.line,
+            f.rule.name()
+        );
+    }
+}

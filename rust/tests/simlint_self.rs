@@ -1,0 +1,210 @@
+//! simlint self-tests: every rule family exercised in both directions
+//! (a fixture that must fire, and a near-identical one that must not),
+//! plus the lexer-immunity cases — rule-looking text inside string
+//! literals, raw strings, and doc comments must never fire.
+
+use fp8_tco::simlint::{check_file, Rule};
+
+/// Unwaived rule hits for a fixture.
+fn active(rel: &str, src: &str) -> Vec<Rule> {
+    check_file(rel, src)
+        .into_iter()
+        .filter(|f| f.waived.is_none())
+        .map(|f| f.rule)
+        .collect()
+}
+
+fn fires(rel: &str, src: &str, rule: Rule) -> bool {
+    active(rel, src).contains(&rule)
+}
+
+// ---------------------------------------------------------------- determinism
+
+#[test]
+fn determinism_denies_wall_clock_anywhere() {
+    let src = "fn f() { let t = std::time::Instant::now(); }";
+    assert!(fires("src/hwsim/gemm.rs", src, Rule::Determinism));
+    assert!(fires("benches/foo.rs", src, Rule::Determinism));
+    assert!(fires("src/coordinator/engine.rs", "use std::time::SystemTime;", Rule::Determinism));
+}
+
+#[test]
+fn determinism_waiver_suppresses_wall_clock() {
+    let src = "// simlint: allow(determinism) -- measurement harness\n\
+               fn f() { let t = std::time::Instant::now(); }";
+    assert!(!fires("src/hwsim/gemm.rs", src, Rule::Determinism));
+    // ...and the waived finding is still inventoried.
+    let all = check_file("src/hwsim/gemm.rs", src);
+    assert!(all.iter().any(|f| f.waived.as_deref() == Some("measurement harness")));
+}
+
+#[test]
+fn determinism_denies_rng_outside_util_rng() {
+    let src = "fn f() { let mut r = thread_rng(); }";
+    assert!(fires("src/analysis/foo.rs", src, Rule::Determinism));
+    assert!(fires("src/coordinator/engine.rs", "use rand::Rng;", Rule::Determinism));
+    // The seeded substrate itself is the one legitimate home.
+    assert!(!fires("src/util/rng.rs", src, Rule::Determinism));
+}
+
+#[test]
+fn determinism_denies_hash_iteration_in_coordinator() {
+    let src = "struct S { m: HashMap<u64, u32> }\n\
+               impl S { fn f(&self) { for v in self.m.values() { drop(v); } } }";
+    assert!(fires("src/coordinator/foo.rs", src, Rule::Determinism));
+    let for_loop = "fn f(m: &HashMap<u64, u32>) { for v in m { drop(v); } }";
+    assert!(fires("src/coordinator/foo.rs", for_loop, Rule::Determinism));
+}
+
+#[test]
+fn determinism_allows_hash_iteration_outside_coordinator() {
+    let src = "struct S { m: HashMap<u64, u32> }\n\
+               impl S { fn f(&self) { for v in self.m.values() { drop(v); } } }";
+    assert!(!fires("src/analysis/foo.rs", src, Rule::Determinism));
+}
+
+#[test]
+fn determinism_allows_point_lookups_on_hash_maps() {
+    let src = "struct S { m: HashMap<u64, u32> }\n\
+               impl S { fn f(&self) -> Option<&u32> { self.m.get(&1) } }";
+    assert!(!fires("src/coordinator/foo.rs", src, Rule::Determinism));
+}
+
+// --------------------------------------------------------------------- units
+
+#[test]
+fn units_denies_bare_f64_param_in_scoped_file() {
+    let src = "pub fn f(x: f64) -> usize { x as usize }";
+    assert!(fires("src/tco/fake.rs", src, Rule::Units));
+    assert!(fires("src/analysis/perfmodel.rs", src, Rule::Units));
+}
+
+#[test]
+fn units_does_not_apply_outside_scoped_files() {
+    let src = "pub fn f(x: f64) -> usize { x as usize }";
+    assert!(!fires("src/hwsim/gemm.rs", src, Rule::Units));
+}
+
+#[test]
+fn units_accepts_suffixed_names() {
+    let src = "pub struct A { pub draw_w: f64, pub cost_usd: f64 }\n\
+               pub fn total_s(x_s: f64) -> f64 { x_s }\n\
+               pub fn cost_per_mtok(tokens: f64) -> f64 { tokens }";
+    assert!(!fires("src/tco/fake.rs", src, Rule::Units));
+}
+
+#[test]
+fn units_denies_unsuffixed_pub_field_and_return() {
+    let field = "pub struct A { pub power: f64 }";
+    assert!(fires("src/tco/fake.rs", field, Rule::Units));
+    let ret = "pub fn compute() -> f64 { 1.0 }";
+    assert!(fires("src/tco/fake.rs", ret, Rule::Units));
+}
+
+#[test]
+fn units_ignores_private_and_non_f64_surfaces() {
+    let src = "struct A { power: f64 }\n\
+               fn helper(x: f64) -> f64 { x }\n\
+               pub fn count(n: usize) -> usize { n }";
+    assert!(!fires("src/tco/fake.rs", src, Rule::Units));
+}
+
+// ------------------------------------------------------------------ unit-mix
+
+#[test]
+fn unit_mix_denies_cross_unit_addition() {
+    let src = "fn f(a_s: f64, b_w: f64) -> f64 { a_s + b_w }";
+    assert!(fires("src/hwsim/power.rs", src, Rule::UnitMix));
+    let sub = "fn f(t_s: f64, e_j: f64) -> f64 { t_s - e_j }";
+    assert!(fires("src/hwsim/interconnect.rs", sub, Rule::UnitMix));
+}
+
+#[test]
+fn unit_mix_accepts_same_class_and_products() {
+    // Same class (s + seconds) is fine.
+    let same = "fn f(a_s: f64, b_seconds: f64) -> f64 { a_s + b_seconds }";
+    assert!(!fires("src/hwsim/power.rs", same, Rule::UnitMix));
+    // A quotient result added to a latency is dimensionally sane:
+    // `bytes / bw + lat_s` must not fire.
+    let closed_form = "fn f(n_bytes: f64, bw: f64, lat_s: f64) -> f64 { n_bytes / bw + lat_s }";
+    assert!(!fires("src/hwsim/interconnect.rs", closed_form, Rule::UnitMix));
+    // Products on either side opt out too.
+    let scaled = "fn f(p_w: f64, t_s: f64, e_j: f64) -> f64 { e_j + p_w * t_s }";
+    assert!(!fires("src/hwsim/power.rs", scaled, Rule::UnitMix));
+}
+
+// --------------------------------------------------------------------- panic
+
+#[test]
+fn panic_denies_unwrap_on_hot_path() {
+    let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+    assert!(fires("src/coordinator/engine.rs", src, Rule::Panic));
+    let exp = "fn f(o: Option<u32>) -> u32 { o.expect(\"x\") }";
+    assert!(fires("src/coordinator/batcher.rs", exp, Rule::Panic));
+    let mac = "fn f() { panic!(\"boom\") }";
+    assert!(fires("src/coordinator/router.rs", mac, Rule::Panic));
+}
+
+#[test]
+fn panic_policy_scopes_to_hot_path_files_only() {
+    let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+    assert!(!fires("src/coordinator/metrics.rs", src, Rule::Panic));
+    assert!(!fires("src/workload/llama.rs", src, Rule::Panic));
+}
+
+#[test]
+fn panic_allows_cfg_test_and_asserts() {
+    let test_mod = "#[cfg(test)]\nmod tests {\n    fn f(o: Option<u32>) -> u32 { o.unwrap() }\n}";
+    assert!(!fires("src/coordinator/engine.rs", test_mod, Rule::Panic));
+    let audits = "fn f(x: usize) { assert!(x > 0); debug_assert!(x < 10, \"bound\"); }";
+    assert!(!fires("src/coordinator/engine.rs", audits, Rule::Panic));
+}
+
+#[test]
+fn panic_waiver_with_reason_is_honored_and_inventoried() {
+    let src = "fn f(o: Option<u32>) -> u32 {\n\
+               // simlint: allow(panic) -- init-time invariant\n\
+               o.unwrap()\n\
+               }";
+    let all = check_file("src/coordinator/engine.rs", src);
+    assert_eq!(all.len(), 1);
+    assert_eq!(all[0].waived.as_deref(), Some("init-time invariant"));
+}
+
+#[test]
+fn multi_rule_waiver_covers_both_rules() {
+    let src = "// simlint: allow(panic,determinism) -- probe\n\
+               fn f() { std::time::Instant::now().elapsed().as_secs_f64(); }";
+    // determinism waived on the next line; nothing else fires.
+    assert!(active("src/coordinator/engine.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ lexer immunity
+
+#[test]
+fn rule_text_in_string_literals_does_not_fire() {
+    let src = r#"fn f() -> &'static str { "Instant::now().unwrap() panic!" }"#;
+    assert!(active("src/coordinator/engine.rs", src).is_empty());
+}
+
+#[test]
+fn rule_text_in_raw_strings_does_not_fire() {
+    let src = "fn f() -> &'static str { r#\"std::time::SystemTime thread_rng() .expect(\"#  }";
+    assert!(active("src/coordinator/engine.rs", src).is_empty());
+}
+
+#[test]
+fn rule_text_in_doc_comments_does_not_fire() {
+    let src = "/// Calls `.unwrap()` on an `Instant` from `thread_rng()`.\n\
+               /* block: panic! std::time */\n\
+               fn f() {}";
+    assert!(active("src/coordinator/engine.rs", src).is_empty());
+}
+
+#[test]
+fn range_expressions_survive_the_lexer() {
+    // `0..n` must lex as number, dot, dot, ident — not eat the range
+    // dots into a float and desync the token stream.
+    let src = "fn f(n: usize) { for i in 0..n { drop(i); } }";
+    assert!(active("src/coordinator/engine.rs", src).is_empty());
+}
