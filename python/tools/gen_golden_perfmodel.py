@@ -118,11 +118,54 @@ def sfu_exp_rate(dev):
 
 # -------------------------------------------------------------- power.rs
 
+DVFS_POWER = 2.2
+
+
 def power_draw_w(dev, util_frac):
     spec = DEVICES[dev]
     a, b, max_frac = power_curve(dev)
     frac = min(a * max(util_frac, 0.0) ** b, max_frac)
     return spec["idle_w"] + (spec["tdp"] - spec["idle_w"]) * frac
+
+
+def apply_cap(dev, cap_w, t_s, util_frac, compute_frac):
+    """Mirror of power::apply_cap, clamp + cap_feasible flag included:
+    when the cap is feasible (cap_w >= idle_w) the reported draw never
+    exceeds cap_w — the DVFS floors' residual is duty-cycled away."""
+    spec = DEVICES[dev]
+    p0 = power_draw_w(dev, util_frac)
+    if p0 <= cap_w:
+        return dict(clock_frac=1.0, seconds=t_s, watts=p0, cap_feasible=True)
+    dyn0 = p0 - spec["idle_w"]
+    cap_feasible = cap_w >= spec["idle_w"]
+    target_dyn = max(cap_w - spec["idle_w"], dyn0 * 0.05)
+    f = min(max((target_dyn / dyn0) ** (1.0 / DVFS_POWER), 0.2), 1.0)
+    seconds = t_s * (compute_frac / f + (1.0 - compute_frac))
+    watts = spec["idle_w"] + dyn0 * f ** DVFS_POWER
+    if cap_feasible:
+        watts = min(watts, cap_w)
+    return dict(clock_frac=f, seconds=seconds, watts=watts,
+                cap_feasible=cap_feasible)
+
+
+def rack_allocation(total_w, demands):
+    """Mirror of power::rack_allocation (water-filling; Python's sort
+    is stable like Rust's sort_by, so ties break identically)."""
+    n = len(demands)
+    if n == 0:
+        return []
+    if sum(demands) <= total_w:
+        return list(demands)
+    alloc = [0.0] * n
+    remaining = total_w
+    left = n
+    for i in sorted(range(n), key=lambda j: demands[j]):
+        fair = remaining / left
+        give = min(demands[i], fair)
+        alloc[i] = give
+        remaining -= give
+        left -= 1
+    return alloc
 
 
 # ---------------------------------------------------------------- mme.rs
@@ -378,10 +421,24 @@ def resolve_mb(pp, microbatches, tokens):
 
 
 def finish(dev, prec, tp, pp, t_raw, util, flops,
-           t_lin, t_kv, t_exp, t_head, tokens, hidden, layers, mb, t_work_mb_raw):
-    # PowerCap::None: no stretch, draw at the utilization point.
-    t_work = t_raw
-    watts = power_draw_w(dev, util)
+           t_lin, t_kv, t_exp, t_head, tokens, hidden, layers, mb, t_work_mb_raw,
+           power_cap=None, compute_frac=1.0):
+    # Mirror of the PowerCap arms. None: no stretch, draw at the
+    # utilization point. ("per_gpu", w): apply_cap. ("per_rack", w, n):
+    # water-fill the uniform demand vector, then apply_cap at the
+    # (degenerate even) share — exactly the Rust arm.
+    if power_cap is None:
+        t_work = t_raw
+        watts = power_draw_w(dev, util)
+    elif power_cap[0] == "per_gpu":
+        capped = apply_cap(dev, power_cap[1], t_raw, util, compute_frac)
+        t_work, watts = capped["seconds"], capped["watts"]
+    else:
+        p0 = power_draw_w(dev, util)
+        alloc = rack_allocation(power_cap[1], [p0] * max(power_cap[2], 1))
+        per = alloc[0] if alloc else power_cap[1]
+        capped = apply_cap(dev, per, t_raw, util, compute_frac)
+        t_work, watts = capped["seconds"], capped["watts"]
 
     ic = INTERCONNECT[dev]
     chips = tp * pp
@@ -427,7 +484,7 @@ def finish(dev, prec, tp, pp, t_raw, util, flops,
     )
 
 
-def decode_step(m, dev, prec, tp, pp, batch, seq, kv_bytes=2.0):
+def decode_step(m, dev, prec, tp, pp, batch, seq, kv_bytes=2.0, power_cap=None):
     tp = max(tp, 1)
     w = decode_work(m, dev, prec, tp, kv_bytes, batch, seq)
 
@@ -436,6 +493,7 @@ def decode_step(m, dev, prec, tp, pp, batch, seq, kv_bytes=2.0):
     dtype = PRECISIONS[prec][0]
     pk = peak(dev, dtype)
     util = min(flops / w["t_raw"] / pk, 1.0)
+    compute_frac = (w["lin_compute_frac_acc"] + w["t_exp"]) / w["t_raw"]
 
     mb = resolve_mb(max(pp, 1), 0, batch)
     if max(pp, 1) == 1:
@@ -446,10 +504,11 @@ def decode_step(m, dev, prec, tp, pp, batch, seq, kv_bytes=2.0):
 
     return finish(dev, prec, tp, max(pp, 1), w["t_raw"], util, flops,
                   w["t_lin"], w["t_kv"], w["t_exp"], w["t_head"],
-                  batch, m["hidden"], m["layers"], mb, t_work_mb_raw)
+                  batch, m["hidden"], m["layers"], mb, t_work_mb_raw,
+                  power_cap=power_cap, compute_frac=compute_frac)
 
 
-def prefill(m, dev, prec, tp, pp, batch, seq):
+def prefill(m, dev, prec, tp, pp, batch, seq, power_cap=None):
     tp = max(tp, 1)
     h = m["hidden"]
     kv_shard = max(min(tp, m["kv_heads"]), 1)
@@ -495,7 +554,8 @@ def prefill(m, dev, prec, tp, pp, batch, seq):
     t_work_mb_raw = t_raw / float(mb)
     return finish(dev, prec, tp, max(pp, 1), t_raw, util, flops,
                   t_lin, t_attn, t_exp, t_head,
-                  mm, h, m["layers"], mb, t_work_mb_raw)
+                  mm, h, m["layers"], mb, t_work_mb_raw,
+                  power_cap=power_cap, compute_frac=0.95)
 
 
 # ------------------------------------------------------------------ grid

@@ -1,0 +1,328 @@
+//! FIG-ENERGY-FRONTIER: the Wh/Mtok-at-SLO frontier — {Llama 8B, 70B}
+//! x {H100-FP8, Gaudi 3-FP8} x {uncapped, 400 W per-GPU, rack-capped}.
+//! Each cell is a homogeneous disaggregated deployment (prefill pool +
+//! decode pool, `auto_size`d from the chat medians) whose max Poisson
+//! QPS under the interactive SLO is binary-searched, then replayed to
+//! split the sustained per-chip draw per pool — busy *and* idle energy,
+//! through the idle-aware ledger. The rollup prices every point three
+//! ways: $/Mtok (`cost_per_mtok_disagg_plan`), facility Wh/Mtok
+//! (`wh_per_mtok_disagg_plan`, PUE included), and device-level J/token.
+//!
+//! The rack-capped column is the new axis: the uncapped run's per-chip
+//! draws become the demand vector of a 40 kW rack packed with copies of
+//! the deployment, `rack_capped_per_gpu_w` water-fills the chip budget
+//! (hot prefill chips borrow the headroom memory-bound decode chips
+//! leave unused — not `PowerCap::PerRack`'s even share), and the QPS
+//! search re-runs with each pool capped at its own allocation.
+//!
+//! Grounding assertion: the 70B H100-FP8 uncapped point must land
+//! within 3x of the ~0.39 J/token measured for Llama 3 70B FP8 serving
+//! on H100 (J/token = sustained device W over goodput, idle included).
+//!
+//! Run: `cargo bench --bench fig_energy_frontier`
+//! (`SWEEP_FAST=1` shrinks the search for smoke tests.)
+
+use std::collections::BTreeMap;
+
+use fp8_tco::analysis::disagg::{auto_size, DisaggPlan, PoolSpec};
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::PrecisionMode;
+use fp8_tco::coordinator::cluster::{
+    disagg_sim_cluster, max_sustainable_qps, replay_disagg_point, SloSpec, SweepConfig,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::tco::{InfraModel, RackConfig};
+use fp8_tco::util::json::Json;
+use fp8_tco::util::par::SweepGrid;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama::{by_name, LlamaConfig};
+use fp8_tco::workload::trace::TraceConfig;
+
+/// The paper-adjacent grounding point: ~0.39 J/token for Llama 3 70B
+/// FP8 decode-heavy serving on H100, asserted within a 3x band.
+const REF_J_PER_TOKEN_70B_H100: f64 = 0.39;
+
+/// Rack copies fill this many chips (6 servers x 8 chips of the
+/// a100-era rack) so the water-filled chip budget actually binds.
+const RACK_CHIPS: usize = 48;
+
+/// Floor of every QPS search bracket; an infeasible cell means even
+/// this rate violates the SLO.
+const QPS_LO: f64 = 0.2;
+
+/// One measured frontier cell.
+struct Cell {
+    feasible: bool,
+    qps: f64,
+    tokens_per_sec: f64,
+    ttft_p95: f64,
+    tpot_p95: f64,
+    usd_per_mtok: f64,
+    wh_per_mtok: f64,
+    /// Device-level joules per output token: sustained draw of every
+    /// chip (busy + idle, no PUE) over goodput.
+    joules_per_token: f64,
+    /// Per-chip sustained draw split by pool (prefill, decode), W.
+    prefill_draw_w: f64,
+    decode_draw_w: f64,
+    /// Per-chip caps in force (0.0 = uncapped).
+    prefill_cap_w: f64,
+    decode_cap_w: f64,
+}
+
+fn infeasible() -> Cell {
+    Cell {
+        feasible: false,
+        qps: 0.0,
+        tokens_per_sec: 0.0,
+        ttft_p95: 0.0,
+        tpot_p95: 0.0,
+        usd_per_mtok: 0.0,
+        wh_per_mtok: 0.0,
+        joules_per_token: 0.0,
+        prefill_draw_w: 0.0,
+        decode_draw_w: 0.0,
+        prefill_cap_w: 0.0,
+        decode_cap_w: 0.0,
+    }
+}
+
+/// Search the plan's max QPS at SLO, replay the operating point for
+/// per-pool sustained draw, and roll up the three pricing axes.
+fn measure_cell(
+    model: &'static LlamaConfig,
+    plan: &DisaggPlan,
+    caps: (f64, f64),
+    slo: &SloSpec,
+    sweep: &SweepConfig,
+    infra: &InfraModel,
+) -> Cell {
+    let out = max_sustainable_qps(
+        &|| {
+            disagg_sim_cluster(model, plan)
+                .unwrap_or_else(|e| panic!("frontier cell must be feasible: {e}"))
+        },
+        &TraceConfig::chat,
+        slo,
+        sweep,
+    );
+    let p = match out.best {
+        None => return infeasible(),
+        Some(p) => p,
+    };
+    let (pm, dm, _) = replay_disagg_point(
+        model,
+        plan,
+        1,
+        false,
+        TraceConfig::chat(p.qps),
+        sweep.n_requests,
+        sweep.seed,
+    )
+    .expect("plan was feasible for the probe");
+    let (p_chips, d_chips) =
+        (plan.prefill.plan.total_chips(), plan.decode.plan.total_chips());
+    let (p_w, d_w) = (pm.watts_mean(), dm.watts_mean());
+    let device_w = p_w * p_chips as f64 + d_w * d_chips as f64;
+    Cell {
+        feasible: true,
+        qps: p.qps,
+        tokens_per_sec: p.tokens_per_sec,
+        ttft_p95: p.ttft_p95,
+        tpot_p95: p.tpot_p95,
+        usd_per_mtok: infra.cost_per_mtok_disagg_plan(plan, p_w, d_w, p.tokens_per_sec),
+        wh_per_mtok: infra.wh_per_mtok_disagg_plan(plan, p_w, d_w, p.tokens_per_sec),
+        joules_per_token: device_w / p.tokens_per_sec,
+        prefill_draw_w: p_w,
+        decode_draw_w: d_w,
+        prefill_cap_w: caps.0,
+        decode_cap_w: caps.1,
+    }
+}
+
+/// The rack-capped frontier point: fill the rack with copies of the
+/// deployment at the uncapped run's per-chip demands, water-fill the
+/// chip budget, and cap each pool at its own allocation.
+fn rack_caps(infra: &InfraModel, plan: &DisaggPlan, uncapped: &Cell) -> (f64, f64) {
+    let (p_chips, d_chips) =
+        (plan.prefill.plan.total_chips(), plan.decode.plan.total_chips());
+    let copies = (RACK_CHIPS / plan.total_chips()).max(1);
+    let mut demands = Vec::with_capacity(copies * plan.total_chips());
+    for _ in 0..copies {
+        demands.extend(std::iter::repeat(uncapped.prefill_draw_w).take(p_chips));
+        demands.extend(std::iter::repeat(uncapped.decode_draw_w).take(d_chips));
+    }
+    let alloc = infra.rack_capped_per_gpu_w(&demands);
+    (alloc[0], alloc[p_chips])
+}
+
+fn main() {
+    let fast = std::env::var("SWEEP_FAST").ok().as_deref() == Some("1");
+    let infra = InfraModel::new(RackConfig::a100_era());
+    let slo = SloSpec::interactive();
+    // Chat-mix medians drive the pool balance.
+    let (p_med, o_med) = (245usize, 148usize);
+    let m8 = by_name("llama-8b").unwrap();
+    let m70 = by_name("llama-70b").unwrap();
+    let pool = |dev: Device, plan: ParallelismPlan| {
+        let prec = match dev {
+            Device::H100 => PrecisionMode::fp8_dynamic(),
+            _ => PrecisionMode::fp8_static(),
+        };
+        PoolSpec::new(dev, prec, plan)
+    };
+    // (model, device, instance shape, sweep ceiling). 70B needs tp2 on
+    // the 80 GB H100; Gaudi 3's 128 GB holds the FP8 70B at tp1.
+    type Setup = (&'static LlamaConfig, Device, ParallelismPlan, f64);
+    // Ceilings sit above each deployment's saturation throughput so
+    // the search converges near the true frontier (an operating point
+    // deep below saturation is idle-heavy and reports inflated J/tok).
+    let setups: [Setup; 4] = [
+        (m8, Device::H100, ParallelismPlan::single(), 64.0),
+        (m8, Device::Gaudi3, ParallelismPlan::single(), 64.0),
+        (m70, Device::H100, ParallelismPlan::tp(2), 24.0),
+        (m70, Device::Gaudi3, ParallelismPlan::single(), 24.0),
+    ];
+
+    // Each setup measures its three cap modes serially (the rack caps
+    // derive from the uncapped demands); the four setups evaluate
+    // concurrently with fixed seeds, so output bytes match serial runs.
+    let grid: Vec<Setup> = setups.to_vec();
+    let measured: Vec<(DisaggPlan, [Cell; 3])> = SweepGrid::new(grid).run(|_, setup| {
+        let (model, dev, shape, qps_hi) = setup;
+        let sweep = if fast {
+            SweepConfig { iters: 2, n_requests: 30, seed: 17, ..SweepConfig::new(QPS_LO, qps_hi) }
+        } else {
+            SweepConfig { iters: 4, n_requests: 100, seed: 17, ..SweepConfig::new(QPS_LO, qps_hi) }
+        };
+        let plan = auto_size(model, pool(dev, shape), pool(dev, shape), p_med, o_med, 4);
+        let uncapped = measure_cell(model, &plan, (0.0, 0.0), &slo, &sweep, &infra);
+        let capped_plan = DisaggPlan::new(
+            plan.prefill.with_cap(400.0),
+            plan.decode.with_cap(400.0),
+        );
+        let capped =
+            measure_cell(model, &capped_plan, (400.0, 400.0), &slo, &sweep, &infra);
+        let racked = if uncapped.feasible {
+            let (p_cap, d_cap) = rack_caps(&infra, &plan, &uncapped);
+            let rack_plan =
+                DisaggPlan::new(plan.prefill.with_cap(p_cap), plan.decode.with_cap(d_cap));
+            measure_cell(model, &rack_plan, (p_cap, d_cap), &slo, &sweep, &infra)
+        } else {
+            infeasible()
+        };
+        (plan, [uncapped, capped, racked])
+    });
+
+    // Grounding: the 70B H100-FP8 uncapped point sits in the 3x band
+    // around the measured ~0.39 J/token reference.
+    let (_, cells70) = &measured[2];
+    let j = cells70[0].joules_per_token;
+    assert!(cells70[0].feasible, "70B H100 uncapped cell must be feasible");
+    assert!(
+        j >= REF_J_PER_TOKEN_70B_H100 / 3.0 && j <= REF_J_PER_TOKEN_70B_H100 * 3.0,
+        "70B H100-FP8 energy {j} J/token outside 3x of {REF_J_PER_TOKEN_70B_H100}"
+    );
+
+    let mut t = Table::new(
+        "Fig. ENERGY-FRONTIER — Wh/Mtok at SLO: uncapped vs 400 W per-GPU vs \
+         rack-capped (water-filled 40 kW rack)",
+        &[
+            "model",
+            "device",
+            "cap",
+            "pools",
+            "cap W (p/d)",
+            "QPS @SLO",
+            "tok/s",
+            "TPOT p95 ms",
+            "$/Mtok",
+            "Wh/Mtok",
+            "J/tok",
+        ],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    let modes = ["uncapped", "gpu-400w", "rack-capped"];
+    for ((model, dev, _, _), (plan, cells)) in setups.iter().zip(&measured) {
+        for (mode, cell) in modes.iter().zip(cells) {
+            let mut rec = BTreeMap::new();
+            rec.insert("model".into(), Json::Str(model.name.into()));
+            rec.insert("device".into(), Json::Str(dev.name().into()));
+            rec.insert("cap_mode".into(), Json::Str((*mode).into()));
+            rec.insert("pools".into(), Json::Str(plan.describe()));
+            rec.insert("chips".into(), Json::Num(plan.total_chips() as f64));
+            rec.insert("feasible".into(), Json::Bool(cell.feasible));
+            let cap_str = if cell.prefill_cap_w > 0.0 {
+                format!("{:.0}/{:.0}", cell.prefill_cap_w, cell.decode_cap_w)
+            } else {
+                "-".into()
+            };
+            if cell.feasible {
+                rec.insert("qps".into(), Json::Num(cell.qps));
+                rec.insert("tokens_per_sec".into(), Json::Num(cell.tokens_per_sec));
+                rec.insert("ttft_p95_s".into(), Json::Num(cell.ttft_p95));
+                rec.insert("tpot_p95_s".into(), Json::Num(cell.tpot_p95));
+                rec.insert("usd_per_mtok".into(), Json::Num(cell.usd_per_mtok));
+                rec.insert("wh_per_mtok_at_slo".into(), Json::Num(cell.wh_per_mtok));
+                rec.insert("joules_per_token".into(), Json::Num(cell.joules_per_token));
+                rec.insert("prefill_draw_w".into(), Json::Num(cell.prefill_draw_w));
+                rec.insert("decode_draw_w".into(), Json::Num(cell.decode_draw_w));
+                rec.insert("prefill_cap_w".into(), Json::Num(cell.prefill_cap_w));
+                rec.insert("decode_cap_w".into(), Json::Num(cell.decode_cap_w));
+                t.row(vec![
+                    model.name.into(),
+                    dev.name().into(),
+                    (*mode).into(),
+                    plan.describe(),
+                    cap_str,
+                    f(cell.qps, 2),
+                    f(cell.tokens_per_sec, 0),
+                    f(cell.tpot_p95 * 1e3, 2),
+                    f(cell.usd_per_mtok, 3),
+                    f(cell.wh_per_mtok, 1),
+                    f(cell.joules_per_token, 3),
+                ]);
+            } else {
+                t.row(vec![
+                    model.name.into(),
+                    dev.name().into(),
+                    (*mode).into(),
+                    plan.describe(),
+                    cap_str,
+                    format!("< {QPS_LO}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+            records.push(Json::Obj(rec));
+        }
+    }
+    t.print();
+
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/BENCH_energy_frontier.json");
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("energy_frontier".into()));
+    root.insert("fast".into(), Json::Bool(fast));
+    root.insert(
+        "ref_j_per_token_70b_h100".into(),
+        Json::Num(REF_J_PER_TOKEN_70B_H100),
+    );
+    root.insert("pue_ratio".into(), Json::Num(infra.rack.pue_ratio));
+    root.insert("cells".into(), Json::Arr(records));
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "(J/tok is device energy over goodput with idle time billed at idle draw;\n \
+         Wh/Mtok adds server overhead and the {:.2} PUE. The rack-capped rows cap\n \
+         each pool at its water-filled share of a 40 kW rack packed with {} chips —\n \
+         hot prefill chips borrow headroom cool decode chips leave unused)",
+        infra.rack.pue_ratio, RACK_CHIPS,
+    );
+}

@@ -13,6 +13,7 @@
 use crate::analysis::parallel::ParallelismPlan;
 use crate::analysis::perfmodel::{decode_step, prefill, PrecisionMode, StepConfig};
 use crate::hwsim::interconnect::KvLink;
+use crate::hwsim::power::PowerCap;
 use crate::hwsim::spec::Device;
 use crate::workload::llama::LlamaConfig;
 
@@ -23,11 +24,22 @@ pub struct PoolSpec {
     pub precision: PrecisionMode,
     /// Shard shape of one instance plus the pool's replica count.
     pub plan: ParallelismPlan,
+    /// Power cap applied to every chip of the pool (None by default).
+    /// A rack-capped frontier sets `PowerCap::PerGpu` here with the
+    /// allocation `tco::rack::rack_capped_per_gpu_w` water-fills from
+    /// the pools' uncapped demands.
+    pub power_cap: PowerCap,
 }
 
 impl PoolSpec {
     pub fn new(device: Device, precision: PrecisionMode, plan: ParallelismPlan) -> Self {
-        PoolSpec { device, precision, plan }
+        PoolSpec { device, precision, plan, power_cap: PowerCap::None }
+    }
+
+    /// Builder-style per-chip power cap (W).
+    pub fn with_cap(mut self, watts: f64) -> Self {
+        self.power_cap = PowerCap::PerGpu(watts);
+        self
     }
 }
 

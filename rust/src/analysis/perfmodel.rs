@@ -378,8 +378,21 @@ fn finish(
             (capped.seconds, capped.watts)
         }
         PowerCap::PerRack { watts, gpus } => {
-            // Even-share fallback for a uniform workload.
-            let per = watts / gpus as f64;
+            // The step model times ONE chip of a uniform deployment:
+            // every sibling runs the same step, so each demands the
+            // same uncapped draw. Routing through `rack_allocation`
+            // (§5.5 water-filling) instead of a hand-rolled even split
+            // keeps this arm consistent with the skew-aware frontier:
+            // under uniform demand the allocation degenerates to the
+            // even share exactly (headroom → full demand; deficit →
+            // `watts / gpus`), while non-uniform rack sharing is
+            // modelled at the deployment layer
+            // (`tco::rack::rack_capped_per_gpu_w`), which sees real
+            // per-pool demand.
+            let p0 = power::power_draw_w(cfg.device, util);
+            let demands = vec![p0; gpus.max(1)];
+            let alloc = power::rack_allocation(watts, &demands);
+            let per = alloc.first().copied().unwrap_or(watts);
             let capped = power::apply_cap(cfg.device, per, t_raw, util, compute_frac);
             (capped.seconds, capped.watts)
         }
@@ -532,6 +545,58 @@ mod tests {
             4096,
         );
         assert!(capped.seconds > free.seconds * 1.1, "{} vs {}", capped.seconds, free.seconds);
+    }
+
+    #[test]
+    fn per_rack_uniform_demand_degenerates_to_even_share() {
+        // One chip of a uniform deployment: water-filling over equal
+        // demands must reproduce the even split bit-for-bit, deficit
+        // and headroom alike.
+        let base = StepConfig::new(Device::H100, PrecisionMode::fp8_static());
+        let mut deficit = base.clone();
+        deficit.power_cap = PowerCap::PerRack { watts: 8.0 * 400.0, gpus: 8 };
+        let rack = prefill(m8b(), &deficit, 1, 4096);
+        let even = prefill(m8b(), &base.clone().with_cap(400.0), 1, 4096);
+        assert_eq!(rack.seconds.to_bits(), even.seconds.to_bits());
+        assert_eq!(rack.watts.to_bits(), even.watts.to_bits());
+        let mut roomy = base.clone();
+        roomy.power_cap = PowerCap::PerRack { watts: 8.0 * 900.0, gpus: 8 };
+        let free = prefill(m8b(), &base, 1, 4096);
+        let uncapped = prefill(m8b(), &roomy, 1, 4096);
+        assert_eq!(uncapped.seconds.to_bits(), free.seconds.to_bits());
+        assert_eq!(uncapped.watts.to_bits(), free.watts.to_bits());
+    }
+
+    #[test]
+    fn skewed_rack_lets_hot_chip_borrow_idle_headroom() {
+        // §5.5's point, end to end through the step model: one chip
+        // prefilling flat-out beside seven lightly loaded siblings
+        // under an 8 x 400 W rack budget. Water-filling satisfies the
+        // siblings' sub-400 W demands fully and hands the hot chip the
+        // leftovers — more than its even share — so its capped step is
+        // strictly faster than under a per-GPU 400 W cap.
+        let base = StepConfig::new(Device::H100, PrecisionMode::fp8_static());
+        let hot = prefill(m8b(), &base, 1, 4096);
+        let p_hot = power::power_draw_w(Device::H100, hot.util_frac);
+        let p_light = power::power_draw_w(Device::H100, 0.15);
+        assert!(p_light < 400.0, "sibling demand must sit under the even share");
+        let mut demands = vec![p_light; 8];
+        demands[0] = p_hot;
+        let alloc = power::rack_allocation(8.0 * 400.0, &demands);
+        assert!(
+            alloc[0] > 400.0,
+            "hot chip must borrow past the even share: {}",
+            alloc[0]
+        );
+        assert!(alloc[0] <= p_hot + 1e-9, "never granted more than demanded");
+        let borrowed = prefill(m8b(), &base.clone().with_cap(alloc[0]), 1, 4096);
+        let even = prefill(m8b(), &base.clone().with_cap(400.0), 1, 4096);
+        assert!(
+            borrowed.seconds < even.seconds,
+            "borrowed headroom must buy prefill time: {} vs {}",
+            borrowed.seconds,
+            even.seconds
+        );
     }
 
     #[test]

@@ -122,6 +122,15 @@ pub trait ExecutionBackend {
         None
     }
 
+    /// Device draw while this backend sits idle between steps (W).
+    /// The engine bills the gaps between steps at this rate
+    /// ([`Metrics::record_idle`](super::metrics::Metrics::record_idle)),
+    /// so an idle engine is no longer free. 0 for backends without a
+    /// power model (wall-clock backends measure, not model).
+    fn idle_draw_w(&self) -> f64 {
+        0.0
+    }
+
     /// Human-readable identity for reports.
     fn describe(&self) -> String;
 }
@@ -208,6 +217,18 @@ impl ExecutionBackend for SimBackend {
 
     fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Idle draw from the device spec. Busy draw is already
+    /// load-dependent — `perfmodel::finish` feeds each step's achieved
+    /// utilization through the calibrated `power_draw_w` curve — and a
+    /// step's utilization is a pure function of the same `(batch, len)`
+    /// key the [`StepCostCache`] memoizes on, so the load-dependent
+    /// power model costs nothing in cache exactness: cached and
+    /// recomputed steps stay bit-identical, idle draw is a config
+    /// constant.
+    fn idle_draw_w(&self) -> f64 {
+        self.cfg.device.spec().idle_w
     }
 
     fn describe(&self) -> String {

@@ -101,6 +101,11 @@ impl<B: ExecutionBackend> Cluster<B> {
                 return false;
             }
         }
+        // Close every engine's energy ledger at the makespan: engines
+        // that drained early idle (at idle draw) until the slowest one
+        // finishes, so summed busy + idle energy equals the integral
+        // of draw over the whole run.
+        self.router.close_ledgers(self.router.makespan());
         true
     }
 
@@ -311,7 +316,16 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
             }
             self.submit_prefill(&r);
         }
-        self.drain_all(&mut left)
+        if !self.drain_all(&mut left) {
+            return false;
+        }
+        // Ledger close at the two-pool makespan — here and not inside
+        // `drain_all`, because `PhaseAffinityCluster::run` reuses
+        // `drain_all` and must close at its own (larger) makespan.
+        let t = self.makespan();
+        self.prefill.close_ledgers(t);
+        self.decode.close_ledgers(t);
+        true
     }
 
     /// Process every migration event up to `t`, then bring the prefill
@@ -663,6 +677,14 @@ impl<B: ExecutionBackend> PhaseAffinityCluster<B> {
                 return false;
             }
         }
+        // Close all three pools' ledgers at the *combined* makespan:
+        // the colocated pool and the disaggregated pair share one
+        // timeline, so every engine idles until the slowest of them
+        // finishes.
+        let t = self.makespan();
+        self.colocated.close_ledgers(t);
+        self.disagg.prefill.close_ledgers(t);
+        self.disagg.decode.close_ledgers(t);
         true
     }
 
@@ -758,14 +780,28 @@ fn sim_pool(
     for _ in 0..n {
         let mut cfg = EngineConfig::for_instance(model, pool.device, pool.plan, w_bytes, 2.0)?;
         cfg.batcher.max_batch = 64;
-        let backend = SimBackend::new(
-            model,
-            StepConfig::new(pool.device, pool.precision).with_plan(pool.plan),
-        );
+        // The pool's per-chip power cap rides into the step model; it
+        // is fixed for the backend's lifetime, so step-cost cache keys
+        // stay exact.
+        let mut step = StepConfig::new(pool.device, pool.precision).with_plan(pool.plan);
+        step.power_cap = pool.power_cap;
+        let backend = SimBackend::new(model, step);
         engines.push(Engine::new(cfg, backend));
     }
     let ratings = vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }; n];
     Ok(Router::new(engines, ratings, RoutePolicy::LeastLoaded))
+}
+
+/// Colocated simulated cluster from a single [`PoolSpec`] — the
+/// [`sharded_sim_cluster`] conventions, but honoring the pool's
+/// per-chip power cap. This is the rack-capped frontier's colocated
+/// building block: feed `tco::rack::rack_capped_per_gpu_w` output into
+/// [`PoolSpec::with_cap`] and re-search max sustainable QPS here.
+pub fn pool_sim_cluster(
+    model: &'static LlamaConfig,
+    pool: &PoolSpec,
+) -> Result<Cluster<SimBackend>, CapacityError> {
+    Ok(Cluster::new(sim_pool(model, pool)?))
 }
 
 /// Disaggregated simulated cluster from a [`DisaggPlan`]: a prefill
@@ -921,7 +957,9 @@ pub struct LoadPoint {
     pub tpot_p95: f64,
     /// Goodput: output tokens/s over the makespan, all engines.
     pub tokens_per_sec: f64,
-    /// Mean device draw while serving (W per engine/chip).
+    /// Sustained per-engine device draw over the whole run (W): busy
+    /// *and* idle energy divided by time-at-power, so low-QPS points
+    /// pay for idle draw instead of reporting busy-only optimism.
     pub watts_mean: f64,
     pub requests_done: u64,
     pub preemptions: u64,

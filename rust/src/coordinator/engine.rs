@@ -278,11 +278,26 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Lift an *idle* engine's clock to `t` (the arrival instant of
-    /// newly routed work). A no-op while work is in flight — the clock
-    /// then already reflects time spent serving and must not skip
-    /// ahead of pending steps.
+    /// newly routed work), billing the skipped gap at the device's
+    /// idle draw. A no-op while work is in flight — the clock then
+    /// already reflects time spent serving and must not skip ahead of
+    /// pending steps.
     pub fn advance_to(&mut self, t: f64) {
-        if self.pending() == 0 && t > self.clock {
+        if self.pending() == 0 {
+            self.close_ledger(t);
+        }
+    }
+
+    /// Close the energy ledger at `t` (typically the cluster
+    /// makespan): accrue idle draw over the tail gap between this
+    /// engine's clock and `t`, and lift the clock. After every engine
+    /// is closed at the same instant, each one's `span + idle_s`
+    /// covers the full timeline, so busy + idle energy equals the
+    /// integral of draw over the makespan — the conservation property
+    /// `tests/cluster_sim.rs` pins. No-op when `t <= clock`.
+    pub fn close_ledger(&mut self, t: f64) {
+        if t > self.clock {
+            self.metrics.record_idle(t - self.clock, self.backend.idle_draw_w());
             self.clock = t;
         }
     }
@@ -297,6 +312,9 @@ impl<B: ExecutionBackend> Engine<B> {
             // the next arrival instead of reporting a deadlock.
             if let Some(t) = self.batcher.head_arrival(&self.seqs) {
                 if t > self.clock {
+                    // The jumped-over gap is real time the device sat
+                    // powered but unloaded: bill it at idle draw.
+                    self.metrics.record_idle(t - self.clock, self.backend.idle_draw_w());
                     self.clock = t;
                     adm = self.batcher.plan_step(&mut self.seqs, &mut self.alloc, self.clock);
                 }
@@ -416,7 +434,10 @@ impl<B: ExecutionBackend> Engine<B> {
             self.batcher.mark_decoding(*id);
             self.finish_if_done(*id);
         }
-        self.metrics.record_step(res.seconds, res.watts, res.flops, n);
+        // Context tokens processed this step (recompute re-prefills
+        // included — re-reading a context is real prefill work).
+        let prompt_tokens: usize = specs.iter().map(|&(_, l)| l).sum();
+        self.metrics.record_prefill_step(res.seconds, res.watts, res.flops, n, prompt_tokens);
     }
 
     fn run_decode(&mut self, ids: &[SeqId]) {
@@ -452,7 +473,7 @@ impl<B: ExecutionBackend> Engine<B> {
             emitted += 1;
             self.finish_if_done(*id);
         }
-        self.metrics.record_step(res.seconds, res.watts, res.flops, emitted);
+        self.metrics.record_decode_step(res.seconds, res.watts, res.flops, emitted);
     }
 
     fn finish_if_done(&mut self, id: SeqId) {
@@ -687,6 +708,35 @@ mod tests {
         assert!(e.run_to_completion(1000));
         let s = e.sequence(0).unwrap();
         assert!(s.first_token_at.unwrap() >= 5.0);
+    }
+
+    #[test]
+    fn idle_gaps_are_billed_at_idle_draw() {
+        let mut e = engine(1000);
+        e.submit(&req(0, 5.0, 64, 4));
+        assert!(e.run_to_completion(1000));
+        // The 5 s pre-arrival gap was spent powered but unloaded: the
+        // ledger bills it at the device's idle draw (Gaudi2: 100 W).
+        assert!(e.metrics.idle_s >= 5.0 - 1e-9, "idle {}", e.metrics.idle_s);
+        assert!(e.metrics.energy_idle_j >= 5.0 * 100.0 - 1e-6);
+        // Closing the ledger extends the idle tail and is idempotent.
+        let t = e.clock() + 2.0;
+        e.close_ledger(t);
+        e.close_ledger(t); // double close: no-op
+        assert!((e.clock() - t).abs() < 1e-12);
+        // Busy span + idle time tile the closed timeline exactly.
+        assert!(
+            (e.metrics.span + e.metrics.idle_s - t).abs() < 1e-9,
+            "span {} + idle {} != {}",
+            e.metrics.span,
+            e.metrics.idle_s,
+            t
+        );
+        // The full ledger identity: busy phases + idle = total.
+        let m = &e.metrics;
+        let sum = m.energy_prefill_j + m.energy_decode_j + m.energy_idle_j;
+        assert!((sum - m.energy_j).abs() <= 1e-9 * m.energy_j.max(1.0));
+        assert!(m.tokens_in >= 64, "prefill records context tokens");
     }
 
     #[test]

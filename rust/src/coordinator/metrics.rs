@@ -48,8 +48,21 @@ pub struct Metrics {
     /// Cumulative step-cost cache misses (see `step_cache_hits`).
     pub step_cache_misses: u64,
     pub step_time: Summary,
-    /// Integrated device energy (J).
+    /// Integrated device energy (J) over the engine's whole timeline:
+    /// busy steps at their modelled draw *plus* idle gaps at the
+    /// device's idle draw. Always equals `energy_prefill_j +
+    /// energy_decode_j + energy_idle_j`.
     pub energy_j: f64,
+    /// Busy energy attributed to prefill steps (J).
+    pub energy_prefill_j: f64,
+    /// Busy energy attributed to decode steps (J).
+    pub energy_decode_j: f64,
+    /// Energy accrued at idle draw over the gaps between steps (J).
+    /// The engine bills these gaps as they are skipped (idle-advance,
+    /// `advance_to`) and the cluster closes the ledger at drain
+    /// ([`Engine::close_ledger`](super::engine::Engine::close_ledger)),
+    /// so `span + idle_s` covers the cluster makespan exactly.
+    pub energy_idle_j: f64,
     /// Model FLOPs executed.
     pub flops: f64,
     /// Busy time covered by executed steps (s). For a single engine
@@ -58,6 +71,10 @@ pub struct Metrics {
     /// of their busy times — divide by the cluster makespan, not by
     /// `span`, for cluster-level rates.
     pub span: f64,
+    /// Idle time accrued between steps (s), the complement of `span`
+    /// on the engine's timeline. Summed across engines by `absorb`,
+    /// like `span`.
+    pub idle_s: f64,
 }
 
 impl Metrics {
@@ -96,13 +113,46 @@ impl Metrics {
         self.requests_done += 1;
     }
 
-    pub fn record_step(&mut self, dt: f64, watts: f64, flops: f64, new_tokens: usize) {
+    fn record_step(&mut self, dt: f64, watts: f64, flops: f64, new_tokens: usize) {
         self.steps += 1;
         self.step_time.add(dt);
         self.energy_j += watts * dt;
         self.flops += flops;
         self.tokens_out += new_tokens as u64;
         self.span += dt;
+    }
+
+    /// One executed prefill step: its energy lands in the prefill
+    /// ledger and `prompt_tokens` (context tokens processed, recompute
+    /// re-prefills included — they are real prefill work) accrue to
+    /// `tokens_in`.
+    pub fn record_prefill_step(
+        &mut self,
+        dt: f64,
+        watts: f64,
+        flops: f64,
+        new_tokens: usize,
+        prompt_tokens: usize,
+    ) {
+        self.energy_prefill_j += watts * dt;
+        self.tokens_in += prompt_tokens as u64;
+        self.record_step(dt, watts, flops, new_tokens);
+    }
+
+    /// One executed decode step: its energy lands in the decode ledger.
+    pub fn record_decode_step(&mut self, dt: f64, watts: f64, flops: f64, new_tokens: usize) {
+        self.energy_decode_j += watts * dt;
+        self.record_step(dt, watts, flops, new_tokens);
+    }
+
+    /// An idle gap of `dt` seconds billed at the device's idle draw.
+    /// Not a step: `steps`/`span`/`step_time` are untouched; the gap
+    /// accrues to `idle_s` and the idle energy ledger.
+    pub fn record_idle(&mut self, dt: f64, idle_w: f64) {
+        debug_assert!(dt >= 0.0, "idle gap must be non-negative");
+        self.energy_idle_j += idle_w * dt;
+        self.energy_j += idle_w * dt;
+        self.idle_s += dt;
     }
 
     /// Merge another engine's metrics into this one (cluster rollup).
@@ -124,8 +174,12 @@ impl Metrics {
         self.step_cache_misses += other.step_cache_misses;
         self.step_time.absorb(&other.step_time);
         self.energy_j += other.energy_j;
+        self.energy_prefill_j += other.energy_prefill_j;
+        self.energy_decode_j += other.energy_decode_j;
+        self.energy_idle_j += other.energy_idle_j;
         self.flops += other.flops;
         self.span += other.span;
+        self.idle_s += other.idle_s;
     }
 
     /// Step-cost cache hit rate across every lookup the backend(s)
@@ -138,10 +192,15 @@ impl Metrics {
         .hit_rate()
     }
 
-    /// Mean device draw over the busy span (W; 0 when nothing ran).
+    /// Mean device draw over the engine's whole covered timeline —
+    /// busy steps *and* idle gaps (W; 0 when nothing ran). Once the
+    /// cluster has closed every engine's ledger at the makespan, the
+    /// merged value is the mean sustained per-engine draw, the figure
+    /// rack packing and electricity pricing need.
     pub fn watts_mean(&self) -> f64 {
-        if self.span > 0.0 {
-            self.energy_j / self.span
+        let covered = self.span + self.idle_s;
+        if covered > 0.0 {
+            self.energy_j / covered
         } else {
             0.0
         }
@@ -165,7 +224,10 @@ impl Metrics {
         }
     }
 
-    /// Joules per output token — the §2.1 power-vs-TCO bridge.
+    /// Joules per output token — the §2.1 power-vs-TCO bridge. Total
+    /// energy (prefill + decode + idle) over delivered output tokens,
+    /// the quantity TokenPowerBench-style references report (Llama3-70B
+    /// ≈ 0.39 J/token on H100-FP8 is the sanity band).
     pub fn joules_per_token(&self) -> f64 {
         if self.tokens_out == 0 {
             0.0
@@ -174,21 +236,57 @@ impl Metrics {
         }
     }
 
+    /// Prefill energy per processed input token (J; 0 when no prefill
+    /// ran). Phase-attributed: idle energy is excluded.
+    pub fn joules_per_token_in(&self) -> f64 {
+        if self.tokens_in == 0 {
+            0.0
+        } else {
+            self.energy_prefill_j / self.tokens_in as f64
+        }
+    }
+
+    /// Decode energy per delivered output token (J; 0 when nothing was
+    /// delivered). Phase-attributed: idle energy is excluded.
+    pub fn joules_per_token_out(&self) -> f64 {
+        if self.tokens_out == 0 {
+            0.0
+        } else {
+            self.energy_decode_j / self.tokens_out as f64
+        }
+    }
+
+    /// Fraction of the covered timeline spent idle (0 when nothing was
+    /// covered).
+    pub fn idle_frac(&self) -> f64 {
+        let covered = self.span + self.idle_s;
+        if covered > 0.0 {
+            self.idle_s / covered
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens_out={} span={:.2}s tok/s={:.1} \
+            "requests={} tokens_out={} span={:.2}s idle={:.2}s tok/s={:.1} \
              TTFT p50/p95={:.3}/{:.3}s TPOT p50/p95={:.4}/{:.4}s \
-             J/token={:.2} model TFLOP/s={:.2} restarts={} migrations={} bounces={} \
+             J/token={:.2} J/tok_in={:.3} J/tok_out={:.2} W_mean={:.1} \
+             model TFLOP/s={:.2} restarts={} migrations={} bounces={} \
              cache_hit={:.3}",
             self.requests_done,
             self.tokens_out,
             self.span,
+            self.idle_s,
             self.tokens_per_sec(),
             self.ttft.pct(50.0),
             self.ttft.pct(95.0),
             self.tpot.pct(50.0),
             self.tpot.pct(95.0),
             self.joules_per_token(),
+            self.joules_per_token_in(),
+            self.joules_per_token_out(),
+            self.watts_mean(),
             self.model_flops_per_sec() / 1e12,
             self.restarts,
             self.migrations,
@@ -205,13 +303,41 @@ mod tests {
     #[test]
     fn throughput_and_energy() {
         let mut m = Metrics::new();
-        m.record_step(0.5, 400.0, 1e12, 10);
-        m.record_step(0.5, 600.0, 1e12, 30);
+        m.record_prefill_step(0.5, 400.0, 1e12, 10, 100);
+        m.record_decode_step(0.5, 600.0, 1e12, 30);
         assert_eq!(m.tokens_out, 40);
+        assert_eq!(m.tokens_in, 100);
         assert!((m.tokens_per_sec() - 40.0).abs() < 1e-9);
         assert!((m.energy_j - 500.0).abs() < 1e-9);
+        assert!((m.energy_prefill_j - 200.0).abs() < 1e-9);
+        assert!((m.energy_decode_j - 300.0).abs() < 1e-9);
         assert!((m.joules_per_token() - 12.5).abs() < 1e-9);
+        assert!((m.joules_per_token_in() - 2.0).abs() < 1e-9);
+        assert!((m.joules_per_token_out() - 7.5).abs() < 1e-9);
         assert!((m.model_flops_per_sec() - 2e12).abs() < 1e-3);
+    }
+
+    #[test]
+    fn idle_gaps_accrue_energy_without_counting_as_steps() {
+        let mut m = Metrics::new();
+        m.record_decode_step(1.0, 500.0, 1e12, 10);
+        m.record_idle(3.0, 100.0);
+        assert_eq!(m.steps, 1, "idle is not a step");
+        assert!((m.span - 1.0).abs() < 1e-12);
+        assert!((m.idle_s - 3.0).abs() < 1e-12);
+        assert!((m.energy_idle_j - 300.0).abs() < 1e-9);
+        assert!((m.energy_j - 800.0).abs() < 1e-9, "busy + idle energy");
+        // Mean draw over the whole covered timeline, not just busy.
+        assert!((m.watts_mean() - 200.0).abs() < 1e-9);
+        assert!((m.idle_frac() - 0.75).abs() < 1e-12);
+        // The headline J/token includes idle energy — an idle-heavy
+        // engine pays for its gaps.
+        assert!((m.joules_per_token() - 80.0).abs() < 1e-9);
+        // Phase attribution excludes it.
+        assert!((m.joules_per_token_out() - 50.0).abs() < 1e-9);
+        // The ledger identity the conservation tests lean on.
+        let split = m.energy_prefill_j + m.energy_decode_j + m.energy_idle_j;
+        assert!((split - m.energy_j).abs() < 1e-9);
     }
 
     #[test]
@@ -249,21 +375,27 @@ mod tests {
     fn absorb_merges_engines() {
         let mut a = Metrics::new();
         let mut b = Metrics::new();
-        a.record_step(1.0, 100.0, 1e12, 5);
+        a.record_decode_step(1.0, 100.0, 1e12, 5);
+        a.record_idle(1.0, 60.0);
         a.record_first_token(0.0, 0.5);
         a.record_finish(0.0, 0.5, 1.0, 5);
-        b.record_step(1.0, 300.0, 3e12, 15);
+        b.record_prefill_step(1.0, 300.0, 3e12, 15, 128);
         b.record_first_token(0.0, 1.5);
         b.record_finish(0.0, 1.5, 2.0, 15);
         b.record_restart();
         a.absorb(&b);
         assert_eq!(a.tokens_out, 20);
+        assert_eq!(a.tokens_in, 128);
         assert_eq!(a.requests_done, 2);
         assert_eq!(a.restarts, 1);
         assert_eq!(a.ttft.count(), 2);
         assert!((a.ttft.median() - 1.0).abs() < 1e-9);
-        assert!((a.energy_j - 400.0).abs() < 1e-9);
+        assert!((a.energy_j - 460.0).abs() < 1e-9);
+        assert!((a.energy_prefill_j - 300.0).abs() < 1e-9);
+        assert!((a.energy_decode_j - 100.0).abs() < 1e-9);
+        assert!((a.energy_idle_j - 60.0).abs() < 1e-9);
         assert!((a.span - 2.0).abs() < 1e-9);
+        assert!((a.idle_s - 1.0).abs() < 1e-9);
     }
 
     #[test]
@@ -299,10 +431,12 @@ mod tests {
     #[test]
     fn report_is_formatted() {
         let mut m = Metrics::new();
-        m.record_step(1.0, 100.0, 1e12, 5);
+        m.record_decode_step(1.0, 100.0, 1e12, 5);
         let r = m.report();
         assert!(r.contains("tokens_out=5"));
         assert!(r.contains("tok/s=5.0"));
         assert!(r.contains("restarts=0"));
+        assert!(r.contains("W_mean=100.0"));
+        assert!(r.contains("idle=0.00s"));
     }
 }

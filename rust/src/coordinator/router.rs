@@ -253,6 +253,18 @@ impl<B: ExecutionBackend> Router<B> {
     pub fn makespan(&self) -> f64 {
         self.engines.iter().map(|e| e.clock()).fold(0.0, f64::max)
     }
+
+    /// Close every engine's energy ledger at `t` (typically the
+    /// cluster makespan): engines that finished early accrue idle draw
+    /// over their tail gap, so summed busy + idle energy equals the
+    /// integral of draw over the whole timeline
+    /// ([`Engine::close_ledger`]). Idempotent; hints are untouched (a
+    /// closed engine has no queued work, so its hint stays valid).
+    pub fn close_ledgers(&mut self, t: f64) {
+        for e in &mut self.engines {
+            e.close_ledger(t);
+        }
+    }
 }
 
 #[cfg(test)]

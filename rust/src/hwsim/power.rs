@@ -39,27 +39,45 @@ pub struct CappedOp {
     pub seconds: f64,
     /// Power drawn under the cap (W).
     pub watts: f64,
+    /// Whether the cap was physically achievable. A cap below the
+    /// device's idle draw cannot be met by DVFS alone; the op is
+    /// returned best-effort at the minimum clock with `watts > cap_w`
+    /// and this flag false, so callers can reject the configuration
+    /// instead of silently pricing an impossible power state.
+    pub cap_feasible: bool,
 }
 
 /// Apply a per-GPU cap to an op with the given compute-bound time
 /// fraction. `t_s`: uncapped op time; `util_frac`: uncapped engine
 /// utilization; `compute_frac`: fraction of `t_s` that scales with
 /// clock (compute/feed-bound), the rest is HBM-bound.
+///
+/// When the cap is feasible (`cap_w >= idle_w`), the reported draw
+/// never exceeds `cap_w`: if the DVFS floors (clock fraction >= 0.2,
+/// dynamic power >= 5% of uncapped) leave residual draw above target,
+/// the governor duty-cycles the clock on average, so the cap holds at
+/// the floor's time cost.
 pub fn apply_cap(dev: Device, cap_w: f64, t_s: f64, util_frac: f64, compute_frac: f64) -> CappedOp {
     let spec = dev.spec();
     let p0 = power_draw_w(dev, util_frac);
     if p0 <= cap_w {
-        return CappedOp { clock_frac: 1.0, seconds: t_s, watts: p0 };
+        return CappedOp { clock_frac: 1.0, seconds: t_s, watts: p0, cap_feasible: true };
     }
     // DVFS: dynamic power ~ f^DVFS_POWER. Solve for f hitting the cap.
     let dyn0 = p0 - spec.idle_w;
+    let cap_feasible = cap_w >= spec.idle_w;
     let target_dyn = (cap_w - spec.idle_w).max(dyn0 * 0.05);
     let f = (target_dyn / dyn0).powf(1.0 / DVFS_POWER).clamp(0.2, 1.0);
     // Compute-bound portion stretches by 1/f; memory-bound does not.
     let seconds = t_s * (compute_frac / f + (1.0 - compute_frac));
-    // Average power over the stretched op.
-    let watts = spec.idle_w + dyn0 * f.powf(DVFS_POWER);
-    CappedOp { clock_frac: f, seconds, watts }
+    // Average power over the stretched op. Clamp to the cap when it is
+    // feasible: the f = 0.2 clock floor can leave residual dynamic
+    // power above target, which duty-cycling absorbs.
+    let mut watts = spec.idle_w + dyn0 * f.powf(DVFS_POWER);
+    if cap_feasible {
+        watts = watts.min(cap_w);
+    }
+    CappedOp { clock_frac: f, seconds, watts, cap_feasible }
 }
 
 /// Per-rack capping: GPUs share a budget; a GPU may exceed the even
@@ -148,6 +166,48 @@ mod tests {
         let c = apply_cap(Device::Gaudi2, 600.0, 1e-3, 0.5, 1.0);
         assert_eq!(c.clock_frac, 1.0);
         assert_eq!(c.seconds, 1e-3);
+    }
+
+    #[test]
+    fn harsh_cap_never_reports_draw_above_cap() {
+        // A 110 W cap on an H100 at high utilization sits below the
+        // governor's minimum dynamic power (5% of dyn0 ≈ 30.5 W over
+        // idle), so the clock floor alone cannot reach the target and
+        // the naive model would report watts > cap. The governor
+        // duty-cycles, so the reported draw must sit exactly on the
+        // cap — at the clock floor's time cost.
+        let spec = Device::H100.spec();
+        let cap_w = spec.idle_w + 20.0; // 110 W: feasible but brutal
+        let c = apply_cap(Device::H100, cap_w, 1e-3, 0.9, 1.0);
+        assert!(c.cap_feasible);
+        assert!(c.watts <= cap_w + 1e-12, "watts {} > cap {}", c.watts, cap_w);
+        assert!((c.watts - cap_w).abs() < 1e-9, "should sit on the cap: {}", c.watts);
+        assert!(c.clock_frac >= 0.2 - 1e-12);
+        assert!(c.seconds > 1e-3);
+    }
+
+    #[test]
+    fn infeasible_cap_below_idle_is_flagged() {
+        // No DVFS setting gets an H100 below its 90 W idle draw: the
+        // op comes back best-effort with the infeasibility surfaced,
+        // not silently "rescued" to a fictitious sub-idle power state.
+        let spec = Device::H100.spec();
+        let cap_w = spec.idle_w - 30.0;
+        let c = apply_cap(Device::H100, cap_w, 1e-3, 0.9, 1.0);
+        assert!(!c.cap_feasible);
+        assert!(c.watts > cap_w, "best-effort draw still exceeds the cap");
+        assert!(c.watts >= spec.idle_w, "draw can never go below idle");
+        assert!(c.seconds > 1e-3, "best-effort op still runs slowed");
+    }
+
+    #[test]
+    fn feasible_cap_keeps_flag_set_on_both_branches() {
+        // Uncapped fast path and DVFS path both report feasibility.
+        let under = apply_cap(Device::H100, 900.0, 1e-3, 0.9, 1.0);
+        assert!(under.cap_feasible);
+        let over = apply_cap(Device::H100, 400.0, 1e-3, 0.9, 1.0);
+        assert!(over.cap_feasible);
+        assert!(over.watts <= 400.0 + 1e-12);
     }
 
     #[test]

@@ -72,7 +72,13 @@ pub fn fig1_grid() -> Vec<(f64, f64, f64)> {
 /// R_Th (and the C_S share). Above this price ratio, A loses.
 // simlint: allow(units) -- paper Eq. 1 notation (R_Th, R_IC are ratios)
 pub fn breakeven_server_cost_ratio(r_th: f64, server_cost_share: f64, r_ic: f64) -> f64 {
-    // Solve (cs·x + ci·r_ic) / r_th = 1.
+    // Solve (cs·x + ci·r_ic) / r_th = 1. A zero server-cost share has
+    // no break-even price (the server is free in the TCO), so reject
+    // it instead of returning ±inf.
+    assert!(
+        server_cost_share > 0.0 && server_cost_share <= 1.0,
+        "C_S share must be in (0, 1]"
+    );
     let cs = server_cost_share;
     let ci = 1.0 - cs;
     (r_th - ci * r_ic) / cs
@@ -174,5 +180,11 @@ mod tests {
     #[should_panic(expected = "R_Th must be positive")]
     fn zero_throughput_rejected() {
         tco_ratio(TcoInputs::fig1(1.0, 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "C_S share must be in (0, 1]")]
+    fn zero_server_share_has_no_breakeven() {
+        breakeven_server_cost_ratio(0.7, 0.0, 1.0);
     }
 }

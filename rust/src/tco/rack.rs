@@ -26,11 +26,19 @@ pub struct RackConfig {
     /// Non-accelerator server overhead power (CPU, NICs, fans) per
     /// server (W).
     pub server_overhead_w: f64,
+    /// Power usage effectiveness: facility energy drawn from the grid
+    /// per unit of IT energy (cooling, distribution losses). Scales
+    /// the electricity bill and the Wh/Mtok axis; rack *packing* stays
+    /// on IT power — `power_budget_w` is the usable IT budget, the
+    /// cooling overhead lives outside it.
+    pub pue_ratio: f64,
 }
 
 impl RackConfig {
     /// A typical air-cooled AI rack (A100-era 40 kW provisioning, the
     /// §5.5 "much existing infrastructure ... built around the A100").
+    /// PUE 1.3: between a hyperscaler's ~1.1 and the air-cooled fleet
+    /// average ~1.4.
     pub fn a100_era() -> Self {
         RackConfig {
             power_budget_w: 40_000.0,
@@ -39,6 +47,7 @@ impl RackConfig {
             horizon_hours: 5.0 * 365.0 * 24.0, // 5-year amortization
             chips_per_server: 8,
             server_overhead_w: 1_500.0,
+            pue_ratio: 1.3,
         }
     }
 }
@@ -81,11 +90,15 @@ impl InfraModel {
     }
 
     /// Infra cost per server over the horizon: amortized rack share +
-    /// electricity.
+    /// electricity. The electricity term is billed at *facility*
+    /// energy — IT draw times the PUE — while the rack share packs on
+    /// IT power (the budget is IT-side; cooling is outside it).
     pub fn infra_cost_per_server(&self, chip_draw_w: f64) -> f64 {
         let per_rack = self.servers_per_rack(chip_draw_w).max(1) as f64;
         let rack_share = self.rack.fixed_cost_usd / per_rack;
-        let energy_kwh = self.server_power_w(chip_draw_w) / 1000.0 * self.rack.horizon_hours;
+        let energy_kwh = self.server_power_w(chip_draw_w) / 1000.0
+            * self.rack.pue_ratio
+            * self.rack.horizon_hours;
         rack_share + energy_kwh * self.rack.usd_per_kwh
     }
 
@@ -236,6 +249,112 @@ impl InfraModel {
             Some(c) => p.min(c),
             None => p,
         }
+    }
+
+    /// Facility watt-hours per million output tokens served at SLO:
+    /// one server's sustained IT draw (chips + overhead) times the
+    /// PUE, over the goodput the server delivers. The energy twin of
+    /// [`Self::cost_per_mtok`] — its electricity component is exactly
+    /// `wh_per_mtok / 1000 * usd_per_kwh`.
+    pub fn wh_per_mtok(&self, chip_draw_w: f64, server_tokens_per_sec: f64) -> f64 {
+        assert!(server_tokens_per_sec > 0.0, "goodput must be positive");
+        let facility_w = self.server_power_w(chip_draw_w) * self.rack.pue_ratio;
+        facility_w / server_tokens_per_sec * 1e6 / 3600.0
+    }
+
+    /// Wh/Mtok-at-SLO for a *sharded* deployment — the energy twin of
+    /// [`Self::cost_per_mtok_sharded`], with the same per-chip goodput
+    /// normalization.
+    pub fn wh_per_mtok_sharded(
+        &self,
+        chips: usize,
+        watts_per_chip: f64,
+        tokens_per_sec: f64,
+    ) -> f64 {
+        assert!(chips > 0, "deployment needs chips");
+        let per_chip_tps = tokens_per_sec / chips as f64;
+        let server_tps = per_chip_tps * self.rack.chips_per_server as f64;
+        self.wh_per_mtok(watts_per_chip, server_tps)
+    }
+
+    /// Wh/Mtok-at-SLO for a heterogeneous deployment: each pool's
+    /// server-equivalents draw at that pool's sustained per-chip
+    /// power, the summed facility power divides by the shared goodput.
+    /// Each pool tuple is `(chips, watts_per_chip)`. For a single pool
+    /// this reduces exactly to [`Self::wh_per_mtok_sharded`]. The
+    /// energy twin of [`Self::cost_per_mtok_disagg`].
+    pub fn wh_per_mtok_disagg(&self, pools: &[(usize, f64)], tokens_per_sec: f64) -> f64 {
+        assert!(tokens_per_sec > 0.0, "goodput must be positive");
+        assert!(!pools.is_empty(), "deployment needs at least one pool");
+        let mut facility_w = 0.0;
+        for &(chips, watts_per_chip) in pools {
+            assert!(chips > 0, "every pool needs chips");
+            let servers = chips as f64 / self.rack.chips_per_server as f64;
+            facility_w += servers * self.server_power_w(watts_per_chip) * self.rack.pue_ratio;
+        }
+        facility_w / tokens_per_sec * 1e6 / 3600.0
+    }
+
+    /// Wh/Mtok-at-SLO for a [`DisaggPlan`] at a measured operating
+    /// point — the energy twin of [`Self::cost_per_mtok_disagg_plan`].
+    ///
+    /// [`DisaggPlan`]: crate::analysis::disagg::DisaggPlan
+    pub fn wh_per_mtok_disagg_plan(
+        &self,
+        plan: &crate::analysis::disagg::DisaggPlan,
+        prefill_watts: f64,
+        decode_watts: f64,
+        tokens_per_sec: f64,
+    ) -> f64 {
+        self.wh_per_mtok_disagg(
+            &[
+                (plan.prefill.plan.total_chips(), prefill_watts),
+                (plan.decode.plan.total_chips(), decode_watts),
+            ],
+            tokens_per_sec,
+        )
+    }
+
+    /// Wh/Mtok-at-SLO for a [`PhaseAffinityPlan`] at a measured
+    /// operating point — the energy twin of
+    /// [`Self::cost_per_mtok_phase_affinity_plan`].
+    ///
+    /// [`PhaseAffinityPlan`]: crate::analysis::disagg::PhaseAffinityPlan
+    pub fn wh_per_mtok_phase_affinity_plan(
+        &self,
+        plan: &crate::analysis::disagg::PhaseAffinityPlan,
+        colocated_watts: f64,
+        prefill_watts: f64,
+        decode_watts: f64,
+        tokens_per_sec: f64,
+    ) -> f64 {
+        self.wh_per_mtok_disagg(
+            &[
+                (plan.colocated.plan.total_chips(), colocated_watts),
+                (plan.disagg.prefill.plan.total_chips(), prefill_watts),
+                (plan.disagg.decode.plan.total_chips(), decode_watts),
+            ],
+            tokens_per_sec,
+        )
+    }
+
+    /// Per-chip power caps for a deployment sharing this rack's IT
+    /// budget: reserve each server-equivalent's overhead off the top,
+    /// then water-fill the remaining chip budget over the chips'
+    /// uncapped demands
+    /// ([`rack_allocation`](crate::hwsim::power::rack_allocation)).
+    /// Unlike `PowerCap::PerRack`'s even-share fallback inside the
+    /// step model, this sees real per-pool demand: a hot prefill pool
+    /// borrows the headroom a memory-bound decode pool leaves unused
+    /// (§5.5). Feed the results into
+    /// [`PoolSpec::with_cap`](crate::analysis::disagg::PoolSpec::with_cap)
+    /// to re-measure QPS-at-SLO under the cap.
+    pub fn rack_capped_per_gpu_w(&self, demands_per_chip: &[f64]) -> Vec<f64> {
+        let chips = demands_per_chip.len();
+        let servers = (chips as f64 / self.rack.chips_per_server as f64).ceil();
+        let chip_budget_w =
+            (self.rack.power_budget_w - servers * self.rack.server_overhead_w).max(0.0);
+        crate::hwsim::power::rack_allocation(chip_budget_w, demands_per_chip)
     }
 }
 
@@ -392,5 +511,110 @@ mod tests {
         let capped = m.sustained_draw_w(Device::H100, 0.6, Some(400.0));
         assert!(uncapped > 600.0);
         assert_eq!(capped, 400.0);
+    }
+
+    #[test]
+    fn wh_per_mtok_prices_the_electricity_share_exactly() {
+        // The energy axis and the cost axis must agree: the
+        // electricity component of $/Mtok is wh_per_mtok / 1000 *
+        // usd_per_kwh, with no second place the PUE or overhead could
+        // diverge.
+        let m = model();
+        let (draw, tps) = (600.0, 2_000.0);
+        let wh = m.wh_per_mtok(draw, tps);
+        let electricity_usd = m.server_power_w(draw) / 1000.0
+            * m.rack.pue_ratio
+            * m.rack.horizon_hours
+            * m.rack.usd_per_kwh;
+        let mtok_over_horizon = tps * 3600.0 * m.rack.horizon_hours / 1e6;
+        let usd_per_mtok = electricity_usd / mtok_over_horizon;
+        assert!(
+            (wh / 1000.0 * m.rack.usd_per_kwh / usd_per_mtok - 1.0).abs() < 1e-12,
+            "wh {wh} vs electricity {usd_per_mtok} $/Mtok"
+        );
+    }
+
+    #[test]
+    fn wh_per_mtok_disagg_reduces_to_sharded_for_one_pool() {
+        let m = model();
+        for (chips, tps) in [(1usize, 900.0), (8, 7_200.0), (12, 9_000.0)] {
+            let sharded = m.wh_per_mtok_sharded(chips, 600.0, tps);
+            let disagg = m.wh_per_mtok_disagg(&[(chips, 600.0)], tps);
+            assert!(
+                (sharded / disagg - 1.0).abs() < 1e-12,
+                "chips {chips}: sharded {sharded} vs disagg {disagg}"
+            );
+        }
+    }
+
+    #[test]
+    fn wh_per_mtok_plans_sum_their_pools() {
+        use crate::analysis::disagg::{DisaggPlan, PhaseAffinityPlan, PoolSpec};
+        use crate::analysis::parallel::ParallelismPlan;
+        use crate::analysis::perfmodel::PrecisionMode;
+        let m = model();
+        let h100 = |plan| PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), plan);
+        let plan = PhaseAffinityPlan::new(
+            h100(ParallelismPlan::single().with_replicas(2)),
+            DisaggPlan::new(h100(ParallelismPlan::single()), h100(ParallelismPlan::single())),
+            512,
+        );
+        let mixed = m.wh_per_mtok_phase_affinity_plan(&plan, 600.0, 600.0, 600.0, 4_000.0);
+        let merged = m.wh_per_mtok_disagg(&[(plan.total_chips(), 600.0)], 4_000.0);
+        assert!((mixed / merged - 1.0).abs() < 1e-12, "{mixed} vs {merged}");
+        let two_pool =
+            m.wh_per_mtok_disagg_plan(&plan.disagg, 600.0, 600.0, 2_000.0);
+        let two_merged = m.wh_per_mtok_disagg(&[(plan.disagg.total_chips(), 600.0)], 2_000.0);
+        assert!((two_pool / two_merged - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pue_scales_wh_per_mtok_linearly() {
+        let lean = InfraModel::new(RackConfig { pue_ratio: 1.1, ..RackConfig::a100_era() });
+        let fat = InfraModel::new(RackConfig { pue_ratio: 1.4, ..RackConfig::a100_era() });
+        let r = fat.wh_per_mtok(600.0, 1_000.0) / lean.wh_per_mtok(600.0, 1_000.0);
+        assert!((r - 1.4 / 1.1).abs() < 1e-12, "{r}");
+    }
+
+    #[test]
+    fn rack_cap_passes_through_when_budget_is_loose() {
+        // 8 chips = 1 server-equivalent: 40 kW - 1.5 kW overhead
+        // leaves far more than 8 x 700 W of chip budget.
+        let m = model();
+        let demands = vec![700.0; 8];
+        let alloc = m.rack_capped_per_gpu_w(&demands);
+        assert_eq!(alloc, demands);
+    }
+
+    #[test]
+    fn rack_cap_binds_at_even_share_for_uniform_demand() {
+        // 48 chips = 6 server-equivalents: 40 kW - 9 kW overhead =
+        // 31 kW of chip budget < 48 x 700 W of demand.
+        let m = model();
+        let alloc = m.rack_capped_per_gpu_w(&vec![700.0; 48]);
+        let even = 31_000.0 / 48.0;
+        assert!(alloc.iter().all(|&w| (w - even).abs() < 1e-9), "{alloc:?}");
+        let total: f64 = alloc.iter().sum();
+        assert!((total - 31_000.0).abs() < 1e-6, "budget fully spent: {total}");
+    }
+
+    #[test]
+    fn rack_cap_lets_hot_chip_borrow_cool_siblings_headroom() {
+        // A 4.7 kW rack over one 8-chip server leaves 3.2 kW of chip
+        // budget (an even share of 400 W). A pegged prefill chip among
+        // seven 380 W decode siblings gets their unclaimed headroom:
+        // 3200 - 7 x 380 = 540 W, not the 400 W even share PerRack's
+        // in-step fallback would hand it.
+        let tight = InfraModel::new(RackConfig {
+            power_budget_w: 4_700.0,
+            ..RackConfig::a100_era()
+        });
+        let mut demands = vec![380.0; 8];
+        demands[0] = 700.0;
+        let alloc = tight.rack_capped_per_gpu_w(&demands);
+        assert!((alloc[0] - 540.0).abs() < 1e-9, "hot chip got {}", alloc[0]);
+        for &w in &alloc[1..] {
+            assert!((w - 380.0).abs() < 1e-9, "cool siblings keep their demand: {w}");
+        }
     }
 }

@@ -8,8 +8,8 @@ use fp8_tco::analysis::disagg::{DisaggPlan, PhaseAffinityPlan, PoolSpec};
 use fp8_tco::analysis::parallel::ParallelismPlan;
 use fp8_tco::analysis::perfmodel::{PrecisionMode, StepConfig};
 use fp8_tco::coordinator::cluster::{
-    max_sustainable_qps, measure_load, phase_affinity_sim_cluster, sharded_sim_cluster, Cluster,
-    SloSpec, SweepConfig,
+    disagg_sim_cluster, max_sustainable_qps, measure_load, phase_affinity_sim_cluster,
+    sharded_sim_cluster, Cluster, DisaggCluster, SloSpec, SweepConfig,
 };
 use fp8_tco::coordinator::router::{EngineRating, RoutePolicy, Router};
 use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
@@ -387,6 +387,129 @@ fn energy_conserved_across_cluster_rollup() {
         (jpt - m.energy_j / m.tokens_out as f64).abs() <= 1e-12 * jpt,
         "joules_per_token drifted from energy/tokens"
     );
+}
+
+#[test]
+fn idle_aware_ledger_conserves_energy_at_makespan() {
+    // The run closes every engine's ledger at the cluster makespan, so
+    // each engine's time-at-power covers the whole timeline and the
+    // integral of draw over the run reconstructs total energy exactly:
+    // watts_mean x engines x makespan == sum of per-engine busy+idle J.
+    let mut c = cluster(3, 50_000, RoutePolicy::LeastLoaded);
+    let gen = TraceGenerator::new(TraceConfig::chat(2.0), 23);
+    assert!(c.run(gen.stream(60)));
+    let makespan = c.makespan();
+    let m = c.merged_metrics();
+    for e in &c.router.engines {
+        let covered = e.metrics.span + e.metrics.idle_s;
+        assert!(
+            (covered - makespan).abs() <= 1e-9 * makespan,
+            "engine time-at-power {covered} != makespan {makespan}"
+        );
+    }
+    let n = c.router.engines.len() as f64;
+    let total: f64 = c.router.engines.iter().map(|e| e.metrics.energy_j).sum();
+    assert!(
+        (m.watts_mean() * n * makespan - total).abs() <= 1e-9 * total,
+        "mean draw x time != integrated energy: {} vs {}",
+        m.watts_mean() * n * makespan,
+        total
+    );
+    // The ledger splits exactly into its three components.
+    let parts = m.energy_prefill_j + m.energy_decode_j + m.energy_idle_j;
+    assert!(
+        (m.energy_j - parts).abs() <= 1e-9 * m.energy_j,
+        "ledger components drifted: {} vs {}",
+        m.energy_j,
+        parts
+    );
+    assert!(m.energy_idle_j > 0.0, "a 2 QPS chat trace leaves idle gaps");
+    assert!(m.joules_per_token_in() > 0.0 && m.joules_per_token_out() > 0.0);
+}
+
+#[test]
+fn disagg_ledger_covers_both_pools_to_the_shared_makespan() {
+    // Disaggregated pools share one timeline: the decode pool idles
+    // while the first prefill runs and the prefill pool idles through
+    // the decode tail, yet every engine's ledger still closes at the
+    // cluster-wide makespan and energy stays conserved.
+    let model = by_name("llama-8b").unwrap();
+    let plan = DisaggPlan::new(
+        PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::single()),
+        PoolSpec::new(
+            Device::Gaudi2,
+            PrecisionMode::fp8_static(),
+            ParallelismPlan::single().with_replicas(2),
+        ),
+    );
+    let mut c = disagg_sim_cluster(model, &plan).expect("8B fits");
+    let gen = TraceGenerator::new(TraceConfig::chat(3.0), 31);
+    assert!(c.run(gen.stream(50)));
+    let t = c.makespan();
+    let mut total = 0.0;
+    let mut n = 0.0;
+    for e in c.prefill.engines.iter().chain(c.decode.engines.iter()) {
+        let covered = e.metrics.span + e.metrics.idle_s;
+        assert!(
+            (covered - t).abs() <= 1e-9 * t,
+            "pool engine time-at-power {covered} != makespan {t}"
+        );
+        total += e.metrics.energy_j;
+        n += 1.0;
+    }
+    let merged = DisaggCluster::merged_metrics(&c);
+    assert!(
+        (merged.watts_mean() * n * t - total).abs() <= 1e-9 * total,
+        "disagg mean draw x time != integrated energy"
+    );
+    assert!(merged.energy_idle_j > 0.0, "phase pools must bill their idle phases");
+}
+
+#[test]
+fn low_qps_watts_mean_exceeds_busy_only_accounting() {
+    // The idle-blind ledger understated sustained draw at low load:
+    // busy-only energy spread over the makespan sits strictly below
+    // the honest busy+idle mean, which in turn can never fall below
+    // the device idle floor.
+    let mut c = cluster(2, 50_000, RoutePolicy::LeastLoaded);
+    let gen = TraceGenerator::new(TraceConfig::chat(0.2), 13);
+    assert!(c.run(gen.stream(20)));
+    let m = c.merged_metrics();
+    let makespan = c.makespan();
+    let busy_only_w = (m.energy_prefill_j + m.energy_decode_j) / (2.0 * makespan);
+    assert!(
+        m.watts_mean() > busy_only_w,
+        "idle energy vanished from the mean: {} <= {busy_only_w}",
+        m.watts_mean()
+    );
+    let idle_floor = Device::Gaudi2.spec().idle_w;
+    assert!(
+        m.watts_mean() >= idle_floor - 1e-9,
+        "sustained draw {} below the {idle_floor} W idle floor",
+        m.watts_mean()
+    );
+    assert!(m.idle_frac() > 0.3, "0.2 QPS chat must be idle-heavy: {}", m.idle_frac());
+}
+
+#[test]
+fn decode_energy_per_token_non_increasing_in_batch() {
+    // Batching amortizes the weight sweep and the idle-power floor:
+    // J/token from a decode step must never rise as the batch grows
+    // (memory-bound region: time/batch falls faster than draw rises;
+    // compute-bound region: both flat).
+    use fp8_tco::analysis::perfmodel::decode_step;
+    let m = by_name("llama-8b").unwrap();
+    let cfg = StepConfig::new(Device::H100, PrecisionMode::fp8_dynamic());
+    let mut last = f64::INFINITY;
+    for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+        let r = decode_step(m, &cfg, batch, 1024);
+        let jpt = r.watts * r.seconds / batch as f64;
+        assert!(
+            jpt <= last * (1.0 + 1e-9),
+            "J/token rose at batch {batch}: {jpt} > {last}"
+        );
+        last = jpt;
+    }
 }
 
 #[test]

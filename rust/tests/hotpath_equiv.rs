@@ -49,8 +49,12 @@ fn fingerprint(makespan: f64, m: &Metrics) -> Vec<u64> {
         m.steps,
         m.kv_bytes_migrated.to_bits(),
         m.energy_j.to_bits(),
+        m.energy_prefill_j.to_bits(),
+        m.energy_decode_j.to_bits(),
+        m.energy_idle_j.to_bits(),
         m.flops.to_bits(),
         m.span.to_bits(),
+        m.idle_s.to_bits(),
         m.ttft.pct(50.0).to_bits(),
         m.ttft.pct(95.0).to_bits(),
         m.tpot.pct(50.0).to_bits(),
