@@ -19,7 +19,7 @@ use fp8_tco::hwsim::spec::Device;
 use fp8_tco::runtime::ArtifactDir;
 use fp8_tco::util::table::{f, Table};
 use fp8_tco::workload::llama;
-use fp8_tco::workload::trace::Request;
+use fp8_tco::workload::trace::{Request, TenantClass};
 
 fn trace(n: usize, max_prompt: usize, max_out: usize) -> Vec<Request> {
     use fp8_tco::util::rng::Rng;
@@ -30,6 +30,7 @@ fn trace(n: usize, max_prompt: usize, max_out: usize) -> Vec<Request> {
             arrival: 0.0,
             prompt_len: rng.usize(4, max_prompt),
             output_len: rng.usize(4, max_out),
+            class: TenantClass::Interactive,
         })
         .collect()
 }

@@ -1,0 +1,168 @@
+"""Python mirror of the simulator's RNG (`util::rng::Rng`): xoshiro256**
+seeded by SplitMix64, the Lemire multiply-shift bounded-range rule, and
+the 53-bit f64 stream.
+
+Both sides draw the same streams and assert the same pinned values
+(PINNED_* below mirror `rust/src/util/rng.rs::range_pinned_against_python_mirror`,
+`::range_rejection_path_pinned` and `::f64_stream_unchanged_by_range_fix`).
+The pins are what make trace generation reproducible across the Lemire
+fix: seeded arrival streams must be byte-identical on both sides, and
+if either implementation drifts, its side fails against the pins.
+
+Stdlib-only on purpose (CI runs it without the JAX toolchain):
+`python python/tests/test_trace_mirror.py`.
+"""
+
+M = (1 << 64) - 1
+
+
+def splitmix_seed(seed):
+    """SplitMix64 expansion of a 64-bit seed into the xoshiro state —
+    mirrors `Rng::new` (same constants, same order)."""
+    s = []
+    x = (seed + 0x9E3779B97F4A7C15) & M
+    for _ in range(4):
+        x = (x + 0x9E3779B97F4A7C15) & M
+        z = x
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M
+        s.append(z ^ (z >> 31))
+    return s
+
+
+def rotl(v, k):
+    return ((v << k) | (v >> (64 - k))) & M
+
+
+class Rng:
+    """xoshiro256** — mirrors `Rng::next_u64` exactly."""
+
+    def __init__(self, seed):
+        self.s = splitmix_seed(seed)
+
+    def next_u64(self):
+        s = self.s
+        r = (rotl((s[1] * 5) & M, 7) * 9) & M
+        t = (s[1] << 17) & M
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return r
+
+    def f64(self):
+        """53-bit mantissa uniform in [0, 1) — mirrors `Rng::f64`."""
+        return (self.next_u64() >> 11) * 2.0**-53
+
+    def range(self, lo, hi):
+        """Lemire multiply-shift with rejection — mirrors `Rng::range`.
+        Returns (value, rejections) so the rejection path itself can be
+        pinned."""
+        assert lo < hi
+        span = hi - lo
+        threshold = ((1 << 64) - span) % span  # span.wrapping_neg() % span
+        rejections = 0
+        while True:
+            x = self.next_u64()
+            m = x * span
+            if (m & M) >= threshold:
+                return lo + (m >> 64), rejections
+            rejections += 1
+
+
+# seed -> first 4 raw next_u64 draws (the stream every f64 — and hence
+# every trace timestamp and length — is carved from).
+PINNED_U64 = {
+    42: [
+        13696896915399030466,
+        12641092763546669283,
+        14580102322132234639,
+        5279892052835703538,
+    ],
+}
+
+# (seed, lo, hi) -> pinned range() draws.
+PINNED_RANGE = [
+    (11, 10, 20, [11, 17, 15, 14, 14, 13, 11, 16]),
+    (5, 0, 10**12, [404794302180, 463519180289, 747084197040, 302323474737]),
+]
+
+# Span just above 2^63: threshold ~ 2^63, so ~half of all draws reject
+# — this pins the rejection loop, not just the happy path.
+REJECTION_SPAN = (1 << 63) + 12345
+PINNED_REJECTION = [
+    6036662480048362042,
+    14850985635934019,
+    2634583529135477697,
+    6166093495432743727,
+]
+PINNED_REJECTION_COUNT = 8  # across the first 16 draws at seed 123
+
+
+def test_next_u64_pins():
+    for seed, want in PINNED_U64.items():
+        r = Rng(seed)
+        got = [r.next_u64() for _ in range(len(want))]
+        assert got == want, f"seed {seed}: {got} != pinned {want}"
+
+
+def test_range_matches_pinned_rust_values():
+    for seed, lo, hi, want in PINNED_RANGE:
+        r = Rng(seed)
+        got = [r.range(lo, hi)[0] for _ in range(len(want))]
+        assert got == want, f"seed {seed} range({lo},{hi}): {got} != {want}"
+        assert all(lo <= v < hi for v in got)
+
+
+def test_rejection_path_matches_pinned_rust_values():
+    r = Rng(123)
+    vals, rejections = [], 0
+    for _ in range(16):
+        v, rj = r.range(0, REJECTION_SPAN)
+        vals.append(v)
+        rejections += rj
+    assert vals[:4] == PINNED_REJECTION, f"{vals[:4]} != {PINNED_REJECTION}"
+    assert rejections == PINNED_REJECTION_COUNT, (
+        f"rejection loop drifted: {rejections} != {PINNED_REJECTION_COUNT}"
+    )
+    assert all(v < REJECTION_SPAN for v in vals)
+
+
+def test_f64_stream_rides_only_the_u64_stream():
+    # The f64 mapping is (next_u64 >> 11) * 2^-53, nothing else — so
+    # the pinned u64 stream fully determines every trace draw.
+    r = Rng(42)
+    got = [r.f64() for _ in range(4)]
+    want = [(u >> 11) * 2.0**-53 for u in PINNED_U64[42]]
+    assert got == want
+    assert all(0.0 <= x < 1.0 for x in got)
+
+
+def test_range_is_unbiased_over_small_span():
+    # Mirrors `range_unbiased_over_small_span`: Lemire over span 3 must
+    # split ~evenly (a dropped rejection threshold skews this grossly).
+    r = Rng(31)
+    counts = [0, 0, 0]
+    for _ in range(30_000):
+        counts[r.range(0, 3)[0]] += 1
+    assert all(9_000 <= c <= 11_000 for c in counts), counts
+
+
+def main():
+    tests = [
+        test_next_u64_pins,
+        test_range_matches_pinned_rust_values,
+        test_rejection_path_matches_pinned_rust_values,
+        test_f64_stream_rides_only_the_u64_stream,
+        test_range_is_unbiased_over_small_span,
+    ]
+    for t in tests:
+        t()
+        print(f"ok: {t.__name__}")
+    print(f"{len(tests)} trace-RNG mirror checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,11 @@ use fp8_tco::hwsim::spec::Device;
 use fp8_tco::util::json::Json;
 use fp8_tco::util::rng::Rng;
 use fp8_tco::workload::llama;
-use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
+use fp8_tco::workload::trace::{Request, TenantClass, TraceConfig, TraceGenerator};
+
+fn req(id: u64, prompt_len: usize, output_len: usize) -> Request {
+    Request { id, arrival: 0.0, prompt_len, output_len, class: TenantClass::Interactive }
+}
 
 fn measure<F: FnMut()>(iters: usize, f: &mut F) -> f64 {
     // warmup
@@ -68,18 +72,13 @@ fn engine_with_resident_finished(finished: usize) -> Engine<SimBackend> {
     // Ballast: single-token requests that finish at prefill and park
     // in the archive.
     for i in 0..finished as u64 {
-        engine.submit(&Request { id: i, arrival: 0.0, prompt_len: 16, output_len: 1 });
+        engine.submit(&req(i, 16, 1));
     }
     assert!(engine.run_to_completion(10 * finished.max(1)), "ballast must drain");
     assert_eq!(engine.finished_resident(), finished, "archive holds the history");
     // Active work: 64 decodes that outlive any measurement loop.
     for i in 0..64u64 {
-        engine.submit(&Request {
-            id: 1_000_000 + i,
-            arrival: 0.0,
-            prompt_len: 64,
-            output_len: 100_000_000,
-        });
+        engine.submit(&req(1_000_000 + i, 64, 100_000_000));
     }
     // Warm in: prefill everything so steps are pure 64-seq decodes.
     for _ in 0..80 {
@@ -116,8 +115,7 @@ fn main() {
                                   PrecisionMode::fp8_static()));
     let mut engine = Engine::new(EngineConfig::new(kv), backend);
     for i in 0..64u64 {
-        engine.submit(&Request { id: i, arrival: 0.0, prompt_len: 64,
-                                 output_len: 1_000_000 });
+        engine.submit(&req(i, 64, 1_000_000));
     }
     // warm in: prefill everything
     for _ in 0..80 {
@@ -180,6 +178,33 @@ fn main() {
         assert_eq!((cs.hits, cs.misses), (1, 1));
         println!("memoized decode_step: bit-identical (hit rate {:.2})", cs.hit_rate());
     }
+
+    // ---- percentile cache: query cost after the one-time sort ------
+    // measure_load probes call pct()/pct_in() repeatedly on the same
+    // frozen sample set; the cached sort order makes every call after
+    // the first a partition_point + interpolation. The clone-and-sort
+    // implementation this replaced paid O(n log n) *per query* (~ms at
+    // this size) and fails the gate by orders of magnitude.
+    let (pct_first_us, pct_query_us) = {
+        use fp8_tco::util::stats::TimedPercentiles;
+        let mut tp = TimedPercentiles::new();
+        let mut r = Rng::new(7);
+        for i in 0..200_000 {
+            tp.add(i as f64 * 1e-3, r.f64());
+        }
+        let t0 = Instant::now();
+        acc += tp.pct(95.0) + tp.pct_in(20.0, 180.0, 95.0);
+        let first = t0.elapsed().as_secs_f64();
+        let per = bench_min3("stats::pct+pct_in (200k samples, cached)", 50_000, || {
+            acc += tp.pct(95.0) + tp.pct_in(20.0, 180.0, 95.0);
+        });
+        println!("  -> first query (sorts once): {:.1} us", first * 1e6);
+        assert!(
+            per < 50e-6,
+            "cached percentile queries must not re-sort 200k samples per call: {per}s"
+        );
+        (first * 1e6, per * 1e6)
+    };
 
     // ---- end-to-end: 10k-request open-loop sim ---------------------
     // The production-scale shape PR 6+ sweeps: one engine, 10k Poisson
@@ -249,6 +274,8 @@ fn main() {
     root.insert("e2e_steps".into(), Json::Num(e2e_steps as f64));
     root.insert("e2e_virtual_s".into(), Json::Num(e2e_virtual_s));
     root.insert("e2e_cache_hit_rate".into(), Json::Num(cache_hit_rate));
+    root.insert("pct_first_query_us".into(), Json::Num(pct_first_us));
+    root.insert("pct_cached_query_us".into(), Json::Num(pct_query_us));
     match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

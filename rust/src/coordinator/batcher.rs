@@ -19,6 +19,7 @@ use std::collections::{BTreeSet, VecDeque};
 
 use super::kv_cache::BlockAllocator;
 use super::request::{RequestState, SeqId, SeqRole, Sequence};
+use crate::workload::trace::TenantClass;
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -32,6 +33,10 @@ pub struct BatcherConfig {
     /// conservative, no preemption needed. If false, admit on prompt
     /// fit and preempt on pressure.
     pub reserve_full_context: bool,
+    /// No-starvation bound for the batch lane: a batch-class head that
+    /// has waited at least this long schedules ahead of interactive
+    /// arrivals. Interactive traffic otherwise always goes first.
+    pub batch_aging_s: f64,
 }
 
 impl Default for BatcherConfig {
@@ -41,6 +46,7 @@ impl Default for BatcherConfig {
             prefill_token_budget: 8192,
             max_prefills_per_step: 8,
             reserve_full_context: false,
+            batch_aging_s: 30.0,
         }
     }
 }
@@ -63,10 +69,23 @@ pub fn migration_footprint_tokens(context_len: usize) -> usize {
     context_len + 1
 }
 
+/// Which waiting lane the next admission candidate comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lane {
+    Interactive,
+    Batch,
+}
+
 #[derive(Debug)]
 pub struct Batcher {
     pub cfg: BatcherConfig,
+    /// Interactive-class lane (FIFO). With no batch traffic this is
+    /// the only lane and admission reduces exactly to the old single
+    /// FIFO — bit-identical schedules for single-tenant traces.
     queue: VecDeque<SeqId>,
+    /// Batch-class lane (FIFO). Admitted behind interactive heads
+    /// unless its head has aged past `cfg.batch_aging_s`.
+    batch_queue: VecDeque<SeqId>,
     /// Sequences currently in [`RequestState::Decoding`], kept sorted
     /// by id (the order the old full-scan-plus-sort produced). The
     /// engine updates it on every state transition, so `plan_step`
@@ -76,11 +95,19 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, queue: VecDeque::new(), decoding: BTreeSet::new() }
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            batch_queue: VecDeque::new(),
+            decoding: BTreeSet::new(),
+        }
     }
 
-    pub fn enqueue(&mut self, id: SeqId) {
-        self.queue.push_back(id);
+    pub fn enqueue(&mut self, id: SeqId, class: TenantClass) {
+        match class {
+            TenantClass::Interactive => self.queue.push_back(id),
+            TenantClass::Batch => self.batch_queue.push_back(id),
+        }
     }
 
     /// A sequence entered [`RequestState::Decoding`] (prefill
@@ -95,26 +122,82 @@ impl Batcher {
         self.decoding.remove(&id);
     }
 
-    /// Requeue a preempted sequence at the *front* (vLLM recompute
-    /// semantics): it was admitted before anything still waiting, so
-    /// its re-prefill must not be gated behind later — possibly
-    /// not-yet-arrived — requests.
-    pub fn requeue_front(&mut self, id: SeqId) {
-        self.queue.push_front(id);
+    /// Requeue a preempted sequence at the *front* of its lane (vLLM
+    /// recompute semantics): it was admitted before anything still
+    /// waiting in that lane, so its re-prefill must not be gated
+    /// behind later — possibly not-yet-arrived — requests.
+    pub fn requeue_front(&mut self, id: SeqId, class: TenantClass) {
+        match class {
+            TenantClass::Interactive => self.queue.push_front(id),
+            TenantClass::Batch => self.batch_queue.push_front(id),
+        }
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.queue.len() + self.batch_queue.len()
     }
 
-    /// Arrival time of the first queued sequence — under FIFO it is
-    /// the only admission candidate, so this is the engine's
-    /// idle-advance target when nothing is runnable at `now`.
+    /// Arrival time of the earliest queued head across both lanes —
+    /// the engine's idle-advance target when nothing is runnable at
+    /// `now` (either lane's head may become admissible first).
     pub fn head_arrival(
         &self,
         seqs: &std::collections::HashMap<SeqId, Sequence>,
     ) -> Option<f64> {
-        self.queue.iter().find_map(|id| seqs.get(id)).map(|s| s.arrival)
+        let i = self.queue.iter().find_map(|id| seqs.get(id)).map(|s| s.arrival);
+        let b = self
+            .batch_queue
+            .iter()
+            .find_map(|id| seqs.get(id))
+            .map(|s| s.arrival);
+        match (i, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, None) => x,
+            (None, y) => y,
+        }
+    }
+
+    /// Drop ids with no live sequence from the lane's front, then
+    /// return the head's arrival time (None if the lane is empty).
+    fn prune_head(
+        lane: &mut VecDeque<SeqId>,
+        seqs: &std::collections::HashMap<SeqId, Sequence>,
+    ) -> Option<f64> {
+        while let Some(id) = lane.front() {
+            match seqs.get(id) {
+                Some(s) => return Some(s.arrival),
+                None => {
+                    lane.pop_front();
+                }
+            }
+        }
+        None
+    }
+
+    /// Pick the lane whose head is admitted next at `now`: interactive
+    /// ahead of batch, except a batch head that has waited at least
+    /// `batch_aging_s` goes first (the no-starvation bound). Heads
+    /// that have not arrived yet are invisible — an unarrived
+    /// interactive head never gates an arrived batch head.
+    fn choose_lane(
+        &mut self,
+        seqs: &std::collections::HashMap<SeqId, Sequence>,
+        now: f64,
+    ) -> Option<Lane> {
+        let i = Self::prune_head(&mut self.queue, seqs).filter(|&a| a <= now);
+        let b = Self::prune_head(&mut self.batch_queue, seqs).filter(|&a| a <= now);
+        if let Some(ba) = b {
+            if now - ba >= self.cfg.batch_aging_s {
+                return Some(Lane::Batch);
+            }
+        }
+        if i.is_some() {
+            return Some(Lane::Interactive);
+        }
+        if b.is_some() {
+            return Some(Lane::Batch);
+        }
+        None
     }
 
     /// Plan one step at virtual time `now`. `seqs` resolves ids to
@@ -137,19 +220,26 @@ impl Batcher {
         self.audit_decoding_index(seqs);
         adm.decodes = self.decoding.iter().copied().collect();
 
-        // 2. Admit prefills under budgets.
+        // 2. Admit prefills under budgets, choosing between the
+        // interactive and batch lanes each iteration. A blocked head
+        // (budget or memory) still breaks the whole pass: head-of-line
+        // order within the chosen lane is the fairness contract.
         let mut token_budget = self.cfg.prefill_token_budget;
         while adm.prefills.len() < self.cfg.max_prefills_per_step
             && adm.decodes.len() + adm.prefills.len() < self.cfg.max_batch
         {
-            let Some(&cand) = self.queue.front() else { break };
+            let Some(lane) = self.choose_lane(seqs, now) else {
+                break; // nothing admissible at `now` in either lane
+            };
+            let lane_queue = match lane {
+                Lane::Interactive => &mut self.queue,
+                Lane::Batch => &mut self.batch_queue,
+            };
+            let Some(&cand) = lane_queue.front() else { break };
             let Some(seq) = seqs.get_mut(&cand) else {
-                self.queue.pop_front();
+                lane_queue.pop_front();
                 continue;
             };
-            if seq.arrival > now {
-                break; // head-of-line has not arrived yet (FIFO holds)
-            }
             // A migrated decode leg "resumes": its context KV arrived
             // over the fabric, so admission allocates the blocks but
             // costs no prefill compute and no token budget — the
@@ -195,7 +285,7 @@ impl Batcher {
                 token_budget -= seq.prompt_len;
                 adm.prefills.push(cand);
             }
-            self.queue.pop_front();
+            lane_queue.pop_front();
         }
         adm
     }
@@ -226,8 +316,8 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::kv_cache::KvCacheConfig;
     use crate::workload::trace::Request;
+    use crate::coordinator::kv_cache::KvCacheConfig;
     use std::collections::HashMap;
 
     fn setup(total_blocks: usize) -> (HashMap<SeqId, Sequence>, BlockAllocator) {
@@ -240,11 +330,16 @@ mod tests {
 
     fn add_seq(seqs: &mut HashMap<SeqId, Sequence>, b: &mut Batcher, id: u64,
                prompt: usize, output: usize) {
+        add_classed(seqs, b, id, 0.0, prompt, output, TenantClass::Interactive);
+    }
+
+    fn add_classed(seqs: &mut HashMap<SeqId, Sequence>, b: &mut Batcher, id: u64,
+                   arrival: f64, prompt: usize, output: usize, class: TenantClass) {
         let s = Sequence::from_request(&Request {
-            id, arrival: 0.0, prompt_len: prompt, output_len: output,
+            id, arrival, prompt_len: prompt, output_len: output, class,
         });
         seqs.insert(id, s);
-        b.enqueue(id);
+        b.enqueue(id, class);
     }
 
     #[test]
@@ -271,6 +366,7 @@ mod tests {
         for id in [10u64, 11] {
             let mut s = Sequence::from_request(&Request {
                 id, arrival: 0.0, prompt_len: 10, output_len: 10,
+                class: TenantClass::Interactive,
             });
             s.state = RequestState::Decoding;
             seqs.insert(id, s);
@@ -306,7 +402,7 @@ mod tests {
         assert!(adm.prefills.is_empty());
         // Non-reserving batcher admits it.
         let mut b2 = Batcher::new(BatcherConfig::default());
-        b2.enqueue(0);
+        b2.enqueue(0, TenantClass::Interactive);
         let adm2 = b2.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm2.prefills, vec![0]);
     }
@@ -345,9 +441,10 @@ mod tests {
         let mut b = Batcher::new(BatcherConfig::default());
         let s = Sequence::from_request(&Request {
             id: 0, arrival: 5.0, prompt_len: 32, output_len: 4,
+            class: TenantClass::Interactive,
         });
         seqs.insert(0, s);
-        b.enqueue(0);
+        b.enqueue(0, TenantClass::Interactive);
         // Before the arrival: nothing admissible, head exposed for
         // idle-advance.
         let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
@@ -374,7 +471,7 @@ mod tests {
             bytes: 40.0 * 131072.0,
         };
         seqs.insert(0, Sequence::migrated(&m));
-        b.enqueue(0);
+        b.enqueue(0, TenantClass::Interactive);
         // Before the KV arrives: gated like any future arrival.
         let adm0 = b.plan_step(&mut seqs, &mut alloc, 0.5);
         assert!(adm0.prefills.is_empty() && adm0.decodes.is_empty());
@@ -402,5 +499,51 @@ mod tests {
         add_seq(&mut seqs, &mut b, 2, 10, 4);
         let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
         assert_eq!(adm.prefills, vec![0], "no bypass of seq 1");
+    }
+
+    #[test]
+    fn interactive_schedules_ahead_of_batch() {
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig::default());
+        // Batch request queued first, interactive second — the
+        // interactive one still prefills first.
+        add_classed(&mut seqs, &mut b, 0, 0.0, 32, 4, TenantClass::Batch);
+        add_classed(&mut seqs, &mut b, 1, 0.0, 32, 4, TenantClass::Interactive);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 0.0);
+        assert_eq!(adm.prefills, vec![1, 0], "interactive head goes first");
+    }
+
+    #[test]
+    fn batch_aging_bounds_starvation() {
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig {
+            max_prefills_per_step: 1,
+            batch_aging_s: 2.0,
+            ..Default::default()
+        });
+        add_classed(&mut seqs, &mut b, 0, 0.0, 32, 4, TenantClass::Batch);
+        add_classed(&mut seqs, &mut b, 1, 0.0, 32, 4, TenantClass::Interactive);
+        add_classed(&mut seqs, &mut b, 2, 0.0, 32, 4, TenantClass::Interactive);
+        // Below the aging bound, interactive wins the single slot.
+        let adm = b.plan_step(&mut seqs, &mut alloc, 1.0);
+        assert_eq!(adm.prefills, vec![1]);
+        // Past the bound (waited 2.5 s >= 2.0 s) the batch head jumps
+        // the remaining interactive backlog: bounded starvation.
+        let adm = b.plan_step(&mut seqs, &mut alloc, 2.5);
+        assert_eq!(adm.prefills, vec![0], "aged batch head goes first");
+        let adm = b.plan_step(&mut seqs, &mut alloc, 2.5);
+        assert_eq!(adm.prefills, vec![2]);
+    }
+
+    #[test]
+    fn unarrived_interactive_head_does_not_gate_batch() {
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig::default());
+        add_classed(&mut seqs, &mut b, 0, 5.0, 32, 4, TenantClass::Interactive);
+        add_classed(&mut seqs, &mut b, 1, 0.0, 32, 4, TenantClass::Batch);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 1.0);
+        assert_eq!(adm.prefills, vec![1], "arrived batch head admitted");
+        // Idle-advance target is the earliest head across lanes.
+        assert_eq!(b.head_arrival(&seqs), Some(5.0));
     }
 }

@@ -156,7 +156,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// its arrival.
     pub fn submit(&mut self, r: &Request) {
         let seq = Sequence::from_request(r);
-        self.batcher.enqueue(seq.id);
+        self.batcher.enqueue(seq.id, seq.class);
         if self.seqs.insert(seq.id, seq).is_none() {
             self.active += 1;
         }
@@ -170,7 +170,7 @@ impl<B: ExecutionBackend> Engine<B> {
         let mut seq = Sequence::from_request(r);
         seq.role = SeqRole::PrefillLeg;
         seq.output_len = 1; // prefill emits exactly the first token
-        self.batcher.enqueue(seq.id);
+        self.batcher.enqueue(seq.id, seq.class);
         if self.seqs.insert(seq.id, seq).is_none() {
             self.active += 1;
         }
@@ -192,7 +192,7 @@ impl<B: ExecutionBackend> Engine<B> {
         let seq = Sequence::migrated(m);
         self.metrics.record_first_token(m.arrival, m.at);
         self.metrics.record_migration(m.bytes);
-        self.batcher.enqueue(seq.id);
+        self.batcher.enqueue(seq.id, seq.class);
         if self.seqs.insert(seq.id, seq).is_none() {
             self.active += 1;
         }
@@ -298,6 +298,20 @@ impl<B: ExecutionBackend> Engine<B> {
     pub fn close_ledger(&mut self, t: f64) {
         if t > self.clock {
             self.metrics.record_idle(t - self.clock, self.backend.idle_draw_w());
+            self.clock = t;
+        }
+    }
+
+    /// Close the ledger at `t` with the replica *power-gated* (the
+    /// autoscaler's sleep state): the gap draws 0 W instead of idle
+    /// draw. Gated time joins the timeline-tiling identity as its own
+    /// component — `span + idle_s + gated_s` covers the closed
+    /// timeline — without adding energy, which is exactly what makes
+    /// an autoscaled fleet cheaper than a static one under the PR 7
+    /// idle-aware ledger. No-op when `t <= clock`.
+    pub fn close_ledger_gated(&mut self, t: f64) {
+        if t > self.clock {
+            self.metrics.record_gated(t - self.clock);
             self.clock = t;
         }
     }
@@ -539,11 +553,12 @@ impl<B: ExecutionBackend> Engine<B> {
         // eviction: demote it to a full sequence so the re-prefill is
         // a real local recompute, not a free "resume".
         seq.role = SeqRole::Full;
-        // Front of the queue: the victim predates everything still
-        // waiting, and must never sit behind a not-yet-arrived head
-        // (which would let idle-advance skip past its runnable
+        // Front of its lane: the victim predates everything still
+        // waiting there, and must never sit behind a not-yet-arrived
+        // head (which would let idle-advance skip past its runnable
         // re-prefill and inflate its latency artificially).
-        self.batcher.requeue_front(id);
+        let class = seq.class;
+        self.batcher.requeue_front(id, class);
     }
 
     pub fn sequence(&self, id: SeqId) -> Option<&Sequence> {
@@ -569,7 +584,13 @@ mod tests {
     }
 
     fn req(id: u64, arrival: f64, p: usize, o: usize) -> Request {
-        Request { id, arrival, prompt_len: p, output_len: o }
+        Request {
+            id,
+            arrival,
+            prompt_len: p,
+            output_len: o,
+            class: crate::workload::trace::TenantClass::Interactive,
+        }
     }
 
     #[test]

@@ -75,6 +75,12 @@ pub struct Metrics {
     /// on the engine's timeline. Summed across engines by `absorb`,
     /// like `span`.
     pub idle_s: f64,
+    /// Time spent power-gated (autoscaler sleep state, s): the replica
+    /// drew 0 W, so no energy accrues — only the timeline component.
+    /// With an autoscaler in play, `span + idle_s + gated_s` covers
+    /// the closed timeline; without one `gated_s` stays 0 and the
+    /// PR 7 two-term identity is unchanged.
+    pub gated_s: f64,
 }
 
 impl Metrics {
@@ -155,6 +161,14 @@ impl Metrics {
         self.idle_s += dt;
     }
 
+    /// A power-gated gap of `dt` seconds (autoscaler sleep): the
+    /// replica is off, drawing 0 W — time accrues so the ledger still
+    /// tiles the makespan, energy does not.
+    pub fn record_gated(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "gated gap must be non-negative");
+        self.gated_s += dt;
+    }
+
     /// Merge another engine's metrics into this one (cluster rollup).
     /// Percentile samples keep their timestamps, so windowed queries
     /// remain valid on the shared virtual timeline.
@@ -180,6 +194,7 @@ impl Metrics {
         self.flops += other.flops;
         self.span += other.span;
         self.idle_s += other.idle_s;
+        self.gated_s += other.gated_s;
     }
 
     /// Step-cost cache hit rate across every lookup the backend(s)
@@ -198,7 +213,7 @@ impl Metrics {
     /// merged value is the mean sustained per-engine draw, the figure
     /// rack packing and electricity pricing need.
     pub fn watts_mean(&self) -> f64 {
-        let covered = self.span + self.idle_s;
+        let covered = self.span + self.idle_s + self.gated_s;
         if covered > 0.0 {
             self.energy_j / covered
         } else {
@@ -259,7 +274,7 @@ impl Metrics {
     /// Fraction of the covered timeline spent idle (0 when nothing was
     /// covered).
     pub fn idle_frac(&self) -> f64 {
-        let covered = self.span + self.idle_s;
+        let covered = self.span + self.idle_s + self.gated_s;
         if covered > 0.0 {
             self.idle_s / covered
         } else {
@@ -426,6 +441,24 @@ mod tests {
         assert_eq!(a.step_cache_hits, 8);
         assert_eq!(a.step_cache_misses, 8);
         assert!((a.step_cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gated_time_accrues_no_energy() {
+        let mut m = Metrics::new();
+        m.record_decode_step(1.0, 500.0, 1e12, 10);
+        m.record_idle(1.0, 100.0);
+        m.record_gated(2.0);
+        assert!((m.gated_s - 2.0).abs() < 1e-12);
+        assert!((m.energy_j - 600.0).abs() < 1e-9, "gating adds no joules");
+        // Mean draw is over the full covered timeline, sleep included:
+        // a replica that sleeps half the day halves its mean watts.
+        assert!((m.watts_mean() - 150.0).abs() < 1e-9);
+        assert!((m.idle_frac() - 0.25).abs() < 1e-12);
+        let mut other = Metrics::new();
+        other.record_gated(3.0);
+        m.absorb(&other);
+        assert!((m.gated_s - 5.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Request lifecycle types.
 
-use crate::workload::trace::Request;
+use crate::workload::trace::{Request, TenantClass};
 
 pub type SeqId = u64;
 
@@ -62,6 +62,9 @@ pub struct Sequence {
     pub id: SeqId,
     pub state: RequestState,
     pub role: SeqRole,
+    /// Tenant class: the batcher admits interactive sequences ahead of
+    /// batch ones (aging-bounded, see `BatcherConfig::batch_aging_s`).
+    pub class: TenantClass,
     pub prompt_len: usize,
     /// Target number of output tokens.
     pub output_len: usize,
@@ -93,6 +96,7 @@ impl Sequence {
             id: r.id,
             state: RequestState::Queued,
             role: SeqRole::Full,
+            class: r.class,
             prompt_len: r.prompt_len,
             output_len: r.output_len,
             generated: 0,
@@ -113,6 +117,9 @@ impl Sequence {
             id: m.id,
             state: RequestState::Queued,
             role: SeqRole::DecodeLeg,
+            // Migrations ride the interactive path: only multi-token
+            // interactive-SLO requests disaggregate today.
+            class: TenantClass::Interactive,
             prompt_len: m.context_len,
             output_len: m.remaining_out,
             generated: 0,
@@ -145,7 +152,13 @@ mod tests {
     use super::*;
 
     fn req() -> Request {
-        Request { id: 7, arrival: 1.5, prompt_len: 100, output_len: 10 }
+        Request {
+            id: 7,
+            arrival: 1.5,
+            prompt_len: 100,
+            output_len: 10,
+            class: TenantClass::Interactive,
+        }
     }
 
     #[test]

@@ -146,6 +146,7 @@ impl<B: ExecutionBackend> Router<B> {
             arrival: m.at,
             prompt_len: m.context_len,
             output_len: m.remaining_out,
+            class: crate::workload::trace::TenantClass::Interactive,
         };
         let i = self.select(&probe);
         self.engines[i].advance_to(m.at);
@@ -287,7 +288,13 @@ mod tests {
     }
 
     fn req(id: u64, p: usize, o: usize) -> Request {
-        Request { id, arrival: 0.0, prompt_len: p, output_len: o }
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: p,
+            output_len: o,
+            class: crate::workload::trace::TenantClass::Interactive,
+        }
     }
 
     fn ratings_h100_gaudi() -> Vec<EngineRating> {

@@ -14,7 +14,7 @@
 
 pub mod rack;
 
-pub use rack::{assumed_server_price_usd, InfraModel, RackConfig};
+pub use rack::{assumed_server_price_usd, DayUsage, InfraModel, RackConfig};
 
 /// Relative-cost inputs of the paper's Eq. 1.
 #[derive(Debug, Clone, Copy)]

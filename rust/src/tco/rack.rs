@@ -68,6 +68,52 @@ pub fn assumed_server_price_usd(dev: Device) -> f64 {
     }
 }
 
+/// One day of a replica fleet's measured usage, as the idle-aware
+/// ledger reports it: device energy actually drawn, replica-seconds
+/// powered (busy + idle, provisioning included) and replica-seconds
+/// spent power-gated at 0 W. The diurnal pricing methods integrate
+/// this instead of assuming one sustained draw held forever — a fleet
+/// that sleeps through the trough pays for the capacity it owns but
+/// only for the energy it draws.
+#[derive(Debug, Clone, Copy)]
+pub struct DayUsage {
+    /// Device energy over the day (J), all chips: busy + idle through
+    /// the ledger; gated spans add none.
+    pub energy_j: f64,
+    /// Sum over replicas of powered seconds (`span + idle_s`).
+    pub powered_replica_s: f64,
+    /// Sum over replicas of power-gated seconds (`gated_s`).
+    pub gated_replica_s: f64,
+    /// Output tokens the fleet delivered over the day.
+    pub tokens_out: u64,
+    /// The day itself (s): the shared ledger-close instant, so a
+    /// fully-closed fleet has
+    /// `powered_replica_s + gated_replica_s == n_replicas * day_s`.
+    pub day_s: f64,
+}
+
+impl DayUsage {
+    /// Build from a fleet's merged [`Metrics`] closed at `day_s`.
+    /// Engine-level energy is per chip (the step model's convention),
+    /// so the fleet's device energy scales by `chips_per_replica`.
+    ///
+    /// [`Metrics`]: crate::coordinator::Metrics
+    pub fn from_fleet(
+        m: &crate::coordinator::Metrics,
+        chips_per_replica: usize,
+        day_s: f64,
+    ) -> Self {
+        assert!(chips_per_replica > 0, "replicas need chips");
+        DayUsage {
+            energy_j: m.energy_j * chips_per_replica as f64,
+            powered_replica_s: m.span + m.idle_s,
+            gated_replica_s: m.gated_s,
+            tokens_out: m.tokens_out,
+            day_s,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct InfraModel {
     pub rack: RackConfig,
@@ -239,6 +285,67 @@ impl InfraModel {
             ],
             tokens_per_sec,
         )
+    }
+
+    /// $/Mtok for one measured day of a replica fleet ([`DayUsage`]):
+    /// the capacity the fleet *owns* — server capex plus rack share,
+    /// both amortized over the day's fraction of the horizon — plus
+    /// the electricity it actually *drew*, over the day's tokens.
+    /// Unlike [`Self::cost_per_mtok`], which assumes one sustained
+    /// draw held for the whole horizon, this separates the two sides:
+    /// all `n_replicas` are owned (and rack-provisioned at
+    /// `provision_draw_w`, the per-chip draw the rack must be packed
+    /// for) whether or not they sleep, while the energy bill follows
+    /// the ledger — power-gated replica-seconds cost nothing, powered
+    /// ones add server overhead, and the PUE scales the lot. For a
+    /// fleet powered at one constant draw all day this reduces exactly
+    /// to [`Self::cost_per_mtok`].
+    pub fn cost_per_mtok_diurnal(
+        &self,
+        server_price_usd: f64,
+        chips_per_replica: usize,
+        n_replicas: usize,
+        provision_draw_w: f64,
+        usage: &DayUsage,
+    ) -> f64 {
+        assert!(chips_per_replica > 0 && n_replicas > 0, "fleet needs replicas and chips");
+        assert!(usage.day_s > 0.0, "day must have positive length");
+        assert!(usage.tokens_out > 0, "fleet must deliver tokens");
+        let replica_s = usage.powered_replica_s + usage.gated_replica_s;
+        assert!(
+            replica_s <= n_replicas as f64 * usage.day_s * (1.0 + 1e-9) + 1e-6,
+            "ledger overruns the day: {replica_s} replica-s > {n_replicas} x {} s",
+            usage.day_s
+        );
+        let server_equiv = chips_per_replica as f64 / self.rack.chips_per_server as f64;
+        // Owned capacity, amortized over the day's slice of the horizon.
+        let per_rack = self.servers_per_rack(provision_draw_w).max(1) as f64;
+        let day_frac = usage.day_s / (self.rack.horizon_hours * 3600.0);
+        let owned_usd = n_replicas as f64
+            * server_equiv
+            * (server_price_usd + self.rack.fixed_cost_usd / per_rack)
+            * day_frac;
+        // Drawn energy: the ledger's device joules plus server
+        // overhead over powered replica-seconds, billed at facility
+        // (PUE-scaled) energy. Gated time adds nothing.
+        let overhead_j =
+            self.rack.server_overhead_w * usage.powered_replica_s * server_equiv;
+        let energy_kwh = (usage.energy_j + overhead_j) / 3.6e6;
+        let electricity_usd = energy_kwh * self.rack.pue_ratio * self.rack.usd_per_kwh;
+        (owned_usd + electricity_usd) / usage.tokens_out as f64 * 1e6
+    }
+
+    /// Facility watt-hours per million output tokens for one measured
+    /// day — the energy twin of [`Self::cost_per_mtok_diurnal`]: its
+    /// electricity component is exactly `wh / 1000 * usd_per_kwh`.
+    pub fn wh_per_mtok_diurnal(&self, chips_per_replica: usize, usage: &DayUsage) -> f64 {
+        assert!(chips_per_replica > 0, "replicas need chips");
+        assert!(usage.tokens_out > 0, "fleet must deliver tokens");
+        let server_equiv = chips_per_replica as f64 / self.rack.chips_per_server as f64;
+        let overhead_j =
+            self.rack.server_overhead_w * usage.powered_replica_s * server_equiv;
+        let wh = (usage.energy_j + overhead_j) / 3600.0 * self.rack.pue_ratio;
+        wh / usage.tokens_out as f64 * 1e6
     }
 
     /// Convenience: sustained draw for a device at a utilization,
@@ -502,6 +609,82 @@ mod tests {
             4000.0,
         );
         assert!((mixed / merged - 1.0).abs() < 1e-12, "{mixed} vs {merged}");
+    }
+
+    /// A synthetic measured day for an 8-chip-per-replica fleet:
+    /// `gated_frac` of every replica-day is power-gated, the rest is
+    /// powered at a flat `chip_w` per chip.
+    fn day(n_replicas: usize, day_s: f64, chip_w: f64, gated_frac: f64, tokens: u64) -> DayUsage {
+        let powered = n_replicas as f64 * day_s * (1.0 - gated_frac);
+        DayUsage {
+            energy_j: 8.0 * chip_w * powered,
+            powered_replica_s: powered,
+            gated_replica_s: n_replicas as f64 * day_s * gated_frac,
+            tokens_out: tokens,
+            day_s,
+        }
+    }
+
+    #[test]
+    fn diurnal_pricing_reduces_to_horizon_pricing_when_always_on() {
+        // One 8-chip replica powered all day at a constant draw must
+        // price exactly like cost_per_mtok at goodput tokens/day —
+        // the two models agree wherever both apply.
+        let m = model();
+        let (w, day_s) = (600.0, 86_400.0);
+        let tokens = 86_400u64 * 1_000;
+        let u = day(1, day_s, w, 0.0, tokens);
+        let diurnal = m.cost_per_mtok_diurnal(250_000.0, 8, 1, w, &u);
+        let horizon = m.cost_per_mtok(250_000.0, w, tokens as f64 / day_s);
+        assert!((diurnal / horizon - 1.0).abs() < 1e-12, "{diurnal} vs {horizon}");
+    }
+
+    #[test]
+    fn gating_saves_exactly_the_gated_electricity() {
+        // Same owned fleet, same tokens: the gated day draws no chip
+        // energy and no server overhead over its gated replica-seconds,
+        // so the whole cost delta is that electricity and nothing else
+        // (capex and rack share are for owned capacity, gated or not).
+        let m = model();
+        let tokens = 5_000_000_000u64;
+        let awake = day(4, 86_400.0, 500.0, 0.0, tokens);
+        let gated = day(4, 86_400.0, 500.0, 0.25, tokens);
+        let c_awake = m.cost_per_mtok_diurnal(160_000.0, 8, 4, 500.0, &awake);
+        let c_gated = m.cost_per_mtok_diurnal(160_000.0, 8, 4, 500.0, &gated);
+        assert!(c_gated < c_awake, "{c_gated} vs {c_awake}");
+        let gated_server_s = awake.powered_replica_s - gated.powered_replica_s;
+        let saved_kwh = m.server_power_w(500.0) * gated_server_s / 3.6e6;
+        let saved_usd_per_mtok =
+            saved_kwh * m.rack.pue_ratio * m.rack.usd_per_kwh / tokens as f64 * 1e6;
+        assert!(
+            ((c_awake - c_gated) / saved_usd_per_mtok - 1.0).abs() < 1e-9,
+            "delta {} vs electricity {saved_usd_per_mtok}",
+            c_awake - c_gated
+        );
+    }
+
+    #[test]
+    fn diurnal_wh_is_the_electricity_share_exactly() {
+        // With capex zeroed out, $/Mtok is pure electricity and must
+        // equal wh_per_mtok_diurnal / 1000 * usd_per_kwh.
+        let free_capex = InfraModel::new(RackConfig {
+            fixed_cost_usd: 0.0,
+            ..RackConfig::a100_era()
+        });
+        let u = day(4, 86_400.0, 500.0, 0.4, 2_000_000_000);
+        let c = free_capex.cost_per_mtok_diurnal(0.0, 8, 4, 500.0, &u);
+        let wh = free_capex.wh_per_mtok_diurnal(8, &u);
+        let electricity = wh / 1000.0 * free_capex.rack.usd_per_kwh;
+        assert!((c / electricity - 1.0).abs() < 1e-12, "{c} vs {electricity}");
+    }
+
+    #[test]
+    #[should_panic(expected = "ledger overruns the day")]
+    fn diurnal_pricing_rejects_overcommitted_ledger() {
+        let m = model();
+        let mut u = day(2, 1_000.0, 500.0, 0.0, 1_000_000);
+        u.powered_replica_s *= 2.0; // 4 replica-days on a 2-replica fleet
+        m.cost_per_mtok_diurnal(100_000.0, 8, 2, 500.0, &u);
     }
 
     #[test]

@@ -1,6 +1,16 @@
 //! Streaming statistics + percentile helpers for metrics reporting
 //! (TTFT / TPOT / throughput distributions in the coordinator, and the
 //! bench harnesses' timing summaries).
+//!
+//! Percentile queries used to clone and re-sort the full sample on
+//! *every* call — O(n log n) per query inside the bisection sweep's
+//! hot loop. Both containers now memoize the sorted order in a
+//! [`OnceLock`] (not `RefCell`: metrics travel through `util::par`
+//! sweeps, so the cache must be `Sync`), invalidated by reassigning a
+//! fresh lock on every mutation. Results are bit-identical to the
+//! uncached path: the same multiset of values sorts to the same order.
+
+use std::sync::OnceLock;
 
 /// Online mean/min/max/variance (Welford).
 #[derive(Debug, Clone, Default)]
@@ -80,6 +90,8 @@ impl Summary {
 #[derive(Debug, Clone, Default)]
 pub struct Percentiles {
     xs: Vec<f64>,
+    /// Sorted copy of `xs`, built on the first query after a mutation.
+    sorted: OnceLock<Vec<f64>>,
 }
 
 impl Percentiles {
@@ -89,6 +101,7 @@ impl Percentiles {
 
     pub fn add(&mut self, x: f64) {
         self.xs.push(x);
+        self.sorted = OnceLock::new();
     }
 
     pub fn count(&self) -> usize {
@@ -97,7 +110,12 @@ impl Percentiles {
 
     /// Linear-interpolated percentile, q in [0, 100].
     pub fn pct(&self, q: f64) -> f64 {
-        pct_of(self.xs.clone(), q)
+        let sorted = self.sorted.get_or_init(|| {
+            let mut v = self.xs.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        });
+        pct_of_sorted(sorted, q)
     }
 
     pub fn median(&self) -> f64 {
@@ -108,10 +126,15 @@ impl Percentiles {
 /// Linear-interpolated percentile of an owned sample, q in [0, 100].
 /// NaN on an empty sample.
 fn pct_of(mut v: Vec<f64>, q: f64) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pct_of_sorted(&v, q)
+}
+
+/// Linear-interpolated percentile of an already-sorted sample.
+fn pct_of_sorted(v: &[f64], q: f64) -> f64 {
     if v.is_empty() {
         return f64::NAN;
     }
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = q / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -132,6 +155,11 @@ fn pct_of(mut v: Vec<f64>, q: f64) -> f64 {
 pub struct TimedPercentiles {
     /// (completion time, value) pairs.
     samples: Vec<(f64, f64)>,
+    /// `samples` stably sorted by timestamp: window queries slice it
+    /// with two binary searches instead of filtering every sample.
+    by_time: OnceLock<Vec<(f64, f64)>>,
+    /// Every value sorted — the whole-run percentile order.
+    sorted_vals: OnceLock<Vec<f64>>,
 }
 
 impl TimedPercentiles {
@@ -141,6 +169,32 @@ impl TimedPercentiles {
 
     pub fn add(&mut self, t: f64, x: f64) {
         self.samples.push((t, x));
+        self.invalidate();
+    }
+
+    fn invalidate(&mut self) {
+        // `OnceLock::take` needs 1.80; reassignment works on 1.70+.
+        self.by_time = OnceLock::new();
+        self.sorted_vals = OnceLock::new();
+    }
+
+    /// Samples stably sorted by completion time (ties keep insertion
+    /// order; timestamps are never NaN, so total_cmp matches the
+    /// window filter's `..=` semantics).
+    fn by_time(&self) -> &[(f64, f64)] {
+        self.by_time.get_or_init(|| {
+            let mut v = self.samples.clone();
+            v.sort_by(|a, b| a.0.total_cmp(&b.0));
+            v
+        })
+    }
+
+    /// The [t0, t1] slice of the time-sorted samples.
+    fn window(&self, t0: f64, t1: f64) -> &[(f64, f64)] {
+        let v = self.by_time();
+        let lo = v.partition_point(|&(t, _)| t < t0);
+        let hi = v.partition_point(|&(t, _)| t <= t1);
+        &v[lo..hi.max(lo)]
     }
 
     pub fn count(&self) -> usize {
@@ -149,25 +203,23 @@ impl TimedPercentiles {
 
     /// Samples whose completion time falls in [t0, t1].
     pub fn count_in(&self, t0: f64, t1: f64) -> usize {
-        self.samples.iter().filter(|(t, _)| (t0..=t1).contains(t)).count()
+        self.window(t0, t1).len()
     }
 
     /// Percentile over every sample, q in [0, 100]. NaN when empty.
     pub fn pct(&self, q: f64) -> f64 {
-        pct_of(self.samples.iter().map(|&(_, x)| x).collect(), q)
+        let sorted = self.sorted_vals.get_or_init(|| {
+            let mut v: Vec<f64> = self.samples.iter().map(|&(_, x)| x).collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        });
+        pct_of_sorted(sorted, q)
     }
 
     /// Percentile over the samples completing in [t0, t1] (the
     /// steady-state window). NaN when no sample falls inside.
     pub fn pct_in(&self, t0: f64, t1: f64, q: f64) -> f64 {
-        pct_of(
-            self.samples
-                .iter()
-                .filter(|(t, _)| (t0..=t1).contains(t))
-                .map(|&(_, x)| x)
-                .collect(),
-            q,
-        )
+        pct_of(self.window(t0, t1).iter().map(|&(_, x)| x).collect(), q)
     }
 
     pub fn median(&self) -> f64 {
@@ -178,6 +230,7 @@ impl TimedPercentiles {
     /// per-engine metrics).
     pub fn absorb(&mut self, other: &TimedPercentiles) {
         self.samples.extend_from_slice(&other.samples);
+        self.invalidate();
     }
 }
 
@@ -231,6 +284,49 @@ mod tests {
         // ...the steady-state window is not.
         assert!(p.pct_in(10.0, 99.0, 100.0) <= 99.0 + 1e-9);
         assert!(p.pct_in(200.0, 300.0, 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_cache_invalidates_on_add_and_absorb() {
+        // Query, mutate, query again: the memoized sort must be
+        // rebuilt, and every answer must equal a fresh uncached
+        // container's, to the bit.
+        let mut p = Percentiles::new();
+        for x in [5.0, 1.0, 3.0] {
+            p.add(x);
+        }
+        assert_eq!(p.pct(50.0).to_bits(), 3.0f64.to_bits());
+        p.add(0.5);
+        p.add(9.0);
+        let mut fresh = Percentiles::new();
+        for x in [5.0, 1.0, 3.0, 0.5, 9.0] {
+            fresh.add(x);
+        }
+        for q in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert_eq!(p.pct(q).to_bits(), fresh.pct(q).to_bits());
+        }
+
+        let mut t = TimedPercentiles::new();
+        for (ts, x) in [(0.0, 4.0), (2.0, 1.0), (1.0, 7.0)] {
+            t.add(ts, x);
+        }
+        assert_eq!(t.count_in(0.5, 2.5), 2);
+        let _ = t.pct_in(0.0, 2.0, 95.0); // warm the cache
+        let mut other = TimedPercentiles::new();
+        other.add(1.5, 2.0);
+        t.absorb(&other);
+        assert_eq!(t.count_in(0.5, 2.5), 3, "absorb must drop the stale window");
+        let mut fresh = TimedPercentiles::new();
+        for (ts, x) in [(0.0, 4.0), (2.0, 1.0), (1.0, 7.0), (1.5, 2.0)] {
+            fresh.add(ts, x);
+        }
+        for q in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(t.pct(q).to_bits(), fresh.pct(q).to_bits());
+            assert_eq!(
+                t.pct_in(0.5, 2.5, q).to_bits(),
+                fresh.pct_in(0.5, 2.5, q).to_bits()
+            );
+        }
     }
 
     #[test]

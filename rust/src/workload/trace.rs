@@ -4,8 +4,28 @@
 //! Poisson arrivals; prompt and output lengths drawn from log-normal
 //! mixes. The `reasoning` mix models the paper's §1/§5.4 motivation:
 //! test-time-scaling models generating thousands of output tokens.
+//!
+//! Beyond the stationary [`TraceGenerator`], the non-stationary layer
+//! (DESIGN.md §12) models what "millions of users" actually send:
+//! [`RateCurve`] is a piecewise-linear diurnal rate profile driving a
+//! time-varying Poisson process by thinning, [`ArrivalProcess::Mmpp`]
+//! is a 2-state Markov-modulated Poisson process for bursty
+//! (overdispersed) traffic, and [`TrafficGenerator`] stamps every
+//! request with a [`TenantClass`] (interactive vs batch, each with its
+//! own length mix) for priority scheduling downstream.
 
 use crate::util::rng::Rng;
+
+/// Tenant class of a request: interactive traffic holds the tight
+/// latency SLO and schedules ahead of batch (offline/bulk) traffic,
+/// which tolerates queueing up to an aging bound
+/// (`BatcherConfig::batch_aging_s`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TenantClass {
+    #[default]
+    Interactive,
+    Batch,
+}
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -14,6 +34,8 @@ pub struct Request {
     pub arrival: f64,
     pub prompt_len: usize,
     pub output_len: usize,
+    /// Tenant class (scheduling priority + per-class SLO).
+    pub class: TenantClass,
 }
 
 #[derive(Debug, Clone)]
@@ -94,7 +116,13 @@ impl TraceGenerator {
             .clamp(1, self.cfg.max_output);
         let id = self.next_id;
         self.next_id += 1;
-        Request { id, arrival: self.clock, prompt_len, output_len }
+        Request {
+            id,
+            arrival: self.clock,
+            prompt_len,
+            output_len,
+            class: TenantClass::Interactive,
+        }
     }
 
     pub fn take(&mut self, n: usize) -> Vec<Request> {
@@ -115,6 +143,309 @@ impl TraceGenerator {
 /// inherent [`TraceGenerator::take`] (eager `Vec`) shadows
 /// `Iterator::take` on method-call syntax.
 impl Iterator for TraceGenerator {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        Some(self.next_request())
+    }
+}
+
+/// Piecewise-linear arrival-rate profile: `(time_s, rate_qps)` knots,
+/// linearly interpolated between knots and held flat outside them.
+/// The diurnal shape and the thinning envelope both live here, and
+/// [`RateCurve::expected_arrivals`] is the exact integral the
+/// rate-conservation tests check empirical traces against.
+#[derive(Debug, Clone)]
+pub struct RateCurve {
+    /// (time_s, rate_qps), strictly increasing in time, rates >= 0.
+    knots: Vec<(f64, f64)>,
+}
+
+impl RateCurve {
+    pub fn new(knots: Vec<(f64, f64)>) -> Self {
+        assert!(!knots.is_empty(), "rate curve needs at least one knot");
+        for w in knots.windows(2) {
+            assert!(w[1].0 > w[0].0, "knot times must strictly increase");
+        }
+        assert!(knots.iter().all(|&(_, r)| r >= 0.0), "rates must be >= 0");
+        assert!(knots.iter().any(|&(_, r)| r > 0.0), "curve must be positive somewhere");
+        RateCurve { knots }
+    }
+
+    /// Constant rate (the stationary limit: thinning accepts every
+    /// candidate and the generator reduces to plain Poisson).
+    pub fn flat(rate_qps: f64) -> Self {
+        RateCurve::new(vec![(0.0, rate_qps)])
+    }
+
+    /// A smooth day: hourly knots on a raised cosine with the trough
+    /// (`base_qps`) at 04:00 and the peak (`peak_qps`) twelve hours
+    /// later — the canonical diurnal shape the autoscaler bench runs.
+    pub fn diurnal(day_s: f64, base_qps: f64, peak_qps: f64) -> Self {
+        assert!(day_s > 0.0 && base_qps >= 0.0 && peak_qps >= base_qps);
+        let knots = (0..=24)
+            .map(|h| {
+                let t_s = day_s * h as f64 / 24.0;
+                let phase = 2.0 * std::f64::consts::PI * (h as f64 - 4.0) / 24.0;
+                let w = 0.5 * (1.0 - phase.cos());
+                (t_s, base_qps + (peak_qps - base_qps) * w)
+            })
+            .collect();
+        RateCurve::new(knots)
+    }
+
+    /// Instantaneous rate at `t_s` (requests/s).
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        let k = &self.knots;
+        if t_s <= k[0].0 {
+            return k[0].1;
+        }
+        if t_s >= k[k.len() - 1].0 {
+            return k[k.len() - 1].1;
+        }
+        let i = k.partition_point(|&(t, _)| t <= t_s);
+        let (t0, r0) = k[i - 1];
+        let (t1, r1) = k[i];
+        r0 + (r1 - r0) * (t_s - t0) / (t1 - t0)
+    }
+
+    /// Maximum rate over the whole curve — the thinning envelope
+    /// (piecewise-linear curves peak at a knot).
+    pub fn peak_qps(&self) -> f64 {
+        self.knots.iter().map(|&(_, r)| r).fold(0.0, f64::max)
+    }
+
+    /// Exact expected arrival count over [t0_s, t1_s] (trapezoid rule
+    /// is exact on a piecewise-linear integrand).
+    pub fn expected_arrivals(&self, t0_s: f64, t1_s: f64) -> f64 {
+        if t1_s <= t0_s {
+            return 0.0;
+        }
+        // Integration nodes: the window ends plus every interior knot.
+        let mut ts = vec![t0_s];
+        for &(t, _) in &self.knots {
+            if t > t0_s && t < t1_s {
+                ts.push(t);
+            }
+        }
+        ts.push(t1_s);
+        let mut total = 0.0;
+        for w in ts.windows(2) {
+            total += 0.5 * (self.rate_at(w[0]) + self.rate_at(w[1])) * (w[1] - w[0]);
+        }
+        total
+    }
+}
+
+/// How arrivals are spread over time (lengths and tenant mix are
+/// orthogonal — see [`TrafficConfig`]).
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Time-varying Poisson process with intensity [`RateCurve`],
+    /// realized by thinning a homogeneous process at the curve's peak.
+    Modulated(RateCurve),
+    /// 2-state Markov-modulated Poisson process: exponential sojourns
+    /// alternate between a baseline state and a burst state, each with
+    /// its own Poisson rate — the classic bursty/overdispersed model
+    /// (index of dispersion > 1 at every timescale above the sojourn).
+    Mmpp {
+        base_qps: f64,
+        burst_qps: f64,
+        /// Mean sojourn in the baseline state (s).
+        mean_base_s: f64,
+        /// Mean sojourn in the burst state (s).
+        mean_burst_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate (requests/s): the curve's day
+    /// average for `Modulated` (taken over the knot span, which the
+    /// flat extension preserves beyond it), the sojourn-weighted state
+    /// mix for `Mmpp`.
+    pub fn mean_qps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Modulated(curve) => {
+                let (t0, t1) =
+                    (curve.knots[0].0, curve.knots[curve.knots.len() - 1].0);
+                if t1 > t0 {
+                    curve.expected_arrivals(t0, t1) / (t1 - t0)
+                } else {
+                    curve.rate_at(t0)
+                }
+            }
+            ArrivalProcess::Mmpp { base_qps, burst_qps, mean_base_s, mean_burst_s } => {
+                (base_qps * mean_base_s + burst_qps * mean_burst_s)
+                    / (mean_base_s + mean_burst_s)
+            }
+        }
+    }
+}
+
+/// Non-stationary, multi-tenant traffic: an [`ArrivalProcess`] spreads
+/// arrivals over the day, and each arrival is stamped
+/// interactive-or-batch with its class's own length mix. The `rate`
+/// field of the per-class [`TraceConfig`]s is ignored — the arrival
+/// process owns timing.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    pub arrivals: ArrivalProcess,
+    /// Interactive-class length mix.
+    pub interactive: TraceConfig,
+    /// Batch-class length mix.
+    pub batch: TraceConfig,
+    /// Probability an arrival is batch-class (0 = single-tenant).
+    pub batch_frac: f64,
+}
+
+impl TrafficConfig {
+    /// Single-tenant chat traffic on an arbitrary arrival process.
+    pub fn chat_on(arrivals: ArrivalProcess) -> Self {
+        TrafficConfig {
+            arrivals,
+            interactive: TraceConfig::chat(0.0),
+            batch: TraceConfig::summarize(0.0),
+            batch_frac: 0.0,
+        }
+    }
+
+    /// The production mix the diurnal bench prices: chat-shaped
+    /// interactive traffic beside summarize-shaped batch jobs.
+    pub fn multi_tenant(arrivals: ArrivalProcess, batch_frac: f64) -> Self {
+        assert!((0.0..=1.0).contains(&batch_frac));
+        TrafficConfig {
+            arrivals,
+            interactive: TraceConfig::chat(0.0),
+            batch: TraceConfig::summarize(0.0),
+            batch_frac,
+        }
+    }
+}
+
+/// Generator over a [`TrafficConfig`] — the non-stationary sibling of
+/// [`TraceGenerator`], with the same deterministic-by-seed contract
+/// and the same lazy-stream interface. Draw order per request is
+/// fixed (arrival candidates, then class, then lengths), so traces
+/// are reproducible byte-for-byte for a fixed (config, seed).
+pub struct TrafficGenerator {
+    cfg: TrafficConfig,
+    rng: Rng,
+    clock: f64,
+    next_id: u64,
+    /// MMPP state: true while in the burst state.
+    bursting: bool,
+    /// MMPP: when the current sojourn ends.
+    state_end: f64,
+}
+
+impl TrafficGenerator {
+    pub fn new(cfg: TrafficConfig, seed: u64) -> Self {
+        if let ArrivalProcess::Modulated(curve) = &cfg.arrivals {
+            assert!(curve.peak_qps() > 0.0, "thinning needs a positive envelope");
+        }
+        TrafficGenerator {
+            cfg,
+            rng: Rng::new(seed),
+            clock: 0.0,
+            next_id: 0,
+            bursting: false,
+            state_end: 0.0,
+        }
+    }
+
+    /// Next arrival instant under the configured process.
+    fn next_arrival(&mut self) -> f64 {
+        match &self.cfg.arrivals {
+            ArrivalProcess::Modulated(curve) => {
+                // Lewis-Shedler thinning: candidates from a homogeneous
+                // Poisson at the envelope (peak) rate, accepted with
+                // probability rate(t)/peak. Exact for any bounded
+                // intensity; rejected candidates only advance the clock.
+                let peak = curve.peak_qps();
+                loop {
+                    self.clock += self.rng.exp(peak);
+                    let accept_p = curve.rate_at(self.clock) / peak;
+                    if self.rng.bool(accept_p) {
+                        return self.clock;
+                    }
+                }
+            }
+            ArrivalProcess::Mmpp { base_qps, burst_qps, mean_base_s, mean_burst_s } => {
+                let (base_qps, burst_qps) = (*base_qps, *burst_qps);
+                let (mean_base_s, mean_burst_s) = (*mean_base_s, *mean_burst_s);
+                loop {
+                    if self.clock >= self.state_end {
+                        // Sojourn over: flip state, draw the next one.
+                        // (Also the t=0 entry: start in baseline.)
+                        if self.state_end > 0.0 {
+                            self.bursting = !self.bursting;
+                        }
+                        let mean_s =
+                            if self.bursting { mean_burst_s } else { mean_base_s };
+                        self.state_end = self.clock + self.rng.exp(1.0 / mean_s);
+                    }
+                    let rate = if self.bursting { burst_qps } else { base_qps };
+                    let dt_s = if rate > 0.0 { self.rng.exp(rate) } else { f64::INFINITY };
+                    if self.clock + dt_s <= self.state_end {
+                        self.clock += dt_s;
+                        return self.clock;
+                    }
+                    // Candidate falls past the sojourn boundary:
+                    // discard and redraw in the next state — exact by
+                    // the exponential's memorylessness.
+                    self.clock = self.state_end;
+                }
+            }
+        }
+    }
+
+    pub fn next_request(&mut self) -> Request {
+        let arrival = self.next_arrival();
+        let class = if self.rng.bool(self.cfg.batch_frac) {
+            TenantClass::Batch
+        } else {
+            TenantClass::Interactive
+        };
+        let mix = match class {
+            TenantClass::Interactive => &self.cfg.interactive,
+            TenantClass::Batch => &self.cfg.batch,
+        };
+        let prompt_len =
+            (self.rng.lognormal(mix.prompt_mu, mix.prompt_sigma) as usize)
+                .clamp(1, mix.max_prompt);
+        let output_len =
+            (self.rng.lognormal(mix.output_mu, mix.output_sigma) as usize)
+                .clamp(1, mix.max_output);
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, arrival, prompt_len, output_len, class }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+
+    /// Bounded lazy arrival stream (see [`TraceGenerator::stream`]).
+    pub fn stream(self, n: usize) -> std::iter::Take<TrafficGenerator> {
+        <Self as Iterator>::take(self, n)
+    }
+
+    /// Every request arriving before `horizon_s` — the natural bound
+    /// for day-length traces, where the request *count* is a random
+    /// variable but the day is not.
+    pub fn until(mut self, horizon_s: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        loop {
+            let r = self.next_request();
+            if r.arrival >= horizon_s {
+                return out;
+            }
+            out.push(r);
+        }
+    }
+}
+
+impl Iterator for TrafficGenerator {
     type Item = Request;
 
     fn next(&mut self) -> Option<Request> {
@@ -200,5 +531,105 @@ mod tests {
             assert_eq!(ra.output_len, rb.output_len);
             assert_eq!(ra.arrival, rb.arrival);
         }
+    }
+
+    #[test]
+    fn trace_stream_rides_only_the_f64_stream() {
+        // The seeded-trace byte-identity contract behind the
+        // `Rng::range` rewrite: the generator consumes exactly one
+        // exp() and two lognormal() draws per request — all on the
+        // f64 stream — so an integer-path change cannot perturb it.
+        // Replaying those draws on a bare Rng must reproduce the trace
+        // to the bit.
+        let cfg = TraceConfig::chat(5.0);
+        let mut gen = TraceGenerator::new(cfg.clone(), 21);
+        let mut rng = Rng::new(21);
+        let mut clock = 0.0;
+        for _ in 0..200 {
+            let r = gen.next_request();
+            clock += rng.exp(cfg.rate);
+            let p = (rng.lognormal(cfg.prompt_mu, cfg.prompt_sigma) as usize)
+                .clamp(1, cfg.max_prompt);
+            let o = (rng.lognormal(cfg.output_mu, cfg.output_sigma) as usize)
+                .clamp(1, cfg.max_output);
+            assert_eq!(r.arrival.to_bits(), clock.to_bits());
+            assert_eq!(r.prompt_len, p);
+            assert_eq!(r.output_len, o);
+            assert_eq!(r.class, TenantClass::Interactive);
+        }
+    }
+
+    #[test]
+    fn rate_curve_interpolates_and_integrates_exactly() {
+        let c = RateCurve::new(vec![(0.0, 2.0), (10.0, 6.0), (20.0, 2.0)]);
+        assert_eq!(c.rate_at(-5.0), 2.0, "flat before the first knot");
+        assert_eq!(c.rate_at(25.0), 2.0, "flat after the last knot");
+        assert!((c.rate_at(5.0) - 4.0).abs() < 1e-12);
+        assert!((c.rate_at(15.0) - 4.0).abs() < 1e-12);
+        assert_eq!(c.peak_qps(), 6.0);
+        // Trapezoid over the tent: mean rate 4 over 20 s = 80 arrivals.
+        assert!((c.expected_arrivals(0.0, 20.0) - 80.0).abs() < 1e-9);
+        // Partial windows, including the flat extensions.
+        assert!((c.expected_arrivals(-10.0, 0.0) - 20.0).abs() < 1e-9);
+        assert!((c.expected_arrivals(5.0, 15.0) - 50.0).abs() < 1e-9);
+        assert_eq!(c.expected_arrivals(7.0, 7.0), 0.0);
+    }
+
+    #[test]
+    fn diurnal_curve_peaks_twelve_hours_after_trough() {
+        let day = 86_400.0;
+        let c = RateCurve::diurnal(day, 1.0, 9.0);
+        assert!((c.rate_at(day * 4.0 / 24.0) - 1.0).abs() < 1e-9, "trough at 04:00");
+        assert!((c.rate_at(day * 16.0 / 24.0) - 9.0).abs() < 1e-9, "peak at 16:00");
+        assert_eq!(c.peak_qps(), 9.0);
+        // The raised cosine averages to the midpoint over a full day.
+        let mean = c.expected_arrivals(0.0, day) / day;
+        assert!((mean - 5.0).abs() < 0.05, "day mean {mean}");
+    }
+
+    #[test]
+    fn flat_modulated_traffic_matches_poisson_rate() {
+        let cfg = TrafficConfig::chat_on(ArrivalProcess::Modulated(RateCurve::flat(8.0)));
+        let reqs = TrafficGenerator::new(cfg, 3).take(4000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "arrivals must be monotone");
+        }
+        let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
+        assert!((rate - 8.0).abs() < 0.8, "rate {rate}");
+    }
+
+    #[test]
+    fn traffic_generator_deterministic_by_seed() {
+        let cfg = || {
+            TrafficConfig::multi_tenant(
+                ArrivalProcess::Mmpp {
+                    base_qps: 2.0,
+                    burst_qps: 20.0,
+                    mean_base_s: 30.0,
+                    mean_burst_s: 5.0,
+                },
+                0.3,
+            )
+        };
+        let a = TrafficGenerator::new(cfg(), 17).take(300);
+        let b = TrafficGenerator::new(cfg(), 17).take(300);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.arrival.to_bits(), rb.arrival.to_bits());
+            assert_eq!(ra.prompt_len, rb.prompt_len);
+            assert_eq!(ra.output_len, rb.output_len);
+            assert_eq!(ra.class, rb.class);
+        }
+        let batch = a.iter().filter(|r| r.class == TenantClass::Batch).count();
+        assert!(batch > 0 && batch < a.len(), "both classes present: {batch}");
+    }
+
+    #[test]
+    fn until_bounds_by_horizon_not_count() {
+        let cfg = TrafficConfig::chat_on(ArrivalProcess::Modulated(RateCurve::flat(5.0)));
+        let reqs = TrafficGenerator::new(cfg, 9).until(50.0);
+        assert!(!reqs.is_empty());
+        assert!(reqs.iter().all(|r| r.arrival < 50.0));
+        let n = reqs.len() as f64;
+        assert!((n - 250.0).abs() < 75.0, "expected ~250 arrivals, got {n}");
     }
 }

@@ -15,7 +15,7 @@ use fp8_tco::coordinator::router::{EngineRating, RoutePolicy, Router};
 use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::workload::llama::by_name;
-use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
+use fp8_tco::workload::trace::{Request, TenantClass, TraceConfig, TraceGenerator};
 
 fn engine(total_blocks: usize) -> Engine<SimBackend> {
     let kv = KvCacheConfig { block_tokens: 16, total_blocks };
@@ -75,8 +75,20 @@ fn late_arrival_ttft_measured_from_own_arrival_in_cluster() {
     // report a prefill-scale TTFT, not one warped by the shared clock.
     let mut c = cluster(2, 50_000, RoutePolicy::RoundRobin);
     let reqs = vec![
-        Request { id: 0, arrival: 0.0, prompt_len: 128, output_len: 16 },
-        Request { id: 1, arrival: 10.0, prompt_len: 128, output_len: 16 },
+        Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 128,
+            output_len: 16,
+            class: TenantClass::Interactive,
+        },
+        Request {
+            id: 1,
+            arrival: 10.0,
+            prompt_len: 128,
+            output_len: 16,
+            class: TenantClass::Interactive,
+        },
     ];
     assert!(c.run(reqs));
     let m = c.merged_metrics();
@@ -139,6 +151,7 @@ fn tokens_conserved_under_cluster_memory_pressure() {
             arrival: i as f64 * 0.01,
             prompt_len: 32,
             output_len: 40,
+            class: TenantClass::Interactive,
         })
         .collect();
     let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
@@ -228,6 +241,7 @@ fn sharded_engines_conserve_tokens_under_memory_pressure() {
             arrival: i as f64 * 0.01,
             prompt_len: 32,
             output_len: 40,
+            class: TenantClass::Interactive,
         })
         .collect();
     let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();

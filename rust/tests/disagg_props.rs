@@ -31,7 +31,7 @@ use fp8_tco::hwsim::interconnect::KvLink;
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::tco::{assumed_server_price_usd, InfraModel, RackConfig};
 use fp8_tco::workload::llama::by_name;
-use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
+use fp8_tco::workload::trace::{Request, TenantClass, TraceConfig, TraceGenerator};
 
 fn engine(dev: Device, total_blocks: usize) -> Engine<SimBackend> {
     let kv = KvCacheConfig { block_tokens: 16, total_blocks };
@@ -79,6 +79,7 @@ fn infinite_bandwidth_disagg_matches_colocated_request_timeline() {
             arrival: i as f64 * 1000.0,
             prompt_len: 200 + 37 * i as usize,
             output_len: 24,
+            class: TenantClass::Interactive,
         })
         .collect();
     let mut colo = Cluster::new(router(vec![engine(Device::H100, 50_000)]));
@@ -213,6 +214,7 @@ fn tokens_conserved_under_decode_pool_memory_pressure() {
             arrival: i as f64 * 0.01,
             prompt_len: 32,
             output_len: 40,
+            class: TenantClass::Interactive,
         })
         .collect();
     let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
@@ -373,6 +375,7 @@ fn accepted_migrations_never_preempt_within_first_decode_step() {
             arrival: i as f64 * 0.002,
             prompt_len: 48 + (i as usize % 3) * 40,
             output_len: 2,
+            class: TenantClass::Interactive,
         })
         .collect();
     assert!(c.run(reqs));
@@ -411,6 +414,7 @@ fn bounced_migrations_complete_colocated_with_conservation() {
             arrival: i as f64 * 0.05,
             prompt_len: 64,
             output_len: 16,
+            class: TenantClass::Interactive,
         })
         .collect();
     let expected: u64 = reqs.iter().map(|r| r.output_len as u64).sum();
@@ -566,4 +570,58 @@ fn chunked_schedule_pinned_against_python_mirror() {
         let single = link.transfer_time_s(ctx as f64 * m.kv_bytes_per_token(2.0));
         assert!(sched.first_time_s() < single && sched.total_time_s() >= single);
     }
+}
+
+#[test]
+fn admission_probes_decode_pool_at_delivery_not_harvest() {
+    // One 8-block decode engine: requests A (id 0) and B (id 1) each
+    // need ~7 blocks of KV, so they can never coexist. B's prefill
+    // finishes while A still occupies the pool -- probing at harvest
+    // (transfer start) would bounce B -- but A drains during B's slow
+    // transfer, so the delivery-time probe admits it.
+    let model = by_name("llama-8b").unwrap();
+    let k = model.kv_bytes_per_token(2.0);
+    // Link sized so a 101-token context streams for ~150 ms.
+    let link = KvLink { bw: 101.0 * k / 0.15, lat_s: 0.0 };
+    let mut c = DisaggCluster::new(
+        router(vec![engine(Device::H100, 10_000)]),
+        router(vec![engine(Device::Gaudi2, 8)]),
+        link,
+        k,
+    )
+    .with_streaming(1, true);
+    let reqs = vec![
+        Request {
+            id: 0,
+            arrival: 0.0,
+            prompt_len: 100,
+            output_len: 16,
+            class: TenantClass::Interactive,
+        },
+        Request {
+            id: 1,
+            arrival: 0.158,
+            prompt_len: 100,
+            output_len: 16,
+            class: TenantClass::Interactive,
+        },
+    ];
+    assert!(c.run(reqs));
+    let m = c.merged_metrics();
+    assert_eq!(m.requests_done, 2, "no request lost");
+    assert_eq!(m.migrations, 2, "delivery-time probe must admit both");
+    assert_eq!(m.bounces, 0, "harvest-time probing would have bounced B");
+    // The race the probe placement decides, reconstructed from the
+    // run's own timestamps: B's transfer started while A held the
+    // pool, and delivered only after A finished and released.
+    let a_deliver = c.decode.engines[0].sequence(0).unwrap().first_token_at.unwrap();
+    let a_done = c.decode.engines[0].sequence(0).unwrap().finished_at.unwrap();
+    let b_harvest = c.prefill.engines[0].sequence(1).unwrap().finished_at.unwrap();
+    let b_deliver = c.decode.engines[0].sequence(1).unwrap().first_token_at.unwrap();
+    assert!(
+        a_deliver < b_harvest && b_harvest < a_done,
+        "scenario must start B's transfer while A occupies the pool \
+         (a_deliver {a_deliver}, b_harvest {b_harvest}, a_done {a_done})"
+    );
+    assert!(b_deliver > a_done, "B lands after A's release ({b_deliver} vs {a_done})");
 }

@@ -15,7 +15,17 @@ use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, SimBackend};
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::util::rng::Rng;
 use fp8_tco::workload::llama::by_name;
-use fp8_tco::workload::trace::Request;
+use fp8_tco::workload::trace::{Request, TenantClass};
+
+fn req(id: u64, arrival: f64, p: usize, o: usize) -> Request {
+    Request {
+        id,
+        arrival,
+        prompt_len: p,
+        output_len: o,
+        class: TenantClass::Interactive,
+    }
+}
 
 fn engine(total_blocks: usize, max_batch: usize) -> Engine<SimBackend> {
     let kv = KvCacheConfig { block_tokens: 16, total_blocks };
@@ -49,7 +59,7 @@ fn prop_all_requests_finish_and_blocks_balance() {
                 break;
             }
             expected_tokens += o as u64;
-            e.submit(&Request { id: i, arrival: 0.0, prompt_len: p, output_len: o });
+            e.submit(&req(i, 0.0, p, o));
         }
         if !feasible {
             continue;
@@ -74,12 +84,7 @@ fn prop_clock_monotone_and_latencies_ordered() {
         let mut t = 0.0;
         for i in 0..n as u64 {
             t += rng.f64() * 0.05;
-            e.submit(&Request {
-                id: i,
-                arrival: t,
-                prompt_len: rng.usize(1, 256),
-                output_len: rng.usize(1, 64),
-            });
+            e.submit(&req(i, t, rng.usize(1, 256), rng.usize(1, 64)));
         }
         let mut last_clock = e.clock();
         for _ in 0..1_000_000 {
@@ -112,7 +117,7 @@ fn prop_heavy_pressure_still_drains_with_preemptions() {
             let max_o = blocks * 16 - p - 16;
             let o = rng.usize(1, max_o.min(150).max(2));
             expected += o as u64;
-            e.submit(&Request { id: i, arrival: 0.0, prompt_len: p, output_len: o });
+            e.submit(&req(i, 0.0, p, o));
         }
         assert!(e.run_to_completion(3_000_000), "seed {seed}");
         assert_eq!(e.metrics.tokens_out, expected, "seed {seed}");
@@ -127,7 +132,7 @@ fn prop_throughput_monotone_in_batch_cap() {
     let mk = |max_batch: usize| {
         let mut e = engine(100_000, max_batch);
         for i in 0..64u64 {
-            e.submit(&Request { id: i, arrival: 0.0, prompt_len: 128, output_len: 64 });
+            e.submit(&req(i, 0.0, 128, 64));
         }
         assert!(e.run_to_completion(1_000_000));
         e.clock()

@@ -32,7 +32,17 @@ use fp8_tco::coordinator::{
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::util::par::par_map;
 use fp8_tco::workload::llama::by_name;
-use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
+use fp8_tco::workload::trace::{Request, TenantClass, TraceConfig, TraceGenerator};
+
+fn press(id: u64, arrival: f64, p: usize, o: usize) -> Request {
+    Request {
+        id,
+        arrival,
+        prompt_len: p,
+        output_len: o,
+        class: TenantClass::Interactive,
+    }
+}
 
 /// Everything a simulation outcome is made of, with floats as bits —
 /// two runs compare equal iff they were bit-identical. Cache counters
@@ -250,9 +260,9 @@ fn release_fires_for_finished_sequences_no_backend_leak() {
     // the end, finished ones included (not just evicted ones).
     let mut e = audit_engine(8);
     for i in 0..3u64 {
-        e.submit(&Request { id: i, arrival: 0.0, prompt_len: 32, output_len: 40 });
+        e.submit(&press(i, 0.0, 32, 40));
     }
-    e.submit(&Request { id: 3, arrival: 0.5, prompt_len: 16, output_len: 4 });
+    e.submit(&press(3, 0.5, 16, 4));
     assert!(e.run_to_completion(100_000));
     assert!(e.preemptions() > 0, "pressure must preempt");
     assert_eq!(e.metrics.requests_done, 4);
@@ -275,7 +285,7 @@ fn release_fires_for_handoff_legs_and_bounces() {
     // (the KV blocks stay for the migration, backend state must not);
     // a bounced leg decodes again and releases again at its real end.
     let mut e = audit_engine(1000);
-    e.submit_handoff(&Request { id: 0, arrival: 0.0, prompt_len: 100, output_len: 40 });
+    e.submit_handoff(&press(0, 0.0, 100, 40));
     assert!(e.run_to_completion(1000));
     assert_eq!(e.take_handoffs(), vec![0]);
     assert!(e.backend.live.is_empty(), "handoff leg must release at prefill finish");

@@ -12,10 +12,10 @@
 
 use fp8_tco::coordinator::{Engine, EngineConfig, KvCacheConfig, PjrtBackend};
 use fp8_tco::runtime::ArtifactDir;
-use fp8_tco::workload::trace::Request;
+use fp8_tco::workload::trace::{Request, TenantClass};
 
 fn req(id: u64, p: usize, o: usize) -> Request {
-    Request { id, arrival: 0.0, prompt_len: p, output_len: o }
+    Request { id, arrival: 0.0, prompt_len: p, output_len: o, class: TenantClass::Interactive }
 }
 
 fn engine_for(backend: PjrtBackend) -> Engine<PjrtBackend> {

@@ -1,0 +1,141 @@
+//! Property tests over the non-stationary traffic layer
+//! (`workload::trace`): realized arrival counts must conserve the
+//! [`RateCurve`] integral window by window (thinning produces the
+//! right *time structure*, not just the right total), MMPP must hit
+//! its sojourn-weighted mean rate while staying overdispersed, and
+//! the multi-tenant mix must stamp classes at the configured fraction
+//! with each class's own length distribution.
+//!
+//! All tolerances are sigma-scaled for the fixed seeds used here —
+//! generous enough to be draw-stable, tight enough that a broken
+//! thinning envelope or a dropped state transition fails loudly.
+
+use fp8_tco::workload::trace::{
+    ArrivalProcess, RateCurve, TenantClass, TrafficConfig, TrafficGenerator,
+};
+
+#[test]
+fn modulated_counts_conserve_the_curve_integral() {
+    let day_s = 3600.0;
+    let curve = RateCurve::diurnal(day_s, 2.0, 12.0);
+    let cfg = TrafficConfig::chat_on(ArrivalProcess::Modulated(curve.clone()));
+    let reqs = TrafficGenerator::new(cfg, 41).until(day_s);
+    // Whole-day conservation: the realized count sits within a few
+    // sigma of the exact integral (Poisson sigma = sqrt(mean)).
+    let expected = curve.expected_arrivals(0.0, day_s);
+    let got = reqs.len() as f64;
+    assert!(
+        (got - expected).abs() <= 5.0 * expected.sqrt(),
+        "day count {got} vs integral {expected}"
+    );
+    // Window by window: each 10-minute bucket tracks its own slice of
+    // the integral.
+    let mut bucket_counts = [0.0f64; 6];
+    for r in &reqs {
+        bucket_counts[((r.arrival / day_s * 6.0) as usize).min(5)] += 1.0;
+    }
+    for (k, &n) in bucket_counts.iter().enumerate() {
+        let (t0, t1) = (day_s * k as f64 / 6.0, day_s * (k + 1) as f64 / 6.0);
+        let e = curve.expected_arrivals(t0, t1);
+        assert!(
+            (n - e).abs() <= 5.0 * e.sqrt() + 5.0,
+            "bucket {k}: {n} arrivals vs integral {e}"
+        );
+    }
+    // And the shape is actually diurnal: the bucket holding the peak
+    // (16/24 of the day) out-draws the one holding the trough (4/24).
+    assert!(
+        bucket_counts[4] > 2.0 * bucket_counts[0],
+        "peak bucket {} vs trough bucket {}",
+        bucket_counts[4],
+        bucket_counts[0]
+    );
+}
+
+#[test]
+fn mmpp_hits_its_sojourn_weighted_mean_and_stays_bursty() {
+    let process = ArrivalProcess::Mmpp {
+        base_qps: 2.0,
+        burst_qps: 20.0,
+        mean_base_s: 30.0,
+        mean_burst_s: 5.0,
+    };
+    let mean = process.mean_qps();
+    assert!((mean - 160.0 / 35.0).abs() < 1e-12, "sojourn-weighted mean: {mean}");
+    let horizon_s = 20_000.0;
+    let reqs = TrafficGenerator::new(TrafficConfig::chat_on(process), 7).until(horizon_s);
+    let rate = reqs.len() as f64 / horizon_s;
+    assert!(
+        (rate / mean - 1.0).abs() < 0.15,
+        "long-run rate {rate} vs sojourn-weighted mean {mean}"
+    );
+    // Overdispersion: the index of dispersion of bucket counts sits
+    // far above Poisson's 1 — the reason MMPP is in the model at all.
+    // (These sojourns mix ~40/bucket base with ~400/bucket burst, so
+    // the index lands in the hundreds; 1.5 is a loose floor.)
+    let bucket_s = 20.0;
+    let n_buckets = (horizon_s / bucket_s) as usize;
+    let mut counts = vec![0.0f64; n_buckets];
+    for r in &reqs {
+        counts[((r.arrival / bucket_s) as usize).min(n_buckets - 1)] += 1.0;
+    }
+    let m = counts.iter().sum::<f64>() / n_buckets as f64;
+    let var = counts.iter().map(|c| (c - m) * (c - m)).sum::<f64>() / n_buckets as f64;
+    assert!(var / m > 1.5, "dispersion index {} — not bursty", var / m);
+}
+
+#[test]
+fn multi_tenant_mix_stamps_classes_and_length_mixes() {
+    let day_s = 2_000.0;
+    let flat = RateCurve::new(vec![(0.0, 5.0), (day_s, 5.0)]);
+    let cfg = TrafficConfig::multi_tenant(ArrivalProcess::Modulated(flat), 0.3);
+    let reqs = TrafficGenerator::new(cfg, 11).until(day_s);
+    assert!(reqs.len() > 8_000, "need a real sample: {}", reqs.len());
+    let batch: Vec<_> = reqs.iter().filter(|r| r.class == TenantClass::Batch).collect();
+    let interactive: Vec<_> =
+        reqs.iter().filter(|r| r.class == TenantClass::Interactive).collect();
+    assert_eq!(batch.len() + interactive.len(), reqs.len());
+    let frac = batch.len() as f64 / reqs.len() as f64;
+    assert!((frac - 0.3).abs() < 0.03, "batch fraction {frac} vs configured 0.3");
+    // Each class carries its own length mix: summarize-shaped batch
+    // prompts dwarf chat-shaped interactive ones (median ~2440 vs
+    // ~245), and the output skew points the other way.
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let b_prompt = mean(&batch.iter().map(|r| r.prompt_len as f64).collect::<Vec<_>>());
+    let i_prompt =
+        mean(&interactive.iter().map(|r| r.prompt_len as f64).collect::<Vec<_>>());
+    assert!(
+        b_prompt > 4.0 * i_prompt,
+        "batch prompts {b_prompt} not summarize-shaped vs interactive {i_prompt}"
+    );
+    let b_out = mean(&batch.iter().map(|r| r.output_len as f64).collect::<Vec<_>>());
+    let i_out =
+        mean(&interactive.iter().map(|r| r.output_len as f64).collect::<Vec<_>>());
+    assert!(
+        i_out > 1.5 * b_out,
+        "interactive outputs {i_out} not chat-shaped vs batch {b_out}"
+    );
+}
+
+#[test]
+fn until_is_sorted_with_contiguous_ids() {
+    let cfg = TrafficConfig::multi_tenant(
+        ArrivalProcess::Mmpp {
+            base_qps: 3.0,
+            burst_qps: 15.0,
+            mean_base_s: 20.0,
+            mean_burst_s: 4.0,
+        },
+        0.5,
+    );
+    let horizon_s = 500.0;
+    let reqs = TrafficGenerator::new(cfg, 3).until(horizon_s);
+    assert!(!reqs.is_empty());
+    for (k, r) in reqs.iter().enumerate() {
+        assert_eq!(r.id, k as u64, "ids are arrival-ordered");
+        assert!(r.arrival < horizon_s, "horizon bounds every arrival");
+        if k > 0 {
+            assert!(r.arrival >= reqs[k - 1].arrival, "timestamps sorted");
+        }
+    }
+}
