@@ -7,7 +7,10 @@
 //! scaling contract — per-step cost flat in the number of *finished*
 //! sequences resident in the harvest archive (<= 2x at 10k finished vs
 //! 100), with the memoized step-cost cache returning bit-identical
-//! breakdowns. The scaling section writes `BENCH_perf_scaling.json`
+//! breakdowns. The event-engine section (DESIGN.md §13) races the
+//! fast-forward path against the pure stepper on a decode-heavy
+//! 10k-request trace — bit-identical outcomes, >= 5x wall-clock win
+//! asserted. The scaling section writes `BENCH_perf_scaling.json`
 //! (directory: `BENCH_JSON_DIR`, default `.`) so CI can archive the
 //! perf trajectory alongside the figure benches.
 
@@ -238,6 +241,76 @@ fn main() {
         (wall, engine.metrics.steps, engine.clock(), engine.metrics.step_cache_hit_rate())
     };
 
+    // ---- event engine vs stepper: decode-heavy 10k-request trace ---
+    // The event core's headline win (DESIGN.md §13): on decode-
+    // dominated traffic the fast-forward path collapses per-step
+    // scheduling into an O(1) analytic charge, so wall-clock drops by
+    // the window length. Outputs are pinned to 1k tokens so ~64 long
+    // decodes stay in flight and static windows span the gaps between
+    // finishes. Both runs must stay bit-identical (the differential
+    // suite's contract, re-checked here on the big trace) and the
+    // event path must clear a 5x end-to-end wall-clock win.
+    let (ev_wall_s, st_wall_s, ev_speedup) = {
+        let decode_heavy = || -> Vec<Request> {
+            let mut gen = TraceGenerator::new(TraceConfig::chat(50.0), 11);
+            gen.take(10_000)
+                .into_iter()
+                .map(|mut r| {
+                    r.output_len = 1_024;
+                    r
+                })
+                .collect()
+        };
+        let run = |event_mode: bool| {
+            let backend = SimBackend::new(
+                m,
+                StepConfig::new(Device::Gaudi2, PrecisionMode::fp8_static()),
+            );
+            let mut engine = Engine::new(
+                EngineConfig::new(KvCacheConfig {
+                    block_tokens: 16,
+                    total_blocks: 1_000_000,
+                }),
+                backend,
+            );
+            engine.set_event_mode(event_mode);
+            for r in decode_heavy() {
+                engine.submit(&r);
+            }
+            let t0 = Instant::now();
+            let drained = engine.run_to_completion(50_000_000);
+            let wall = t0.elapsed().as_secs_f64();
+            assert!(drained, "decode-heavy 10k trace must drain");
+            assert_eq!(engine.metrics.requests_done, 10_000);
+            let fp = (
+                engine.clock().to_bits(),
+                engine.metrics.steps,
+                engine.metrics.tokens_out,
+                engine.metrics.energy_j.to_bits(),
+                engine.metrics.gated_s.to_bits(),
+                engine.metrics.ttft.pct(95.0).to_bits(),
+                engine.metrics.e2e_latency.pct(95.0).to_bits(),
+            );
+            (wall, fp)
+        };
+        let (ev_wall, ev_fp) = run(true);
+        let (st_wall, st_fp) = run(false);
+        assert_eq!(ev_fp, st_fp, "event engine must be bit-identical to the stepper");
+        let speedup = st_wall / ev_wall;
+        println!(
+            "{:<44} {:>12.3} ms event vs {:.3} ms stepper ({speedup:.1}x)",
+            "engine e2e event vs stepper (10k, 1k-out)",
+            ev_wall * 1e3,
+            st_wall * 1e3,
+        );
+        assert!(
+            speedup >= 5.0,
+            "event engine must beat the stepper 5x on decode-heavy traffic: \
+             {ev_wall:.3}s event vs {st_wall:.3}s stepper ({speedup:.2}x)"
+        );
+        (ev_wall, st_wall, speedup)
+    };
+
     // FP8 scalar quantization.
     let mut rng = Rng::new(1);
     let xs: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
@@ -274,6 +347,9 @@ fn main() {
     root.insert("e2e_steps".into(), Json::Num(e2e_steps as f64));
     root.insert("e2e_virtual_s".into(), Json::Num(e2e_virtual_s));
     root.insert("e2e_cache_hit_rate".into(), Json::Num(cache_hit_rate));
+    root.insert("e2e_event_wall_s".into(), Json::Num(ev_wall_s));
+    root.insert("e2e_stepper_wall_s".into(), Json::Num(st_wall_s));
+    root.insert("e2e_event_speedup".into(), Json::Num(ev_speedup));
     root.insert("pct_first_query_us".into(), Json::Num(pct_first_us));
     root.insert("pct_cached_query_us".into(), Json::Num(pct_query_us));
     match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {

@@ -116,6 +116,25 @@ pub trait ExecutionBackend {
     /// `tests/hotpath_equiv.rs`).
     fn release(&mut self, _id: SeqId) {}
 
+    /// Cost of one decode step over a batch whose per-sequence
+    /// contexts the caller has already reduced to their sum. Backends
+    /// whose [`decode`](ExecutionBackend::decode) cost is a pure
+    /// function of `(batch, total_context_tokens)` implement this so
+    /// the engine's event-driven fast-forward (DESIGN.md §13) can
+    /// price virtual steps in O(1) without materializing per-sequence
+    /// spec slices. Must return exactly what `decode` would for any
+    /// batch with this count and token sum — bit-identical, same
+    /// cache-counter effects. The `None` default keeps backends that
+    /// depend on per-sequence identity (real compute, audit wrappers)
+    /// on the step-by-step path.
+    fn decode_uniform(
+        &mut self,
+        _batch: usize,
+        _total_context_tokens: usize,
+    ) -> Option<StepResult> {
+        None
+    }
+
     /// Cumulative step-cost cache counters, if this backend memoizes
     /// (None for backends that execute real compute).
     fn cache_stats(&self) -> Option<CacheStats> {
@@ -215,6 +234,35 @@ impl ExecutionBackend for SimBackend {
         StepResult { seconds: bd.seconds, watts: bd.watts, flops: bd.flops }
     }
 
+    /// The sim decode model is a pure function of
+    /// `(batch, avg context)` — exactly the key [`decode`] reduces its
+    /// spec slice to — so the uniform entry point routes through the
+    /// *same* cache with the *same* key derivation. A fast-forwarded
+    /// step therefore produces the same bits and the same hit/miss
+    /// sequence a stepped one would.
+    fn decode_uniform(
+        &mut self,
+        batch: usize,
+        total_context_tokens: usize,
+    ) -> Option<StepResult> {
+        if batch == 0 {
+            return Some(StepResult::default());
+        }
+        let avg = total_context_tokens / batch;
+        let key = (batch, avg.max(1));
+        let bd = match self.cache.as_mut() {
+            Some(c) => StepCostCache::lookup(
+                &mut c.decode,
+                &mut c.hits,
+                &mut c.misses,
+                key,
+                || perfmodel::decode_step(self.model, &self.cfg, key.0, key.1),
+            ),
+            None => perfmodel::decode_step(self.model, &self.cfg, key.0, key.1),
+        };
+        Some(StepResult { seconds: bd.seconds, watts: bd.watts, flops: bd.flops })
+    }
+
     fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
     }
@@ -310,6 +358,34 @@ mod tests {
         assert_eq!(cs.hits, 2, "one decode hit + one prefill hit");
         assert_eq!(cs.misses, 2, "one decode miss + one prefill miss");
         assert!((cs.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_uniform_matches_decode_bits_and_counters() {
+        // Mixed per-sequence contexts whose mean is not one of them:
+        // the uniform path must reduce to the same (batch, avg) key.
+        let specs: Vec<(SeqId, usize)> = vec![(0, 1000), (1, 1048), (2, 1100)];
+        let total: usize = specs.iter().map(|&(_, l)| l).sum();
+        let mut via_specs = backend();
+        let mut via_uniform = backend();
+        let a = via_specs.decode(&specs);
+        let b = via_uniform.decode_uniform(specs.len(), total).expect("sim supports uniform");
+        for (x, y) in [(a.seconds, b.seconds), (a.watts, b.watts), (a.flops, b.flops)] {
+            assert_eq!(x.to_bits(), y.to_bits(), "uniform path must be bit-identical");
+        }
+        // Same cache-counter effects: a uniform call after the spec
+        // call hits the entry the spec call stored, and vice versa.
+        let hit = via_specs.decode_uniform(specs.len(), total).unwrap();
+        assert_eq!(hit.seconds.to_bits(), a.seconds.to_bits());
+        assert_eq!(via_specs.cache_stats().unwrap(), CacheStats { hits: 1, misses: 1 });
+        let hit2 = via_uniform.decode(&specs);
+        assert_eq!(hit2.seconds.to_bits(), b.seconds.to_bits());
+        assert_eq!(via_uniform.cache_stats().unwrap(), CacheStats { hits: 1, misses: 1 });
+        // Uncached backends still answer (recompute path).
+        let mut plain = backend();
+        plain.set_cache(false);
+        let c = plain.decode_uniform(specs.len(), total).unwrap();
+        assert_eq!(c.seconds.to_bits(), a.seconds.to_bits());
     }
 
     #[test]

@@ -76,6 +76,22 @@ enum Lane {
     Batch,
 }
 
+/// What the next admission passes will do, as seen from `now` — the
+/// static-composition oracle behind the engine's event-driven
+/// fast-forward (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionOutlook {
+    /// A `plan_step` at `now` would (or may) admit work: the batch
+    /// composition is about to change, so fast-forward must not start.
+    Admit,
+    /// No `plan_step` at any instant strictly before the returned time
+    /// can admit anything, provided no finish, preemption, release or
+    /// submission happens in between (the caller bounds the window by
+    /// those events separately). `f64::INFINITY` means admission is
+    /// impossible until one of those events.
+    StaticUntil(f64),
+}
+
 #[derive(Debug)]
 pub struct Batcher {
     pub cfg: BatcherConfig,
@@ -137,19 +153,32 @@ impl Batcher {
         self.queue.len() + self.batch_queue.len()
     }
 
-    /// Arrival time of the earliest queued head across both lanes —
-    /// the engine's idle-advance target when nothing is runnable at
-    /// `now` (either lane's head may become admissible first).
+    /// Number of sequences currently in the decode set.
+    pub fn decoding_len(&self) -> usize {
+        self.decoding.len()
+    }
+
+    /// The decode set in ascending-id order (the order `plan_step`
+    /// snapshots it in).
+    pub fn decoding_ids(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.decoding.iter().copied()
+    }
+
+    /// Ready time of the earliest queued head across both lanes — the
+    /// engine's idle-advance target when nothing is runnable at `now`
+    /// (either lane's head may become admissible first). Ready time is
+    /// arrival for fresh requests and last-chunk KV landing for
+    /// migrated decode legs ([`Sequence::ready_at_s`]).
     pub fn head_arrival(
         &self,
         seqs: &std::collections::HashMap<SeqId, Sequence>,
     ) -> Option<f64> {
-        let i = self.queue.iter().find_map(|id| seqs.get(id)).map(|s| s.arrival);
+        let i = self.queue.iter().find_map(|id| seqs.get(id)).map(|s| s.ready_at_s);
         let b = self
             .batch_queue
             .iter()
             .find_map(|id| seqs.get(id))
-            .map(|s| s.arrival);
+            .map(|s| s.ready_at_s);
         match (i, b) {
             (Some(x), Some(y)) => Some(x.min(y)),
             (x, None) => x,
@@ -158,14 +187,14 @@ impl Batcher {
     }
 
     /// Drop ids with no live sequence from the lane's front, then
-    /// return the head's arrival time (None if the lane is empty).
+    /// return the head's ready time (None if the lane is empty).
     fn prune_head(
         lane: &mut VecDeque<SeqId>,
         seqs: &std::collections::HashMap<SeqId, Sequence>,
     ) -> Option<f64> {
         while let Some(id) = lane.front() {
             match seqs.get(id) {
-                Some(s) => return Some(s.arrival),
+                Some(s) => return Some(s.ready_at_s),
                 None => {
                     lane.pop_front();
                 }
@@ -288,6 +317,98 @@ impl Batcher {
             lane_queue.pop_front();
         }
         adm
+    }
+
+    /// Replicate the *first* iteration of `plan_step`'s admission loop
+    /// at `now` without mutating anything (beyond pruning dead lane
+    /// heads, which `plan_step` would also do), and report either that
+    /// it would admit or the earliest future instant at which any
+    /// admission decision could change.
+    ///
+    /// Why the first iteration suffices: if the first candidate is not
+    /// admitted, `plan_step` breaks the whole pass (head-of-line
+    /// fairness), so "first candidate blocked" == "nothing admitted".
+    /// The per-step token budget can never block the first candidate —
+    /// the oversized-alone path raises the budget for a lone oversized
+    /// head — so only visibility (ready time), lane choice (batch
+    /// aging flip) and KV memory gate it. Memory verdicts are stable
+    /// across a fast-forward window because free blocks only shrink
+    /// while decodes grow (releases come from finishes/preemptions,
+    /// which the caller treats as window boundaries).
+    pub fn admission_outlook(
+        &mut self,
+        seqs: &std::collections::HashMap<SeqId, Sequence>,
+        alloc: &BlockAllocator,
+        now: f64,
+    ) -> AdmissionOutlook {
+        // First loop-condition check: with a full decode batch (or a
+        // zero prefill quota) the admission loop body never runs, no
+        // matter what is queued — only a finish can change that.
+        if self.cfg.max_prefills_per_step == 0 || self.decoding.len() >= self.cfg.max_batch
+        {
+            return AdmissionOutlook::StaticUntil(f64::INFINITY);
+        }
+        let i = Self::prune_head(&mut self.queue, seqs);
+        let b = Self::prune_head(&mut self.batch_queue, seqs);
+        if i.is_none() && b.is_none() {
+            return AdmissionOutlook::StaticUntil(f64::INFINITY);
+        }
+        // The instants where `choose_lane`'s outcome can change: a head
+        // becoming visible, or the batch head crossing the aging bound.
+        let static_until = |now: f64| {
+            let mut t = f64::INFINITY;
+            for cand in [i, b, b.map(|ba| ba + self.cfg.batch_aging_s)]
+                .into_iter()
+                .flatten()
+            {
+                if cand > now {
+                    t = t.min(cand);
+                }
+            }
+            AdmissionOutlook::StaticUntil(t)
+        };
+        let lane = {
+            let i_vis = i.filter(|&a| a <= now);
+            let b_vis = b.filter(|&a| a <= now);
+            if b_vis.is_some_and(|ba| now - ba >= self.cfg.batch_aging_s) {
+                Some(Lane::Batch)
+            } else if i_vis.is_some() {
+                Some(Lane::Interactive)
+            } else if b_vis.is_some() {
+                Some(Lane::Batch)
+            } else {
+                None
+            }
+        };
+        let Some(lane) = lane else {
+            return static_until(now); // nothing visible yet
+        };
+        let lane_queue = match lane {
+            Lane::Interactive => &self.queue,
+            Lane::Batch => &self.batch_queue,
+        };
+        let seq = lane_queue.front().and_then(|id| seqs.get(id));
+        let Some(seq) = seq else {
+            // prune_head just certified a live head; unreachable, but
+            // degrade to "no fast-forward" rather than panic.
+            debug_assert!(false, "pruned lane lost its head");
+            return AdmissionOutlook::Admit;
+        };
+        let reserve_tokens = if self.cfg.reserve_full_context {
+            seq.max_context()
+        } else if seq.role == SeqRole::DecodeLeg {
+            migration_footprint_tokens(seq.prompt_len)
+        } else {
+            seq.prompt_len
+        };
+        if alloc.can_allocate(alloc.config().blocks_for_tokens(reserve_tokens)) {
+            AdmissionOutlook::Admit
+        } else {
+            // Memory-blocked, and it stays blocked within the window;
+            // only a lane flip could surface a different (smaller)
+            // candidate before the next finish.
+            static_until(now)
+        }
     }
 
     /// Debug-build cross-check: the incremental decode index must be
@@ -466,6 +587,7 @@ mod tests {
             id: 0,
             arrival: 0.0,
             at: 1.0,
+            kv_ready_s: 1.0,
             context_len: 40,
             remaining_out: 9,
             bytes: 40.0 * 131072.0,
@@ -545,5 +667,77 @@ mod tests {
         assert_eq!(adm.prefills, vec![1], "arrived batch head admitted");
         // Idle-advance target is the earliest head across lanes.
         assert_eq!(b.head_arrival(&seqs), Some(5.0));
+    }
+
+    #[test]
+    fn outlook_agrees_with_plan_step() {
+        // The outlook's verdict must predict what plan_step does at
+        // the same instant, and its StaticUntil horizon must name the
+        // instant the verdict changes.
+        let (mut seqs, mut alloc) = setup(1000);
+        let mut b = Batcher::new(BatcherConfig::default());
+        assert_eq!(
+            b.admission_outlook(&seqs, &alloc, 0.0),
+            AdmissionOutlook::StaticUntil(f64::INFINITY),
+            "empty lanes: nothing can ever be admitted without a submit"
+        );
+        add_classed(&mut seqs, &mut b, 0, 5.0, 32, 4, TenantClass::Interactive);
+        assert_eq!(
+            b.admission_outlook(&seqs, &alloc, 1.0),
+            AdmissionOutlook::StaticUntil(5.0),
+            "unarrived head: static exactly until its ready time"
+        );
+        assert_eq!(b.admission_outlook(&seqs, &alloc, 5.0), AdmissionOutlook::Admit);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 5.0);
+        assert_eq!(adm.prefills, vec![0]);
+    }
+
+    #[test]
+    fn outlook_full_batch_and_memory_block() {
+        let (mut seqs, mut alloc) = setup(2); // 32 tokens of KV
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, ..Default::default() });
+        add_seq(&mut seqs, &mut b, 0, 40, 4); // needs 3 blocks > 2 free
+        assert_eq!(
+            b.admission_outlook(&seqs, &alloc, 0.0),
+            AdmissionOutlook::StaticUntil(f64::INFINITY),
+            "memory-blocked head with no lane flip ahead"
+        );
+        // Saturated decode batch: the admission loop body cannot run.
+        let (mut seqs2, alloc2) = setup(1000);
+        let mut b2 = Batcher::new(BatcherConfig { max_batch: 2, ..Default::default() });
+        for id in [7u64, 8] {
+            let mut s = Sequence::from_request(&Request {
+                id, arrival: 0.0, prompt_len: 10, output_len: 10,
+                class: TenantClass::Interactive,
+            });
+            s.state = RequestState::Decoding;
+            seqs2.insert(id, s);
+            b2.mark_decoding(id);
+        }
+        add_seq(&mut seqs2, &mut b2, 0, 16, 4);
+        assert_eq!(
+            b2.admission_outlook(&seqs2, &alloc2, 0.0),
+            AdmissionOutlook::StaticUntil(f64::INFINITY),
+            "full decode batch admits nothing until a finish"
+        );
+    }
+
+    #[test]
+    fn outlook_sees_batch_aging_flip() {
+        // Interactive head memory-blocked, batch head small enough to
+        // fit: the outlook's horizon is the aging flip, where the lane
+        // choice (and hence the admission verdict) can change.
+        let (mut seqs, mut alloc) = setup(3); // 48 tokens of KV
+        let mut b = Batcher::new(BatcherConfig { batch_aging_s: 2.0, ..Default::default() });
+        add_classed(&mut seqs, &mut b, 0, 0.0, 60, 4, TenantClass::Interactive); // 4 blocks
+        add_classed(&mut seqs, &mut b, 1, 0.5, 16, 4, TenantClass::Batch); // 1 block
+        assert_eq!(
+            b.admission_outlook(&seqs, &alloc, 1.0),
+            AdmissionOutlook::StaticUntil(2.5),
+            "blocked interactive head: next decision change at batch aging flip"
+        );
+        assert_eq!(b.admission_outlook(&seqs, &alloc, 2.5), AdmissionOutlook::Admit);
+        let adm = b.plan_step(&mut seqs, &mut alloc, 2.5);
+        assert_eq!(adm.prefills, vec![1], "aged batch head fits and goes first");
     }
 }

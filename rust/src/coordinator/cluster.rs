@@ -201,6 +201,61 @@ impl Default for AutoscalerConfig {
     }
 }
 
+/// A scheduled autoscaler event on the shared virtual timeline. The
+/// controller runs off a min-heap of these, interleaved with external
+/// arrivals in global time order: periodic decision `Tick`s (each one
+/// re-arms the next) and provisioning-complete `Ready` events pushed
+/// by scale-up decisions. At equal times `Ready` fires before `Tick`
+/// — a replica whose provisioning window ends exactly on a decision
+/// boundary counts as Active in that decision — and events at an
+/// arrival's instant fire before the arrival is routed.
+#[derive(Debug, Clone, Copy)]
+enum ScaleEvent {
+    /// Provisioning window over: replica flips Starting -> Active.
+    Ready { at: f64, replica: usize },
+    /// Periodic scale decision.
+    Tick { at: f64 },
+}
+
+impl ScaleEvent {
+    fn at(&self) -> f64 {
+        match *self {
+            ScaleEvent::Ready { at, .. } | ScaleEvent::Tick { at } => at,
+        }
+    }
+
+    /// Total-order key: time, then Ready-before-Tick, then replica
+    /// index (full determinism when two Ready events coincide).
+    fn key(&self) -> (f64, u8, usize) {
+        match *self {
+            ScaleEvent::Ready { at, replica } => (at, 0, replica),
+            ScaleEvent::Tick { at } => (at, 1, 0),
+        }
+    }
+}
+
+impl PartialEq for ScaleEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for ScaleEvent {}
+
+impl PartialOrd for ScaleEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ScaleEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        let (ta, ka, ra) = self.key();
+        let (tb, kb, rb) = other.key();
+        ta.total_cmp(&tb).then(ka.cmp(&kb)).then(ra.cmp(&rb))
+    }
+}
+
 /// A replica fleet that power-gates to load: replicas sleep at 0 W
 /// when windowed queue depth runs low and wake — after a provisioning
 /// delay — when it runs high. Pairs with the idle-aware energy ledger:
@@ -209,7 +264,10 @@ impl Default for AutoscalerConfig {
 /// [`InfraModel::cost_per_mtok_diurnal`](crate::tco::InfraModel::cost_per_mtok_diurnal)
 /// prices over a day).
 ///
-/// Mechanics, all on the shared virtual timeline of [`Cluster::run`]:
+/// Mechanics, all on the shared virtual timeline of [`Cluster::run`],
+/// driven by a min-heap of `ScaleEvent`s (decision ticks +
+/// provisioning completions) interleaved with arrivals in global time
+/// order:
 ///
 /// * scale decisions fire at a fixed cadence; each samples mean
 ///   queued-per-active-replica into a short window and compares the
@@ -237,7 +295,9 @@ pub struct AutoscaledCluster<B: ExecutionBackend> {
     pub scale_ups: u64,
     /// Completed sleep transitions (active -> sleeping).
     pub scale_downs: u64,
-    next_decision_s: f64,
+    /// Pending controller events (decision ticks + provisioning
+    /// completions), fired in global time order against arrivals.
+    events: BinaryHeap<Reverse<ScaleEvent>>,
     depth_samples: VecDeque<f64>,
     /// Next-event hints, same contract as [`Router::step_to`]:
     /// `-inf` = recheck, `+inf` = idle/sleeping with nothing queued.
@@ -265,6 +325,8 @@ impl<B: ExecutionBackend> AutoscaledCluster<B> {
                 }
             })
             .collect();
+        let mut events = BinaryHeap::new();
+        events.push(Reverse(ScaleEvent::Tick { at: cfg.decision_interval_s }));
         AutoscaledCluster {
             engines,
             states,
@@ -272,7 +334,7 @@ impl<B: ExecutionBackend> AutoscaledCluster<B> {
             step_cap: 50_000_000,
             scale_ups: 0,
             scale_downs: 0,
-            next_decision_s: cfg.decision_interval_s,
+            events,
             depth_samples: VecDeque::with_capacity(cfg.depth_window),
             hints: vec![f64::NEG_INFINITY; n],
         }
@@ -308,23 +370,38 @@ impl<B: ExecutionBackend> AutoscaledCluster<B> {
         true
     }
 
-    /// Flip Starting replicas whose provisioning window has elapsed to
-    /// Active, billing the window at idle draw.
-    fn promote_ready(&mut self, t: f64) {
-        for i in 0..self.engines.len() {
-            if let ReplicaState::Starting { ready_at_s } = self.states[i] {
-                if ready_at_s <= t {
-                    self.engines[i].close_ledger(ready_at_s);
-                    self.states[i] = ReplicaState::Active;
-                    self.hints[i] = f64::NEG_INFINITY;
+    /// Fire one controller event from the heap. A `Ready` flips its
+    /// Starting replica to Active at the exact provisioning-end
+    /// instant (its window billed at idle draw); a `Tick` advances the
+    /// fleet to the decision time, decides, and re-arms the cadence.
+    fn fire(&mut self, ev: ScaleEvent, left: &mut usize) -> bool {
+        match ev {
+            ScaleEvent::Ready { at, replica } => {
+                debug_assert!(
+                    matches!(self.states[replica], ReplicaState::Starting { .. }),
+                    "Ready event for a replica that is not provisioning"
+                );
+                self.engines[replica].close_ledger(at);
+                self.states[replica] = ReplicaState::Active;
+                self.hints[replica] = f64::NEG_INFINITY;
+            }
+            ScaleEvent::Tick { at } => {
+                if !self.step_to(at, left) {
+                    return false;
                 }
+                self.decide(at);
+                self.events.push(Reverse(ScaleEvent::Tick {
+                    at: at + self.cfg.decision_interval_s,
+                }));
             }
         }
+        true
     }
 
-    /// One scale decision at virtual time `t`.
+    /// One scale decision at virtual time `t`. Replicas whose
+    /// provisioning ended at or before `t` are already Active: their
+    /// `Ready` events order ahead of this tick on the heap.
     fn decide(&mut self, t: f64) {
-        self.promote_ready(t);
         let n_active = self.active_replicas();
         let queued: usize = (0..self.engines.len())
             .filter(|&i| matches!(self.states[i], ReplicaState::Active))
@@ -343,8 +420,9 @@ impl<B: ExecutionBackend> AutoscaledCluster<B> {
                 .find(|&i| matches!(self.states[i], ReplicaState::Sleeping))
             {
                 self.engines[i].close_ledger_gated(t);
-                self.states[i] =
-                    ReplicaState::Starting { ready_at_s: t + self.cfg.provisioning_delay_s };
+                let ready_at_s = t + self.cfg.provisioning_delay_s;
+                self.states[i] = ReplicaState::Starting { ready_at_s };
+                self.events.push(Reverse(ScaleEvent::Ready { at: ready_at_s, replica: i }));
                 self.scale_ups += 1;
             }
         } else if mean < self.cfg.scale_down_depth && n_active > self.cfg.min_replicas {
@@ -370,19 +448,22 @@ impl<B: ExecutionBackend> AutoscaledCluster<B> {
     pub fn run(&mut self, arrivals: impl IntoIterator<Item = Request>) -> bool {
         let mut left = self.step_cap;
         for r in arrivals {
-            // Fire every decision tick that precedes this arrival.
-            while self.next_decision_s <= r.arrival {
-                let t = self.next_decision_s;
-                if !self.step_to(t, &mut left) {
+            // Fire every controller event (decision tick or
+            // provisioning completion) at or before this arrival, in
+            // heap order — events at the arrival instant fire first,
+            // so a replica ready exactly then can take the request.
+            while let Some(&Reverse(ev)) = self.events.peek() {
+                if ev.at() > r.arrival {
+                    break;
+                }
+                self.events.pop();
+                if !self.fire(ev, &mut left) {
                     return false;
                 }
-                self.decide(t);
-                self.next_decision_s += self.cfg.decision_interval_s;
             }
             if !self.step_to(r.arrival, &mut left) {
                 return false;
             }
-            self.promote_ready(r.arrival);
             let target = (0..self.engines.len())
                 .filter(|&i| matches!(self.states[i], ReplicaState::Active))
                 .min_by_key(|&i| self.engines[i].pending());
@@ -394,7 +475,11 @@ impl<B: ExecutionBackend> AutoscaledCluster<B> {
             self.hints[target] = f64::NEG_INFINITY;
         }
         // Drain. Only Active replicas can hold work: routing targets
-        // Active, and scale-down requires pending() == 0.
+        // Active, and scale-down requires pending() == 0. Controller
+        // events past the last arrival stay on the heap unfired — no
+        // new work can appear, so further scale decisions are moot
+        // (replicas still Starting bill their tail at idle draw via
+        // `close_to`, exactly as the pre-heap controller did).
         for e in self.engines.iter_mut() {
             let s0 = e.metrics.steps;
             let ok = e.run_to_completion(left);
@@ -497,6 +582,10 @@ struct Transfer {
     /// Output tokens still to generate on the decode pool.
     remaining_out: usize,
     bytes: f64,
+    /// When the *last* chunk lands: decode on the delivered leg is
+    /// gated here (per-layer decode gating, DESIGN.md §13.5). Equals
+    /// the event time for single-shot transfers.
+    kv_done: f64,
 }
 
 impl PartialEq for Transfer {
@@ -546,12 +635,14 @@ impl Ord for Transfer {
 /// Chunked/layerwise streaming (`chunks > 1`, DESIGN.md §8.1): the
 /// migration becomes a [`ChunkedTransfer`](crate::hwsim::interconnect::ChunkedTransfer)
 /// schedule. The decode leg is delivered when the *first* chunk lands
-/// (the first token and the leading KV layers are across; decode
-/// pipelines against the tail chunks layer by layer), so TTFT reflects
-/// first-chunk-plus-compute overlap; the source KV is released only
-/// when the *last* chunk lands, so back-pressure still covers the
-/// whole stream. `chunks = 1` reproduces the single-shot timeline
-/// bit-exactly.
+/// (the first token and the leading KV layers are across), so TTFT
+/// reflects first-chunk-plus-compute overlap; but decode compute
+/// needs every layer's KV resident, so local token generation on the
+/// delivered leg is gated at the *last* chunk's landing
+/// (`Sequence::ready_at_s`, per-layer decode gating — DESIGN.md
+/// §13.5). The source KV is also released only when the last chunk
+/// lands, so back-pressure still covers the whole stream. `chunks =
+/// 1` reproduces the single-shot timeline bit-exactly.
 ///
 /// Admission control (`admission = true`, DESIGN.md §8.2): at
 /// *chunk-delivery time* — after the decode pool has stepped to the
@@ -786,6 +877,7 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
                     context_len,
                     remaining_out: out - 1,
                     bytes,
+                    kv_done: t_done,
                 };
                 if t_first == t_done {
                     // Degenerate schedule (one chunk, zero bytes or a
@@ -882,6 +974,7 @@ impl<B: ExecutionBackend> DisaggCluster<B> {
             id: tr.id,
             arrival: tr.arrival,
             at: tr.t,
+            kv_ready_s: tr.kv_done,
             context_len: tr.context_len,
             remaining_out: tr.remaining_out,
             bytes: tr.bytes,
@@ -1893,6 +1986,45 @@ mod tests {
         assert!(
             chunked < single,
             "first-chunk delivery must beat single-shot TTFT: {chunked} vs {single}"
+        );
+    }
+
+    #[test]
+    fn per_layer_gating_is_monotone_in_chunk_count() {
+        // Per-layer decode gating: the streamed first token rides the
+        // first chunk (TTFT improves with finer chunking), but local
+        // decode waits for the last chunk — whose landing only moves
+        // later as per-chunk link latency accumulates — so e2e
+        // degrades monotonically. Low load keeps queueing out of the
+        // comparison.
+        let model = by_name("llama-8b").unwrap();
+        let run = |chunks: usize| {
+            let mut c = disagg_sim_cluster(model, &small_disagg_plan())
+                .expect("8B fits")
+                .with_streaming(chunks, false);
+            let reqs: Vec<Request> =
+                (0..8).map(|i| req(i, i as f64 * 0.5, 512, 16)).collect();
+            assert!(c.run(reqs));
+            let m = c.merged_metrics();
+            assert_eq!(m.requests_done, 8);
+            assert_eq!(m.tokens_out, 8 * 16, "token conservation under gating");
+            assert_eq!(m.ttft.count(), 8, "first token correct at every chunking");
+            (m.ttft.pct(95.0), m.e2e_latency.pct(95.0))
+        };
+        let (ttft1, e2e1) = run(1);
+        let (ttft4, e2e4) = run(4);
+        let (ttft16, e2e16) = run(16);
+        assert!(
+            ttft16 <= ttft4 && ttft4 <= ttft1,
+            "TTFT must not worsen with finer chunking: {ttft1} {ttft4} {ttft16}"
+        );
+        assert!(
+            e2e1 <= e2e4 && e2e4 <= e2e16,
+            "gated decode start must not improve with chunking: {e2e1} {e2e4} {e2e16}"
+        );
+        assert!(
+            e2e16 > e2e1,
+            "per-chunk latency must actually delay the gated decode"
         );
     }
 

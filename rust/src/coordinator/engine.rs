@@ -24,11 +24,16 @@
 //!   first emission (a recompute re-prefill bumps `metrics.restarts`
 //!   instead), and a token whose KV growth fails is rolled back so
 //!   `tokens_out` counts every delivered token exactly once.
+//! * Event-driven fast-forward (DESIGN.md §13): `step_until` and
+//!   `run_to_completion` collapse provably-static decode windows into
+//!   O(1)-per-step analytic charges, bit-identical to stepping —
+//!   `set_event_mode(false)` restores the pure stepper for the
+//!   differential suite's reference runs.
 
 use std::collections::HashMap;
 
 use super::backend::ExecutionBackend;
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{AdmissionOutlook, Batcher, BatcherConfig};
 use super::kv_cache::{BlockAllocator, KvCacheConfig};
 use super::metrics::Metrics;
 use super::request::{MigratedRequest, RequestState, SeqId, SeqRole, Sequence};
@@ -101,6 +106,14 @@ pub struct Engine<B: ExecutionBackend> {
     /// Prefill legs whose prefill finished and whose KV awaits
     /// migration to a decode pool (drained by `take_handoffs`).
     handoffs: Vec<SeqId>,
+    /// Event-driven fast-forward (DESIGN.md §13) inside `step_until` /
+    /// `run_to_completion`: when the batch composition is provably
+    /// static, decode steps are charged analytically in O(1) each
+    /// instead of through the full plan/execute/bookkeep loop. On by
+    /// default — the differential suite's reference runs switch it off
+    /// to produce the step-by-step trajectory the fast-forwarded one
+    /// must match bit-for-bit.
+    event_mode: bool,
 }
 
 impl<B: ExecutionBackend> Engine<B> {
@@ -117,11 +130,24 @@ impl<B: ExecutionBackend> Engine<B> {
             preemptions: 0,
             active: 0,
             handoffs: Vec::new(),
+            event_mode: true,
         }
     }
 
     pub fn clock(&self) -> f64 {
         self.clock
+    }
+
+    /// Toggle the event-driven fast-forward (on by default). `step()`
+    /// itself is always the step-by-step reference; this only governs
+    /// whether `step_until`/`run_to_completion` may collapse static
+    /// windows analytically.
+    pub fn set_event_mode(&mut self, on: bool) {
+        self.event_mode = on;
+    }
+
+    pub fn event_mode(&self) -> bool {
+        self.event_mode
     }
 
     pub fn preemptions(&self) -> u64 {
@@ -372,12 +398,19 @@ impl<B: ExecutionBackend> Engine<B> {
     /// Advance virtual time toward `t`: execute steps while the clock
     /// is behind `t` and work is schedulable. As in any discrete-event
     /// simulation, a step that *begins* before `t` may finish past it.
-    /// Returns the number of steps executed; stops early once the
-    /// engine has nothing left to run (its clock then stays behind
-    /// `t` — see [`Engine::advance_to`]) or after `max_steps`.
+    /// Returns the number of steps executed (fast-forwarded virtual
+    /// steps included — `metrics.steps` counts them identically);
+    /// stops early once the engine has nothing left to run (its clock
+    /// then stays behind `t` — see [`Engine::advance_to`]) or after
+    /// `max_steps`.
     pub fn step_until(&mut self, t: f64, max_steps: usize) -> usize {
         let mut n = 0;
         while self.clock < t && n < max_steps && self.pending() > 0 {
+            let ff = self.try_fast_forward(t, max_steps - n);
+            if ff > 0 {
+                n += ff;
+                continue;
+            }
             if !self.step() {
                 break;
             }
@@ -388,16 +421,162 @@ impl<B: ExecutionBackend> Engine<B> {
 
     /// Step until all submitted requests finish (or `max_steps`).
     pub fn run_to_completion(&mut self, max_steps: usize) -> bool {
-        for _ in 0..max_steps {
+        let mut n = 0;
+        while n < max_steps {
             if self.pending() == 0 {
                 return true;
+            }
+            let ff = self.try_fast_forward(f64::INFINITY, max_steps - n);
+            if ff > 0 {
+                n += ff;
+                continue;
             }
             if !self.step() && self.pending() > 0 {
                 // Nothing schedulable but work remains: deadlock guard.
                 return false;
             }
+            n += 1;
         }
         self.pending() == 0
+    }
+
+    /// Event-driven fast-forward (DESIGN.md §13): run up to
+    /// `max_steps` pure decode steps analytically, stopping strictly
+    /// before `t_target`, the batcher's next admission instant, the
+    /// earliest in-batch finish, and the first step whose KV growth
+    /// could fail. Within such a window the batch composition is
+    /// static, so each virtual step's cost is the same
+    /// `(batch, avg context)` lookup the stepper would make — the same
+    /// per-step `f64` values accumulated in the same order, hence a
+    /// bit-identical trajectory — at O(1) per step instead of
+    /// O(batch). Returns the number of steps charged (0 = no window;
+    /// caller falls back to [`Engine::step`]).
+    fn try_fast_forward(&mut self, t_target: f64, max_steps: usize) -> usize {
+        if !self.event_mode || max_steps == 0 || self.clock >= t_target {
+            return 0;
+        }
+        let b = self.batcher.decoding_len();
+        if b == 0 {
+            return 0; // nothing decoding: idle-advance/prefill path
+        }
+        // Admission oracle: any possible admission before `t_adm`
+        // means the composition is not static — step normally.
+        let t_adm =
+            match self.batcher.admission_outlook(&self.seqs, &self.alloc, self.clock) {
+                AdmissionOutlook::Admit => return 0,
+                AdmissionOutlook::StaticUntil(t) => t,
+            };
+        if self.clock >= t_adm {
+            return 0;
+        }
+        // Finish boundary (the finishing step itself runs normally so
+        // archival/release/metrics happen on the stepper path), plus
+        // the per-sequence state the memory boundary needs.
+        let mut k_finish = usize::MAX;
+        let mut total_tokens = 0usize;
+        let mut comps: Vec<(usize, usize)> = Vec::with_capacity(b);
+        for id in self.batcher.decoding_ids() {
+            let Some(s) = self.seqs.get(&id) else {
+                debug_assert!(false, "decode index out of sync with the hot map");
+                return 0;
+            };
+            debug_assert!(s.output_len > s.generated, "finished id still decoding");
+            k_finish = k_finish.min((s.output_len - s.generated).saturating_sub(1));
+            total_tokens += s.context_len();
+            comps.push((s.context_len(), s.blocks.len()));
+        }
+        let mut k = k_finish.min(max_steps);
+        if k == 0 {
+            return 0;
+        }
+        // Memory boundary: after j steps every sequence holds context
+        // c_i + j, so cumulative block growth through step j is
+        // sum_i max(0, blocks_for(c_i + j) - held_i) — monotone in j.
+        // Free blocks only shrink inside the window (no releases
+        // without a finish/preemption), so growth within today's free
+        // count certifies every step's grow succeeds: no preemption.
+        let free = self.alloc.free_blocks();
+        let kv_cfg = self.alloc.config().clone();
+        let need_new = |j: usize| -> usize {
+            comps
+                .iter()
+                .map(|&(c, held)| kv_cfg.blocks_for_tokens(c + j).saturating_sub(held))
+                .sum()
+        };
+        if need_new(k) > free {
+            if need_new(0) > free {
+                return 0; // degenerate: next step already preempts
+            }
+            // Largest feasible j by bisection (need_new is monotone).
+            let (mut lo, mut hi) = (0usize, k);
+            while lo < hi {
+                let mid = lo + (hi - lo).div_ceil(2);
+                if need_new(mid) <= free {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
+            }
+            k = lo;
+        }
+        if k == 0 {
+            return 0;
+        }
+        // The virtual step loop. Per-step costs must be *replayed*,
+        // not algebraically summed: f64 accumulation is
+        // order-sensitive, and the context (hence the cost key)
+        // advances by exactly one token per sequence per step. Each
+        // iteration reproduces the stepper's clock arithmetic for the
+        // active policy bit-for-bit.
+        let mut steps = 0usize;
+        let mut tokens = total_tokens;
+        while steps < k && self.clock < t_target && self.clock < t_adm {
+            let Some(res) = self.backend.decode_uniform(b, tokens) else {
+                break; // backend cannot price uniform steps
+            };
+            match self.policy {
+                SchedulerPolicy::Fused => {
+                    self.clock += res.seconds;
+                }
+                SchedulerPolicy::Disaggregated => {
+                    // StepPlan::Both with zero prefills: replicate the
+                    // overlap arithmetic exactly (t_pre == 0.0).
+                    let t0 = self.clock;
+                    self.clock += res.seconds;
+                    let t_dec = self.clock - t0;
+                    self.clock = t0 + 0.0f64.max(t_dec);
+                }
+            }
+            self.metrics.record_decode_step(res.seconds, res.watts, res.flops, b);
+            tokens += b;
+            steps += 1;
+        }
+        if steps == 0 {
+            return 0;
+        }
+        // Bulk-apply per-sequence progress and KV growth. Block-id
+        // assignment order differs from the stepper's interleaved
+        // per-step order, but only free/allocated *counts* feed any
+        // decision, and the memory boundary certified every grow.
+        let ids: Vec<SeqId> = self.batcher.decoding_ids().collect();
+        for id in &ids {
+            let Some(seq) = self.seqs.get_mut(id) else {
+                debug_assert!(false, "decode index out of sync with the hot map");
+                continue;
+            };
+            seq.generated += steps;
+            seq.delivered += steps;
+            let needed = seq.context_len();
+            let mut blocks = std::mem::take(&mut seq.blocks);
+            let grew = self.alloc.grow(&mut blocks, needed);
+            seq.blocks = blocks;
+            debug_assert!(grew, "certified KV growth failed in fast-forward");
+        }
+        if let Some(cs) = self.backend.cache_stats() {
+            self.metrics.step_cache_hits = cs.hits;
+            self.metrics.step_cache_misses = cs.misses;
+        }
+        steps
     }
 
     fn run_prefill(&mut self, ids: &[SeqId]) {
@@ -885,6 +1064,7 @@ mod tests {
             id: 3,
             arrival: 1.0,
             at: 4.0,
+            kv_ready_s: 4.0,
             context_len: 101,
             remaining_out: 9,
             bytes: 101.0 * 131072.0,
@@ -917,6 +1097,7 @@ mod tests {
             id: 0,
             arrival: 0.0,
             at: 0.0,
+            kv_ready_s: 0.0,
             context_len: 33,
             remaining_out: 40,
             bytes: 33.0 * 131072.0,
@@ -933,6 +1114,85 @@ mod tests {
         assert_eq!(e.metrics.restarts, e.preemptions());
         assert_eq!(e.sequence(0).unwrap().delivered, 41);
         assert_eq!(e.kv_utilization(), 0.0);
+    }
+
+    /// The simulation outcome with floats as bits: equality means the
+    /// two runs were bit-identical.
+    fn fingerprint(e: &Engine<SimBackend>) -> Vec<u64> {
+        let m = &e.metrics;
+        vec![
+            e.clock().to_bits(),
+            m.steps,
+            m.tokens_out,
+            m.requests_done,
+            m.restarts,
+            m.energy_j.to_bits(),
+            m.energy_prefill_j.to_bits(),
+            m.energy_decode_j.to_bits(),
+            m.energy_idle_j.to_bits(),
+            m.flops.to_bits(),
+            m.span.to_bits(),
+            m.idle_s.to_bits(),
+            m.ttft.pct(95.0).to_bits(),
+            m.tpot.pct(95.0).to_bits(),
+            m.e2e_latency.pct(95.0).to_bits(),
+            m.step_cache_hits,
+            m.step_cache_misses,
+        ]
+    }
+
+    #[test]
+    fn fast_forward_is_bit_identical_to_stepper() {
+        // Open-loop arrivals + long decodes: real fast-forward windows
+        // interleaved with admissions and finishes.
+        let run = |event: bool| {
+            let mut e = engine(100_000);
+            e.set_event_mode(event);
+            for i in 0..24u64 {
+                e.submit(&req(i, i as f64 * 0.4, 64 + (i as usize % 5) * 40, 120));
+            }
+            assert!(e.run_to_completion(200_000));
+            fingerprint(&e)
+        };
+        assert_eq!(run(true), run(false), "event engine diverged from stepper");
+    }
+
+    #[test]
+    fn fast_forward_bit_identical_under_memory_pressure() {
+        // Tiny pool: preemptions and recompute restarts bound every
+        // window; the trajectories must still match exactly.
+        let run = |event: bool| {
+            let mut e = engine(12);
+            e.set_event_mode(event);
+            for i in 0..4u64 {
+                e.submit(&req(i, i as f64 * 0.1, 32, 40));
+            }
+            assert!(e.run_to_completion(200_000));
+            (e.preemptions(), fingerprint(&e))
+        };
+        let (p_event, f_event) = run(true);
+        let (p_ref, f_ref) = run(false);
+        assert!(p_ref > 0, "pressure must preempt");
+        assert_eq!(p_event, p_ref);
+        assert_eq!(f_event, f_ref, "event engine diverged under preemption");
+    }
+
+    #[test]
+    fn fast_forward_actually_collapses_steps() {
+        // Sanity that the event path engages: a lone long decode is
+        // one giant static window, so the step loop must not be the
+        // only thing running (same metrics.steps, fewer step() calls
+        // is unobservable — instead pin that step_until covers the
+        // whole run in one call with a huge budget and stays exact).
+        let mut e = engine(100_000);
+        e.submit(&req(0, 0.0, 64, 2_000));
+        let n = e.step_until(f64::INFINITY, usize::MAX);
+        assert_eq!(e.metrics.steps, n as u64);
+        assert_eq!(e.metrics.tokens_out, 2_000);
+        assert_eq!(e.metrics.requests_done, 1);
+        let s = e.sequence(0).unwrap();
+        assert_eq!(s.generated, 2_000);
+        assert!(s.finished_at.is_some());
     }
 
     #[test]

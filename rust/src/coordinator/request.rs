@@ -46,8 +46,15 @@ pub struct MigratedRequest {
     pub id: SeqId,
     /// Original request arrival (TTFT / e2e reference).
     pub arrival: f64,
-    /// Migration completion instant on the shared virtual timeline.
+    /// Delivery instant on the shared virtual timeline: when the
+    /// decode pool learns about the request (first chunk landed, TTFT
+    /// reference for the streamed prefill token).
     pub at: f64,
+    /// When the *last* KV chunk lands. Decode compute needs every
+    /// layer's KV resident, so local token generation is gated here
+    /// (per-layer decode gating, DESIGN.md §13.5); single-shot
+    /// transfers have `kv_ready_s == at`.
+    pub kv_ready_s: f64,
     /// Context tokens whose KV arrived (prompt + the prefill token).
     pub context_len: usize,
     /// Output tokens still to generate on the decode pool.
@@ -79,6 +86,10 @@ pub struct Sequence {
     /// is the migration delivery instant — the moment the sequence
     /// becomes schedulable on this engine.
     pub arrival: f64,
+    /// Earliest instant the batcher may schedule this sequence: its
+    /// arrival for fresh requests, the last KV chunk's landing for
+    /// migrated decode legs (decode needs every layer resident).
+    pub ready_at_s: f64,
     /// Original request arrival for migrated sequences (e2e latency is
     /// measured from the origin, not from the migration delivery).
     pub origin_arrival: Option<f64>,
@@ -102,6 +113,7 @@ impl Sequence {
             generated: 0,
             delivered: 0,
             arrival: r.arrival,
+            ready_at_s: r.arrival,
             origin_arrival: None,
             first_token_at: None,
             finished_at: None,
@@ -125,6 +137,7 @@ impl Sequence {
             generated: 0,
             delivered: 1, // the prefill-pool token, delivered at `at`
             arrival: m.at,
+            ready_at_s: m.kv_ready_s.max(m.at),
             origin_arrival: Some(m.arrival),
             first_token_at: Some(m.at),
             finished_at: None,
@@ -185,6 +198,7 @@ mod tests {
             id: 7,
             arrival: 1.5,
             at: 2.0,
+            kv_ready_s: 2.0,
             context_len: 101, // prompt 100 + the prefill token
             remaining_out: 9,
             bytes: 101.0 * 131072.0,
@@ -195,8 +209,26 @@ mod tests {
         assert_eq!(s.context_len(), 101);
         assert_eq!(s.delivered, 1, "the prefill token travelled with the KV");
         assert_eq!(s.arrival, 2.0, "schedulable only once the KV arrived");
+        assert_eq!(s.ready_at_s, 2.0, "single-shot: decodable at delivery");
         assert_eq!(s.origin_arrival, Some(1.5));
         assert_eq!(s.first_token_at, Some(2.0));
         assert!(!s.is_done());
+    }
+
+    #[test]
+    fn chunked_migration_gates_decode_at_last_chunk() {
+        let m = MigratedRequest {
+            id: 7,
+            arrival: 1.5,
+            at: 2.0,        // first chunk: delivery + TTFT reference
+            kv_ready_s: 2.8, // last chunk: all layers resident
+            context_len: 101,
+            remaining_out: 9,
+            bytes: 101.0 * 131072.0,
+        };
+        let s = Sequence::migrated(&m);
+        assert_eq!(s.arrival, 2.0, "known to the decode pool at first chunk");
+        assert_eq!(s.first_token_at, Some(2.0), "streamed token unaffected by gating");
+        assert_eq!(s.ready_at_s, 2.8, "local decode waits for the last layer's KV");
     }
 }

@@ -378,6 +378,7 @@ mod tests {
             id: 1,
             arrival: 0.0,
             at: 0.5,
+            kv_ready_s: 0.5,
             context_len: 2001,
             remaining_out: 63,
             bytes: 2001.0 * 131072.0,
@@ -416,6 +417,7 @@ mod tests {
             id: 9,
             arrival: 0.0,
             at: 0.1,
+            kv_ready_s: 0.1,
             context_len: 100,
             remaining_out: 4,
             bytes: 100.0 * 131072.0,

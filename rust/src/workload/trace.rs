@@ -215,6 +215,16 @@ impl RateCurve {
         self.knots.iter().map(|&(_, r)| r).fold(0.0, f64::max)
     }
 
+    /// True when the curve is identically zero at and after `t_s` —
+    /// the flat-zero tail on which thinning could never accept
+    /// another candidate. Exact for piecewise-linear curves: with
+    /// rates clamped >= 0, `rate_at(t_s) == 0` plus all-zero knots
+    /// past `t_s` forces every later segment to zero (a positive
+    /// interior value would need a negative knot).
+    pub fn is_zero_after(&self, t_s: f64) -> bool {
+        self.rate_at(t_s) == 0.0 && self.knots.iter().all(|&(t, r)| t <= t_s || r == 0.0)
+    }
+
     /// Exact expected arrival count over [t0_s, t1_s] (trapezoid rule
     /// is exact on a piecewise-linear integrand).
     pub fn expected_arrivals(&self, t0_s: f64, t1_s: f64) -> f64 {
@@ -363,6 +373,15 @@ impl TrafficGenerator {
                 // intensity; rejected candidates only advance the clock.
                 let peak = curve.peak_qps();
                 loop {
+                    // A flat-zero tail can never accept a candidate:
+                    // park the arrival at +inf instead of spinning.
+                    // The check consumes no randomness, so any trace
+                    // with positive rate ahead is byte-identical to
+                    // the unguarded loop.
+                    if curve.is_zero_after(self.clock) {
+                        self.clock = f64::INFINITY;
+                        return self.clock;
+                    }
                     self.clock += self.rng.exp(peak);
                     let accept_p = curve.rate_at(self.clock) / peak;
                     if self.rng.bool(accept_p) {

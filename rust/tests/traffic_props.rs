@@ -118,6 +118,100 @@ fn multi_tenant_mix_stamps_classes_and_length_mixes() {
 }
 
 #[test]
+fn zero_rate_tail_terminates_instead_of_spinning() {
+    // A curve that ramps to zero and stays there: thinning can never
+    // accept a candidate past the ramp, so the generator must park
+    // the arrival at +inf (and `until` must return) rather than spin
+    // the rejection loop forever.
+    let curve = RateCurve::new(vec![(0.0, 6.0), (50.0, 0.0)]);
+    assert!(!curve.is_zero_after(0.0));
+    assert!(!curve.is_zero_after(49.9));
+    assert!(curve.is_zero_after(50.0));
+    assert!(curve.is_zero_after(1e9));
+    let cfg = TrafficConfig::chat_on(ArrivalProcess::Modulated(curve.clone()));
+    let reqs = TrafficGenerator::new(cfg, 13).until(1e12);
+    assert!(!reqs.is_empty(), "the positive ramp must produce arrivals");
+    assert!(reqs.iter().all(|r| r.arrival.is_finite() && r.arrival < 51.0));
+    let expected = curve.expected_arrivals(0.0, 50.0);
+    let got = reqs.len() as f64;
+    assert!(
+        (got - expected).abs() <= 5.0 * expected.sqrt() + 5.0,
+        "ramp count {got} vs integral {expected}"
+    );
+    // An interior zero-rate valley is NOT a tail: the generator must
+    // coast through it and keep producing arrivals on the far side.
+    let valley =
+        RateCurve::new(vec![(0.0, 6.0), (10.0, 0.0), (20.0, 0.0), (30.0, 6.0)]);
+    assert!(!valley.is_zero_after(15.0), "positive rate ahead of the valley");
+    let cfg = TrafficConfig::chat_on(ArrivalProcess::Modulated(valley));
+    let reqs = TrafficGenerator::new(cfg, 13).until(60.0);
+    assert!(
+        reqs.iter().any(|r| r.arrival > 30.0),
+        "arrivals must resume past the valley"
+    );
+    assert!(
+        !reqs.iter().any(|r| r.arrival > 10.5 && r.arrival < 19.5),
+        "no arrivals inside the zero-rate valley"
+    );
+}
+
+#[test]
+fn mmpp_with_equal_rates_degenerates_to_poisson() {
+    // Equal-rate states make the modulation invisible: the process is
+    // plain Poisson, so the dispersion index of bucket counts must
+    // sit near 1 (the same statistic the bursty test pushes past 1.5).
+    let process = ArrivalProcess::Mmpp {
+        base_qps: 8.0,
+        burst_qps: 8.0,
+        mean_base_s: 30.0,
+        mean_burst_s: 5.0,
+    };
+    assert!((process.mean_qps() - 8.0).abs() < 1e-12);
+    let horizon_s = 20_000.0;
+    let reqs = TrafficGenerator::new(TrafficConfig::chat_on(process), 29).until(horizon_s);
+    let rate = reqs.len() as f64 / horizon_s;
+    assert!((rate / 8.0 - 1.0).abs() < 0.05, "long-run rate {rate} vs 8");
+    let bucket_s = 20.0;
+    let n_buckets = (horizon_s / bucket_s) as usize;
+    let mut counts = vec![0.0f64; n_buckets];
+    for r in &reqs {
+        counts[((r.arrival / bucket_s) as usize).min(n_buckets - 1)] += 1.0;
+    }
+    let m = counts.iter().sum::<f64>() / n_buckets as f64;
+    let var = counts.iter().map(|c| (c - m) * (c - m)).sum::<f64>() / n_buckets as f64;
+    let dispersion = var / m;
+    assert!(
+        (dispersion - 1.0).abs() < 0.25,
+        "equal-rate MMPP dispersion {dispersion} should be ~Poisson"
+    );
+}
+
+#[test]
+fn zero_share_class_never_appears_in_the_mix() {
+    // batch_frac at the boundaries: 0 must stamp everything
+    // interactive, 1 must stamp everything batch — no stray draws
+    // from the other class's length mix.
+    let mk = |frac: f64| {
+        let flat = RateCurve::flat(10.0);
+        let cfg = TrafficConfig::multi_tenant(ArrivalProcess::Modulated(flat), frac);
+        TrafficGenerator::new(cfg, 17).until(200.0)
+    };
+    let all_interactive = mk(0.0);
+    assert!(all_interactive.len() > 1_000);
+    assert!(all_interactive.iter().all(|r| r.class == TenantClass::Interactive));
+    let all_batch = mk(1.0);
+    assert!(all_batch.len() > 1_000);
+    assert!(all_batch.iter().all(|r| r.class == TenantClass::Batch));
+    // The zero-share class's absence shows in the lengths too: the
+    // all-batch trace is summarize-shaped (prompt-heavy), the
+    // all-interactive one chat-shaped.
+    let mean_prompt = |rs: &[fp8_tco::workload::trace::Request]| {
+        rs.iter().map(|r| r.prompt_len as f64).sum::<f64>() / rs.len() as f64
+    };
+    assert!(mean_prompt(&all_batch) > 4.0 * mean_prompt(&all_interactive));
+}
+
+#[test]
 fn until_is_sorted_with_contiguous_ids() {
     let cfg = TrafficConfig::multi_tenant(
         ArrivalProcess::Mmpp {
