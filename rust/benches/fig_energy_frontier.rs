@@ -15,6 +15,13 @@
 //! leave unused — not `PowerCap::PerRack`'s even share), and the QPS
 //! search re-runs with each pool capped at its own allocation.
 //!
+//! The DVFS policy sweep adds per-pool cap tuning: each pool's
+//! `power_cap` runs over a watt grid with the other pool uncapped, the
+//! per-pool Wh/Mtok argmin (seeded by the uncapped point, so "no cap"
+//! can win) picks the best cap for that pool, and the combined winners
+//! re-measure as the `dvfs-best` row — never worse than uncapped by
+//! construction, asserted.
+//!
 //! Grounding assertion: the 70B H100-FP8 uncapped point must land
 //! within 3x of the ~0.39 J/token measured for Llama 3 70B FP8 serving
 //! on H100 (J/token = sustained device W over goodput, idle included).
@@ -51,6 +58,7 @@ const RACK_CHIPS: usize = 48;
 const QPS_LO: f64 = 0.2;
 
 /// One measured frontier cell.
+#[derive(Clone)]
 struct Cell {
     feasible: bool,
     qps: f64,
@@ -140,6 +148,18 @@ fn measure_cell(
     }
 }
 
+/// One setup's DVFS policy sweep: per-pool cap candidates (each pool
+/// swept with the other uncapped), the per-pool argmins on Wh/Mtok,
+/// and the combined best-cap operating point.
+struct Dvfs {
+    /// Winning per-pool caps (0.0 = uncapped won).
+    best_prefill_cap_w: f64,
+    best_decode_cap_w: f64,
+    best: Cell,
+    /// Every swept point: (pool, cap W, measured cell).
+    pool_cells: Vec<(&'static str, f64, Cell)>,
+}
+
 /// The rack-capped frontier point: fill the rack with copies of the
 /// deployment at the uncapped run's per-chip demands, water-fill the
 /// chip budget, and cap each pool at its own allocation.
@@ -184,11 +204,17 @@ fn main() {
         (m70, Device::Gaudi3, ParallelismPlan::single(), 24.0),
     ];
 
-    // Each setup measures its three cap modes serially (the rack caps
+    // DVFS policy grid: per-pool cap candidates swept one pool at a
+    // time (the other uncapped), argmin on Wh/Mtok per pool. 0 W is
+    // not in the grid — "uncapped" seeds each argmin, so the reported
+    // best is never worse than no policy by construction.
+    let dvfs_grid: &'static [f64] = if fast { &[450.0] } else { &[350.0, 450.0, 550.0] };
+
+    // Each setup measures its cap modes serially (the rack caps
     // derive from the uncapped demands); the four setups evaluate
     // concurrently with fixed seeds, so output bytes match serial runs.
     let grid: Vec<Setup> = setups.to_vec();
-    let measured: Vec<(DisaggPlan, [Cell; 3])> = SweepGrid::new(grid).run(|_, setup| {
+    let measured: Vec<(DisaggPlan, [Cell; 3], Option<Dvfs>)> = SweepGrid::new(grid).run(|_, setup| {
         let (model, dev, shape, qps_hi) = setup;
         let sweep = if fast {
             SweepConfig { iters: 2, n_requests: 30, seed: 17, ..SweepConfig::new(QPS_LO, qps_hi) }
@@ -211,12 +237,56 @@ fn main() {
         } else {
             infeasible()
         };
-        (plan, [uncapped, capped, racked])
+        // DVFS policy sweep: each pool's cap candidates run with the
+        // other pool uncapped; the per-pool Wh/Mtok argmins (seeded by
+        // the uncapped point) combine into the dvfs-best cell.
+        let dvfs = if uncapped.feasible {
+            let mut pool_cells: Vec<(&'static str, f64, Cell)> = Vec::new();
+            let mut best_p = (0.0f64, uncapped.wh_per_mtok);
+            let mut best_d = (0.0f64, uncapped.wh_per_mtok);
+            for &cap in dvfs_grid {
+                let p_plan = DisaggPlan::new(plan.prefill.with_cap(cap), plan.decode);
+                let c = measure_cell(model, &p_plan, (cap, 0.0), &slo, &sweep, &infra);
+                if c.feasible && c.wh_per_mtok < best_p.1 {
+                    best_p = (cap, c.wh_per_mtok);
+                }
+                pool_cells.push(("prefill", cap, c));
+                let d_plan = DisaggPlan::new(plan.prefill, plan.decode.with_cap(cap));
+                let c = measure_cell(model, &d_plan, (0.0, cap), &slo, &sweep, &infra);
+                if c.feasible && c.wh_per_mtok < best_d.1 {
+                    best_d = (cap, c.wh_per_mtok);
+                }
+                pool_cells.push(("decode", cap, c));
+            }
+            let best = if best_p.0 == 0.0 && best_d.0 == 0.0 {
+                uncapped.clone()
+            } else {
+                let bp = if best_p.0 > 0.0 { plan.prefill.with_cap(best_p.0) } else { plan.prefill };
+                let bd = if best_d.0 > 0.0 { plan.decode.with_cap(best_d.0) } else { plan.decode };
+                measure_cell(
+                    model,
+                    &DisaggPlan::new(bp, bd),
+                    (best_p.0, best_d.0),
+                    &slo,
+                    &sweep,
+                    &infra,
+                )
+            };
+            Some(Dvfs {
+                best_prefill_cap_w: best_p.0,
+                best_decode_cap_w: best_d.0,
+                best,
+                pool_cells,
+            })
+        } else {
+            None
+        };
+        (plan, [uncapped, capped, racked], dvfs)
     });
 
     // Grounding: the 70B H100-FP8 uncapped point sits in the 3x band
     // around the measured ~0.39 J/token reference.
-    let (_, cells70) = &measured[2];
+    let (_, cells70, _) = &measured[2];
     let j = cells70[0].joules_per_token;
     assert!(cells70[0].feasible, "70B H100 uncapped cell must be feasible");
     assert!(
@@ -224,9 +294,32 @@ fn main() {
         "70B H100-FP8 energy {j} J/token outside 3x of {REF_J_PER_TOKEN_70B_H100}"
     );
 
+    // DVFS grounding: a winning nonzero cap must actually have beaten
+    // the uncapped point on Wh/Mtok (the argmin was seeded with it).
+    for (_, cells, dvfs) in &measured {
+        let Some(d) = dvfs else { continue };
+        for (pool, best_cap) in [
+            ("prefill", d.best_prefill_cap_w),
+            ("decode", d.best_decode_cap_w),
+        ] {
+            if best_cap == 0.0 {
+                continue;
+            }
+            let won = d
+                .pool_cells
+                .iter()
+                .find(|(p, cap, _)| *p == pool && *cap == best_cap)
+                .expect("winning cap came from the sweep");
+            assert!(
+                won.2.feasible && won.2.wh_per_mtok <= cells[0].wh_per_mtok,
+                "{pool} cap {best_cap} W won without beating uncapped"
+            );
+        }
+    }
+
     let mut t = Table::new(
         "Fig. ENERGY-FRONTIER — Wh/Mtok at SLO: uncapped vs 400 W per-GPU vs \
-         rack-capped (water-filled 40 kW rack)",
+         rack-capped (water-filled 40 kW rack) vs per-pool DVFS sweep",
         &[
             "model",
             "device",
@@ -243,16 +336,37 @@ fn main() {
     );
     let mut records: Vec<Json> = Vec::new();
     let modes = ["uncapped", "gpu-400w", "rack-capped"];
-    for ((model, dev, _, _), (plan, cells)) in setups.iter().zip(&measured) {
-        for (mode, cell) in modes.iter().zip(cells) {
+    for ((model, dev, _, _), (plan, cells, dvfs)) in setups.iter().zip(&measured) {
+        // Fixed cap modes first, then the DVFS policy sweep rows and
+        // the per-setup winner.
+        let mut rows: Vec<(String, &Cell)> = modes
+            .iter()
+            .zip(cells)
+            .map(|(mode, cell)| ((*mode).to_string(), cell))
+            .collect();
+        if let Some(d) = dvfs {
+            for (pool, cap, cell) in &d.pool_cells {
+                rows.push((format!("dvfs-{pool}-{cap:.0}w"), cell));
+            }
+            rows.push(("dvfs-best".to_string(), &d.best));
+        }
+        for (mode, cell) in rows {
             let mut rec = BTreeMap::new();
             rec.insert("model".into(), Json::Str(model.name.into()));
             rec.insert("device".into(), Json::Str(dev.name().into()));
-            rec.insert("cap_mode".into(), Json::Str((*mode).into()));
+            rec.insert("cap_mode".into(), Json::Str(mode.clone()));
+            if mode == "dvfs-best" {
+                let d = dvfs.as_ref().expect("dvfs-best row implies a sweep ran");
+                rec.insert(
+                    "best_prefill_cap_w".into(),
+                    Json::Num(d.best_prefill_cap_w),
+                );
+                rec.insert("best_decode_cap_w".into(), Json::Num(d.best_decode_cap_w));
+            }
             rec.insert("pools".into(), Json::Str(plan.describe()));
             rec.insert("chips".into(), Json::Num(plan.total_chips() as f64));
             rec.insert("feasible".into(), Json::Bool(cell.feasible));
-            let cap_str = if cell.prefill_cap_w > 0.0 {
+            let cap_str = if cell.prefill_cap_w > 0.0 || cell.decode_cap_w > 0.0 {
                 format!("{:.0}/{:.0}", cell.prefill_cap_w, cell.decode_cap_w)
             } else {
                 "-".into()
@@ -272,7 +386,7 @@ fn main() {
                 t.row(vec![
                     model.name.into(),
                     dev.name().into(),
-                    (*mode).into(),
+                    mode.clone(),
                     plan.describe(),
                     cap_str,
                     f(cell.qps, 2),
@@ -286,7 +400,7 @@ fn main() {
                 t.row(vec![
                     model.name.into(),
                     dev.name().into(),
-                    (*mode).into(),
+                    mode.clone(),
                     plan.describe(),
                     cap_str,
                     format!("< {QPS_LO}"),
@@ -313,6 +427,10 @@ fn main() {
         Json::Num(REF_J_PER_TOKEN_70B_H100),
     );
     root.insert("pue_ratio".into(), Json::Num(infra.rack.pue_ratio));
+    root.insert(
+        "dvfs_grid_w".into(),
+        Json::Arr(dvfs_grid.iter().map(|&w| Json::Num(w)).collect()),
+    );
     root.insert("cells".into(), Json::Arr(records));
     match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
         Ok(()) => println!("\nwrote {path}"),
@@ -322,7 +440,9 @@ fn main() {
         "(J/tok is device energy over goodput with idle time billed at idle draw;\n \
          Wh/Mtok adds server overhead and the {:.2} PUE. The rack-capped rows cap\n \
          each pool at its water-filled share of a 40 kW rack packed with {} chips —\n \
-         hot prefill chips borrow headroom cool decode chips leave unused)",
-        infra.rack.pue_ratio, RACK_CHIPS,
+         hot prefill chips borrow headroom cool decode chips leave unused. The\n \
+         dvfs-* rows sweep each pool's cap over {:?} W with the other uncapped;\n \
+         dvfs-best combines the per-pool Wh/Mtok winners)",
+        infra.rack.pue_ratio, RACK_CHIPS, dvfs_grid,
     );
 }

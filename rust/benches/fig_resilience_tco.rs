@@ -1,0 +1,434 @@
+//! FIG-RESILIENCE-TCO: what availability engineering costs, and what
+//! skipping it costs more — {Llama 8B, 70B} x {H100-FP8, Gaudi 3-FP8}
+//! x {colocated, disaggregated} x {zero-fault, N+1 redundancy,
+//! unprotected} x an MTBF grid.
+//!
+//! Every cell serves the same seeded day of chat traffic on a
+//! minimal fleet (one serving replica per pool). Three operating
+//! postures price the same hardware three ways:
+//!
+//! * **zero-fault** — the accounting baseline: no faults, no spares.
+//! * **redundant** — the serving replica (the prefill replica, on
+//!   disaggregated cells) crashes a quarter into the day and fails
+//!   over to an owned warm spare after `FAILOVER_S`; the spare's capex
+//!   and rack share are billed (`k_spares = 1` through
+//!   `InfraModel::cost_per_mtok_resilient`), crash victims recompute
+//!   from scratch through the capped-backoff retry queue.
+//! * **unprotected** — the same crash with no spare to fail over to:
+//!   the replica stays down for the rest of the day, retries back off
+//!   until they exhaust, and every undelivered token is gone. The
+//!   $/Mtok denominator is *goodput* (`tokens_out - lost_tokens`), so
+//!   the outage shows up as price, not as a footnote.
+//!
+//! The MTBF grid reruns the redundant posture under a seeded Poisson
+//! crash/repair process at each MTBF — the frontier between hardware
+//! reliability and the redundancy premium.
+//!
+//! Grounding assertions, every cell: all runs drain; token
+//! conservation holds exactly (`tokens_out - lost_tokens` equals the
+//! offered output tokens of every request that was not dropped); the
+//! redundant posture drops nothing (its backoff budget outlasts the
+//! failover window); and goodput-priced $/Mtok orders
+//! zero-fault <= redundant <= unprotected.
+//!
+//! Run: `cargo bench --bench fig_resilience_tco`
+//! (`SWEEP_FAST=1` shrinks the day for smoke tests.)
+
+use std::collections::{BTreeMap, HashSet};
+
+use fp8_tco::analysis::disagg::{DisaggPlan, PoolSpec};
+use fp8_tco::analysis::parallel::ParallelismPlan;
+use fp8_tco::analysis::perfmodel::PrecisionMode;
+use fp8_tco::coordinator::cluster::{disagg_sim_cluster, sharded_sim_cluster};
+use fp8_tco::coordinator::{
+    FaultDriver, FaultKind, FaultPlan, Metrics, Pool, RetryPolicy, SeqId,
+};
+use fp8_tco::hwsim::spec::Device;
+use fp8_tco::tco::{assumed_server_price_usd, DayUsage, InfraModel, RackConfig};
+use fp8_tco::util::json::Json;
+use fp8_tco::util::par::SweepGrid;
+use fp8_tco::util::table::{f, Table};
+use fp8_tco::workload::llama::{by_name, LlamaConfig};
+use fp8_tco::workload::trace::{Request, TraceConfig, TraceGenerator};
+
+const SEED: u64 = 23;
+
+/// Warm-spare promotion delay (s): detection + KV-cache-less restart.
+const FAILOVER_S: f64 = 120.0;
+
+/// Operator-grade retry budget: victims park up to ~211 s across 12
+/// attempts, comfortably outlasting one failover window — so the
+/// redundant posture drops nothing, while the unprotected one (down
+/// for hours) still exhausts and sheds.
+fn patient_retry() -> RetryPolicy {
+    RetryPolicy { base_s: 0.5, cap_s: 30.0, max_attempts: 12 }
+}
+
+/// One measured posture of one cell.
+struct Posture {
+    drained: bool,
+    usd_per_mtok: f64,
+    wh_per_mtok: f64,
+    goodput_tokens: u64,
+    lost_tokens: u64,
+    retries: u64,
+    dropped: usize,
+    down_s: f64,
+    day_end_s: f64,
+    /// Measured mean per-chip draw per pool (decode slot zero on
+    /// colocated cells) — the zero-fault posture's pair becomes the
+    /// shared rack-provisioning draw for every rerun of its cell.
+    watts_mean: (f64, f64),
+}
+
+struct CellSetup {
+    model: &'static LlamaConfig,
+    dev: Device,
+    shape: ParallelismPlan,
+    disagg: bool,
+    qps: f64,
+}
+
+fn precision(dev: Device) -> PrecisionMode {
+    match dev {
+        Device::H100 => PrecisionMode::fp8_dynamic(),
+        _ => PrecisionMode::fp8_static(),
+    }
+}
+
+/// Output tokens of every request that was *not* dropped — the exact
+/// value `tokens_out - lost_tokens` must land on.
+fn expected_goodput(reqs: &[Request], dropped: &[SeqId]) -> u64 {
+    let dead: HashSet<SeqId> = dropped.iter().copied().collect();
+    reqs.iter()
+        .filter(|r| !dead.contains(&r.id))
+        .map(|r| r.output_len as u64)
+        .sum()
+}
+
+/// Run one posture of one cell and price it. `k_spares` replicas ride
+/// along as owned-but-gated capacity; `provision` is the per-pool
+/// per-chip draw the rack is packed for (the zero-fault posture's
+/// measured means, shared by all postures so capex is
+/// apples-to-apples; `None` means measure-and-use-own, which only the
+/// zero-fault posture does).
+#[allow(clippy::too_many_arguments)]
+fn run_posture(
+    infra: &InfraModel,
+    cell: &CellSetup,
+    reqs: &[Request],
+    day_s: f64,
+    plan: FaultPlan,
+    k_spares: usize,
+    provision: Option<(f64, f64)>,
+) -> Posture {
+    let chips = cell.shape.chips_per_instance();
+    let price = assumed_server_price_usd(cell.dev);
+    let prec = precision(cell.dev);
+    let faults = FaultDriver::new(plan, patient_retry());
+    if cell.disagg {
+        let dplan = DisaggPlan::new(
+            PoolSpec::new(cell.dev, prec, cell.shape),
+            PoolSpec::new(cell.dev, prec, cell.shape),
+        );
+        let mut c = disagg_sim_cluster(cell.model, &dplan)
+            .unwrap_or_else(|e| panic!("cell must fit: {e}"))
+            .with_faults(faults);
+        let drained = c.run(reqs.iter().cloned());
+        let day_end = day_s.max(c.makespan());
+        c.prefill.close_ledgers(day_end);
+        c.decode.close_ledgers(day_end);
+        let (pm, dm) = c.pool_metrics();
+        let mm = c.merged_metrics();
+        assert_eq!(
+            mm.tokens_out - mm.lost_tokens,
+            expected_goodput(reqs, &c.faults.dropped),
+            "token conservation across faults"
+        );
+        // Each pool is one server-equivalent sharing the merged
+        // goodput; the spare (when owned) shadows the prefill replica
+        // — the pool the engineered crash targets.
+        let pool_usage = |m: &Metrics| {
+            let mut u = DayUsage::from_fleet(m, chips, day_end);
+            u.tokens_out = mm.tokens_out;
+            u.lost_tokens = mm.lost_tokens;
+            u
+        };
+        let up = pool_usage(&pm);
+        let ud = pool_usage(&dm);
+        let (w_p, w_d) = provision.unwrap_or_else(|| (pm.watts_mean(), dm.watts_mean()));
+        let usd = infra.cost_per_mtok_resilient(price, chips, 1, k_spares, w_p, &up)
+            + infra.cost_per_mtok_resilient(price, chips, 1, 0, w_d, &ud);
+        let goodput = up.goodput_tokens();
+        let wh = (infra.wh_per_mtok_diurnal(chips, &up)
+            + infra.wh_per_mtok_diurnal(chips, &ud))
+            * up.tokens_out as f64
+            / goodput as f64;
+        Posture {
+            drained,
+            usd_per_mtok: usd,
+            wh_per_mtok: wh,
+            goodput_tokens: goodput,
+            lost_tokens: mm.lost_tokens,
+            retries: mm.retries,
+            dropped: c.faults.dropped.len(),
+            down_s: mm.down_s,
+            day_end_s: day_end,
+            watts_mean: (pm.watts_mean(), dm.watts_mean()),
+        }
+    } else {
+        let mut c = sharded_sim_cluster(cell.model, cell.dev, prec, cell.shape)
+            .unwrap_or_else(|e| panic!("cell must fit: {e}"))
+            .with_faults(faults);
+        let drained = c.run(reqs.iter().cloned());
+        let day_end = day_s.max(c.makespan());
+        c.router.close_ledgers(day_end);
+        let m = c.merged_metrics();
+        assert_eq!(
+            m.tokens_out - m.lost_tokens,
+            expected_goodput(reqs, &c.faults.dropped),
+            "token conservation across faults"
+        );
+        let u = DayUsage::from_fleet(&m, chips, day_end);
+        let w = provision.map_or_else(|| m.watts_mean(), |(w, _)| w);
+        let usd = infra.cost_per_mtok_resilient(price, chips, 1, k_spares, w, &u);
+        let goodput = u.goodput_tokens();
+        let wh =
+            infra.wh_per_mtok_diurnal(chips, &u) * u.tokens_out as f64 / goodput as f64;
+        Posture {
+            drained,
+            usd_per_mtok: usd,
+            wh_per_mtok: wh,
+            goodput_tokens: goodput,
+            lost_tokens: m.lost_tokens,
+            retries: m.retries,
+            dropped: c.faults.dropped.len(),
+            down_s: m.down_s,
+            day_end_s: day_end,
+            watts_mean: (m.watts_mean(), 0.0),
+        }
+    }
+}
+
+fn main() {
+    let fast = std::env::var("SWEEP_FAST").ok().as_deref() == Some("1");
+    let day_s = if fast { 600.0 } else { 3600.0 };
+    let crash_at = 0.25 * day_s;
+    // Hardware MTBF grid for the Poisson frontier: flaky to merely
+    // unreliable, scaled so even the fast day expects a crash or two.
+    let mtbfs: &[f64] = if fast { &[300.0] } else { &[900.0, 1800.0] };
+    let infra = InfraModel::new(RackConfig::a100_era());
+    let m8 = by_name("llama-8b").unwrap();
+    let m70 = by_name("llama-70b").unwrap();
+    // (model, device, shape, single-replica QPS): shapes from the
+    // diurnal bench, loads comfortably inside one replica's capacity.
+    let mut cells: Vec<CellSetup> = Vec::new();
+    for disagg in [false, true] {
+        cells.push(CellSetup { model: m8, dev: Device::H100, shape: ParallelismPlan::single(), disagg, qps: 2.0 });
+        cells.push(CellSetup { model: m8, dev: Device::Gaudi3, shape: ParallelismPlan::single(), disagg, qps: 2.0 });
+        cells.push(CellSetup { model: m70, dev: Device::H100, shape: ParallelismPlan::tp(2), disagg, qps: 0.4 });
+        cells.push(CellSetup { model: m70, dev: Device::Gaudi3, shape: ParallelismPlan::single(), disagg, qps: 0.4 });
+    }
+
+    // The crash targets the pool whose loss actually severs service:
+    // the lone primary replica (colocated) or the lone prefill replica
+    // (disaggregated — delivered decode legs keep streaming, new work
+    // cannot start).
+    let crash_pool = |disagg: bool| if disagg { Pool::Prefill } else { Pool::Primary };
+
+    struct CellOut {
+        label: String,
+        zero: Posture,
+        redundant: Posture,
+        unprotected: Posture,
+        by_mtbf: Vec<(f64, Posture)>,
+    }
+
+    let measured: Vec<CellOut> = SweepGrid::new((0..cells.len()).collect::<Vec<_>>())
+        .run(|_, ci| {
+            let cell = &cells[ci];
+            let mut gen = TraceGenerator::new(TraceConfig::chat(cell.qps), SEED);
+            let mut reqs: Vec<Request> = Vec::new();
+            loop {
+                let r = gen.next_request();
+                if r.arrival > day_s {
+                    break;
+                }
+                reqs.push(r);
+            }
+            let pool = crash_pool(cell.disagg);
+            let zero =
+                run_posture(&infra, cell, &reqs, day_s, FaultPlan::new(), 0, None);
+            // All postures pack the rack for the zero-fault draw; the
+            // reruns share the trace, so capex deltas are pure
+            // redundancy, never provisioning drift.
+            let provision = Some(zero.watts_mean);
+            let redundant = run_posture(
+                &infra,
+                cell,
+                &reqs,
+                day_s,
+                FaultPlan::new().crash_repair(pool, 0, crash_at, FAILOVER_S),
+                1,
+                provision,
+            );
+            let unprotected = run_posture(
+                &infra,
+                cell,
+                &reqs,
+                day_s,
+                FaultPlan::new().with(crash_at, FaultKind::Crash { pool, replica: 0 }),
+                0,
+                provision,
+            );
+            let by_mtbf: Vec<(f64, Posture)> = mtbfs
+                .iter()
+                .map(|&mtbf| {
+                    let plan = FaultPlan::new().poisson_crashes(
+                        SEED ^ ci as u64,
+                        pool,
+                        1,
+                        mtbf,
+                        FAILOVER_S,
+                        day_s,
+                    );
+                    (mtbf, run_posture(&infra, cell, &reqs, day_s, plan, 1, provision))
+                })
+                .collect();
+            let label = format!(
+                "{} {} {}",
+                cell.model.name,
+                cell.dev.name(),
+                if cell.disagg { "disagg" } else { "colocated" }
+            );
+            CellOut { label, zero, redundant, unprotected, by_mtbf }
+        });
+
+    for c in &measured {
+        assert!(
+            c.zero.drained && c.redundant.drained && c.unprotected.drained,
+            "{}: every posture must drain",
+            c.label
+        );
+        assert_eq!(c.zero.lost_tokens, 0, "{}: fault-free day lost tokens", c.label);
+        assert_eq!(c.zero.dropped, 0, "{}: fault-free day dropped requests", c.label);
+        assert_eq!(
+            c.redundant.dropped, 0,
+            "{}: failover outlasts the backoff budget, nothing drops",
+            c.label
+        );
+        assert!(c.redundant.retries >= 1, "{}: the crash must retry work", c.label);
+        assert!(
+            c.unprotected.goodput_tokens < c.zero.goodput_tokens,
+            "{}: a dead unprotected replica must shed goodput",
+            c.label
+        );
+        assert!(
+            c.zero.usd_per_mtok <= c.redundant.usd_per_mtok * (1.0 + 1e-9),
+            "{}: zero-fault {} must not exceed redundant {}",
+            c.label,
+            c.zero.usd_per_mtok,
+            c.redundant.usd_per_mtok
+        );
+        assert!(
+            c.redundant.usd_per_mtok <= c.unprotected.usd_per_mtok * (1.0 + 1e-9),
+            "{}: redundant {} must not exceed unprotected {}",
+            c.label,
+            c.redundant.usd_per_mtok,
+            c.unprotected.usd_per_mtok
+        );
+        for (mtbf, p) in &c.by_mtbf {
+            assert!(p.drained, "{} mtbf {mtbf}: must drain", c.label);
+            assert!(
+                c.zero.usd_per_mtok <= p.usd_per_mtok * (1.0 + 1e-9),
+                "{} mtbf {mtbf}: faults + a spare cannot beat the clean day",
+                c.label
+            );
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. RESILIENCE-TCO — goodput-priced $/Mtok: zero-fault vs N+1 warm-spare \
+         failover vs unprotected crash, plus a Poisson MTBF grid",
+        &[
+            "cell",
+            "posture",
+            "goodput Mtok",
+            "lost tok",
+            "retries",
+            "dropped",
+            "down s",
+            "day end s",
+            "Wh/Mtok",
+            "$/Mtok",
+        ],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    let emit = |t: &mut Table, label: &str, posture: &str, mtbf: Option<f64>, p: &Posture,
+                records: &mut Vec<Json>| {
+        let mut rec = BTreeMap::new();
+        rec.insert("cell".into(), Json::Str(label.into()));
+        rec.insert("posture".into(), Json::Str(posture.into()));
+        if let Some(m) = mtbf {
+            rec.insert("mtbf_s".into(), Json::Num(m));
+        }
+        rec.insert("feasible".into(), Json::Bool(p.drained));
+        rec.insert("goodput_tokens".into(), Json::Num(p.goodput_tokens as f64));
+        rec.insert("lost_tokens".into(), Json::Num(p.lost_tokens as f64));
+        rec.insert("retries".into(), Json::Num(p.retries as f64));
+        rec.insert("dropped".into(), Json::Num(p.dropped as f64));
+        rec.insert("down_s".into(), Json::Num(p.down_s));
+        rec.insert("day_end_s".into(), Json::Num(p.day_end_s));
+        rec.insert("wh_per_mtok".into(), Json::Num(p.wh_per_mtok));
+        rec.insert("usd_per_mtok".into(), Json::Num(p.usd_per_mtok));
+        records.push(Json::Obj(rec));
+        t.row(vec![
+            label.into(),
+            match mtbf {
+                Some(m) => format!("{posture} mtbf={m:.0}s"),
+                None => posture.into(),
+            },
+            f(p.goodput_tokens as f64 / 1e6, 3),
+            format!("{}", p.lost_tokens),
+            format!("{}", p.retries),
+            format!("{}", p.dropped),
+            f(p.down_s, 0),
+            f(p.day_end_s, 0),
+            f(p.wh_per_mtok, 1),
+            f(p.usd_per_mtok, 3),
+        ]);
+    };
+    for c in &measured {
+        emit(&mut t, &c.label, "zero-fault", None, &c.zero, &mut records);
+        emit(&mut t, &c.label, "redundant", None, &c.redundant, &mut records);
+        emit(&mut t, &c.label, "unprotected", None, &c.unprotected, &mut records);
+        for (mtbf, p) in &c.by_mtbf {
+            emit(&mut t, &c.label, "poisson", Some(*mtbf), p, &mut records);
+        }
+    }
+    t.print();
+
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/BENCH_resilience_tco.json");
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("resilience_tco".into()));
+    root.insert("fast".into(), Json::Bool(fast));
+    root.insert("day_s".into(), Json::Num(day_s));
+    root.insert("failover_s".into(), Json::Num(FAILOVER_S));
+    root.insert("crash_at_s".into(), Json::Num(crash_at));
+    root.insert(
+        "mtbf_grid_s".into(),
+        Json::Arr(mtbfs.iter().map(|&m| Json::Num(m)).collect()),
+    );
+    root.insert("cells".into(), Json::Arr(records));
+    match std::fs::write(&path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "(every posture owns the same serving hardware; the redundant rows add one\n \
+         warm spare's capex + rack share, the unprotected rows pay with goodput —\n \
+         dropped requests and a day that ends when the backlog does, not on time)"
+    );
+}

@@ -83,6 +83,13 @@ pub struct StepConfig {
     /// KV-cache element bytes (2.0 = BF16, 1.0 = FP8 KV).
     pub kv_bytes: f64,
     pub power_cap: PowerCap,
+    /// Effective HBM bandwidth multiplier in (0, 1] — fault
+    /// injection's degraded mode (thermal throttling, partial-HBM
+    /// fault). Applies to the KV-cache streaming term, the HBM-bound
+    /// path of a decode step; compute-bound GEMM time is unaffected.
+    /// `1.0` (healthy) is a bit-exact identity: `x * 1.0 == x` in
+    /// IEEE 754, so un-derated runs reproduce pre-fault-layer bits.
+    pub hbm_derate_frac: f64,
 }
 
 impl StepConfig {
@@ -95,7 +102,14 @@ impl StepConfig {
             microbatches: 0,
             kv_bytes: 2.0,
             power_cap: PowerCap::None,
+            hbm_derate_frac: 1.0,
         }
+    }
+
+    pub fn with_hbm_derate(mut self, frac: f64) -> Self {
+        debug_assert!(frac > 0.0 && frac <= 1.0, "derate {frac} outside (0, 1]");
+        self.hbm_derate_frac = frac;
+        self
     }
 
     pub fn with_cap(mut self, watts: f64) -> Self {
@@ -212,7 +226,8 @@ fn decode_work(m: &LlamaConfig, cfg: &StepConfig, batch: usize, seq: usize) -> D
     // Per-chip KV shard bytes = 2 * b * s * kv_dim * kv_bytes.
     let kv_bytes_layer =
         2.0 * batch as f64 * seq as f64 * kv_dim as f64 * cfg.kv_bytes;
-    let t_kv_layer = kv_bytes_layer / (spec.hbm_bw * calib::hbm_stream_eff(cfg.device));
+    let t_kv_layer = kv_bytes_layer
+        / (spec.hbm_bw * calib::hbm_stream_eff(cfg.device) * cfg.hbm_derate_frac);
     let t_kv = t_kv_layer * m.layers as f64;
 
     // --- softmax exponentials (§5.7): b*s*heads per layer; SFU

@@ -56,10 +56,15 @@ impl CacheStats {
 /// [`StepCostCache::MAX_ENTRIES`] (lookups still count) so an
 /// adversarially diverse trace cannot balloon resident memory; hits
 /// simply stop growing past that point.
+/// Key: `(batch, len, hbm_derate_frac bits)` — the derate joins every
+/// key so degraded-mode steps can never serve a breakdown computed at
+/// healthy bandwidth (cache-exact under fault injection).
+type StepKey = (usize, usize, u64);
+
 #[derive(Debug, Default)]
 pub struct StepCostCache {
-    prefill: HashMap<(usize, usize), StepBreakdown>,
-    decode: HashMap<(usize, usize), StepBreakdown>,
+    prefill: HashMap<StepKey, StepBreakdown>,
+    decode: HashMap<StepKey, StepBreakdown>,
     hits: u64,
     misses: u64,
 }
@@ -78,10 +83,10 @@ impl StepCostCache {
     }
 
     fn lookup<F>(
-        map: &mut HashMap<(usize, usize), StepBreakdown>,
+        map: &mut HashMap<StepKey, StepBreakdown>,
         hits: &mut u64,
         misses: &mut u64,
-        key: (usize, usize),
+        key: StepKey,
         compute: F,
     ) -> StepBreakdown
     where
@@ -141,6 +146,12 @@ pub trait ExecutionBackend {
         None
     }
 
+    /// Degraded mode (fault injection): multiply the device's HBM
+    /// bandwidth by `factor` (0 < factor <= 1) for subsequent steps;
+    /// `1.0` restores healthy behaviour bit-exactly. Default: ignored
+    /// (backends running real compute cannot throttle themselves).
+    fn set_bw_derate(&mut self, _factor: f64) {}
+
     /// Device draw while this backend sits idle between steps (W).
     /// The engine bills the gaps between steps at this rate
     /// ([`Metrics::record_idle`](super::metrics::Metrics::record_idle)),
@@ -163,7 +174,10 @@ pub trait ExecutionBackend {
 /// `model`/`cfg` are private on purpose: the cache key assumes both
 /// are fixed for the backend's lifetime, so mutating them in place
 /// would silently serve breakdowns computed under the old config.
-/// Build a new backend for a new configuration.
+/// Build a new backend for a new configuration. The one sanctioned
+/// exception is the HBM derate (fault injection's degraded mode),
+/// which is part of every cache key — see
+/// [`ExecutionBackend::set_bw_derate`].
 pub struct SimBackend {
     model: &'static LlamaConfig,
     cfg: StepConfig,
@@ -188,6 +202,11 @@ impl SimBackend {
     pub fn set_cache(&mut self, on: bool) {
         self.cache = if on { Some(StepCostCache::new()) } else { None };
     }
+
+    /// The derate component of the step-cost cache key.
+    fn derate_bits(&self) -> u64 {
+        self.cfg.hbm_derate_frac.to_bits()
+    }
 }
 
 impl ExecutionBackend for SimBackend {
@@ -198,7 +217,7 @@ impl ExecutionBackend for SimBackend {
         // Batched prefill of mixed lengths: model as max-length batch
         // (padding, the common production compromise).
         let max_len = seqs.iter().map(|&(_, l)| l).max().unwrap_or(1);
-        let key = (seqs.len(), max_len);
+        let key = (seqs.len(), max_len, self.derate_bits());
         let bd = match self.cache.as_mut() {
             Some(c) => StepCostCache::lookup(
                 &mut c.prefill,
@@ -220,7 +239,7 @@ impl ExecutionBackend for SimBackend {
         // depend only on b; attention on sum of s_i).
         let avg: usize =
             seqs.iter().map(|&(_, l)| l).sum::<usize>() / seqs.len();
-        let key = (seqs.len(), avg.max(1));
+        let key = (seqs.len(), avg.max(1), self.derate_bits());
         let bd = match self.cache.as_mut() {
             Some(c) => StepCostCache::lookup(
                 &mut c.decode,
@@ -249,7 +268,7 @@ impl ExecutionBackend for SimBackend {
             return Some(StepResult::default());
         }
         let avg = total_context_tokens / batch;
-        let key = (batch, avg.max(1));
+        let key = (batch, avg.max(1), self.derate_bits());
         let bd = match self.cache.as_mut() {
             Some(c) => StepCostCache::lookup(
                 &mut c.decode,
@@ -265,6 +284,19 @@ impl ExecutionBackend for SimBackend {
 
     fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Degraded mode: the derate is part of every cache key (see
+    /// [`StepKey`]), so mutating it here cannot serve stale healthy
+    /// breakdowns — and setting it back to exactly `1.0` hits the same
+    /// keys (and bits) a never-derated backend produces, because
+    /// `x / 1.0` is an IEEE 754 identity.
+    fn set_bw_derate(&mut self, factor: f64) {
+        debug_assert!(
+            factor > 0.0 && factor <= 1.0,
+            "HBM derate must be in (0, 1], got {factor}"
+        );
+        self.cfg.hbm_derate_frac = factor;
     }
 
     /// Idle draw from the device spec. Busy draw is already
@@ -386,6 +418,49 @@ mod tests {
         plain.set_cache(false);
         let c = plain.decode_uniform(specs.len(), total).unwrap();
         assert_eq!(c.seconds.to_bits(), a.seconds.to_bits());
+    }
+
+    #[test]
+    fn bw_derate_slows_steps_and_restores_bit_identically() {
+        let mut healthy = backend();
+        let mut faulty = backend();
+        let specs: Vec<(SeqId, usize)> = (0..8).map(|i| (i, 2048)).collect();
+        let base = healthy.decode(&specs);
+        faulty.set_bw_derate(0.5);
+        let slow = faulty.decode(&specs);
+        assert!(
+            slow.seconds > base.seconds,
+            "halved HBM bandwidth must slow decode: {} vs {}",
+            slow.seconds,
+            base.seconds
+        );
+        // Recovery: derate back to 1.0 reproduces healthy bits — and
+        // misses the derated entry (distinct key), then hits the
+        // healthy one on repeat.
+        faulty.set_bw_derate(1.0);
+        let back = faulty.decode(&specs);
+        assert_eq!(back.seconds.to_bits(), base.seconds.to_bits());
+        assert_eq!(back.watts.to_bits(), base.watts.to_bits());
+        let again = faulty.decode(&specs);
+        assert_eq!(again.seconds.to_bits(), base.seconds.to_bits());
+        assert_eq!(
+            faulty.cache_stats().unwrap(),
+            CacheStats { hits: 1, misses: 2 },
+            "derated and healthy steps occupy distinct cache keys"
+        );
+        // Prefill is compute-bound (token-parallel GEMMs): the HBM
+        // derate models the KV-streaming path and leaves prefill bits
+        // untouched — it only shows up in prefill's cache key.
+        let mut pf = backend();
+        let p_base = pf.prefill(&[(0, 4096)]);
+        pf.set_bw_derate(0.25);
+        let p_same = pf.prefill(&[(0, 4096)]);
+        assert_eq!(p_same.seconds.to_bits(), p_base.seconds.to_bits());
+        assert_eq!(
+            pf.cache_stats().unwrap().misses,
+            2,
+            "distinct keys even when the value coincides"
+        );
     }
 
     #[test]

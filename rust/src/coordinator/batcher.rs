@@ -153,6 +153,18 @@ impl Batcher {
         self.queue.len() + self.batch_queue.len()
     }
 
+    /// Clear every lane and the decode set (replica crash: all resident
+    /// work is lost). Returns the drained ids in a deterministic order
+    /// — interactive lane front-to-back, then the batch lane, then the
+    /// decode set in ascending-id order — so the crash handler can
+    /// schedule retries reproducibly.
+    pub fn reset(&mut self) -> Vec<SeqId> {
+        let mut ids: Vec<SeqId> = self.queue.drain(..).collect();
+        ids.extend(self.batch_queue.drain(..));
+        ids.extend(std::mem::take(&mut self.decoding));
+        ids
+    }
+
     /// Number of sequences currently in the decode set.
     pub fn decoding_len(&self) -> usize {
         self.decoding.len()

@@ -80,6 +80,26 @@ impl EngineConfig {
     }
 }
 
+/// What a replica crash destroyed ([`Engine::crash`]): the ids whose
+/// requests died resident on the replica (the fault driver re-submits
+/// them through the retry queue) and the token accounting the crash
+/// charged to [`Metrics::lost_tokens`] / \
+/// [`Metrics::recompute_tokens_wasted`].
+#[derive(Debug, Default)]
+pub struct LostWork {
+    /// Sequences that died unfinished (queued, decoding, preempted, or
+    /// a finished prefill leg whose hand-off had not been harvested) —
+    /// in a deterministic order, so retry scheduling is reproducible.
+    pub ids: Vec<SeqId>,
+    /// Output tokens those sequences had already delivered to their
+    /// streams — produced goodput that can never complete.
+    pub lost_tokens: u64,
+    /// Context tokens (prompt + generated) whose compute must be
+    /// redone from scratch on retry (sequences that never prefilled
+    /// wasted nothing).
+    pub recompute_tokens_wasted: u64,
+}
+
 pub struct Engine<B: ExecutionBackend> {
     pub backend: B,
     pub metrics: Metrics,
@@ -339,6 +359,111 @@ impl<B: ExecutionBackend> Engine<B> {
         if t > self.clock {
             self.metrics.record_gated(t - self.clock);
             self.clock = t;
+        }
+    }
+
+    /// Close the ledger at `t` with the replica *crashed / under
+    /// repair*: the gap draws 0 W and serves nothing. Down time is the
+    /// fourth ledger arm — with fault injection in play
+    /// `span + idle_s + gated_s + down_s` tiles the closed timeline
+    /// exactly. No-op when `t <= clock`.
+    pub fn close_ledger_down(&mut self, t: f64) {
+        if t > self.clock {
+            self.metrics.record_down(t - self.clock);
+            self.clock = t;
+        }
+    }
+
+    /// Thread a bandwidth derate (degraded mode: thermal throttling,
+    /// partial-HBM fault) through to the backend's step-cost model.
+    /// `1.0` restores healthy full-bandwidth behaviour.
+    pub fn set_bw_derate(&mut self, factor: f64) {
+        self.backend.set_bw_derate(factor);
+    }
+
+    /// Kill this replica at `t_s` (fault injection): everything
+    /// resident dies with the HBM — queued, decoding and preempted
+    /// sequences, plus finished prefill legs whose hand-off has not
+    /// been harvested yet. Their ids come back in [`LostWork`] in a
+    /// deterministic order so the fault driver can schedule retries
+    /// reproducibly; delivered tokens are charged to
+    /// [`Metrics::lost_tokens`] and already-computed context to
+    /// [`Metrics::recompute_tokens_wasted`]. The KV allocator is
+    /// rebuilt empty. Harvested hand-off legs parked in the archive
+    /// with in-flight transfers are NOT revoked here — delivery
+    /// commits the stream — but the caller must suppress their pending
+    /// transfer/release events, because their block ids refer to the
+    /// pre-crash allocator.
+    ///
+    /// Bills the pre-crash idle tail up to `t_s` first (a busy
+    /// engine's clock is already at or past `t_s` and keeps its served
+    /// span).
+    pub fn crash(&mut self, t_s: f64) -> LostWork {
+        self.close_ledger(t_s);
+        let mut lost = LostWork::default();
+        // Lane order (interactive front-to-back, batch lane, decode
+        // set ascending) is the reproducible victim order. Lanes prune
+        // lazily, so ids without a live sequence are skipped.
+        for id in self.batcher.reset() {
+            let Some(seq) = self.seqs.remove(&id) else {
+                continue;
+            };
+            Self::charge_lost(&seq, &mut lost, id);
+        }
+        // Unharvested hand-offs live in the archive but their KV (and
+        // the first token in the not-yet-started transfer) is gone.
+        for id in self.take_handoffs() {
+            let Some(seq) = self.archive.remove(&id) else {
+                continue;
+            };
+            Self::charge_lost(&seq, &mut lost, id);
+        }
+        // Defensive: the lanes + decode set + handoffs cover every
+        // live sequence by construction; if an invariant ever slips,
+        // drain the remainder in sorted-id order rather than leak it.
+        if !self.seqs.is_empty() {
+            // simlint: allow(determinism) -- ids are sorted before use
+            let mut rest: Vec<SeqId> = self.seqs.keys().copied().collect();
+            rest.sort_unstable();
+            for id in rest {
+                if let Some(seq) = self.seqs.remove(&id) {
+                    Self::charge_lost(&seq, &mut lost, id);
+                }
+            }
+        }
+        for id in &lost.ids {
+            self.backend.release(*id);
+        }
+        self.active = 0;
+        self.alloc = BlockAllocator::new(self.alloc.config().clone());
+        self.metrics.lost_tokens += lost.lost_tokens;
+        self.metrics.recompute_tokens_wasted += lost.recompute_tokens_wasted;
+        lost
+    }
+
+    fn charge_lost(seq: &Sequence, lost: &mut LostWork, id: SeqId) {
+        lost.lost_tokens += seq.delivered as u64;
+        if seq.first_token_at.is_some() {
+            // Prefill ran: the whole resident context is compute the
+            // retry redoes from scratch. Never-prefilled queue entries
+            // wasted nothing.
+            lost.recompute_tokens_wasted += seq.context_len() as u64;
+        }
+        lost.ids.push(id);
+    }
+
+    /// Fault-layer accounting for a harvested hand-off leg whose
+    /// in-flight KV transfer died with this (source) replica before
+    /// delivery: charge its streamed token and recomputed context, and
+    /// drop the parked archive entry — its block ids refer to the
+    /// pre-crash allocator and must never be released into the rebuilt
+    /// one. No-op for unknown ids (already delivered or never parked).
+    pub fn void_migration(&mut self, id: SeqId) {
+        if let Some(seq) = self.archive.remove(&id) {
+            self.metrics.lost_tokens += seq.delivered as u64;
+            if seq.first_token_at.is_some() {
+                self.metrics.recompute_tokens_wasted += seq.context_len() as u64;
+            }
         }
     }
 
@@ -796,6 +921,61 @@ mod tests {
         assert_eq!(e.metrics.requests_done, 20);
         assert_eq!(e.metrics.tokens_out, 20 * 32);
         assert_eq!(e.preemptions(), 0);
+    }
+
+    #[test]
+    fn crash_loses_resident_work_and_resubmit_reconserves() {
+        let mut e = engine(10_000);
+        e.submit(&req(0, 0.0, 64, 400));
+        e.submit(&req(1, 0.0, 64, 400));
+        // Serve partway: both sequences are mid-decode at the crash.
+        e.step_until(0.5, 10_000);
+        assert!(e.pending() > 0, "long decodes outlive 0.5s");
+        let streamed = e.metrics.tokens_out;
+        assert!(streamed > 0, "some tokens delivered before the crash");
+        let t_crash = e.clock();
+        let lost = e.crash(t_crash);
+        assert_eq!(lost.ids, vec![0, 1], "deterministic victim order");
+        // Every token streamed so far belonged to the two victims.
+        assert_eq!(lost.lost_tokens, streamed);
+        assert!(lost.recompute_tokens_wasted >= 2 * 64, "both prefills wasted");
+        assert_eq!(e.metrics.lost_tokens, lost.lost_tokens);
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.kv_utilization(), 0.0, "allocator rebuilt empty");
+        // Repair + retry: recompute-from-scratch semantics.
+        let t_up = t_crash + 3.0;
+        e.close_ledger_down(t_up);
+        assert_eq!(e.metrics.down_s, 3.0);
+        for id in &lost.ids {
+            e.submit(&req(*id, t_up, 64, 400));
+        }
+        assert!(e.run_to_completion(100_000));
+        assert_eq!(e.metrics.requests_done, 2);
+        // Goodput excludes the crashed attempts' streamed tokens.
+        assert_eq!(e.metrics.tokens_out - e.metrics.lost_tokens, 2 * 400);
+        // Four-arm ledger tiles the closed timeline exactly.
+        let m = &e.metrics;
+        let covered = m.span + m.idle_s + m.gated_s + m.down_s;
+        assert!(
+            (covered - e.clock()).abs() < 1e-9,
+            "ledger arms {covered} != makespan {}",
+            e.clock()
+        );
+    }
+
+    #[test]
+    fn crash_on_empty_engine_is_benign() {
+        let mut e = engine(100);
+        e.submit(&req(0, 0.0, 32, 4));
+        assert!(e.run_to_completion(1000));
+        let t = e.clock();
+        let lost = e.crash(t + 1.0);
+        assert!(lost.ids.is_empty());
+        assert_eq!(lost.lost_tokens, 0);
+        assert_eq!(e.metrics.requests_done, 1, "finished work survives");
+        // The pre-crash gap was powered idle time, not down time.
+        assert!((e.clock() - (t + 1.0)).abs() < 1e-12);
+        assert_eq!(e.metrics.down_s, 0.0);
     }
 
     #[test]

@@ -1,0 +1,566 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md §14).
+//!
+//! A [`FaultPlan`] is a *sorted schedule* of fault events compiled
+//! up-front — seeded draws (Poisson crash arrivals via
+//! [`crate::util::rng::Rng::exp`]) happen at plan-construction time
+//! only, so the cluster hot path replays a fixed event list and stays
+//! bit-identical between the stepper and the event-driven fast-forward
+//! (the cluster loops clamp every advancement target at the next fault
+//! instant, making each fault a window boundary in both modes).
+//!
+//! The [`FaultDriver`] owns the schedule cursor plus the
+//! capped-exponential-backoff retry queue for work lost to crashes:
+//! victims are re-submitted from scratch (vLLM-style recompute — the
+//! crashed replica's KV is gone, so there is nothing to resume), their
+//! already-streamed tokens counted in `Metrics::lost_tokens` and their
+//! destroyed context in `Metrics::recompute_tokens_wasted`.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::request::SeqId;
+use crate::util::rng::Rng;
+use crate::workload::trace::Request;
+
+/// Which pool a replica-scoped fault targets. Colocated clusters only
+/// have [`Pool::Primary`]; a `DisaggCluster` adds the prefill/decode
+/// pools; `PhaseAffinityCluster` uses all three (Primary = its
+/// colocated pool). Events aimed at a pool the cluster shape does not
+/// have are ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Pool {
+    Primary,
+    Prefill,
+    Decode,
+}
+
+/// One kind of injected fault. Replica-scoped kinds carry their target;
+/// link-scoped kinds apply to the cluster's KV-migration fabric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica dies: resident KV lost, in-flight sequences bounced
+    /// to the retry queue, ledger switches to the 0 W `down_s` arm.
+    Crash { pool: Pool, replica: usize },
+    /// A crashed replica comes back empty (repair completed). A repair
+    /// for a replica that is not down is ignored.
+    Repair { pool: Pool, replica: usize },
+    /// Degraded mode: the replica keeps serving but its HBM bandwidth
+    /// is multiplied by `factor` (0 < factor <= 1) — thermal
+    /// throttling / partial-HBM fault.
+    Derate { pool: Pool, replica: usize, factor: f64 },
+    /// Degraded mode ends: bandwidth derate back to 1.0 (bit-exact
+    /// identity, so post-repair trajectories match a healthy engine).
+    DerateEnd { pool: Pool, replica: usize },
+    /// The KV-migration link goes dark: chunked transfers in flight
+    /// stall and resume when the link returns.
+    LinkDown,
+    /// The KV-migration link recovers.
+    LinkUp,
+}
+
+/// A fault at a virtual-time instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t_s: f64,
+    pub kind: FaultKind,
+}
+
+/// Capped exponential backoff for crash retries: attempt `k` (0-based)
+/// waits `min(base_s * 2^k, cap_s)`; after `max_attempts` the request
+/// is dropped (counted by the driver, surfaced in the run report).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    pub base_s: f64,
+    pub cap_s: f64,
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { base_s: 0.05, cap_s: 2.0, max_attempts: 8 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff delay before attempt `attempt` (0-based).
+    pub fn delay_s(&self, attempt: u32) -> f64 {
+        let exp = attempt.min(52); // 2^53 saturates f64 integer range
+        (self.base_s * (1u64 << exp) as f64).min(self.cap_s)
+    }
+}
+
+/// A sorted, replayable schedule of fault events. Construction is the
+/// only place randomness may enter (seeded, via `util::rng`); the
+/// driver consumes the schedule monotonically.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan { events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Add one event (builder-style). Events may be pushed in any
+    /// order; the plan is sorted on [`FaultPlan::compile`] / first use.
+    pub fn with(mut self, t_s: f64, kind: FaultKind) -> Self {
+        self.push(t_s, kind);
+        self
+    }
+
+    pub fn push(&mut self, t_s: f64, kind: FaultKind) {
+        debug_assert!(t_s.is_finite() && t_s >= 0.0, "fault at t={t_s}");
+        self.events.push(FaultEvent { t_s, kind });
+    }
+
+    /// Crash `replica` at `t_s` and repair it `repair_s` later.
+    pub fn crash_repair(self, pool: Pool, replica: usize, t_s: f64, repair_s: f64) -> Self {
+        self.with(t_s, FaultKind::Crash { pool, replica })
+            .with(t_s + repair_s, FaultKind::Repair { pool, replica })
+    }
+
+    /// Derate `replica`'s HBM bandwidth to `factor` over
+    /// `[t_s, t_s + dur_s)`.
+    pub fn derate_window(
+        self,
+        pool: Pool,
+        replica: usize,
+        t_s: f64,
+        dur_s: f64,
+        factor: f64,
+    ) -> Self {
+        debug_assert!(factor > 0.0 && factor <= 1.0, "derate factor {factor}");
+        self.with(t_s, FaultKind::Derate { pool, replica, factor })
+            .with(t_s + dur_s, FaultKind::DerateEnd { pool, replica })
+    }
+
+    /// KV-link outage over `[t_s, t_s + dur_s)`.
+    pub fn link_outage(self, t_s: f64, dur_s: f64) -> Self {
+        self.with(t_s, FaultKind::LinkDown).with(t_s + dur_s, FaultKind::LinkUp)
+    }
+
+    /// Seeded Poisson crash/repair process: exponential inter-crash
+    /// gaps at `1/mtbf_s`, each crash repaired after `repair_s`,
+    /// round-robin over `pool`'s `replicas`, within `[0, horizon_s)`.
+    /// All draws happen here, at construction.
+    pub fn poisson_crashes(
+        mut self,
+        seed: u64,
+        pool: Pool,
+        replicas: usize,
+        mtbf_s: f64,
+        repair_s: f64,
+        horizon_s: f64,
+    ) -> Self {
+        debug_assert!(replicas > 0 && mtbf_s > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut t_s = 0.0;
+        let mut victim = 0usize;
+        loop {
+            t_s += rng.exp(1.0 / mtbf_s);
+            if t_s >= horizon_s {
+                break;
+            }
+            self = self.crash_repair(pool, victim, t_s, repair_s);
+            victim = (victim + 1) % replicas;
+        }
+        self
+    }
+
+    /// Sort into the deterministic replay order: by time, ties broken
+    /// by a stable kind rank (repairs before crashes at the same
+    /// instant, so a zero-length outage is a no-op rather than a
+    /// permanently-down replica) and then target identity.
+    pub fn compile(mut self) -> Self {
+        // Construction debug_asserts finiteness; a NaN smuggled past a
+        // release build sorts as equal rather than aborting the run.
+        self.events.sort_by(|a, b| {
+            (a.t_s, rank(&a.kind), target(&a.kind))
+                .partial_cmp(&(b.t_s, rank(&b.kind), target(&b.kind)))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        self
+    }
+
+    /// The link outage windows `[down, up)` implied by the plan, for
+    /// shifting chunked-transfer schedules. An unclosed `LinkDown`
+    /// extends to infinity. Assumes a compiled (sorted) plan.
+    pub fn link_outages(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut down_at: Option<f64> = None;
+        for ev in &self.events {
+            match ev.kind {
+                FaultKind::LinkDown => {
+                    if down_at.is_none() {
+                        down_at = Some(ev.t_s);
+                    }
+                }
+                FaultKind::LinkUp => {
+                    if let Some(a) = down_at.take() {
+                        if ev.t_s > a {
+                            out.push((a, ev.t_s));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some(a) = down_at {
+            out.push((a, f64::INFINITY));
+        }
+        out
+    }
+}
+
+/// Rank for same-instant ordering: recoveries first, then degradations,
+/// then crashes — so `crash@t, repair@t` (a zero-length outage) leaves
+/// the replica up, matching the half-open `[down, up)` convention.
+fn rank(k: &FaultKind) -> u8 {
+    match k {
+        FaultKind::LinkUp => 0,
+        FaultKind::Repair { .. } => 1,
+        FaultKind::DerateEnd { .. } => 2,
+        FaultKind::Derate { .. } => 3,
+        FaultKind::LinkDown => 4,
+        FaultKind::Crash { .. } => 5,
+    }
+}
+
+fn target(k: &FaultKind) -> (u8, usize) {
+    match k {
+        FaultKind::Crash { pool, replica }
+        | FaultKind::Repair { pool, replica }
+        | FaultKind::Derate { pool, replica, .. }
+        | FaultKind::DerateEnd { pool, replica } => (*pool as u8, *replica),
+        FaultKind::LinkDown | FaultKind::LinkUp => (u8::MAX, 0),
+    }
+}
+
+/// What the driver hands the cluster loop next: either the next
+/// scheduled fault, or a due retry of a crash victim.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultTick {
+    Fault(FaultEvent),
+    Retry { t_s: f64, id: SeqId },
+}
+
+impl FaultTick {
+    pub fn t_s(&self) -> f64 {
+        match self {
+            FaultTick::Fault(ev) => ev.t_s,
+            FaultTick::Retry { t_s, .. } => *t_s,
+        }
+    }
+}
+
+/// Schedule cursor + retry queue, consumed by a cluster loop. With an
+/// empty plan the driver is inert: `is_active()` is false from the
+/// first instant, every clamp is `min(t, ∞) = t`, and `register` is a
+/// no-op — the run is structurally identical to a fault-free one,
+/// which is what pins empty-plan bit-identity.
+#[derive(Debug, Clone)]
+pub struct FaultDriver {
+    plan: FaultPlan,
+    cursor: usize,
+    retry: RetryPolicy,
+    /// Due retries, ordered (t, id): ties resubmit in id order.
+    queue: BinaryHeap<Reverse<(OrdF64, SeqId)>>,
+    /// Original requests of everything ever submitted while faults
+    /// were still possible — point lookups only (no iteration), so the
+    /// map's order never feeds the schedule.
+    registry: HashMap<SeqId, Request>,
+    attempts: HashMap<SeqId, u32>,
+    /// Victims that exhausted `max_attempts` and were dropped.
+    pub dropped: Vec<SeqId>,
+    /// Retries handed out (cluster loops also bump the serving
+    /// engine's `Metrics::retries`; this is the driver-side total).
+    pub retries_scheduled: u64,
+}
+
+/// Total order for finite f64 retry instants (no NaNs by construction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Retry instants are finite by construction (backoff sums of
+        // finite delays); NaN compares equal rather than panicking.
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+impl FaultDriver {
+    /// A driver that never fires: the fault-free fast path.
+    pub fn none() -> Self {
+        FaultDriver::new(FaultPlan::new(), RetryPolicy::default())
+    }
+
+    pub fn new(plan: FaultPlan, retry: RetryPolicy) -> Self {
+        FaultDriver {
+            plan: plan.compile(),
+            cursor: 0,
+            retry,
+            queue: BinaryHeap::new(),
+            registry: HashMap::new(),
+            attempts: HashMap::new(),
+            dropped: Vec::new(),
+            retries_scheduled: 0,
+        }
+    }
+
+    /// Anything left that can still perturb the run? Once false it
+    /// stays false: the registry stops growing and the loops stop
+    /// clamping on `next_event_time()`.
+    pub fn is_active(&self) -> bool {
+        self.cursor < self.plan.events.len() || !self.queue.is_empty()
+    }
+
+    pub fn has_retries(&self) -> bool {
+        !self.queue.is_empty()
+    }
+
+    /// Instant of the next fault or retry (`∞` when neither remains).
+    /// Cluster loops clamp every engine-advancement target here, which
+    /// is what makes fault instants fast-forward window boundaries.
+    pub fn next_event_time(&self) -> f64 {
+        let t_fault = self
+            .plan
+            .events
+            .get(self.cursor)
+            .map_or(f64::INFINITY, |ev| ev.t_s);
+        let t_retry = self.queue.peek().map_or(f64::INFINITY, |Reverse((t, _))| t.0);
+        t_fault.min(t_retry)
+    }
+
+    /// Remember a request so a crash can resubmit it from scratch.
+    /// No-op once the driver is inert, keeping fault-free runs free of
+    /// bookkeeping.
+    pub fn register(&mut self, r: &Request) {
+        if self.is_active() {
+            self.registry.insert(r.id, r.clone());
+        }
+    }
+
+    /// Pop the next due tick at or before `t_s` (faults before retries
+    /// at the same instant — a retry must not land on a replica that
+    /// crashes in the same breath without the crash being applied
+    /// first; the resubmission then simply re-queues it).
+    pub fn next_due(&mut self, t_s: f64) -> Option<FaultTick> {
+        let t_fault = self
+            .plan
+            .events
+            .get(self.cursor)
+            .map_or(f64::INFINITY, |ev| ev.t_s);
+        let t_retry = self.queue.peek().map_or(f64::INFINITY, |Reverse((t, _))| t.0);
+        if t_fault.min(t_retry) > t_s {
+            return None;
+        }
+        if t_fault <= t_retry {
+            let ev = self.plan.events[self.cursor];
+            self.cursor += 1;
+            Some(FaultTick::Fault(ev))
+        } else {
+            let Some(Reverse((t, id))) = self.queue.pop() else {
+                debug_assert!(false, "peek said non-empty");
+                return None;
+            };
+            Some(FaultTick::Retry { t_s: t.0, id })
+        }
+    }
+
+    /// Queue a crash victim for retry with capped exponential backoff.
+    /// Returns false (and records the drop) once `max_attempts` is
+    /// exhausted.
+    pub fn schedule_retry(&mut self, id: SeqId, now_s: f64) -> bool {
+        let attempt = *self.attempts.get(&id).unwrap_or(&0);
+        if attempt >= self.retry.max_attempts {
+            self.dropped.push(id);
+            return false;
+        }
+        self.attempts.insert(id, attempt + 1);
+        let due = now_s + self.retry.delay_s(attempt);
+        self.queue.push(Reverse((OrdF64(due), id)));
+        self.retries_scheduled += 1;
+        true
+    }
+
+    /// The original request for a retry tick. The returned request's
+    /// `arrival` must be overridden to the retry instant by the caller
+    /// (recompute-from-scratch: the fleet sees a fresh arrival).
+    pub fn request_for(&self, id: SeqId) -> Option<&Request> {
+        self.registry.get(&id)
+    }
+
+    /// Link outage windows of the compiled plan (see
+    /// [`FaultPlan::link_outages`]).
+    pub fn link_outages(&self) -> Vec<(f64, f64)> {
+        self.plan.link_outages()
+    }
+}
+
+/// Finish time of `work_s` seconds of link work starting at `start_s`,
+/// given sorted outage windows `[down, up)`: transfer progress stalls
+/// inside an outage and resumes after it (chunks already pipelined
+/// through fabric buffers are unaffected — the stall applies to the
+/// remaining active time). With no outages this is exactly
+/// `start_s + work_s`, bit-identically.
+pub fn finish_after(outages: &[(f64, f64)], start_s: f64, work_s: f64) -> f64 {
+    let mut t_s = start_s;
+    let mut rem_s = work_s;
+    for &(down_s, up_s) in outages {
+        if up_s <= t_s {
+            continue;
+        }
+        let gap_s = (down_s - t_s).max(0.0);
+        if rem_s <= gap_s {
+            return t_s + rem_s;
+        }
+        rem_s -= gap_s;
+        t_s = up_s;
+    }
+    t_s + rem_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::TenantClass;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            arrival: 0.0,
+            prompt_len: 8,
+            output_len: 4,
+            class: TenantClass::Interactive,
+        }
+    }
+
+    #[test]
+    fn plan_compiles_sorted_with_recoveries_first_at_ties() {
+        let plan = FaultPlan::new()
+            .with(5.0, FaultKind::Crash { pool: Pool::Primary, replica: 0 })
+            .with(5.0, FaultKind::Repair { pool: Pool::Primary, replica: 1 })
+            .with(1.0, FaultKind::LinkDown)
+            .compile();
+        let ev = plan.events();
+        assert_eq!(ev[0].kind, FaultKind::LinkDown);
+        assert_eq!(ev[1].kind, FaultKind::Repair { pool: Pool::Primary, replica: 1 });
+        assert_eq!(ev[2].kind, FaultKind::Crash { pool: Pool::Primary, replica: 0 });
+    }
+
+    #[test]
+    fn poisson_plan_is_seed_deterministic_and_bounded() {
+        let mk = || {
+            FaultPlan::new()
+                .poisson_crashes(42, Pool::Primary, 3, 50.0, 5.0, 200.0)
+                .compile()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "same seed, same plan");
+        assert!(!a.is_empty(), "200s horizon at 50s MTBF crashes");
+        for ev in a.events() {
+            assert!(ev.t_s < 205.01, "repair may trail the horizon by repair_s only");
+        }
+        let c = FaultPlan::new()
+            .poisson_crashes(43, Pool::Primary, 3, 50.0, 5.0, 200.0)
+            .compile();
+        assert_ne!(a, c, "different seed, different plan");
+    }
+
+    #[test]
+    fn link_outages_pair_down_with_up() {
+        let plan = FaultPlan::new()
+            .link_outage(10.0, 2.0)
+            .with(20.0, FaultKind::LinkDown)
+            .compile();
+        let w = plan.link_outages();
+        assert_eq!(w[0], (10.0, 12.0));
+        assert_eq!(w[1].0, 20.0);
+        assert!(w[1].1.is_infinite(), "unclosed outage extends forever");
+    }
+
+    #[test]
+    fn finish_after_stalls_inside_outages_and_is_identity_without() {
+        let outages = [(10.0, 12.0), (20.0, 21.0)];
+        // Entirely before the first outage.
+        assert_eq!(finish_after(&outages, 0.0, 5.0), 5.0);
+        // Straddles the first outage: 8s active before it, stall 2s.
+        assert_eq!(finish_after(&outages, 2.0, 10.0), 14.0);
+        // Starts inside an outage: waits for the link.
+        assert_eq!(finish_after(&outages, 11.0, 1.0), 13.0);
+        // Crosses both outages.
+        assert_eq!(finish_after(&outages, 9.0, 12.0), 24.0);
+        // No outages: bit-exact identity.
+        assert_eq!(finish_after(&[], 3.5, 2.25), 5.75);
+    }
+
+    #[test]
+    fn retry_backoff_caps_and_drops_after_max_attempts() {
+        let pol = RetryPolicy { base_s: 0.1, cap_s: 0.5, max_attempts: 3 };
+        assert_eq!(pol.delay_s(0), 0.1);
+        assert_eq!(pol.delay_s(1), 0.2);
+        assert_eq!(pol.delay_s(2), 0.4);
+        assert_eq!(pol.delay_s(3), 0.5, "capped");
+        assert_eq!(pol.delay_s(60), 0.5, "shift saturates safely");
+
+        let mut fd = FaultDriver::new(
+            FaultPlan::new().with(1.0, FaultKind::Crash { pool: Pool::Primary, replica: 0 }),
+            pol,
+        );
+        fd.register(&req(7));
+        for k in 0..3 {
+            assert!(fd.schedule_retry(7, 10.0 * k as f64), "attempt {k} accepted");
+            let tick = fd.next_due(f64::INFINITY).unwrap();
+            match tick {
+                FaultTick::Retry { id, .. } => assert_eq!(id, 7),
+                other => panic!("expected retry, got {other:?}"),
+            }
+        }
+        assert!(!fd.schedule_retry(7, 100.0), "attempt 3 dropped");
+        assert_eq!(fd.dropped, vec![7]);
+        assert_eq!(fd.retries_scheduled, 3);
+    }
+
+    #[test]
+    fn driver_orders_faults_before_retries_at_same_instant() {
+        let plan = FaultPlan::new().with(5.0, FaultKind::LinkDown);
+        let mut fd = FaultDriver::new(plan, RetryPolicy { base_s: 5.0, cap_s: 5.0, max_attempts: 2 });
+        fd.register(&req(3));
+        assert!(fd.schedule_retry(3, 0.0)); // due at exactly 5.0
+        assert_eq!(fd.next_event_time(), 5.0);
+        assert!(matches!(fd.next_due(5.0), Some(FaultTick::Fault(_))));
+        assert!(matches!(fd.next_due(5.0), Some(FaultTick::Retry { id: 3, .. })));
+        assert!(fd.next_due(f64::INFINITY).is_none());
+        assert!(!fd.is_active());
+        assert_eq!(fd.request_for(3).unwrap().prompt_len, 8);
+    }
+
+    #[test]
+    fn inert_driver_is_structurally_invisible() {
+        let mut fd = FaultDriver::none();
+        assert!(!fd.is_active());
+        assert_eq!(fd.next_event_time(), f64::INFINITY);
+        fd.register(&req(1));
+        assert!(fd.request_for(1).is_none(), "inert driver records nothing");
+        assert!(fd.next_due(f64::INFINITY).is_none());
+    }
+}

@@ -81,6 +81,21 @@ pub struct Metrics {
     /// the closed timeline; without one `gated_s` stays 0 and the
     /// PR 7 two-term identity is unchanged.
     pub gated_s: f64,
+    /// Time spent crashed/under repair (s): the replica drew 0 W and
+    /// served nothing. Fourth ledger arm; with fault injection in play
+    /// `span + idle_s + gated_s + down_s` tiles the closed timeline.
+    pub down_s: f64,
+    /// Requests re-submitted through the fault-recovery retry queue
+    /// (recorded on the engine that received the retry).
+    pub retries: u64,
+    /// Output tokens that had been generated (delivered to the stream)
+    /// by sequences killed in a crash before they finished — goodput
+    /// the fleet produced but could not complete.
+    pub lost_tokens: u64,
+    /// Context tokens (prompt + generated) whose compute was destroyed
+    /// by a crash and must be recomputed from scratch on retry. Only
+    /// sequences whose prefill had actually run are counted.
+    pub recompute_tokens_wasted: u64,
 }
 
 impl Metrics {
@@ -169,6 +184,20 @@ impl Metrics {
         self.gated_s += dt;
     }
 
+    /// A crashed/under-repair gap of `dt` seconds: the replica is dead,
+    /// drawing 0 W — time accrues to the `down_s` ledger arm so the
+    /// closed timeline still tiles the makespan, energy does not.
+    pub fn record_down(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "down gap must be non-negative");
+        self.down_s += dt;
+    }
+
+    /// A crashed request was re-submitted to this engine through the
+    /// fault-recovery retry queue.
+    pub fn record_retry(&mut self) {
+        self.retries += 1;
+    }
+
     /// Merge another engine's metrics into this one (cluster rollup).
     /// Percentile samples keep their timestamps, so windowed queries
     /// remain valid on the shared virtual timeline.
@@ -195,6 +224,10 @@ impl Metrics {
         self.span += other.span;
         self.idle_s += other.idle_s;
         self.gated_s += other.gated_s;
+        self.down_s += other.down_s;
+        self.retries += other.retries;
+        self.lost_tokens += other.lost_tokens;
+        self.recompute_tokens_wasted += other.recompute_tokens_wasted;
     }
 
     /// Step-cost cache hit rate across every lookup the backend(s)
@@ -213,7 +246,7 @@ impl Metrics {
     /// merged value is the mean sustained per-engine draw, the figure
     /// rack packing and electricity pricing need.
     pub fn watts_mean(&self) -> f64 {
-        let covered = self.span + self.idle_s + self.gated_s;
+        let covered = self.span + self.idle_s + self.gated_s + self.down_s;
         if covered > 0.0 {
             self.energy_j / covered
         } else {
@@ -274,7 +307,7 @@ impl Metrics {
     /// Fraction of the covered timeline spent idle (0 when nothing was
     /// covered).
     pub fn idle_frac(&self) -> f64 {
-        let covered = self.span + self.idle_s + self.gated_s;
+        let covered = self.span + self.idle_s + self.gated_s + self.down_s;
         if covered > 0.0 {
             self.idle_s / covered
         } else {
@@ -288,6 +321,7 @@ impl Metrics {
              TTFT p50/p95={:.3}/{:.3}s TPOT p50/p95={:.4}/{:.4}s \
              J/token={:.2} J/tok_in={:.3} J/tok_out={:.2} W_mean={:.1} \
              model TFLOP/s={:.2} restarts={} migrations={} bounces={} \
+             retries={} lost_tokens={} recompute_wasted={} down={:.2}s \
              cache_hit={:.3}",
             self.requests_done,
             self.tokens_out,
@@ -306,6 +340,10 @@ impl Metrics {
             self.restarts,
             self.migrations,
             self.bounces,
+            self.retries,
+            self.lost_tokens,
+            self.recompute_tokens_wasted,
+            self.down_s,
             self.step_cache_hit_rate(),
         )
     }
@@ -459,6 +497,30 @@ mod tests {
         other.record_gated(3.0);
         m.absorb(&other);
         assert!((m.gated_s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn down_time_accrues_no_energy_and_absorbs() {
+        let mut m = Metrics::new();
+        m.record_decode_step(1.0, 500.0, 1e12, 10);
+        m.record_idle(1.0, 100.0);
+        m.record_down(2.0);
+        assert!((m.down_s - 2.0).abs() < 1e-12);
+        assert!((m.energy_j - 600.0).abs() < 1e-9, "downtime adds no joules");
+        // Mean draw covers the down arm: a replica dead half the time
+        // halves its mean watts.
+        assert!((m.watts_mean() - 150.0).abs() < 1e-9);
+        assert!((m.idle_frac() - 0.25).abs() < 1e-12);
+        let mut other = Metrics::new();
+        other.record_down(3.0);
+        other.record_retry();
+        other.lost_tokens = 7;
+        other.recompute_tokens_wasted = 42;
+        m.absorb(&other);
+        assert!((m.down_s - 5.0).abs() < 1e-12);
+        assert_eq!(m.retries, 1);
+        assert_eq!(m.lost_tokens, 7);
+        assert_eq!(m.recompute_tokens_wasted, 42);
     }
 
     #[test]

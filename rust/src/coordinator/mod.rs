@@ -9,6 +9,9 @@
 //!   timing, virtual clock — drives every paper figure) and
 //!   `PjrtBackend` (real compute via the AOT artifacts, wall clock).
 //! * [`engine`] — the step loop tying it all together.
+//! * [`faults`] — deterministic fault injection: seeded `FaultPlan`
+//!   compiled to a sorted schedule, crash/repair/derate/link-flap
+//!   kinds, and the capped-backoff retry queue (`FaultDriver`).
 //! * [`cluster`] — virtual-time event loops: [`Cluster`] over one
 //!   colocated engine pool, [`DisaggCluster`] over disaggregated
 //!   prefill/decode pools joined by a (optionally chunked/streaming)
@@ -23,6 +26,7 @@ pub mod backend;
 pub mod batcher;
 pub mod cluster;
 pub mod engine;
+pub mod faults;
 pub mod kv_cache;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
@@ -34,10 +38,12 @@ pub mod scheduler;
 pub use backend::{CacheStats, ExecutionBackend, SimBackend, StepCostCache};
 pub use batcher::{Batcher, BatcherConfig};
 pub use cluster::{
-    disagg_sim_cluster, phase_affinity_sim_cluster, sharded_sim_cluster, sim_cluster, Cluster,
-    DisaggCluster, PhaseAffinityCluster, ServeSim, SloSpec, SweepConfig,
+    affinity_threshold_candidates, auto_affinity_threshold, disagg_sim_cluster,
+    phase_affinity_sim_cluster, sharded_sim_cluster, sim_cluster, Cluster, DisaggCluster,
+    PhaseAffinityCluster, ServeSim, SloSpec, SweepConfig,
 };
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Engine, EngineConfig, LostWork};
+pub use faults::{FaultDriver, FaultEvent, FaultKind, FaultPlan, FaultTick, Pool, RetryPolicy};
 pub use kv_cache::{BlockAllocator, KvCacheConfig};
 pub use metrics::Metrics;
 #[cfg(feature = "pjrt")]

@@ -45,8 +45,16 @@ pub struct Router<B: ExecutionBackend> {
     /// `+inf` = idle with an empty queue (nothing to do until new work
     /// arrives). Every path that injects work — the submit methods,
     /// [`Router::release_migrated_on`], [`Router::note_mutation`] —
-    /// resets the hint, so a stale hint is always conservative.
+    /// resets the hint, so a stale hint is always conservative. Fault
+    /// events reset it too ([`Router::crash_engine`],
+    /// [`Router::repair_engine`], [`Router::set_derate`]) — they
+    /// mutate engine state outside the submit paths.
     hints: Vec<f64>,
+    /// Crashed/under-repair flags (fault injection): a down engine
+    /// receives no routed work and closes its ledger on the 0 W
+    /// `down_s` arm. All-false in fault-free runs, leaving every
+    /// selection path bit-identical to the pre-fault-layer router.
+    down: Vec<bool>,
 }
 
 impl<B: ExecutionBackend> Router<B> {
@@ -62,21 +70,32 @@ impl<B: ExecutionBackend> Router<B> {
             rr_next: 0,
             routed: vec![0; n],
             hints: vec![f64::NEG_INFINITY; n],
+            down: vec![false; n],
         }
     }
 
-    /// Pick a target engine for a request (does not submit).
+    /// Pick a target engine for a request (does not submit). Down
+    /// engines are never selected; callers gate on [`Router::any_up`]
+    /// before routing (the degenerate all-down fallback returns an
+    /// arbitrary index).
     pub fn select(&mut self, r: &Request) -> usize {
         match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.engines.len();
-                i
+                let n = self.engines.len();
+                for k in 0..n {
+                    let i = (self.rr_next + k) % n;
+                    if !self.down[i] {
+                        self.rr_next = (i + 1) % n;
+                        return i;
+                    }
+                }
+                self.rr_next
             }
             RoutePolicy::LeastLoaded => self
                 .engines
                 .iter()
                 .enumerate()
+                .filter(|&(i, _)| !self.down[i])
                 .min_by_key(|(_, e)| e.pending())
                 .map_or(0, |(i, _)| i),
             RoutePolicy::PhaseAffinity => {
@@ -86,6 +105,7 @@ impl<B: ExecutionBackend> Router<B> {
                 self.ratings
                     .iter()
                     .enumerate()
+                    .filter(|&(i, _)| !self.down[i])
                     .map(|(i, rt)| {
                         let fit = decode_w * rt.decode_score
                             + (1.0 - decode_w) * rt.prefill_score;
@@ -170,7 +190,7 @@ impl<B: ExecutionBackend> Router<B> {
             .engines
             .iter()
             .enumerate()
-            .filter(|(_, e)| e.can_admit_migration(m.context_len))
+            .filter(|&(i, e)| !self.down[i] && e.can_admit_migration(m.context_len))
             .min_by_key(|(_, e)| e.pending())
             .map(|(i, _)| i);
         match fit {
@@ -198,6 +218,73 @@ impl<B: ExecutionBackend> Router<B> {
     /// resumed decoding directly on the engine).
     pub fn note_mutation(&mut self, i: usize) {
         self.hints[i] = f64::NEG_INFINITY;
+    }
+
+    /// Crash engine `i` at `t_s` ([`Engine::crash`]): mark it down and
+    /// invalidate its hint — fault events mutate engine state outside
+    /// the submit paths, so a hint computed pre-crash is stale (the
+    /// regression `crash_invalidates_stale_hint_so_work_is_not_skipped`
+    /// pins this). Returns the lost work for the retry queue.
+    ///
+    /// Crashing an already-down engine is a no-op (empty loss): a
+    /// Poisson plan's crash/repair windows may overlap on the same
+    /// replica, and re-crashing mid-outage would bill the down gap as
+    /// idle through [`Engine::crash`]'s ledger close.
+    pub fn crash_engine(&mut self, i: usize, t_s: f64) -> super::engine::LostWork {
+        if self.down[i] {
+            return super::engine::LostWork::default();
+        }
+        let lost = self.engines[i].crash(t_s);
+        self.down[i] = true;
+        self.hints[i] = f64::NEG_INFINITY;
+        lost
+    }
+
+    /// Repair engine `i` at `t_s`: the crash→repair window is billed
+    /// on the 0 W `down_s` ledger arm, the engine rejoins routing
+    /// empty, and its hint is invalidated. Ignored if `i` is not down
+    /// (a plan may schedule a repair for a replica that never
+    /// crashed).
+    pub fn repair_engine(&mut self, i: usize, t_s: f64) {
+        if !self.down[i] {
+            return;
+        }
+        self.engines[i].close_ledger_down(t_s);
+        self.down[i] = false;
+        self.hints[i] = f64::NEG_INFINITY;
+    }
+
+    /// Degrade (or restore, `factor == 1.0`) engine `i`'s HBM
+    /// bandwidth. The hint is invalidated: step costs changed, so any
+    /// cached notion of the engine's next event is stale.
+    pub fn set_derate(&mut self, i: usize, factor: f64) {
+        self.engines[i].set_bw_derate(factor);
+        self.hints[i] = f64::NEG_INFINITY;
+    }
+
+    pub fn is_down(&self, i: usize) -> bool {
+        self.down[i]
+    }
+
+    /// At least one engine can take work.
+    pub fn any_up(&self) -> bool {
+        self.down.iter().any(|d| !d)
+    }
+
+    /// Every engine is crashed (migrations must bounce; arrivals wait
+    /// in the retry queue).
+    pub fn all_down(&self) -> bool {
+        self.down.iter().all(|d| *d)
+    }
+
+    /// Re-submit a crash victim from scratch (`r.arrival` is the retry
+    /// instant — recompute semantics: the fleet sees a fresh arrival).
+    /// Routes like [`Router::submit_at`] (down engines excluded) and
+    /// counts the retry on the engine that received it.
+    pub fn submit_retry_at(&mut self, r: &Request) -> usize {
+        let i = self.submit_at(r);
+        self.engines[i].metrics.record_retry();
+        i
     }
 
     /// Advance every engine toward `t` on the shared timeline,
@@ -261,9 +348,15 @@ impl<B: ExecutionBackend> Router<B> {
     /// integral of draw over the whole timeline
     /// ([`Engine::close_ledger`]). Idempotent; hints are untouched (a
     /// closed engine has no queued work, so its hint stays valid).
+    /// Engines still down at `t` close on the 0 W `down_s` arm
+    /// instead — an unrepaired replica draws nothing over its tail.
     pub fn close_ledgers(&mut self, t: f64) {
-        for e in &mut self.engines {
-            e.close_ledger(t);
+        for i in 0..self.engines.len() {
+            if self.down[i] {
+                self.engines[i].close_ledger_down(t);
+            } else {
+                self.engines[i].close_ledger(t);
+            }
         }
     }
 }
@@ -426,6 +519,78 @@ mod tests {
         let i = r.submit_migrated_at_admitting(&m);
         assert_eq!(i, 0, "KV-full engine skipped despite lower load");
         assert!(r.drain_closed_batch(1_000_000));
+    }
+
+    #[test]
+    fn crash_invalidates_stale_hint_so_work_is_not_skipped() {
+        // Regression (fault layer): `step_to` hint-gates idle engines.
+        // A crash mutates engine state outside the submit paths, so
+        // the hint computed while the engine was busy (>= the step_to
+        // target) MUST be invalidated — otherwise a post-repair direct
+        // submit would be skipped by every later `step_to` below the
+        // stale hint and the request would never drain.
+        // The blocking stale hint is `+inf`: a drained engine's hint
+        // parks at infinity until a submit path resets it — and the
+        // fault path must count as such a reset.
+        let mut r = Router::new(
+            vec![engine(Device::Gaudi2)],
+            vec![EngineRating { prefill_score: 1.0, decode_score: 1.0 }],
+            RoutePolicy::LeastLoaded,
+        );
+        r.submit_at(&req(0, 64, 8));
+        let mut left = usize::MAX;
+        r.step_to(10.0, &mut left);
+        assert_eq!(r.engines[0].metrics.requests_done, 1);
+        assert_eq!(r.engines[0].pending(), 0, "drained: hint is parked at +inf");
+        let lost = r.crash_engine(0, 10.0);
+        assert!(lost.ids.is_empty(), "nothing resident at the crash");
+        assert!(r.is_down(0) && !r.any_up());
+        r.repair_engine(0, 11.0);
+        assert!(r.any_up());
+        // Inject the retry directly on the engine (outside the
+        // router's submit paths, like a cluster-level resume would).
+        let retry = Request {
+            id: 1,
+            arrival: 11.0,
+            prompt_len: 64,
+            output_len: 4,
+            class: crate::workload::trace::TenantClass::Interactive,
+        };
+        r.engines[0].advance_to(retry.arrival);
+        r.engines[0].submit(&retry);
+        // Pre-fix (crash/repair not invalidating), hints[0] == +inf
+        // would skip every step_to target forever.
+        r.step_to(12.0, &mut left);
+        assert_eq!(
+            r.engines[0].metrics.requests_done, 2,
+            "stale +inf hint skipped the repaired engine's work"
+        );
+        // Ledger: the crash→repair second sits on the down arm.
+        assert_eq!(r.engines[0].metrics.down_s, 1.0);
+    }
+
+    #[test]
+    fn down_engines_receive_no_routed_work() {
+        let mut r = Router::new(
+            vec![engine(Device::H100), engine(Device::Gaudi2)],
+            ratings_h100_gaudi(),
+            RoutePolicy::RoundRobin,
+        );
+        let _ = r.crash_engine(0, 0.0);
+        for i in 0..4 {
+            r.submit_at(&req(i, 64, 8));
+        }
+        assert_eq!(r.routed_counts(), &[0, 4], "round-robin skips the crashed engine");
+        r.repair_engine(0, 1.0);
+        let mut lr = Router::new(
+            vec![engine(Device::H100), engine(Device::Gaudi2)],
+            ratings_h100_gaudi(),
+            RoutePolicy::LeastLoaded,
+        );
+        let _ = lr.crash_engine(1, 0.0);
+        lr.submit_retry_at(&req(9, 64, 8));
+        assert_eq!(lr.routed_counts(), &[1, 0], "least-loaded skips the crashed engine");
+        assert_eq!(lr.engines[0].metrics.retries, 1, "retry counted on the server");
     }
 
     #[test]

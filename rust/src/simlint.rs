@@ -77,12 +77,13 @@ pub struct Finding {
 }
 
 /// Hot-path files under the panic policy.
-const PANIC_FILES: [&str; 5] = [
+const PANIC_FILES: [&str; 6] = [
     "src/coordinator/engine.rs",
     "src/coordinator/batcher.rs",
     "src/coordinator/router.rs",
     "src/coordinator/cluster.rs",
     "src/coordinator/backend.rs",
+    "src/coordinator/faults.rs",
 ];
 
 /// Files under the unit-suffix discipline.

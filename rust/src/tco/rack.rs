@@ -84,11 +84,20 @@ pub struct DayUsage {
     pub powered_replica_s: f64,
     /// Sum over replicas of power-gated seconds (`gated_s`).
     pub gated_replica_s: f64,
+    /// Sum over replicas of crashed-awaiting-repair seconds
+    /// (`down_s`): owned capacity drawing 0 W, like gated time, but
+    /// *involuntarily* — the availability ledger's arm.
+    pub down_replica_s: f64,
     /// Output tokens the fleet delivered over the day.
     pub tokens_out: u64,
+    /// Tokens that were streamed and then invalidated by a crash
+    /// (`lost_tokens`): counted inside `tokens_out`'s work but not
+    /// deliverable. Goodput pricing divides by
+    /// `tokens_out - lost_tokens`.
+    pub lost_tokens: u64,
     /// The day itself (s): the shared ledger-close instant, so a
-    /// fully-closed fleet has
-    /// `powered_replica_s + gated_replica_s == n_replicas * day_s`.
+    /// fully-closed fleet has `powered_replica_s + gated_replica_s +
+    /// down_replica_s == n_replicas * day_s`.
     pub day_s: f64,
 }
 
@@ -108,9 +117,18 @@ impl DayUsage {
             energy_j: m.energy_j * chips_per_replica as f64,
             powered_replica_s: m.span + m.idle_s,
             gated_replica_s: m.gated_s,
+            down_replica_s: m.down_s,
             tokens_out: m.tokens_out,
+            lost_tokens: m.lost_tokens,
             day_s,
         }
+    }
+
+    /// Tokens actually delivered to clients: streamed output minus
+    /// what a crash invalidated mid-stream. The denominator of every
+    /// goodput-priced axis.
+    pub fn goodput_tokens(&self) -> u64 {
+        self.tokens_out.saturating_sub(self.lost_tokens)
     }
 }
 
@@ -311,7 +329,8 @@ impl InfraModel {
         assert!(chips_per_replica > 0 && n_replicas > 0, "fleet needs replicas and chips");
         assert!(usage.day_s > 0.0, "day must have positive length");
         assert!(usage.tokens_out > 0, "fleet must deliver tokens");
-        let replica_s = usage.powered_replica_s + usage.gated_replica_s;
+        let replica_s =
+            usage.powered_replica_s + usage.gated_replica_s + usage.down_replica_s;
         assert!(
             replica_s <= n_replicas as f64 * usage.day_s * (1.0 + 1e-9) + 1e-6,
             "ledger overruns the day: {replica_s} replica-s > {n_replicas} x {} s",
@@ -333,6 +352,53 @@ impl InfraModel {
         let energy_kwh = (usage.energy_j + overhead_j) / 3.6e6;
         let electricity_usd = energy_kwh * self.rack.pue_ratio * self.rack.usd_per_kwh;
         (owned_usd + electricity_usd) / usage.tokens_out as f64 * 1e6
+    }
+
+    /// Availability-priced $/Mtok for one measured (possibly faulty)
+    /// day: [`Self::cost_per_mtok_diurnal`]'s owned-vs-drawn split,
+    /// with two resilience corrections. First, the fleet owns
+    /// `n_replicas + k_spares` replicas — the N+k redundancy a
+    /// provider provisions so a crash fails over instead of shedding
+    /// load; spares sit power-gated (capex and rack share, zero
+    /// electricity) until promoted. Second, the denominator is
+    /// *goodput* — `tokens_out - lost_tokens` — so tokens a crash
+    /// invalidated are paid for (their energy was drawn, the capacity
+    /// was owned) but never credited. Crashed-awaiting-repair time
+    /// rides the `down_replica_s` ledger arm: owned, 0 W, exactly like
+    /// gated time on the bill. With `k_spares = 0` and a fault-free
+    /// ledger this reduces bit-for-bit to
+    /// [`Self::cost_per_mtok_diurnal`].
+    pub fn cost_per_mtok_resilient(
+        &self,
+        server_price_usd: f64,
+        chips_per_replica: usize,
+        n_replicas: usize,
+        k_spares: usize,
+        provision_draw_w: f64,
+        usage: &DayUsage,
+    ) -> f64 {
+        assert!(chips_per_replica > 0 && n_replicas > 0, "fleet needs replicas and chips");
+        assert!(usage.day_s > 0.0, "day must have positive length");
+        assert!(usage.goodput_tokens() > 0, "fleet must deliver goodput");
+        let replica_s =
+            usage.powered_replica_s + usage.gated_replica_s + usage.down_replica_s;
+        assert!(
+            replica_s <= n_replicas as f64 * usage.day_s * (1.0 + 1e-9) + 1e-6,
+            "ledger overruns the day: {replica_s} replica-s > {n_replicas} x {} s",
+            usage.day_s
+        );
+        let server_equiv = chips_per_replica as f64 / self.rack.chips_per_server as f64;
+        let per_rack = self.servers_per_rack(provision_draw_w).max(1) as f64;
+        let day_frac = usage.day_s / (self.rack.horizon_hours * 3600.0);
+        let owned_usd = (n_replicas + k_spares) as f64
+            * server_equiv
+            * (server_price_usd + self.rack.fixed_cost_usd / per_rack)
+            * day_frac;
+        let overhead_j =
+            self.rack.server_overhead_w * usage.powered_replica_s * server_equiv;
+        let energy_kwh = (usage.energy_j + overhead_j) / 3.6e6;
+        let electricity_usd = energy_kwh * self.rack.pue_ratio * self.rack.usd_per_kwh;
+        (owned_usd + electricity_usd) / usage.goodput_tokens() as f64 * 1e6
     }
 
     /// Facility watt-hours per million output tokens for one measured
@@ -620,7 +686,9 @@ mod tests {
             energy_j: 8.0 * chip_w * powered,
             powered_replica_s: powered,
             gated_replica_s: n_replicas as f64 * day_s * gated_frac,
+            down_replica_s: 0.0,
             tokens_out: tokens,
+            lost_tokens: 0,
             day_s,
         }
     }
@@ -676,6 +744,80 @@ mod tests {
         let wh = free_capex.wh_per_mtok_diurnal(8, &u);
         let electricity = wh / 1000.0 * free_capex.rack.usd_per_kwh;
         assert!((c / electricity - 1.0).abs() < 1e-12, "{c} vs {electricity}");
+    }
+
+    #[test]
+    fn resilient_reduces_to_diurnal_without_faults_or_spares() {
+        // A fault-free ledger with zero spares must price bit-for-bit
+        // like the diurnal model — the resilience axis is a strict
+        // superset, not a reinterpretation.
+        let m = model();
+        let u = day(4, 86_400.0, 500.0, 0.25, 5_000_000_000);
+        let diurnal = m.cost_per_mtok_diurnal(160_000.0, 8, 4, 500.0, &u);
+        let resilient = m.cost_per_mtok_resilient(160_000.0, 8, 4, 0, 500.0, &u);
+        assert_eq!(diurnal.to_bits(), resilient.to_bits());
+    }
+
+    #[test]
+    fn spares_add_exactly_their_owned_capacity() {
+        // Each gated spare adds capex + rack share, amortized over the
+        // day, and nothing else — no electricity, no goodput.
+        let m = model();
+        let u = day(4, 86_400.0, 500.0, 0.0, 5_000_000_000);
+        let base = m.cost_per_mtok_resilient(160_000.0, 8, 4, 0, 500.0, &u);
+        let plus2 = m.cost_per_mtok_resilient(160_000.0, 8, 4, 2, 500.0, &u);
+        let per_rack = m.servers_per_rack(500.0).max(1) as f64;
+        let day_frac = u.day_s / (m.rack.horizon_hours * 3600.0);
+        let spare_usd = 2.0 * (160_000.0 + m.rack.fixed_cost_usd / per_rack) * day_frac;
+        let expected = spare_usd / u.tokens_out as f64 * 1e6;
+        assert!(
+            ((plus2 - base) / expected - 1.0).abs() < 1e-9,
+            "delta {} vs owned {expected}",
+            plus2 - base
+        );
+    }
+
+    #[test]
+    fn lost_tokens_inflate_the_goodput_price() {
+        // Same fleet, same energy, same streamed work: tokens a crash
+        // invalidated shrink the denominator, so the faulty day costs
+        // strictly more per *delivered* token.
+        let m = model();
+        let clean = day(4, 86_400.0, 500.0, 0.0, 5_000_000_000);
+        let mut faulty = clean;
+        faulty.lost_tokens = 1_000_000_000;
+        faulty.down_replica_s = 4.0 * 3_600.0;
+        faulty.powered_replica_s -= 4.0 * 3_600.0;
+        let c_clean = m.cost_per_mtok_resilient(160_000.0, 8, 4, 0, 500.0, &clean);
+        let c_faulty = m.cost_per_mtok_resilient(160_000.0, 8, 4, 0, 500.0, &faulty);
+        assert!(c_faulty > c_clean, "{c_faulty} vs {c_clean}");
+        assert_eq!(faulty.goodput_tokens(), 4_000_000_000);
+    }
+
+    #[test]
+    fn down_time_bills_no_electricity() {
+        // Moving replica-seconds from powered to down at equal energy
+        // accounting cannot *raise* the bill: down time is owned but
+        // draws nothing (the overhead term shrinks with powered time).
+        let m = model();
+        let awake = day(4, 86_400.0, 500.0, 0.0, 5_000_000_000);
+        let mut crashed = awake;
+        let moved = 2.0 * 3_600.0;
+        crashed.down_replica_s = moved;
+        crashed.powered_replica_s -= moved;
+        crashed.energy_j -= 8.0 * 500.0 * moved;
+        let c_awake = m.cost_per_mtok_resilient(160_000.0, 8, 4, 0, 500.0, &awake);
+        let c_crashed = m.cost_per_mtok_resilient(160_000.0, 8, 4, 0, 500.0, &crashed);
+        assert!(c_crashed < c_awake, "{c_crashed} vs {c_awake}");
+    }
+
+    #[test]
+    #[should_panic(expected = "ledger overruns the day")]
+    fn resilient_pricing_rejects_overcommitted_down_ledger() {
+        let m = model();
+        let mut u = day(2, 1_000.0, 500.0, 0.0, 1_000_000);
+        u.down_replica_s = 2.0 * 1_000.0; // a third replica's worth
+        m.cost_per_mtok_resilient(100_000.0, 8, 2, 0, 500.0, &u);
     }
 
     #[test]

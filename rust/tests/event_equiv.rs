@@ -9,8 +9,13 @@
 //! makespan of the step-by-step reference. This suite enforces that
 //! contract with a seeded scenario fuzzer — deterministic, driven
 //! only by `util::rng` (simlint rule D) — across every cluster shape
-//! the simulator offers × every arrival process × model sizes, plus
-//! targeted ledger-conservation property tests under fast-forward.
+//! the simulator offers × every arrival process × model sizes × fault
+//! plans (crash/repair, HBM derate windows, KV-link outages; DESIGN.md
+//! §14), plus targeted ledger-conservation property tests under
+//! fast-forward. Every fuzzed run additionally checks the fault-era
+//! invariants: the four-arm ledger (`span + idle + gated + down`)
+//! tiles the makespan per engine, and goodput equals the offered work
+//! over every non-dropped request (token conservation).
 //!
 //! The scenario budget defaults to 200 and can be raised via the
 //! `EVENT_EQUIV_SCENARIOS` env var (the CI `event-equiv` job pins
@@ -24,7 +29,7 @@ use fp8_tco::coordinator::cluster::{
     autoscaled_sim_cluster, disagg_sim_cluster, phase_affinity_sim_cluster,
     sharded_sim_cluster, sim_cluster, AutoscalerConfig,
 };
-use fp8_tco::coordinator::Metrics;
+use fp8_tco::coordinator::{FaultDriver, FaultPlan, Metrics, Pool, RetryPolicy};
 use fp8_tco::hwsim::spec::Device;
 use fp8_tco::util::rng::Rng;
 use fp8_tco::workload::llama::by_name;
@@ -35,8 +40,10 @@ use fp8_tco::workload::trace::{
 
 /// Everything a simulation outcome is made of, floats as bits: two
 /// runs compare equal iff they were bit-identical. Extends the
-/// `hotpath_equiv` fingerprint with `gated_s`, cache counters (the
-/// fast-forward path must replay the exact hit/miss sequence) and a
+/// `hotpath_equiv` fingerprint with `gated_s`, the fault-era counters
+/// (`down_s`, `retries`, `lost_tokens`, `recompute_tokens_wasted`),
+/// cache counters (the fast-forward path must replay the exact
+/// hit/miss sequence) and a
 /// quantile ladder over the per-request TTFT/TPOT/e2e distributions
 /// (p0/p100 are raw extreme samples; interior quantiles hit distinct
 /// samples as the count varies).
@@ -62,6 +69,10 @@ fn fingerprint(makespan: f64, m: &Metrics, preemptions: u64) -> Vec<u64> {
         m.span.to_bits(),
         m.idle_s.to_bits(),
         m.gated_s.to_bits(),
+        m.down_s.to_bits(),
+        m.retries,
+        m.lost_tokens,
+        m.recompute_tokens_wasted,
         m.ttft.count() as u64,
         m.tpot.count() as u64,
         m.e2e_latency.count() as u64,
@@ -92,6 +103,13 @@ struct Scenario {
     chunks: usize,
     admission: bool,
     trace_seed: u64,
+    /// 0 no faults, 1 crash/repair, 2 HBM derate window, 3 KV-link
+    /// outage (split-pool shapes; falls back to crash elsewhere).
+    fault: usize,
+    fault_t: f64,
+    fault_dur: f64,
+    /// Derate windows only: surviving HBM bandwidth fraction.
+    derate: f64,
 }
 
 impl Scenario {
@@ -105,8 +123,72 @@ impl Scenario {
             chunks: rng.usize(1, 9),
             admission: rng.bool(0.5),
             trace_seed: rng.next_u64(),
+            fault: rng.usize(0, 4),
+            fault_t: 0.2 + 1.5 * rng.f64(),
+            // Stays well under the default retry budget (~7.15 s), so
+            // even a whole-pool outage parks arrivals without drops.
+            fault_dur: 0.2 + 0.5 * rng.f64(),
+            derate: 0.25 + 0.5 * rng.f64(),
         }
     }
+}
+
+/// The scenario's fault plan. Pool targeting follows the cluster
+/// shape: split-pool shapes (disagg, PhaseAffinity) alternate between
+/// the prefill and decode pools; everything else aims at `Primary`.
+fn fault_plan(sc: &Scenario) -> FaultPlan {
+    let split = sc.kind == 2 || sc.kind == 3;
+    let pool = if !split {
+        Pool::Primary
+    } else if sc.trace_seed % 2 == 0 {
+        Pool::Prefill
+    } else {
+        Pool::Decode
+    };
+    match sc.fault {
+        0 => FaultPlan::new(),
+        1 => FaultPlan::new().crash_repair(pool, 0, sc.fault_t, sc.fault_dur),
+        2 => FaultPlan::new().derate_window(pool, 0, sc.fault_t, sc.fault_dur, sc.derate),
+        _ if split => FaultPlan::new().link_outage(sc.fault_t, sc.fault_dur),
+        _ => FaultPlan::new().crash_repair(pool, 0, sc.fault_t, sc.fault_dur),
+    }
+}
+
+/// Fault-era invariants checked on every fuzzed run: the four-arm
+/// ledger tiles the makespan on each engine, and goodput equals the
+/// offered work over every request that was not dropped (a crashed
+/// victim's already-streamed tokens sit in both `tokens_out` and
+/// `lost_tokens`, netting zero).
+fn check_fault_invariants<'a>(
+    sc: &Scenario,
+    reqs: &[Request],
+    dropped: &[u64],
+    makespan: f64,
+    merged: &Metrics,
+    engines: impl Iterator<Item = &'a Metrics>,
+) {
+    for (i, m) in engines.enumerate() {
+        let covered = m.span + m.idle_s + m.gated_s + m.down_s;
+        assert!(
+            (covered - makespan).abs() <= 1e-9 * makespan.max(1.0),
+            "engine {i}: span {} + idle {} + gated {} + down {} != makespan \
+             {makespan}: {sc:?}",
+            m.span,
+            m.idle_s,
+            m.gated_s,
+            m.down_s
+        );
+    }
+    let expected: u64 = reqs
+        .iter()
+        .filter(|r| !dropped.contains(&r.id))
+        .map(|r| r.output_len as u64)
+        .sum();
+    assert_eq!(
+        merged.tokens_out - merged.lost_tokens,
+        expected,
+        "token conservation broke: {sc:?}"
+    );
 }
 
 /// The scenario's arrival stream — materialized once so both runs
@@ -166,18 +248,38 @@ fn scaler_cfg() -> AutoscalerConfig {
 
 /// Serve the scenario with the engine's fast-forward on or off and
 /// fingerprint the outcome. The two calls build identical clusters;
-/// `event_mode` is the only difference.
-fn run_scenario(sc: &Scenario, event_mode: bool) -> Vec<u64> {
+/// `event_mode` is the only difference. A non-empty fault plan (or
+/// `inert_driver`, which attaches an empty one — the bit-invisibility
+/// pin) rides along on both runs; the fingerprint then also covers
+/// the dropped-request list.
+fn run_scenario(sc: &Scenario, event_mode: bool, inert_driver: bool) -> Vec<u64> {
     let reqs = arrivals(sc);
+    let plan = fault_plan(sc);
+    let attach = !plan.is_empty() || inert_driver;
+    let fd = || FaultDriver::new(plan.clone(), RetryPolicy::default());
     let model8 = by_name("llama-8b").unwrap();
     match sc.kind {
         0 => {
             let mut c = sim_cluster(Device::Gaudi2, PrecisionMode::fp8_static(), 2);
+            if attach {
+                c = c.with_faults(fd());
+            }
             for e in c.router.engines.iter_mut() {
                 e.set_event_mode(event_mode);
             }
-            assert!(c.run(reqs), "colocated scenario must drain: {sc:?}");
-            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+            assert!(c.run(reqs.clone()), "colocated scenario must drain: {sc:?}");
+            let merged = c.merged_metrics();
+            check_fault_invariants(
+                sc,
+                &reqs,
+                &c.faults.dropped,
+                c.makespan(),
+                &merged,
+                c.router.engines.iter().map(|e| &e.metrics),
+            );
+            let mut v = fingerprint(c.makespan(), &merged, c.preemptions());
+            v.extend(c.faults.dropped.iter().copied());
+            v
         }
         1 => {
             let (model, plan) = if sc.model_70b {
@@ -188,26 +290,61 @@ fn run_scenario(sc: &Scenario, event_mode: bool) -> Vec<u64> {
             let mut c =
                 sharded_sim_cluster(model, Device::H100, PrecisionMode::fp8_dynamic(), plan)
                     .expect("fuzzed sharded plan must be feasible");
+            if attach {
+                c = c.with_faults(fd());
+            }
             for e in c.router.engines.iter_mut() {
                 e.set_event_mode(event_mode);
             }
-            assert!(c.run(reqs), "sharded scenario must drain: {sc:?}");
-            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+            assert!(c.run(reqs.clone()), "sharded scenario must drain: {sc:?}");
+            let merged = c.merged_metrics();
+            check_fault_invariants(
+                sc,
+                &reqs,
+                &c.faults.dropped,
+                c.makespan(),
+                &merged,
+                c.router.engines.iter().map(|e| &e.metrics),
+            );
+            let mut v = fingerprint(c.makespan(), &merged, c.preemptions());
+            v.extend(c.faults.dropped.iter().copied());
+            v
         }
         2 => {
             let mut c = disagg_sim_cluster(model8, &small_disagg_plan())
                 .expect("8B fits")
                 .with_streaming(sc.chunks, sc.admission);
+            if attach {
+                c = c.with_faults(fd());
+            }
             for e in c.prefill.engines.iter_mut().chain(c.decode.engines.iter_mut()) {
                 e.set_event_mode(event_mode);
             }
-            assert!(c.run(reqs), "disagg scenario must drain: {sc:?}");
-            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+            assert!(c.run(reqs.clone()), "disagg scenario must drain: {sc:?}");
+            let merged = c.merged_metrics();
+            check_fault_invariants(
+                sc,
+                &reqs,
+                &c.faults.dropped,
+                c.makespan(),
+                &merged,
+                c.prefill
+                    .engines
+                    .iter()
+                    .chain(c.decode.engines.iter())
+                    .map(|e| &e.metrics),
+            );
+            let mut v = fingerprint(c.makespan(), &merged, c.preemptions());
+            v.extend(c.faults.dropped.iter().copied());
+            v
         }
         3 => {
             let mut c = phase_affinity_sim_cluster(model8, &small_affinity_plan())
                 .expect("8B fits")
                 .with_streaming(sc.chunks, sc.admission);
+            if attach {
+                c = c.with_faults(fd());
+            }
             for e in c
                 .colocated
                 .engines
@@ -217,8 +354,24 @@ fn run_scenario(sc: &Scenario, event_mode: bool) -> Vec<u64> {
             {
                 e.set_event_mode(event_mode);
             }
-            assert!(c.run(reqs), "affinity scenario must drain: {sc:?}");
-            fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions())
+            assert!(c.run(reqs.clone()), "affinity scenario must drain: {sc:?}");
+            let merged = c.merged_metrics();
+            check_fault_invariants(
+                sc,
+                &reqs,
+                &c.faults.dropped,
+                c.makespan(),
+                &merged,
+                c.colocated
+                    .engines
+                    .iter()
+                    .chain(c.disagg.prefill.engines.iter())
+                    .chain(c.disagg.decode.engines.iter())
+                    .map(|e| &e.metrics),
+            );
+            let mut v = fingerprint(c.makespan(), &merged, c.preemptions());
+            v.extend(c.faults.dropped.iter().copied());
+            v
         }
         _ => {
             let mut c = autoscaled_sim_cluster(
@@ -229,11 +382,24 @@ fn run_scenario(sc: &Scenario, event_mode: bool) -> Vec<u64> {
                 scaler_cfg(),
             )
             .expect("8B fits");
+            if attach {
+                c = c.with_faults(fd());
+            }
             for e in c.engines.iter_mut() {
                 e.set_event_mode(event_mode);
             }
-            assert!(c.run(reqs), "autoscaled scenario must drain: {sc:?}");
-            let mut v = fingerprint(c.makespan(), &c.merged_metrics(), c.preemptions());
+            assert!(c.run(reqs.clone()), "autoscaled scenario must drain: {sc:?}");
+            let merged = c.merged_metrics();
+            check_fault_invariants(
+                sc,
+                &reqs,
+                &c.faults.dropped,
+                c.makespan(),
+                &merged,
+                c.engines.iter().map(|e| &e.metrics),
+            );
+            let mut v = fingerprint(c.makespan(), &merged, c.preemptions());
+            v.extend(c.faults.dropped.iter().copied());
             v.push(c.scale_ups);
             v.push(c.scale_downs);
             v
@@ -249,23 +415,50 @@ fn fuzzed_scenarios_are_bit_identical_to_the_stepper() {
         .unwrap_or(200);
     let mut rng = Rng::new(0x0e0e_2026);
     let mut by_kind = [0usize; 5];
+    let mut by_fault = [0usize; 4];
     for i in 0..budget {
         let sc = Scenario::draw(&mut rng);
         by_kind[sc.kind] += 1;
-        let event = run_scenario(&sc, true);
-        let stepper = run_scenario(&sc, false);
+        by_fault[sc.fault] += 1;
+        let event = run_scenario(&sc, true, false);
+        let stepper = run_scenario(&sc, false, false);
         assert_eq!(
             event, stepper,
             "fast-forward diverged from the stepper — repro: scenario #{i} of \
              seed 0x0e0e_2026: {sc:?}"
         );
     }
-    // The fixed seed must actually cover every cluster shape; a
-    // budget too small to reach one is a hole, not a pass.
+    // The fixed seed must actually cover every cluster shape and
+    // every fault kind; a budget too small to reach one is a hole,
+    // not a pass.
     if budget >= 200 {
         assert!(
             by_kind.iter().all(|&n| n > 0),
             "scenario mix left a cluster shape uncovered: {by_kind:?}"
+        );
+        assert!(
+            by_fault.iter().all(|&n| n > 0),
+            "scenario mix left a fault kind uncovered: {by_fault:?}"
+        );
+    }
+}
+
+#[test]
+fn inert_fault_driver_is_bit_invisible_across_fuzzed_scenarios() {
+    // Attaching a `FaultDriver` with an empty plan must leave every
+    // trajectory bit-identical to a cluster built with no driver at
+    // all — the fault layer costs nothing when unused. Fuzzed across
+    // shapes and arrival processes with faults forced off.
+    let mut rng = Rng::new(0xfa17_2026);
+    for i in 0..12 {
+        let mut sc = Scenario::draw(&mut rng);
+        sc.fault = 0;
+        let bare = run_scenario(&sc, true, false);
+        let inert = run_scenario(&sc, true, true);
+        assert_eq!(
+            bare, inert,
+            "an inert fault driver perturbed the run — repro: scenario #{i} of \
+             seed 0xfa17_2026: {sc:?}"
         );
     }
 }
